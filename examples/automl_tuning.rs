@@ -1,0 +1,55 @@
+//! AutoML demo — contribution (iv) of the paper: tune the leaf budget k
+//! of a random forest on the coreset instead of the full data. The
+//! coreset is built once; every candidate k reuses it, so the whole sweep
+//! costs roughly one compression plus |grid| cheap trainings.
+//!
+//!     cargo run --release --example automl_tuning
+
+use sigtree::datasets;
+use sigtree::experiments::tuning::{log_grid, tune_coreset, tune_full, tune_uniform};
+use sigtree::experiments::Solver;
+use sigtree::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(44);
+    // Air-Quality-like matrix at 20% scale (≈1870×15) to keep the demo
+    // quick; bench_fig4 runs the full-scale version.
+    let signal = datasets::air_quality_like(0.2, &mut rng);
+    let (masked, held) = datasets::holdout_patches(&signal, 0.3, 5, &mut rng);
+    println!(
+        "dataset: {}x{}  train cells {}  held-out {}",
+        signal.rows(),
+        signal.cols(),
+        masked.present(),
+        held.len()
+    );
+
+    let grid = log_grid(4, 512, 8);
+    println!("candidate k grid: {grid:?}");
+
+    let full = tune_full(&masked, &held, &grid, Solver::RandomForest, 5);
+    let core = tune_coreset(&masked, &held, &grid, 500, 0.3, Solver::RandomForest, 5);
+    let uni = tune_uniform(&masked, &held, &grid, core.compression_size, Solver::RandomForest, 5);
+
+    for curve in [&full, &core, &uni] {
+        println!(
+            "\n{:<26} size {:>7}  total time {:>10?}  best k = {}",
+            curve.scheme,
+            curve.compression_size,
+            curve.total_time,
+            curve.best_k()
+        );
+        for (k, loss) in &curve.points {
+            println!("  k={k:<6} test SSE {loss:>12.2}");
+        }
+    }
+
+    let speedup = full.total_time.as_secs_f64() / core.total_time.as_secs_f64().max(1e-9);
+    println!("\ntuning speedup (full / coreset): x{speedup:.1}");
+    println!(
+        "best-k agreement: full={} coreset={} uniform={}",
+        full.best_k(),
+        core.best_k(),
+        uni.best_k()
+    );
+}

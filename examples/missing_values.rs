@@ -1,0 +1,113 @@
+//! END-TO-END driver — the paper's §5 experiment on a real (simulated)
+//! workload, exercising every layer of the system:
+//!
+//! * L3 streaming pipeline builds the coreset of the masked dataset,
+//! * the PJRT runtime (L2/L1 artifacts) cross-checks block statistics
+//!   when the artifacts are present,
+//! * forests (sklearn substitute) and GBDT (LightGBM substitute) train on
+//!   full data / coreset / uniform sample,
+//! * hyperparameter k is tuned on each compression,
+//! * the headline metrics — test-set SSE and total time — are reported
+//!   exactly like Fig. 4.
+//!
+//!     cargo run --release --example missing_values
+//!
+//! The run is recorded in EXPERIMENTS.md.
+
+use sigtree::benchkit::{fmt_duration, fmt_f, Table};
+use sigtree::coreset::{Coreset, CoresetConfig};
+use sigtree::datasets;
+use sigtree::experiments::tuning::{log_grid, tune_coreset, tune_full, tune_uniform};
+use sigtree::experiments::Solver;
+use sigtree::pipeline::{run, PipelineConfig};
+use sigtree::rng::Rng;
+use sigtree::signal::Rect;
+
+fn main() {
+    let scale = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25f64);
+    let mut rng = Rng::new(2021);
+
+    for (name, signal) in [
+        ("air-quality-like", datasets::air_quality_like(scale, &mut rng)),
+        ("gesture-phase-like", datasets::gesture_phase_like(scale, &mut rng)),
+    ] {
+        println!("\n################ {name} ({}x{}) ################", signal.rows(), signal.cols());
+        let (masked, held) = datasets::holdout_patches(&signal, 0.3, 5, &mut rng);
+        println!("train cells {}  held-out {}", masked.present(), held.len());
+
+        // --- L3 pipeline: stream the masked dataset into a coreset. ---
+        let cfg = PipelineConfig::new(CoresetConfig::new(500, 0.3))
+            .with_band_rows(512)
+            .with_workers(2);
+        let t0 = std::time::Instant::now();
+        let (pipeline_cs, metrics) = run(&masked, cfg);
+        println!(
+            "pipeline coreset: {} pts ({:.2}%) in {:?}  [{}]",
+            pipeline_cs.stored_points(),
+            100.0 * pipeline_cs.compression_ratio(),
+            t0.elapsed(),
+            metrics.summary()
+        );
+
+        // --- Runtime cross-check (skipped if artifacts not built). ---
+        if sigtree::runtime::artifacts_available() {
+            let rt = sigtree::runtime::Runtime::load_default().expect("runtime");
+            let tp = sigtree::runtime::tiled::TiledPrefix::build(&rt, &masked).expect("tiled");
+            let stats = sigtree::signal::PrefixStats::new(&masked);
+            let probe = Rect::new(0, masked.rows().min(200) - 1, 0, masked.cols() - 1);
+            let (s, q) = tp.moments(&probe);
+            let exact = stats.moments(&probe);
+            println!(
+                "PJRT parity: sum {:.3} vs {:.3}, sumsq {:.3} vs {:.3} (platform {})",
+                s, exact.sum, q, exact.sum_sq, rt.platform()
+            );
+        } else {
+            println!("PJRT artifacts not built — run `make artifacts` for the runtime check");
+        }
+
+        // --- Fig. 4 protocol: tune k on full vs coreset vs uniform. ---
+        let grid = log_grid(8, 512, 6);
+        let full = tune_full(&masked, &held, &grid, Solver::RandomForest, 9);
+        let core = tune_coreset(&masked, &held, &grid, 500, 0.3, Solver::RandomForest, 9);
+        let uni = tune_uniform(&masked, &held, &grid, core.compression_size, Solver::RandomForest, 9);
+
+        let mut table = Table::new(&["scheme", "size", "time", "best k", "best test SSE"]);
+        for curve in [&full, &core, &uni] {
+            let best_k = curve.best_k();
+            let best_sse = curve
+                .points
+                .iter()
+                .find(|(k, _)| *k == best_k)
+                .map(|&(_, l)| l)
+                .unwrap();
+            table.row(&[
+                curve.scheme.clone(),
+                curve.compression_size.to_string(),
+                fmt_duration(curve.total_time),
+                best_k.to_string(),
+                fmt_f(best_sse),
+            ]);
+        }
+        table.print(&format!("{name}: hyperparameter tuning (Fig. 4 protocol)"));
+        let speedup = full.total_time.as_secs_f64() / core.total_time.as_secs_f64().max(1e-9);
+        println!("tuning speedup full/coreset: x{speedup:.1}");
+
+        // --- GBDT (LightGBM substitute) sanity at the tuned k. ---
+        let (cs_out, us_out) = sigtree::experiments::missing_values_experiment(
+            &signal,
+            500,
+            0.3,
+            core.best_k().clamp(2, 64),
+            Solver::Gbdt,
+            13,
+        );
+        println!(
+            "GBDT: coreset SSE {:.2} ({} pts), uniform SSE {:.2}",
+            cs_out.test_sse, cs_out.size, us_out.test_sse
+        );
+    }
+    println!("\nmissing_values end-to-end OK");
+}

@@ -1,0 +1,56 @@
+//! Quickstart: build a (k, ε)-coreset of a signal, query it with
+//! decision-tree models, and verify the 1±ε approximation empirically.
+//!
+//!     cargo run --release --example quickstart
+
+use sigtree::coreset::fitting_loss::relative_error;
+use sigtree::coreset::{Coreset, SignalCoreset};
+use sigtree::rng::Rng;
+use sigtree::segmentation::{greedy::greedy_tree, random_segmentation};
+use sigtree::signal::{generate, PrefixStats};
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    // 1. A 512×512 signal (think: image / sensor grid / dataset matrix).
+    let signal = generate::image_like(512, 512, 4, &mut rng);
+    let stats = PrefixStats::new(&signal);
+    println!("signal: {}x{} = {} cells", signal.rows(), signal.cols(), signal.len());
+
+    // 2. Build the coreset (Algorithm 3). k bounds the leaf count of the
+    //    trees we want the guarantee for; ε is the target error.
+    let (k, eps) = (32, 0.2);
+    let t0 = std::time::Instant::now();
+    let coreset = SignalCoreset::build(&signal, k, eps);
+    println!(
+        "coreset: {} points = {:.2}% of the input, built in {:?}",
+        coreset.stored_points(),
+        100.0 * coreset.compression_ratio(),
+        t0.elapsed()
+    );
+
+    // 3. Query ANY k-segmentation / k-leaf decision tree against the
+    //    coreset (Algorithm 5) — no access to the original signal.
+    let mut worst = 0.0f64;
+    let queries = 200;
+    for _ in 0..queries {
+        let mut s = random_segmentation(signal.bounds(), k, &mut rng);
+        s.refit_values(&stats);
+        let exact = s.loss(&stats); // ground truth (needs the full signal)
+        let approx = coreset.fitting_loss(&s); // coreset only
+        worst = worst.max(relative_error(approx, exact));
+    }
+    println!("worst relative loss error over {queries} random {k}-trees: {worst:.4} (ε = {eps})");
+
+    // 4. The headline use: run an expensive solver on the coreset instead
+    //    of the data. Greedy k-tree on full data vs. evaluated via coreset.
+    let tree = greedy_tree(&stats, k);
+    let exact = tree.loss(&stats);
+    let approx = coreset.fitting_loss(&tree);
+    println!(
+        "greedy {k}-tree loss: exact {exact:.1}, coreset estimate {approx:.1} ({:+.2}%)",
+        100.0 * (approx - exact) / exact
+    );
+    assert!(worst <= 2.0 * eps, "approximation blew past the ε budget");
+    println!("quickstart OK");
+}

@@ -1,0 +1,58 @@
+"""AOT compilation: lower the Layer-2 JAX models (which embed the Layer-1
+Pallas kernels) to HLO **text** artifacts for the Rust PJRT runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir: pathlib.Path) -> list[pathlib.Path]:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    for name, (fn, args) in model.example_args().items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+        written.append(path)
+    return written
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out-dir",
+        type=pathlib.Path,
+        default=pathlib.Path(__file__).resolve().parents[2] / "artifacts",
+    )
+    args = parser.parse_args()
+    build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Layer-1 Pallas kernel: batched opt₁ over rectangles ("block SSE").
+
+Given the padded integral images (a zero row/column in front, so queries
+need no boundary branches), each rectangle's statistics are four gathers
+and a handful of VPU ops:
+
+    opt₁(B) = Σy² − (Σy)² / |B|   (clamped at 0)
+
+The kernel grid runs over rectangle panels; every instance keeps the full
+padded integral images resident in VMEM (2 × 257×257×4 B ≈ 516 KiB — the
+dominant VMEM cost, still far under budget) and processes
+``RECT_PANEL`` rectangles with vectorized gathers. The
+unaligned 257-side is the price of the query-friendly padding; DESIGN.md
+§Hardware-Adaptation discusses the aligned-258 alternative.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+RECT_PANEL = 128
+
+
+def _block_sse_kernel(ii_y_ref, ii_y2_ref, rects_ref, o_ref):
+    rects = rects_ref[...]
+    r0 = rects[:, 0]
+    r1 = rects[:, 1]
+    c0 = rects[:, 2]
+    c1 = rects[:, 3]
+    ii_y = ii_y_ref[...]
+    ii_y2 = ii_y2_ref[...]
+
+    def q(ii):
+        return ii[r1 + 1, c1 + 1] - ii[r0, c1 + 1] - ii[r1 + 1, c0] + ii[r0, c0]
+
+    s = q(ii_y)
+    sq = q(ii_y2)
+    cnt = ((r1 - r0 + 1) * (c1 - c0 + 1)).astype(ii_y.dtype)
+    cnt = jnp.maximum(cnt, 1)
+    o_ref[...] = jnp.maximum(sq - s * s / cnt, 0.0)
+
+
+def block_sse(
+    ii_y_pad: jnp.ndarray, ii_y2_pad: jnp.ndarray, rects: jnp.ndarray
+) -> jnp.ndarray:
+    """Batched opt₁; ``rects`` is int32 [B, 4] inclusive (r0, r1, c0, c1),
+    B a multiple of RECT_PANEL."""
+    (b, four) = rects.shape
+    assert four == 4
+    assert b % RECT_PANEL == 0, b
+    side = ii_y_pad.shape[0]
+    return pl.pallas_call(
+        _block_sse_kernel,
+        grid=(b // RECT_PANEL,),
+        in_specs=[
+            pl.BlockSpec((side, side), lambda i: (0, 0)),
+            pl.BlockSpec((side, side), lambda i: (0, 0)),
+            pl.BlockSpec((RECT_PANEL, 4), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((RECT_PANEL,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), ii_y_pad.dtype),
+        interpret=True,
+    )(ii_y_pad, ii_y2_pad, rects)

@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernel: tiled 2D inclusive prefix sums (integral images).
+
+The paper's compute hot-spot is block-statistics evaluation: every opt₁
+query is four gathers into integral images, so building the integral
+images of y and y² IS the bulk numeric work per signal. On TPU the
+natural schedule is two panel passes (the classic scan decomposition):
+
+* pass 1 — grid over **row panels**: each instance holds a
+  ``(ROWS_PER_PANEL, M)`` block in VMEM and computes the cumulative sum
+  along the row axis-1 (independent per row, VPU-friendly);
+* pass 2 — grid over **column panels**: each instance holds an
+  ``(N, COLS_PER_PANEL)`` block and cumsums along axis 0.
+
+VMEM footprint per instance: 32×256×4 B = 32 KiB (pass 1) / 256×32×4 B =
+32 KiB (pass 2) — far under the ~16 MiB VMEM budget, leaving room for
+double-buffering (see DESIGN.md §Perf). ``interpret=True`` everywhere:
+the CPU PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Panel sizes — multiples of the 8×128 f32 TPU tile.
+ROW_PANEL = 32
+COL_PANEL = 32
+
+
+def _row_scan_kernel(x_ref, o_ref):
+    """Cumulative sum along axis 1 of one row panel."""
+    o_ref[...] = jnp.cumsum(x_ref[...], axis=1)
+
+
+def _col_scan_kernel(x_ref, o_ref):
+    """Cumulative sum along axis 0 of one column panel."""
+    o_ref[...] = jnp.cumsum(x_ref[...], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _scan2d(x: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive 2D prefix sum of one array via the two panel passes."""
+    n, m = x.shape
+    assert n % ROW_PANEL == 0 and m % COL_PANEL == 0, (n, m)
+    rowwise = pl.pallas_call(
+        _row_scan_kernel,
+        grid=(n // ROW_PANEL,),
+        in_specs=[pl.BlockSpec((ROW_PANEL, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROW_PANEL, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=True,
+    )(x)
+    return pl.pallas_call(
+        _col_scan_kernel,
+        grid=(m // COL_PANEL,),
+        in_specs=[pl.BlockSpec((n, COL_PANEL), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((n, COL_PANEL), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=True,
+    )(rowwise)
+
+
+def prefix2d(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Integral images of (y, y²) — the Pallas counterpart of
+    :func:`..ref.prefix2d_ref`."""
+    return _scan2d(x), _scan2d(x * x)

@@ -1,0 +1,64 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with plain jax.numpy ops only. pytest (and hypothesis sweeps) assert
+kernel == oracle to float tolerance; the AOT artifacts are lowered from
+the *kernel* path, so the oracle is the single source of numerical truth.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def prefix2d_ref(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Inclusive 2D prefix sums (integral images) of x and x².
+
+    Returns (ii_y, ii_y2), each the same shape as ``x``:
+    ``ii[r, c] = sum(x[:r+1, :c+1])``.
+    """
+    ii_y = jnp.cumsum(jnp.cumsum(x, axis=0), axis=1)
+    ii_y2 = jnp.cumsum(jnp.cumsum(x * x, axis=0), axis=1)
+    return ii_y, ii_y2
+
+
+def pad_integral_ref(ii: jnp.ndarray) -> jnp.ndarray:
+    """Prepend a zero row and column (the query-friendly layout)."""
+    n, m = ii.shape
+    out = jnp.zeros((n + 1, m + 1), dtype=ii.dtype)
+    return out.at[1:, 1:].set(ii)
+
+
+def block_sse_ref(
+    ii_y_pad: jnp.ndarray, ii_y2_pad: jnp.ndarray, rects: jnp.ndarray
+) -> jnp.ndarray:
+    """Batched opt₁ over rectangles from padded integral images.
+
+    ``rects`` is int32 [B, 4] with inclusive (r0, r1, c0, c1).
+    opt₁ = Σy² − (Σy)²/count over each rectangle, clamped at 0.
+    """
+    r0, r1, c0, c1 = rects[:, 0], rects[:, 1], rects[:, 2], rects[:, 3]
+
+    def q(ii):
+        return (
+            ii[r1 + 1, c1 + 1]
+            - ii[r0, c1 + 1]
+            - ii[r1 + 1, c0]
+            + ii[r0, c0]
+        )
+
+    s = q(ii_y_pad)
+    sq = q(ii_y2_pad)
+    cnt = ((r1 - r0 + 1) * (c1 - c0 + 1)).astype(ii_y_pad.dtype)
+    cnt = jnp.maximum(cnt, 1)
+    return jnp.maximum(sq - s * s / cnt, 0.0)
+
+
+def seg_loss_ref(signal: jnp.ndarray, rendered: jnp.ndarray) -> jnp.ndarray:
+    """SSE between a signal tile and a rendered segmentation tile.
+
+    Returns a [1] array (scalar losses round-trip more cleanly through
+    the HLO text bridge as rank-1).
+    """
+    d = signal - rendered
+    return jnp.sum(d * d).reshape((1,))

@@ -1,0 +1,43 @@
+"""Layer-1 Pallas kernel: SSE between a signal tile and a rendered
+segmentation tile.
+
+A pure element-wise-plus-reduction kernel: the grid runs over row panels,
+each instance reduces its panel to one partial sum; the final (tiny)
+cross-panel sum happens in plain jnp. This is the canonical two-level
+reduction a TPU implementation would use (panel partials in VMEM, final
+combine on the scalar unit).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_PANEL = 32
+
+
+def _sse_panel_kernel(a_ref, b_ref, o_ref):
+    d = a_ref[...] - b_ref[...]
+    o_ref[...] = jnp.sum(d * d).reshape((1,))
+
+
+def seg_loss(signal: jnp.ndarray, rendered: jnp.ndarray) -> jnp.ndarray:
+    """Total SSE as a [1] array (rank-1 round-trips the HLO text bridge
+    more cleanly than rank-0)."""
+    n, m = signal.shape
+    assert signal.shape == rendered.shape
+    assert n % ROW_PANEL == 0, n
+    panels = n // ROW_PANEL
+    partials = pl.pallas_call(
+        _sse_panel_kernel,
+        grid=(panels,),
+        in_specs=[
+            pl.BlockSpec((ROW_PANEL, m), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_PANEL, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((panels,), signal.dtype),
+        interpret=True,
+    )(signal, rendered)
+    return jnp.sum(partials).reshape((1,))

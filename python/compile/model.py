@@ -1,0 +1,57 @@
+"""Layer-2 JAX compute graph — composes the Layer-1 Pallas kernels into
+the functions the Rust coordinator executes through PJRT.
+
+This module is build-time only: `aot.py` lowers the jitted functions to
+HLO text once, and the Rust runtime (`rust/src/runtime/`) loads and runs
+the artifacts. Python never appears on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import block_sse as _block_sse
+from .kernels import prefix2d as _prefix2d
+from .kernels import seg_loss as _seg_loss
+
+# Shapes baked into the AOT artifacts (mirrored by rust/src/runtime/mod.rs).
+TILE = 256
+RECT_BATCH = 1024
+
+
+def prefix2d_model(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(TILE, TILE) signal tile → inclusive integral images of (y, y²)."""
+    return _prefix2d.prefix2d(x)
+
+
+def pad_integral(ii: jnp.ndarray) -> jnp.ndarray:
+    """Prepend a zero row and column: (T, T) → (T+1, T+1)."""
+    n, m = ii.shape
+    return jnp.zeros((n + 1, m + 1), ii.dtype).at[1:, 1:].set(ii)
+
+
+def block_sse_model(
+    ii_y_pad: jnp.ndarray, ii_y2_pad: jnp.ndarray, rects: jnp.ndarray
+) -> jnp.ndarray:
+    """(T+1, T+1) padded integral images + int32 [B, 4] rects → [B] opt₁."""
+    return _block_sse.block_sse(ii_y_pad, ii_y2_pad, rects)
+
+
+def seg_loss_model(signal: jnp.ndarray, rendered: jnp.ndarray) -> jnp.ndarray:
+    """Two (TILE, TILE) tiles → [1] total SSE."""
+    return _seg_loss.seg_loss(signal, rendered)
+
+
+def example_args() -> dict[str, tuple]:
+    """Example (shape-defining) arguments per artifact name."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    tile = jax.ShapeDtypeStruct((TILE, TILE), f32)
+    padded = jax.ShapeDtypeStruct((TILE + 1, TILE + 1), f32)
+    rects = jax.ShapeDtypeStruct((RECT_BATCH, 4), i32)
+    return {
+        "prefix2d": (prefix2d_model, (tile,)),
+        "block_sse": (block_sse_model, (padded, padded, rects)),
+        "seg_loss": (seg_loss_model, (tile, tile)),
+    }

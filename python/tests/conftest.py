@@ -1,0 +1,6 @@
+"""Make the `compile` package importable when pytest runs from the repo
+root (the Makefile runs it from python/; both must work)."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

@@ -1,0 +1,152 @@
+"""Kernel vs. pure-jnp oracle — the core L1 correctness signal.
+
+Fixed-shape checks at the AOT shapes plus hypothesis sweeps over panel-
+aligned shapes and value distributions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import block_sse, prefix2d, ref, seg_loss
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=1.0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- prefix2d
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_prefix2d_matches_ref_at_aot_shape(seed):
+    x = jnp.asarray(rand((256, 256), seed))
+    got_y, got_y2 = prefix2d.prefix2d(x)
+    ref_y, ref_y2 = ref.prefix2d_ref(x)
+    np.testing.assert_allclose(got_y, ref_y, rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(got_y2, ref_y2, rtol=1e-5, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(1, 8),
+    cols=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+)
+def test_prefix2d_hypothesis_shapes(rows, cols, seed, scale):
+    n, m = rows * prefix2d.ROW_PANEL, cols * prefix2d.COL_PANEL
+    x = jnp.asarray(rand((n, m), seed, scale))
+    got_y, got_y2 = prefix2d.prefix2d(x)
+    ref_y, ref_y2 = ref.prefix2d_ref(x)
+    np.testing.assert_allclose(got_y, ref_y, rtol=1e-4, atol=1e-2 * scale)
+    np.testing.assert_allclose(got_y2, ref_y2, rtol=1e-4, atol=1e-1 * scale**2)
+
+
+def test_prefix2d_constant_input():
+    x = jnp.ones((64, 64), jnp.float32) * 2.0
+    got_y, got_y2 = prefix2d.prefix2d(x)
+    # ii[r, c] = 2 * (r+1) * (c+1); ii2 = 4 * (r+1) * (c+1)
+    r, c = 10, 20
+    assert got_y[r, c] == pytest.approx(2.0 * 11 * 21)
+    assert got_y2[r, c] == pytest.approx(4.0 * 11 * 21)
+
+
+# ---------------------------------------------------------------- block_sse
+
+
+def _rects(batch, side, seed):
+    rng = np.random.default_rng(seed)
+    r0 = rng.integers(0, side, batch)
+    r1 = rng.integers(r0, side)
+    c0 = rng.integers(0, side, batch)
+    c1 = rng.integers(c0, side)
+    return jnp.asarray(np.stack([r0, r1, c0, c1], axis=1).astype(np.int32))
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_block_sse_matches_ref(seed):
+    x = jnp.asarray(rand((256, 256), seed))
+    ii_y, ii_y2 = ref.prefix2d_ref(x)
+    p_y, p_y2 = ref.pad_integral_ref(ii_y), ref.pad_integral_ref(ii_y2)
+    rects = _rects(1024, 256, seed)
+    got = block_sse.block_sse(p_y, p_y2, rects)
+    want = ref.block_sse_ref(p_y, p_y2, rects)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+def test_block_sse_constant_blocks_are_zero():
+    x = jnp.full((256, 256), 3.0, jnp.float32)
+    ii_y, ii_y2 = ref.prefix2d_ref(x)
+    p_y, p_y2 = ref.pad_integral_ref(ii_y), ref.pad_integral_ref(ii_y2)
+    rects = _rects(128, 256, 0)
+    got = block_sse.block_sse(p_y, p_y2, rects)
+    # f32 cancellation noise scales with block magnitude; stay loose.
+    assert np.all(np.asarray(got) < 1.0)
+
+
+def test_block_sse_against_direct_variance():
+    """End-to-end: kernel opt₁ equals the numpy variance of the block."""
+    x_np = rand((256, 256), 7)
+    x = jnp.asarray(x_np)
+    ii_y, ii_y2 = prefix2d.prefix2d(x)
+    p_y = ref.pad_integral_ref(ii_y)
+    p_y2 = ref.pad_integral_ref(ii_y2)
+    rects_np = np.asarray(_rects(128, 256, 8))
+    got = np.asarray(block_sse.block_sse(p_y, p_y2, jnp.asarray(rects_np)))
+    for i in range(0, 128, 17):
+        r0, r1, c0, c1 = rects_np[i]
+        blk = x_np[r0 : r1 + 1, c0 : c1 + 1].astype(np.float64)
+        want = float(((blk - blk.mean()) ** 2).sum())
+        assert got[i] == pytest.approx(want, rel=5e-2, abs=5e-2), i
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([0.5, 2.0, 8.0]))
+def test_block_sse_hypothesis(seed, scale):
+    x = jnp.asarray(rand((128, 128), seed, scale))
+    ii_y, ii_y2 = ref.prefix2d_ref(x)
+    p_y, p_y2 = ref.pad_integral_ref(ii_y), ref.pad_integral_ref(ii_y2)
+    rects = _rects(block_sse.RECT_PANEL, 128, seed)
+    got = block_sse.block_sse(p_y, p_y2, rects)
+    want = ref.block_sse_ref(p_y, p_y2, rects)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2 * scale**2)
+
+
+# ----------------------------------------------------------------- seg_loss
+
+
+@pytest.mark.parametrize("seed", [5, 6])
+def test_seg_loss_matches_ref(seed):
+    a = jnp.asarray(rand((256, 256), seed))
+    b = jnp.asarray(rand((256, 256), seed + 100))
+    got = seg_loss.seg_loss(a, b)
+    want = ref.seg_loss_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_seg_loss_zero_for_identical():
+    a = jnp.asarray(rand((64, 64), 9))
+    assert float(seg_loss.seg_loss(a, a)[0]) == 0.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    panels=st.integers(1, 6),
+    cols=st.sampled_from([32, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_seg_loss_hypothesis(panels, cols, seed):
+    n = panels * seg_loss.ROW_PANEL
+    a = jnp.asarray(rand((n, cols), seed))
+    b = jnp.asarray(rand((n, cols), seed ^ 0xFFFF))
+    got = float(seg_loss.seg_loss(a, b)[0])
+    want = float(ref.seg_loss_ref(a, b)[0])
+    assert got == pytest.approx(want, rel=1e-4)

@@ -1,0 +1,69 @@
+//! Construction benchmarks: the §4 size claim (E8) and the O(kN) time
+//! claim (E10).
+//!
+//! * `size_claim` — N ≈ 140,000 (374×374), k = 1000, ε = 0.2: the paper
+//!   reports an empirical coreset ≤ 1% of the input where the worst-case
+//!   bound exceeds N.
+//! * `scaling`    — build time vs N (fixed k) and vs k (fixed N): both
+//!   should be ~linear (the O(kN) bound; in practice the k-dependence is
+//!   sublinear because only the bicriteria stage scales with k).
+
+use sigtree::benchkit::{bench, fmt_duration, fmt_f, Table};
+use sigtree::coreset::SignalCoreset;
+use sigtree::rng::Rng;
+use sigtree::signal::generate;
+use std::time::Duration;
+
+fn main() {
+    // --- E8: the §4 empirical-size claim. ---
+    // Workload: the air-quality-like matrix at full scale — 9358×15 =
+    // 140,370 ≈ the paper's N ~ 140,000 (its N comes from these tabular
+    // datasets, not from square images).
+    let mut rng = Rng::new(4);
+    let sig = sigtree::datasets::air_quality_like(1.0, &mut rng);
+    let _n = sig.rows();
+    let k = 1000;
+    let eps = 0.2;
+    let t = bench(0, 3, Duration::from_secs(10), || {
+        SignalCoreset::build(&sig, k, eps)
+    });
+    let cs = SignalCoreset::build(&sig, k, eps);
+    let mut table = Table::new(&["N", "k", "eps", "coreset pts", "% of N", "build time"]);
+    table.row(&[
+        sig.len().to_string(),
+        k.to_string(),
+        eps.to_string(),
+        cs.stored_points().to_string(),
+        format!("{:.2}", 100.0 * cs.compression_ratio()),
+        fmt_duration(t.median),
+    ]);
+    table.print("E8 / §4 size claim (paper: ≤1% at N≈140k, k=1000, ε=0.2)");
+
+    // --- E10: linear scaling in N. ---
+    let mut table = Table::new(&["N", "build (median)", "cells/s"]);
+    for side in [128usize, 256, 512, 724] {
+        let mut rng = Rng::new(7);
+        let sig = generate::image_like(side, side, 4, &mut rng);
+        let t = bench(1, 5, Duration::from_secs(6), || {
+            SignalCoreset::build(&sig, 64, 0.2)
+        });
+        table.row(&[
+            (side * side).to_string(),
+            fmt_duration(t.median),
+            fmt_f((side * side) as f64 / t.median.as_secs_f64()),
+        ]);
+    }
+    table.print("E10a: build time vs N (k=64) — cells/s should stay ~flat");
+
+    // --- E10b: scaling in k. ---
+    let mut rng = Rng::new(8);
+    let sig = generate::image_like(384, 384, 4, &mut rng);
+    let mut table = Table::new(&["k", "build (median)"]);
+    for k in [8usize, 64, 512, 2000] {
+        let t = bench(1, 5, Duration::from_secs(6), || {
+            SignalCoreset::build(&sig, k, 0.2)
+        });
+        table.row(&[k.to_string(), fmt_duration(t.median)]);
+    }
+    table.print("E10b: build time vs k (N=147k)");
+}

@@ -1,0 +1,118 @@
+//! Regenerates **Figure 4** of the paper (all four panels) on the
+//! UCI-substitute datasets (DESIGN.md §Substitutions, experiments E1–E4 +
+//! the headline ×10 claim E11).
+//!
+//! * top panels   — test-set SSE vs compression size, coreset vs uniform
+//!                  sample (tuning on the compression, forest trained with
+//!                  the tuned k);
+//! * bottom-left  — loss(+k/1e5) vs k curves: full data vs coreset sizes;
+//! * bottom-right — total time (compression + tuning) vs compression size.
+//!
+//! Scale is controlled by SIGTREE_FIG4_SCALE (default 0.15 of the UCI
+//! sizes to keep single-core CI runs in minutes; EXPERIMENTS.md records
+//! both the default and a full-scale run).
+
+use sigtree::benchkit::{fmt_duration, fmt_f, Table};
+use sigtree::datasets;
+use sigtree::experiments::tuning::{log_grid, tune_coreset, tune_full, tune_uniform};
+use sigtree::experiments::Solver;
+use sigtree::rng::Rng;
+
+fn main() {
+    let scale: f64 = std::env::var("SIGTREE_FIG4_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.15);
+    let mut rng = Rng::new(2021);
+    for (name, signal) in [
+        ("air-quality-like", datasets::air_quality_like(scale, &mut rng)),
+        ("gesture-phase-like", datasets::gesture_phase_like(scale, &mut rng)),
+    ] {
+        let (masked, held) = datasets::holdout_patches(&signal, 0.3, 5, &mut rng);
+        println!(
+            "\n=== Fig. 4 / {name}: {}x{}, train {}, held {} ===",
+            signal.rows(),
+            signal.cols(),
+            masked.present(),
+            held.len()
+        );
+        let grid = log_grid(8, 512, 6);
+
+        // Top panels: accuracy vs compression size (ε sweep).
+        let mut top = Table::new(&[
+            "eps",
+            "size",
+            "size %",
+            "coreset SSE",
+            "uniform SSE",
+            "full SSE",
+        ]);
+        let full = tune_full(&masked, &held, &grid, Solver::RandomForest, 1);
+        let full_best = best_sse(&full.points, full.best_k());
+        for eps in [0.5, 0.4, 0.3, 0.2] {
+            let core = tune_coreset(&masked, &held, &grid, 500, eps, Solver::RandomForest, 1);
+            let uni = tune_uniform(
+                &masked,
+                &held,
+                &grid,
+                core.compression_size,
+                Solver::RandomForest,
+                1,
+            );
+            top.row(&[
+                format!("{eps}"),
+                core.compression_size.to_string(),
+                format!(
+                    "{:.2}",
+                    100.0 * core.compression_size as f64 / masked.present() as f64
+                ),
+                fmt_f(best_sse(&core.points, core.best_k())),
+                fmt_f(best_sse(&uni.points, uni.best_k())),
+                fmt_f(full_best),
+            ]);
+        }
+        top.print(&format!("{name}: Fig 4 top (SSE vs compression size)"));
+
+        // Bottom-left: the tuning curve ℓ + k/1e5 per k.
+        let core_small = tune_coreset(&masked, &held, &grid, 500, 0.4, Solver::RandomForest, 2);
+        let core_large = tune_coreset(&masked, &held, &grid, 500, 0.2, Solver::RandomForest, 2);
+        let mut bl = Table::new(&["k", "full", "coreset(small)", "coreset(large)"]);
+        for (i, &k) in grid.iter().enumerate() {
+            let reg = k as f64 / 1e5;
+            bl.row(&[
+                k.to_string(),
+                fmt_f(full.points[i].1 + reg),
+                fmt_f(core_small.points[i].1 + reg),
+                fmt_f(core_large.points[i].1 + reg),
+            ]);
+        }
+        bl.print(&format!("{name}: Fig 4 bottom-left (loss + k/1e5 vs k)"));
+
+        // Bottom-right: total tuning time vs compression size.
+        let mut br = Table::new(&["scheme", "size", "total time", "speedup vs full"]);
+        let base = full.total_time.as_secs_f64();
+        br.row(&[
+            "full".into(),
+            full.compression_size.to_string(),
+            fmt_duration(full.total_time),
+            "x1.0".into(),
+        ]);
+        for (label, curve) in [("coreset ε=0.4", &core_small), ("coreset ε=0.2", &core_large)] {
+            br.row(&[
+                label.into(),
+                curve.compression_size.to_string(),
+                fmt_duration(curve.total_time),
+                format!("x{:.1}", base / curve.total_time.as_secs_f64().max(1e-9)),
+            ]);
+        }
+        br.print(&format!("{name}: Fig 4 bottom-right (tuning time)"));
+    }
+}
+
+fn best_sse(points: &[(usize, f64)], best_k: usize) -> f64 {
+    points
+        .iter()
+        .find(|(k, _)| *k == best_k)
+        .map(|&(_, l)| l)
+        .unwrap_or(f64::NAN)
+}

@@ -1,0 +1,93 @@
+//! FITTING-LOSS benchmarks: the Definition 3 / Theorem 8 validation (E9)
+//! plus evaluation throughput (Algorithm 5 is O(k·|C|); the whole point
+//! of a coreset is that this beats the O(N) exact evaluation).
+
+use sigtree::benchkit::{bench, fmt_duration, fmt_f, Table};
+use sigtree::coreset::fitting_loss::relative_error;
+use sigtree::coreset::uniform::UniformSample;
+use sigtree::coreset::{Coreset, SignalCoreset};
+use sigtree::rng::Rng;
+use sigtree::segmentation::{greedy::greedy_tree, random_segmentation};
+use sigtree::signal::{generate, PrefixStats};
+use std::time::Duration;
+
+fn main() {
+    let mut rng = Rng::new(9);
+    let sig = generate::image_like(512, 512, 4, &mut rng);
+    let stats = PrefixStats::new(&sig);
+
+    // --- E9: empirical ε over query ensembles, per ε setting. ---
+    let k = 32;
+    let mut table = Table::new(&[
+        "eps",
+        "size %",
+        "mean err (random)",
+        "worst err (random)",
+        "err (greedy tree)",
+        "worst err (uniform)",
+    ]);
+    for eps in [0.4, 0.2, 0.1] {
+        let cs = SignalCoreset::build(&sig, k, eps);
+        let us = UniformSample::build(&sig, cs.size(), &mut rng);
+        let mut worst = 0.0f64;
+        let mut mean = 0.0f64;
+        let mut uworst = 0.0f64;
+        let queries = 100;
+        for _ in 0..queries {
+            let mut s = random_segmentation(sig.bounds(), k, &mut rng);
+            s.refit_values(&stats);
+            let exact = s.loss(&stats);
+            let err = relative_error(cs.fitting_loss(&s), exact);
+            worst = worst.max(err);
+            mean += err;
+            uworst = uworst.max(relative_error(us.fitting_loss(&s), exact));
+        }
+        mean /= queries as f64;
+        let gt = greedy_tree(&stats, k);
+        let gerr = relative_error(cs.fitting_loss(&gt), gt.loss(&stats));
+        table.row(&[
+            eps.to_string(),
+            format!("{:.2}", 100.0 * cs.compression_ratio()),
+            fmt_f(mean),
+            fmt_f(worst),
+            fmt_f(gerr),
+            fmt_f(uworst),
+        ]);
+    }
+    table.print("E9: empirical approximation error (Definition 3 validation)");
+
+    // --- Evaluation throughput: coreset vs exact-on-full-data. ---
+    let cs = SignalCoreset::build(&sig, k, 0.2);
+    let queries: Vec<_> = (0..50)
+        .map(|_| {
+            let mut s = random_segmentation(sig.bounds(), k, &mut rng);
+            s.refit_values(&stats);
+            s
+        })
+        .collect();
+    let t_core = bench(1, 10, Duration::from_secs(4), || {
+        queries.iter().map(|s| cs.fitting_loss(s)).sum::<f64>()
+    });
+    let t_exact_prefix = bench(1, 10, Duration::from_secs(4), || {
+        queries.iter().map(|s| s.loss(&stats)).sum::<f64>()
+    });
+    let t_exact_naive = bench(1, 3, Duration::from_secs(6), || {
+        queries
+            .iter()
+            .map(|s| s.loss_bruteforce(&sig))
+            .sum::<f64>()
+    });
+    let mut table = Table::new(&["evaluator", "50 queries", "evals/s"]);
+    for (name, t) in [
+        ("FITTING-LOSS (coreset)", t_core),
+        ("exact via prefix stats", t_exact_prefix),
+        ("exact naive O(N)", t_exact_naive),
+    ] {
+        table.row(&[
+            name.into(),
+            fmt_duration(t.median),
+            fmt_f(50.0 / t.median.as_secs_f64()),
+        ]);
+    }
+    table.print("Algorithm 5 evaluation throughput (N=262k, k=32)");
+}

@@ -1,0 +1,61 @@
+//! Pipeline benchmarks: streaming-coordinator throughput and the effect
+//! of band size / worker count / backpressure (the L3 ablations DESIGN.md
+//! calls out).
+
+use sigtree::benchkit::{bench, fmt_duration, fmt_f, Table};
+use sigtree::coreset::CoresetConfig;
+use sigtree::pipeline::{run, PipelineConfig};
+use sigtree::rng::Rng;
+use sigtree::signal::generate;
+use std::time::Duration;
+
+fn main() {
+    let mut rng = Rng::new(11);
+    let sig = generate::smooth(4096, 256, 5, &mut rng); // ~1M cells
+    let n = sig.len();
+    println!("signal: {}x{} = {n} cells", sig.rows(), sig.cols());
+
+    // Band-size ablation.
+    let mut table = Table::new(&["band rows", "workers", "median", "cells/s", "blocks"]);
+    for band in [64usize, 256, 1024] {
+        let cfg = PipelineConfig::new(CoresetConfig::new(32, 0.25))
+            .with_band_rows(band)
+            .with_workers(1);
+        let t = bench(0, 3, Duration::from_secs(10), || run(&sig, cfg));
+        let (cs, _) = run(&sig, cfg);
+        table.row(&[
+            band.to_string(),
+            "1".into(),
+            fmt_duration(t.median),
+            fmt_f(n as f64 / t.median.as_secs_f64()),
+            cs.blocks.len().to_string(),
+        ]);
+    }
+    // Worker-count ablation (single-core hardware: expect ~flat, shows
+    // coordination overhead rather than speedup).
+    for workers in [1usize, 2, 4] {
+        let cfg = PipelineConfig::new(CoresetConfig::new(32, 0.25))
+            .with_band_rows(256)
+            .with_workers(workers);
+        let t = bench(0, 3, Duration::from_secs(10), || run(&sig, cfg));
+        let (cs, _) = run(&sig, cfg);
+        table.row(&[
+            "256".into(),
+            workers.to_string(),
+            fmt_duration(t.median),
+            fmt_f(n as f64 / t.median.as_secs_f64()),
+            cs.blocks.len().to_string(),
+        ]);
+    }
+    table.print("pipeline throughput: band-size and worker ablations");
+
+    // Batch (monolithic) baseline for reference.
+    let t = bench(0, 3, Duration::from_secs(10), || {
+        sigtree::coreset::SignalCoreset::build(&sig, 32, 0.25)
+    });
+    println!(
+        "\nbatch (no pipeline) baseline: {} ({:.2e} cells/s)",
+        fmt_duration(t.median),
+        n as f64 / t.median.as_secs_f64()
+    );
+}

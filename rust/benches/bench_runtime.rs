@@ -1,0 +1,97 @@
+//! PJRT runtime benchmarks: artifact execution throughput vs native Rust
+//! for the same statistics (the L1/L2 perf pass measurements recorded in
+//! EXPERIMENTS.md §Perf). Skips cleanly when artifacts are absent.
+
+use sigtree::benchkit::{bench, fmt_duration, fmt_f, Table};
+use sigtree::rng::Rng;
+use sigtree::runtime::{artifacts_available, pad_integral, Runtime, RECT_BATCH, TILE};
+use sigtree::signal::{PrefixStats, Rect, Signal};
+use std::time::Duration;
+
+fn main() {
+    if !artifacts_available() {
+        println!("bench_runtime: artifacts not built (run `make artifacts`) — skipping");
+        return;
+    }
+    let rt = Runtime::load_default().expect("runtime load");
+    println!("platform: {}, artifacts: {:?}", rt.platform(), rt.artifact_names());
+
+    let mut rng = Rng::new(12);
+    let tile: Vec<f32> = (0..TILE * TILE).map(|_| rng.normal() as f32).collect();
+    let sig = Signal::from_fn(TILE, TILE, |r, c| tile[r * TILE + c] as f64);
+
+    let mut table = Table::new(&["op", "impl", "median", "throughput"]);
+
+    // prefix2d: PJRT vs native.
+    let t_pjrt = bench(1, 8, Duration::from_secs(4), || rt.prefix2d(&tile).unwrap());
+    let t_native = bench(1, 8, Duration::from_secs(4), || PrefixStats::new(&sig));
+    let cells = (TILE * TILE) as f64;
+    table.row(&[
+        "prefix2d (integral images)".into(),
+        "PJRT f32".into(),
+        fmt_duration(t_pjrt.median),
+        format!("{} cells/s", fmt_f(cells / t_pjrt.median.as_secs_f64())),
+    ]);
+    table.row(&[
+        "prefix2d (integral images)".into(),
+        "native f64".into(),
+        fmt_duration(t_native.median),
+        format!("{} cells/s", fmt_f(cells / t_native.median.as_secs_f64())),
+    ]);
+
+    // block_sse: PJRT batched vs native loop.
+    let (ii_y, ii_y2) = rt.prefix2d(&tile).unwrap();
+    let p_y = pad_integral(&ii_y);
+    let p_y2 = pad_integral(&ii_y2);
+    let rects: Vec<[i32; 4]> = (0..RECT_BATCH)
+        .map(|_| {
+            let r0 = rng.usize(TILE);
+            let r1 = rng.range(r0, TILE);
+            let c0 = rng.usize(TILE);
+            let c1 = rng.range(c0, TILE);
+            [r0 as i32, r1 as i32, c0 as i32, c1 as i32]
+        })
+        .collect();
+    let native_rects: Vec<Rect> = rects
+        .iter()
+        .map(|r| Rect::new(r[0] as usize, r[1] as usize, r[2] as usize, r[3] as usize))
+        .collect();
+    let stats = PrefixStats::new(&sig);
+    let t_pjrt = bench(1, 8, Duration::from_secs(4), || {
+        rt.block_sse(&p_y, &p_y2, &rects).unwrap()
+    });
+    let t_native = bench(1, 8, Duration::from_secs(4), || {
+        native_rects.iter().map(|r| stats.opt1(r)).sum::<f64>()
+    });
+    table.row(&[
+        format!("block_sse ({RECT_BATCH} rects)"),
+        "PJRT f32".into(),
+        fmt_duration(t_pjrt.median),
+        format!("{} rects/s", fmt_f(RECT_BATCH as f64 / t_pjrt.median.as_secs_f64())),
+    ]);
+    table.row(&[
+        format!("block_sse ({RECT_BATCH} rects)"),
+        "native f64".into(),
+        fmt_duration(t_native.median),
+        format!("{} rects/s", fmt_f(RECT_BATCH as f64 / t_native.median.as_secs_f64())),
+    ]);
+
+    // seg_loss.
+    let rendered: Vec<f32> = (0..TILE * TILE).map(|_| rng.normal() as f32).collect();
+    let t_pjrt = bench(1, 8, Duration::from_secs(4), || {
+        rt.seg_loss(&tile, &rendered).unwrap()
+    });
+    table.row(&[
+        "seg_loss (SSE of tile)".into(),
+        "PJRT f32".into(),
+        fmt_duration(t_pjrt.median),
+        format!("{} cells/s", fmt_f(cells / t_pjrt.median.as_secs_f64())),
+    ]);
+
+    table.print("PJRT artifact execution vs native (TILE=256)");
+    println!(
+        "\nnote: PJRT CPU runs the interpret-lowered Pallas kernels; real-TPU\n\
+         projections are derived from VMEM/bytes-moved analysis in DESIGN.md §Perf,\n\
+         not from these CPU timings."
+    );
+}

@@ -1,0 +1,157 @@
+//! Minimal benchmark harness (criterion is unavailable in the offline
+//! registry — DESIGN.md §Substitutions). Provides warmup + repeated
+//! timing with median/mean/min reporting and a tabular printer used by
+//! the per-figure experiment benches.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Timing {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then time until either
+/// `max_iters` runs or `budget` wall-clock is consumed (at least 3 runs).
+pub fn bench<T>(
+    warmup: usize,
+    max_iters: usize,
+    budget: Duration,
+    mut f: impl FnMut() -> T,
+) -> Timing {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    while times.len() < 3 || (times.len() < max_iters && start.elapsed() < budget) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let sum: Duration = times.iter().sum();
+    Timing {
+        iters: times.len(),
+        mean: sum / times.len() as u32,
+        median: times[times.len() / 2],
+        min: times[0],
+        max: *times.last().unwrap(),
+    }
+}
+
+/// Quick bench with sane defaults (1 warmup, ≤ 15 iters, ≤ 2 s budget).
+pub fn quick<T>(f: impl FnMut() -> T) -> Timing {
+    bench(1, 15, Duration::from_secs(2), f)
+}
+
+/// Pretty-print duration with adaptive units.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// A simple aligned table printer for bench/experiment output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n=== {title} ===");
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (w, cell) in widths.iter().zip(cells) {
+                s.push_str(&format!("{cell:>w$}  ", w = w));
+            }
+            println!("{s}");
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Format a float compactly for tables.
+pub fn fmt_f(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1e4 || x.abs() < 1e-3 {
+        format!("{x:.3e}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_at_least_three_iters() {
+        let t = bench(0, 5, Duration::from_millis(10), || 1 + 1);
+        assert!(t.iters >= 3);
+        assert!(t.min <= t.median && t.median <= t.max);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with(" ms"));
+        assert!(fmt_duration(Duration::from_micros(7)).ends_with(" µs"));
+        assert!(fmt_duration(Duration::from_nanos(9)).ends_with(" ns"));
+    }
+
+    #[test]
+    fn table_accepts_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print("test"); // visually checked in CI logs; no panic = pass
+    }
+
+    #[test]
+    fn fmt_f_ranges() {
+        assert_eq!(fmt_f(0.0), "0");
+        assert!(fmt_f(123456.0).contains('e'));
+        assert!(!fmt_f(3.14).contains('e'));
+    }
+}

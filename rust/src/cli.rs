@@ -1,0 +1,148 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline —
+//! DESIGN.md §Substitutions). Supports subcommands, `--flag value`,
+//! `--flag=value`, and boolean flags, with typed getters and helpful
+//! errors.
+
+use std::collections::HashMap;
+
+#[derive(Debug)]
+pub enum CliError {
+    Missing(String),
+    Invalid(String, String),
+    UnknownCommand(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Missing(n) => write!(f, "missing required argument --{n}"),
+            CliError::Invalid(n, v) => write!(f, "invalid value for --{n}: {v}"),
+            CliError::UnknownCommand(c) => write!(f, "unknown subcommand '{c}'; try 'help'"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed command line: subcommand + named options + positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: String,
+    pub options: HashMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut options = HashMap::new();
+        let mut positionals = Vec::new();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map_or(false, |nxt| !nxt.starts_with("--"))
+                {
+                    let v = it.next().unwrap();
+                    options.insert(name.to_string(), v);
+                } else {
+                    options.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positionals.push(arg);
+            }
+        }
+        Args { command, options, positionals }
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(name.into(), v.into())),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid(name.into(), v.into())),
+        }
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError::Missing(name.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        // NOTE the documented ambiguity: `--flag positional` reads the
+        // positional as the flag's value. Boolean flags next to
+        // positionals must use `--flag=true`.
+        let a = Args::parse(argv("coreset --k 10 --eps=0.2 --verbose=true input.bin"));
+        assert_eq!(a.command, "coreset");
+        assert_eq!(a.get("k"), Some("10"));
+        assert_eq!(a.get("eps"), Some("0.2"));
+        assert!(a.get_flag("verbose"));
+        assert_eq!(a.positionals, vec!["input.bin"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(argv("x --k 7 --eps 0.5"));
+        assert_eq!(a.get_usize("k", 1).unwrap(), 7);
+        assert_eq!(a.get_usize("missing", 3).unwrap(), 3);
+        assert!((a.get_f64("eps", 0.0).unwrap() - 0.5).abs() < 1e-12);
+        assert!(a.get_usize("eps", 1).is_err());
+    }
+
+    #[test]
+    fn boolean_flag_at_end() {
+        let a = Args::parse(argv("run --fast"));
+        assert!(a.get_flag("fast"));
+    }
+
+    #[test]
+    fn require_errors_on_missing() {
+        let a = Args::parse(argv("run"));
+        assert!(a.require("input").is_err());
+    }
+
+    #[test]
+    fn empty_argv_is_help() {
+        let a = Args::parse(Vec::<String>::new());
+        assert_eq!(a.command, "help");
+    }
+}

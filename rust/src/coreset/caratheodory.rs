@@ -1,0 +1,358 @@
+//! Caratheodory compression (Theorem 16 / Corollary 17).
+//!
+//! Every block B of the balanced partition is replaced by at most 4
+//! weighted labels whose weighted (Σ1, Σy, Σy²) moments match B exactly:
+//! the points (y, y², 1) ∈ ℝ³ have mean μ inside their convex hull, so by
+//! Caratheodory's theorem 4 of them suffice to express μ as a convex
+//! combination; rescaling by |B| gives the weights.
+//!
+//! The implementation is the standard streaming reduction: maintain at
+//! most d+2 = 5 weighted points; whenever a 5th arrives, find a null
+//! combination (Σλᵢpᵢ = 0, Σλᵢ = 0, λ ≠ 0 — guaranteed by dimension
+//! count) and walk the weights along −λ until one hits zero. O(d³) per
+//! reduction, O(n·d³) per block, d = 3.
+
+/// A weighted label: `(y, w)` with `w ≥ 0`.
+pub type WeightedLabel = (f64, f64);
+
+/// Incremental Caratheodory reducer over points (y, y², 1) ∈ ℝ³.
+#[derive(Clone, Debug, Default)]
+pub struct CaratheodoryReducer {
+    /// Current support: at most 4 (y, weight) pairs between reductions.
+    support: Vec<WeightedLabel>,
+}
+
+impl CaratheodoryReducer {
+    pub fn new() -> Self {
+        Self { support: Vec::with_capacity(5) }
+    }
+
+    /// Add one label with weight `w`.
+    pub fn push(&mut self, y: f64, w: f64) {
+        if w <= 0.0 {
+            return;
+        }
+        // Merge duplicates aggressively — blocks from the balanced
+        // partition are near-constant, so this path dominates.
+        for (sy, sw) in &mut self.support {
+            if *sy == y {
+                *sw += w;
+                return;
+            }
+        }
+        self.support.push((y, w));
+        if self.support.len() > 4 {
+            self.reduce();
+        }
+    }
+
+    /// Merge another reducer's support (used by merge-and-reduce).
+    pub fn merge(&mut self, other: &CaratheodoryReducer) {
+        for &(y, w) in &other.support {
+            self.push(y, w);
+        }
+    }
+
+    /// Final support: 1–4 weighted labels matching the accumulated
+    /// moments exactly (up to f64 roundoff).
+    pub fn finish(self) -> Vec<WeightedLabel> {
+        self.support
+    }
+
+    /// Reduce a 5-point support to 4 points preserving
+    /// (Σw, Σw·y, Σw·y²).
+    fn reduce(&mut self) {
+        debug_assert_eq!(self.support.len(), 5);
+        // Find λ ∈ ℝ⁵, λ ≠ 0 with Σλᵢ·(yᵢ, yᵢ², 1) = 0. That's 3 equations
+        // (the Σλᵢ = 0 is the third row, from the constant coordinate) in
+        // 5 unknowns → 2-dimensional null space; Gaussian elimination on
+        // the 3×5 matrix gives a basis vector. Stack arrays throughout —
+        // this runs once per input cell on the build hot path
+        // (EXPERIMENTS.md §Perf).
+        let mut ys = [0.0f64; 5];
+        for (slot, &(y, _)) in ys.iter_mut().zip(self.support.iter()) {
+            *slot = y;
+        }
+        let lambda = null_vector_3x5(&ys);
+        // Walk weights along ±λ until the first weight hits zero. Choose
+        // the direction with a positive step (some λᵢ > 0 must exist in at
+        // least one of ±λ).
+        let step = |dir: f64| -> Option<(f64, usize)> {
+            let mut best: Option<(f64, usize)> = None;
+            for (i, (&(_, w), &l)) in self.support.iter().zip(lambda.iter()).enumerate() {
+                let li = l * dir;
+                if li > 1e-300 {
+                    let t = w / li;
+                    if best.map_or(true, |(bt, _)| t < bt) {
+                        best = Some((t, i));
+                    }
+                }
+            }
+            best
+        };
+        let (t, kill, dir) = match (step(1.0), step(-1.0)) {
+            (Some((tp, ip)), Some((tm, im))) => {
+                // Either direction works; pick the smaller step for
+                // numerical gentleness.
+                if tp <= tm {
+                    (tp, ip, 1.0)
+                } else {
+                    (tm, im, -1.0)
+                }
+            }
+            (Some((tp, ip)), None) => (tp, ip, 1.0),
+            (None, Some((tm, im))) => (tm, im, -1.0),
+            (None, None) => {
+                // λ numerically zero (degenerate duplicate ys that the
+                // merge above should have caught) — drop the lightest
+                // point into its nearest neighbour instead.
+                self.merge_lightest();
+                return;
+            }
+        };
+        for ((_, w), &l) in self.support.iter_mut().zip(lambda.iter()) {
+            *w -= t * l * dir;
+            if *w < 0.0 {
+                *w = 0.0; // clamp roundoff
+            }
+        }
+        self.support.remove(kill);
+        // Clean residual zero weights (ties in the min step).
+        self.support.retain(|&(_, w)| w > 0.0);
+    }
+
+    /// Degenerate fallback: merge the lightest point into the nearest y.
+    fn merge_lightest(&mut self) {
+        let (idx, _) = self
+            .support
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+            .unwrap();
+        let (y, w) = self.support.remove(idx);
+        let (_, tgt) = self
+            .support
+            .iter_mut()
+            .map(|p| ((p.0 - y).abs(), p))
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .unwrap();
+        tgt.1 += w;
+    }
+}
+
+/// A null vector of the 3×5 system Σλᵢ(yᵢ, yᵢ², 1) = 0 via Gaussian
+/// elimination with partial pivoting.
+fn null_vector_3x5(ys: &[f64]) -> [f64; 5] {
+    debug_assert_eq!(ys.len(), 5);
+    // Rows: y, y², 1; columns: the five points.
+    let mut a = [[0.0f64; 5]; 3];
+    for (j, &y) in ys.iter().enumerate() {
+        a[0][j] = y;
+        a[1][j] = y * y;
+        a[2][j] = 1.0;
+    }
+    // Forward elimination, tracking pivot columns (stack-allocated).
+    let mut pivot_cols = arrayvec3::ArrayVec3::new();
+    let mut row = 0usize;
+    for col in 0..5 {
+        if row >= 3 {
+            break;
+        }
+        // Partial pivot.
+        let (best_r, best_v) = (row..3)
+            .map(|r| (r, a[r][col].abs()))
+            .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+            .unwrap();
+        if best_v < 1e-12 {
+            continue; // free column
+        }
+        a.swap(row, best_r);
+        let inv = 1.0 / a[row][col];
+        for c in col..5 {
+            a[row][c] *= inv;
+        }
+        for r in 0..3 {
+            if r != row {
+                let f = a[r][col];
+                if f != 0.0 {
+                    for c in col..5 {
+                        a[r][c] -= f * a[row][c];
+                    }
+                }
+            }
+        }
+        pivot_cols.push(col);
+        row += 1;
+    }
+    // Pick the first free column, set λ_free = 1, back-substitute pivots.
+    let mut lambda = [0.0f64; 5];
+    let free = (0..5).find(|c| !pivot_cols.contains(c)).unwrap();
+    lambda[free] = 1.0;
+    for (r, &pc) in pivot_cols.iter().enumerate() {
+        lambda[pc] = -a[r][free];
+    }
+    lambda
+}
+
+/// Tiny fixed-capacity (3) usize vec to keep the elimination
+/// allocation-free on the hot path.
+mod arrayvec3 {
+    pub struct ArrayVec3 {
+        data: [usize; 3],
+        len: usize,
+    }
+
+    impl ArrayVec3 {
+        pub fn new() -> Self {
+            Self { data: [0; 3], len: 0 }
+        }
+
+        pub fn push(&mut self, v: usize) {
+            debug_assert!(self.len < 3);
+            self.data[self.len] = v;
+            self.len += 1;
+        }
+
+        pub fn contains(&self, v: &usize) -> bool {
+            self.data[..self.len].contains(v)
+        }
+
+        pub fn iter(&self) -> std::slice::Iter<'_, usize> {
+            self.data[..self.len].iter()
+        }
+    }
+}
+
+/// Compress an iterator of (y, w) labels into ≤ 4 weighted labels with
+/// identical (Σw, Σwy, Σwy²).
+pub fn compress_labels(labels: impl IntoIterator<Item = WeightedLabel>) -> Vec<WeightedLabel> {
+    let mut red = CaratheodoryReducer::new();
+    for (y, w) in labels {
+        red.push(y, w);
+    }
+    red.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn moments(pts: &[WeightedLabel]) -> (f64, f64, f64) {
+        let mut c = 0.0;
+        let mut s = 0.0;
+        let mut q = 0.0;
+        for &(y, w) in pts {
+            c += w;
+            s += w * y;
+            q += w * y * y;
+        }
+        (c, s, q)
+    }
+
+    #[test]
+    fn preserves_moments_random() {
+        let mut rng = Rng::new(17);
+        for trial in 0..50 {
+            let n = rng.range(1, 400);
+            let labels: Vec<WeightedLabel> =
+                (0..n).map(|_| (rng.normal_ms(0.0, 3.0), 1.0)).collect();
+            let (c0, s0, q0) = moments(&labels);
+            let out = compress_labels(labels.clone());
+            assert!(out.len() <= 4, "trial {trial}: {} points", out.len());
+            assert!(out.iter().all(|&(_, w)| w >= 0.0));
+            let (c1, s1, q1) = moments(&out);
+            let scale = 1.0 + c0.abs() + s0.abs() + q0.abs();
+            assert!((c0 - c1).abs() < 1e-7 * scale, "trial {trial} count");
+            assert!((s0 - s1).abs() < 1e-7 * scale, "trial {trial} sum");
+            assert!((q0 - q1).abs() < 1e-6 * scale, "trial {trial} sumsq");
+        }
+    }
+
+    #[test]
+    fn output_labels_come_from_input() {
+        // C_B ⊆ B: every surviving label value appeared in the input.
+        let mut rng = Rng::new(23);
+        let labels: Vec<WeightedLabel> = (0..100)
+            .map(|_| ((rng.usize(7) as f64) - 3.0, 1.0))
+            .collect();
+        let input_ys: Vec<f64> = labels.iter().map(|&(y, _)| y).collect();
+        let out = compress_labels(labels);
+        for (y, _) in out {
+            assert!(input_ys.contains(&y));
+        }
+    }
+
+    #[test]
+    fn constant_block_compresses_to_one() {
+        let out = compress_labels((0..1000).map(|_| (2.5, 1.0)));
+        assert_eq!(out.len(), 1);
+        assert!((out[0].0 - 2.5).abs() < 1e-15);
+        assert!((out[0].1 - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_values_exact() {
+        let out = compress_labels([(1.0, 3.0), (5.0, 7.0), (1.0, 2.0)]);
+        let (c, s, q) = moments(&out);
+        assert!((c - 12.0).abs() < 1e-12);
+        assert!((s - (5.0 * 1.0 + 7.0 * 5.0)).abs() < 1e-12);
+        assert!((q - (5.0 * 1.0 + 7.0 * 25.0)).abs() < 1e-12);
+        assert!(out.len() <= 2);
+    }
+
+    #[test]
+    fn weighted_inputs_supported() {
+        let mut rng = Rng::new(31);
+        let labels: Vec<WeightedLabel> = (0..200)
+            .map(|_| (rng.normal(), rng.uniform(0.1, 5.0)))
+            .collect();
+        let (c0, s0, q0) = moments(&labels);
+        let out = compress_labels(labels);
+        let (c1, s1, q1) = moments(&out);
+        let scale = 1.0 + c0.abs() + s0.abs() + q0.abs();
+        assert!((c0 - c1).abs() < 1e-7 * scale);
+        assert!((s0 - s1).abs() < 1e-7 * scale);
+        assert!((q0 - q1).abs() < 1e-6 * scale);
+    }
+
+    #[test]
+    fn merge_matches_sequential() {
+        let mut a = CaratheodoryReducer::new();
+        let mut b = CaratheodoryReducer::new();
+        let mut all = CaratheodoryReducer::new();
+        let mut rng = Rng::new(41);
+        for i in 0..300 {
+            let y = rng.normal();
+            if i % 2 == 0 {
+                a.push(y, 1.0);
+            } else {
+                b.push(y, 1.0);
+            }
+            all.push(y, 1.0);
+        }
+        a.merge(&b);
+        let (c0, s0, q0) = moments(&a.finish());
+        let (c1, s1, q1) = moments(&all.finish());
+        assert!((c0 - c1).abs() < 1e-7 * (1.0 + c1.abs()));
+        assert!((s0 - s1).abs() < 1e-6 * (1.0 + s1.abs()));
+        assert!((q0 - q1).abs() < 1e-5 * (1.0 + q1.abs()));
+    }
+
+    #[test]
+    fn null_vector_is_in_nullspace() {
+        let mut rng = Rng::new(55);
+        for _ in 0..100 {
+            let ys: Vec<f64> = (0..5).map(|_| rng.normal_ms(0.0, 2.0)).collect();
+            let l = null_vector_3x5(&ys);
+            let norm: f64 = l.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!(norm > 1e-9);
+            let r0: f64 = ys.iter().zip(&l).map(|(y, li)| y * li).sum();
+            let r1: f64 = ys.iter().zip(&l).map(|(y, li)| y * y * li).sum();
+            let r2: f64 = l.iter().sum();
+            assert!(r0.abs() < 1e-6 * norm, "{r0}");
+            assert!(r1.abs() < 1e-5 * norm * (1.0 + ys.iter().map(|y| y*y).fold(0.0, f64::max)), "{r1}");
+            assert!(r2.abs() < 1e-6 * norm, "{r2}");
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! FITTING-LOSS — Algorithm 5 of the paper (Lemma 14).
+//!
+//! Given a coreset and a k-segmentation `s`, approximate ℓ(D, s) within
+//! 1±ε in O(k · |blocks|) time, never touching the original signal.
+//!
+//! Per block B with coreset pair (C_B, u_B):
+//!
+//! * `s` does **not** intersect B (assigns one value v): the loss over B
+//!   equals Σ u·(v − y)² **exactly**, because (C_B, u_B) matches the
+//!   (Σ1, Σy, Σy²) moments of B and (v − y)² expands into exactly those
+//!   moments (Case (i) of Claim 14.1).
+//! * `s` intersects B: we evaluate the loss of a *smoothed version* of
+//!   (C_B, u_B) (Fig. 8): each piece of `s` claims a mass `z` equal to
+//!   the weight it covers inside B, and the coreset points are consumed
+//!   in order, possibly fractionally, until each piece's demand is met.
+//!   Lemma 14 bounds the resulting error by ε·ℓ(B,s) + O(opt₁(B)/ε).
+
+use crate::segmentation::KSegmentation;
+use super::{BlockCoreset, SignalCoreset};
+
+/// Approximate ℓ(D, s) from the coreset alone (Algorithm 5).
+pub fn fitting_loss(coreset: &SignalCoreset, s: &KSegmentation) -> f64 {
+    let mut total = 0.0f64;
+    for block in &coreset.blocks {
+        total += block_loss(block, s);
+    }
+    total
+}
+
+/// Loss contribution of a single block.
+pub fn block_loss(block: &BlockCoreset, s: &KSegmentation) -> f64 {
+    // Collect the pieces of s that overlap this block, with the covered
+    // area (the paper's z; with masks the area is a proxy for the covered
+    // weight — exact when the block is fully present, see DESIGN.md).
+    let rect = block.rect;
+    let mut overlaps: [(f64, f64); 8] = [(0.0, 0.0); 8]; // (value, area) fast path
+    let mut n_overlaps = 0usize;
+    let mut spill: Vec<(f64, f64)> = Vec::new();
+    let mut covered_area = 0usize;
+    for (prect, v) in s.pieces() {
+        if let Some(inter) = prect.intersection(&rect) {
+            let a = inter.area();
+            covered_area += a;
+            if n_overlaps < overlaps.len() {
+                overlaps[n_overlaps] = (*v, a as f64);
+                n_overlaps += 1;
+            } else {
+                spill.push((*v, a as f64));
+            }
+            if covered_area == rect.area() {
+                break;
+            }
+        }
+    }
+    if covered_area == 0 {
+        return 0.0; // block entirely outside s's support
+    }
+    if n_overlaps == 1 && spill.is_empty() && covered_area == rect.area() {
+        // Case (i): one value over the whole block — exact via moments.
+        let v = overlaps[0].0;
+        let m = block.moments();
+        return m.sse_to(v);
+    }
+    // Case (ii): smoothed allocation, pro-rata variant. Every cell of the
+    // block is fractionally assigned to all 4 coreset labels with weights
+    // w_i / W — a valid smoothed version per (9)–(11) of the paper (each
+    // coordinate's weights sum to 1, moments preserved), chosen because it
+    // is order-independent and has the closed form
+    //
+    //   loss(B) = Σ_pieces z_p · [ (v_p − μ_B)² + var_B ],
+    //
+    //   z_p = weight mass covered by piece p, μ_B / var_B the block's
+    //   weighted label mean / variance (exact from the stored moments).
+    let m = block.moments();
+    if m.count <= 0.0 {
+        return 0.0;
+    }
+    let mu = m.mean();
+    let var = m.opt1() / m.count; // per-unit-weight variance
+    let per_cell = m.count / rect.area() as f64;
+    let mut loss = 0.0f64;
+    for &(v, area) in overlaps[..n_overlaps].iter().chain(spill.iter()) {
+        let z = area * per_cell;
+        let d = v - mu;
+        loss += z * (d * d + var);
+    }
+    loss
+}
+
+/// Relative approximation error |approx − exact| / exact of the coreset
+/// on a specific query — the quantity Theorem 8 bounds by ε.
+pub fn relative_error(approx: f64, exact: f64) -> f64 {
+    if exact.abs() < 1e-12 {
+        approx.abs()
+    } else {
+        (approx - exact).abs() / exact.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::{Coreset, SignalCoreset};
+    use crate::rng::Rng;
+    use crate::segmentation::{random_segmentation, KSegmentation};
+    use crate::signal::{generate, PrefixStats, Rect};
+
+    #[test]
+    fn exact_for_non_intersecting_queries() {
+        // A 1-segmentation never intersects any block → FITTING-LOSS must
+        // be exact (Case (i) everywhere).
+        let mut rng = Rng::new(8);
+        let sig = generate::smooth(40, 40, 3, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let cs = SignalCoreset::build(&sig, 5, 0.3);
+        for v in [-2.0, 0.0, 1.5] {
+            let s = KSegmentation::constant(sig.bounds(), v);
+            let exact = s.loss(&stats);
+            let approx = cs.fitting_loss(&s);
+            assert!(
+                (approx - exact).abs() <= 1e-6 * (1.0 + exact),
+                "v={v}: {approx} vs {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn eps_guarantee_on_random_queries() {
+        let mut rng = Rng::new(9);
+        let sig = generate::smooth(60, 60, 4, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let k = 8;
+        let eps = 0.2;
+        let cs = SignalCoreset::build(&sig, k, eps);
+        let mut worst = 0.0f64;
+        for _ in 0..50 {
+            let mut s = random_segmentation(sig.bounds(), k, &mut rng);
+            s.refit_values(&stats);
+            let exact = s.loss(&stats);
+            let approx = cs.fitting_loss(&s);
+            worst = worst.max(relative_error(approx, exact));
+        }
+        assert!(worst <= eps, "worst relative error {worst} > ε={eps}");
+    }
+
+    #[test]
+    fn handles_many_piece_overlaps() {
+        // Query with k > 8 pieces all slicing one block — exercises the
+        // spill path.
+        let mut rng = Rng::new(10);
+        let sig = generate::noise(32, 32, 1.0, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let cs = SignalCoreset::build(&sig, 4, 0.4);
+        let s = random_segmentation(sig.bounds(), 24, &mut rng);
+        let approx = cs.fitting_loss(&s);
+        let exact = s.loss(&stats);
+        assert!(approx.is_finite());
+        // Noise is the hardest case; just require the same magnitude.
+        assert!(relative_error(approx, exact) < 1.0, "{approx} vs {exact}");
+    }
+
+    #[test]
+    fn partial_cover_contributes_partially() {
+        let mut rng = Rng::new(11);
+        let sig = generate::smooth(20, 20, 2, &mut rng);
+        let cs = SignalCoreset::build(&sig, 3, 0.3);
+        // s covers only the left half.
+        let s = KSegmentation::new(vec![(Rect::new(0, 19, 0, 9), 0.0)]);
+        let full = KSegmentation::constant(sig.bounds(), 0.0);
+        let l_half = cs.fitting_loss(&s);
+        let l_full = cs.fitting_loss(&full);
+        assert!(l_half > 0.0);
+        assert!(l_half < l_full);
+    }
+
+    #[test]
+    fn smoothed_mass_is_conserved() {
+        // The consumed mass equals the block weight: evaluating the
+        // 0-valued full-cover query must equal Σ w·y² exactly even when
+        // the query slices the block (v = 0 → loss = Σ w y² regardless of
+        // allocation order).
+        let mut rng = Rng::new(12);
+        let sig = generate::smooth(24, 24, 3, &mut rng);
+        let cs = SignalCoreset::build(&sig, 4, 0.25);
+        let slicer = random_segmentation(sig.bounds(), 9, &mut rng);
+        let zeroed = KSegmentation::new(
+            slicer.pieces().iter().map(|&(r, _)| (r, 0.0)).collect(),
+        );
+        let approx = cs.fitting_loss(&zeroed);
+        let exact_sum_sq: f64 = cs
+            .blocks
+            .iter()
+            .map(|b| b.moments().sum_sq)
+            .sum();
+        assert!(
+            (approx - exact_sum_sq).abs() <= 1e-6 * (1.0 + exact_sum_sq),
+            "{approx} vs {exact_sum_sq}"
+        );
+    }
+}

@@ -1,0 +1,265 @@
+//! Streaming composition of signal coresets — the merge-and-reduce
+//! property (§1.1, Challenge (iv)) that lets the coreset support
+//! streaming, distributed construction, and dynamic row-appends.
+//!
+//! **Merge.** A signal streamed as horizontal row-bands admits a trivial
+//! composition: build a coreset per band and take the union of the block
+//! lists. Every band's balanced partition is a partition of that band, so
+//! the union is a partition of the full signal; all per-block guarantees
+//! (opt₁ ≤ tolerance, exact moments) are local and survive unioning. The
+//! union is what `merge` returns.
+//!
+//! **Reduce.** Unioning alone grows linearly with the number of bands, so
+//! `reduce` re-compacts: vertically adjacent blocks with identical column
+//! extents are merged whenever the *union's* opt₁ — computable exactly
+//! from the stored moments — stays within the tolerance. The merged
+//! block's 4-point support is rebuilt by running Caratheodory over the
+//! two supports (8 weighted labels → ≤ 4), so moments stay exact.
+
+use std::collections::HashMap;
+
+use crate::signal::Rect;
+
+use super::caratheodory::CaratheodoryReducer;
+use super::{BlockCoreset, CoresetConfig, SignalCoreset};
+
+/// Union of band coresets (bands must tile the signal's rows and share
+/// its width). σ/γ of the merged coreset are the most conservative
+/// (smallest σ, smallest γ) of the parts.
+pub fn merge(parts: Vec<SignalCoreset>) -> SignalCoreset {
+    assert!(!parts.is_empty());
+    let m = parts[0].cols();
+    assert!(parts.iter().all(|p| p.cols() == m), "bands must share width");
+    let n: usize = parts.iter().map(|p| p.rows()).sum();
+    let sigma = parts.iter().map(|p| p.sigma).fold(f64::INFINITY, f64::min);
+    let gamma = parts.iter().map(|p| p.gamma).fold(f64::INFINITY, f64::min);
+    let config = parts[0].config;
+    let blocks = parts.into_iter().flat_map(|p| p.blocks).collect();
+    SignalCoreset::from_blocks(n, m, config, sigma, gamma, blocks)
+}
+
+/// Translate a band-local coreset to global row coordinates (band starts
+/// at `row_offset`).
+pub fn offset_rows(mut coreset: SignalCoreset, row_offset: usize) -> SignalCoreset {
+    for b in &mut coreset.blocks {
+        b.rect = Rect::new(
+            b.rect.r0 + row_offset,
+            b.rect.r1 + row_offset,
+            b.rect.c0,
+            b.rect.c1,
+        );
+    }
+    coreset
+}
+
+/// Re-compact a merged coreset: repeatedly merge vertically adjacent
+/// blocks with matching column extents while the merged opt₁ (from
+/// moments) stays ≤ `tol`. Returns the compacted coreset.
+pub fn reduce(coreset: SignalCoreset, tol: f64) -> SignalCoreset {
+    let SignalCoreset { blocks, config, sigma, gamma, .. } = coreset.clone();
+    let n = coreset.rows();
+    let m = coreset.cols();
+    // Index blocks by (c0, c1, r0): a block ending at row r merges with a
+    // block starting at row r+1 with the same column span.
+    let mut by_start: HashMap<(usize, usize, usize), usize> = HashMap::new();
+    let mut pool: Vec<Option<BlockCoreset>> = blocks.into_iter().map(Some).collect();
+    for (i, b) in pool.iter().enumerate() {
+        let b = b.as_ref().unwrap();
+        by_start.insert((b.rect.c0, b.rect.c1, b.rect.r0), i);
+    }
+    // Greedy single pass (repeat until no merges — bounded by pool size).
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for i in 0..pool.len() {
+            let Some(cur) = pool[i].clone() else { continue };
+            let key = (cur.rect.c0, cur.rect.c1, cur.rect.r1 + 1);
+            let Some(&j) = by_start.get(&key) else { continue };
+            if i == j {
+                continue;
+            }
+            let Some(next) = pool[j].clone() else { continue };
+            // Merged opt₁ from exact moments.
+            let merged_moments = cur.moments().add(&next.moments());
+            if merged_moments.opt1() > tol {
+                continue;
+            }
+            // Merge supports via Caratheodory.
+            let mut red = CaratheodoryReducer::new();
+            for b in [&cur, &next] {
+                for idx in 0..4 {
+                    red.push(b.labels[idx], b.weights[idx]);
+                }
+            }
+            let rect = Rect::new(cur.rect.r0, next.rect.r1, cur.rect.c0, cur.rect.c1);
+            let merged = BlockCoreset::from_support(rect, red.finish());
+            by_start.remove(&(cur.rect.c0, cur.rect.c1, cur.rect.r0));
+            by_start.remove(&key);
+            pool[j] = None;
+            by_start.insert((rect.c0, rect.c1, rect.r0), i);
+            pool[i] = Some(merged);
+            changed = true;
+        }
+    }
+    let blocks: Vec<BlockCoreset> = pool.into_iter().flatten().collect();
+    let _ = config;
+    SignalCoreset::from_blocks(n, m, coreset.config, sigma, gamma, blocks)
+}
+
+/// Streaming builder: feed row-bands as they arrive; coresets are built
+/// per band, merged, and periodically reduced — memory stays proportional
+/// to the reduced coreset, not the stream.
+pub struct StreamingCoreset {
+    config: CoresetConfig,
+    m: usize,
+    rows_seen: usize,
+    acc: Option<SignalCoreset>,
+    /// Reduce whenever the accumulated block count exceeds this multiple
+    /// of the last reduced size.
+    reduce_factor: f64,
+    last_reduced_len: usize,
+}
+
+impl StreamingCoreset {
+    pub fn new(m: usize, config: CoresetConfig) -> Self {
+        Self {
+            config,
+            m,
+            rows_seen: 0,
+            acc: None,
+            reduce_factor: 2.0,
+            last_reduced_len: 64,
+        }
+    }
+
+    /// Ingest the next band (must have width m).
+    pub fn push_band(&mut self, band: &crate::signal::Signal) {
+        assert_eq!(band.cols(), self.m);
+        let part = SignalCoreset::build_with(band, self.config);
+        let part = offset_rows(part, self.rows_seen);
+        self.rows_seen += band.rows();
+        let merged = match self.acc.take() {
+            None => part,
+            Some(acc) => merge(vec![acc, part]),
+        };
+        let merged = if merged.blocks.len() as f64
+            > self.reduce_factor * self.last_reduced_len as f64
+        {
+            let tol = merged.gamma * merged.gamma * merged.sigma;
+            let reduced = reduce(merged, tol);
+            self.last_reduced_len = reduced.blocks.len().max(64);
+            reduced
+        } else {
+            merged
+        };
+        self.acc = Some(merged);
+    }
+
+    pub fn rows_seen(&self) -> usize {
+        self.rows_seen
+    }
+
+    /// Final coreset over everything ingested so far.
+    pub fn finish(self) -> Option<SignalCoreset> {
+        self.acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::Coreset;
+    use crate::rng::Rng;
+    use crate::segmentation::random_segmentation;
+    use crate::signal::{generate, PrefixStats, Signal};
+
+    fn band_split(sig: &Signal, bands: usize) -> Vec<Signal> {
+        let edges = crate::bicriteria::band_edges(sig.rows(), bands);
+        edges
+            .windows(2)
+            .map(|w| sig.crop(Rect::new(w[0], w[1] - 1, 0, sig.cols() - 1)))
+            .collect()
+    }
+
+    #[test]
+    fn merged_weight_equals_full_weight() {
+        let mut rng = Rng::new(30);
+        let sig = generate::smooth(48, 32, 3, &mut rng);
+        let parts: Vec<SignalCoreset> = band_split(&sig, 4)
+            .iter()
+            .enumerate()
+            .map(|(i, band)| {
+                offset_rows(SignalCoreset::build(band, 4, 0.3), i * 12)
+            })
+            .collect();
+        let merged = merge(parts);
+        assert!((merged.total_weight() - (48 * 32) as f64).abs() < 1e-6);
+        assert_eq!(merged.rows(), 48);
+    }
+
+    #[test]
+    fn merged_coreset_approximates_like_monolithic() {
+        let mut rng = Rng::new(31);
+        let sig = generate::smooth(60, 40, 3, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let parts: Vec<SignalCoreset> = band_split(&sig, 3)
+            .iter()
+            .enumerate()
+            .map(|(i, band)| offset_rows(SignalCoreset::build(band, 5, 0.25), i * 20))
+            .collect();
+        let merged = merge(parts);
+        for _ in 0..20 {
+            let mut s = random_segmentation(sig.bounds(), 5, &mut rng);
+            s.refit_values(&stats);
+            let exact = s.loss(&stats);
+            let approx = merged.fitting_loss(&s);
+            assert!(
+                (approx - exact).abs() <= 0.3 * exact + 1e-6,
+                "{approx} vs {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn reduce_shrinks_and_preserves_moments() {
+        let mut rng = Rng::new(32);
+        let (sig, _) = generate::piecewise_constant(64, 24, 4, 0.01, &mut rng);
+        let parts: Vec<SignalCoreset> = band_split(&sig, 8)
+            .iter()
+            .enumerate()
+            .map(|(i, band)| offset_rows(SignalCoreset::build(band, 4, 0.3), i * 8))
+            .collect();
+        let merged = merge(parts);
+        let before = merged.blocks.len();
+        let w_before = merged.total_weight();
+        let tol = merged.gamma * merged.gamma * merged.sigma + 1.0;
+        let reduced = reduce(merged, tol);
+        assert!(reduced.blocks.len() < before, "{} !< {before}", reduced.blocks.len());
+        assert!((reduced.total_weight() - w_before).abs() < 1e-6 * w_before);
+        // Blocks still tile the signal.
+        let rects: Vec<Rect> = reduced.blocks.iter().map(|b| b.rect).collect();
+        assert!(crate::partition::is_exact_tiling(&rects, sig.bounds()));
+    }
+
+    #[test]
+    fn streaming_matches_batch_weight_and_quality() {
+        let mut rng = Rng::new(33);
+        let sig = generate::smooth(80, 30, 3, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let mut stream = StreamingCoreset::new(30, CoresetConfig::new(4, 0.3));
+        for band in band_split(&sig, 10) {
+            stream.push_band(&band);
+        }
+        assert_eq!(stream.rows_seen(), 80);
+        let cs = stream.finish().unwrap();
+        assert!((cs.total_weight() - 2400.0).abs() < 1e-6 * 2400.0);
+        let mut s = random_segmentation(sig.bounds(), 4, &mut rng);
+        s.refit_values(&stats);
+        let exact = s.loss(&stats);
+        let approx = cs.fitting_loss(&s);
+        assert!(
+            (approx - exact).abs() <= 0.35 * exact + 1e-6,
+            "{approx} vs {exact}"
+        );
+    }
+}

@@ -1,0 +1,394 @@
+//! The (k, ε)-coreset for decision trees of signals — Algorithm 3
+//! (`SIGNAL-CORESET`) and its data structure, plus the baseline and
+//! streaming compositions.
+//!
+//! Construction pipeline (Theorem 8):
+//!
+//! 1. [`crate::bicriteria::bicriteria`] → σ ≤ opt_k(D) and the nominal
+//!    (α, β);
+//! 2. [`crate::partition::partition`] with tolerance γ²σ → balanced
+//!    partition `B`;
+//! 3. [`caratheodory`] per block → 4 weighted labels matching
+//!    (Σ1, Σy, Σy²) exactly, pinned to the block's corner coordinates
+//!    (Algorithm 3, Line 6);
+//! 4. [`fitting_loss`] (Algorithm 5) evaluates any k-segmentation against
+//!    the coreset in O(k·|blocks|).
+//!
+//! ## Theory vs. practice (γ)
+//!
+//! The worst-case theory sets γ = ε²/(βk), which the paper itself calls
+//! "too pessimistic in practice" (§4: a coreset of 1% of the input
+//! achieves ε = 0.2 where the theory predicts a coreset *larger than the
+//! input*). Like the paper's reference implementation we default to a
+//! practical calibration — γ = ε/2, per-block tolerance γ²σ — found by
+//! the calibration sweep recorded in EXPERIMENTS.md §Calibration, and
+//! expose the theoretical rule behind [`CoresetConfig::theory`].
+
+pub mod caratheodory;
+pub mod fitting_loss;
+pub mod merge_reduce;
+pub mod uniform;
+
+use crate::bicriteria;
+use crate::partition;
+use crate::segmentation::KSegmentation;
+use crate::signal::{PrefixStats, Rect, Signal};
+
+/// One weighted coreset point: grid coordinates, label, weight.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WeightedPoint {
+    pub row: usize,
+    pub col: usize,
+    pub y: f64,
+    pub w: f64,
+}
+
+/// Per-block compressed representation: exactly 4 (label, weight) slots
+/// (zero-weight padding when Caratheodory needs fewer), with coordinates
+/// pinned to the block's 4 corners.
+#[derive(Clone, Debug)]
+pub struct BlockCoreset {
+    pub rect: Rect,
+    pub labels: [f64; 4],
+    pub weights: [f64; 4],
+}
+
+impl BlockCoreset {
+    /// Build from a signal block via Caratheodory compression.
+    /// Row-contiguous iteration over the raw value buffer (perf pass,
+    /// EXPERIMENTS.md §Perf): avoids the per-cell (r, c) → index
+    /// arithmetic of the generic cell iterator.
+    pub fn from_block(signal: &Signal, rect: Rect) -> Self {
+        let mut red = caratheodory::CaratheodoryReducer::new();
+        let m = signal.cols();
+        let values = signal.values();
+        match signal.mask() {
+            None => {
+                for r in rect.r0..=rect.r1 {
+                    let row = &values[r * m + rect.c0..=r * m + rect.c1];
+                    for &y in row {
+                        red.push(y, 1.0);
+                    }
+                }
+            }
+            Some(mask) => {
+                for r in rect.r0..=rect.r1 {
+                    let base = r * m;
+                    for c in rect.c0..=rect.c1 {
+                        if mask[base + c] {
+                            red.push(values[base + c], 1.0);
+                        }
+                    }
+                }
+            }
+        }
+        Self::from_support(rect, red.finish())
+    }
+
+    /// Build from an explicit ≤4-point support.
+    pub fn from_support(rect: Rect, support: Vec<(f64, f64)>) -> Self {
+        assert!(support.len() <= 4, "Caratheodory support must be ≤ 4");
+        let mut labels = [0.0f64; 4];
+        let mut weights = [0.0f64; 4];
+        for (i, (y, w)) in support.into_iter().enumerate() {
+            labels[i] = y;
+            weights[i] = w;
+        }
+        Self { rect, labels, weights }
+    }
+
+    /// (count, Σy, Σy²) of the represented block — exact by construction.
+    pub fn moments(&self) -> crate::signal::stats::Moments {
+        let mut m = crate::signal::stats::Moments::ZERO;
+        for i in 0..4 {
+            let w = self.weights[i];
+            m.count += w;
+            m.sum += w * self.labels[i];
+            m.sum_sq += w * self.labels[i] * self.labels[i];
+        }
+        m
+    }
+
+    /// Total weight (= number of present cells in the block).
+    pub fn total_weight(&self) -> f64 {
+        self.weights.iter().sum()
+    }
+
+    /// The 4 weighted points with corner coordinates (zero-weight entries
+    /// skipped).
+    pub fn points(&self) -> impl Iterator<Item = WeightedPoint> + '_ {
+        let corners = self.rect.corners();
+        (0..4).filter_map(move |i| {
+            (self.weights[i] > 0.0).then(|| WeightedPoint {
+                row: corners[i].0,
+                col: corners[i].1,
+                y: self.labels[i],
+                w: self.weights[i],
+            })
+        })
+    }
+}
+
+/// Common interface shared by the paper's coreset and the baselines, so
+/// the experiment harnesses treat compressions uniformly.
+pub trait Coreset {
+    /// Approximate ℓ(D, s) for a k-segmentation `s`.
+    fn fitting_loss(&self, s: &KSegmentation) -> f64;
+    /// Flatten to weighted points (the representation handed to forest
+    /// trainers).
+    fn weighted_points(&self) -> Vec<WeightedPoint>;
+    /// Number of stored points.
+    fn size(&self) -> usize;
+}
+
+/// Construction parameters; see module docs for the γ discussion.
+#[derive(Clone, Copy, Debug)]
+pub struct CoresetConfig {
+    pub k: usize,
+    pub eps: f64,
+    /// Explicit γ override; `None` → practical default γ = ε/2.
+    pub gamma: Option<f64>,
+    /// Explicit σ override; `None` → bicriteria estimate.
+    pub sigma: Option<f64>,
+}
+
+impl CoresetConfig {
+    pub fn new(k: usize, eps: f64) -> Self {
+        assert!(k >= 1);
+        assert!(eps > 0.0 && eps < 1.0, "eps must be in (0,1)");
+        Self { k, eps, gamma: None, sigma: None }
+    }
+
+    /// The worst-case theoretical calibration γ = ε²/(βk) from Theorem 8.
+    pub fn theory(mut self, beta: f64) -> Self {
+        self.gamma = Some((self.eps * self.eps / (beta * self.k as f64)).min(1.0));
+        self
+    }
+}
+
+/// The (k, ε)-coreset of an n×m signal (Definition 3 / Theorem 8).
+#[derive(Clone, Debug)]
+pub struct SignalCoreset {
+    n: usize,
+    m: usize,
+    pub config: CoresetConfig,
+    /// σ actually used (lower-bound estimate of opt_k).
+    pub sigma: f64,
+    /// γ actually used.
+    pub gamma: f64,
+    pub blocks: Vec<BlockCoreset>,
+}
+
+impl SignalCoreset {
+    /// Algorithm 3 with the practical default calibration.
+    pub fn build(signal: &Signal, k: usize, eps: f64) -> Self {
+        Self::build_with(signal, CoresetConfig::new(k, eps))
+    }
+
+    /// Algorithm 3 with explicit configuration.
+    pub fn build_with(signal: &Signal, config: CoresetConfig) -> Self {
+        let stats = PrefixStats::new(signal);
+        Self::build_with_stats(signal, &stats, config)
+    }
+
+    /// Variant reusing precomputed prefix statistics (the pipeline path).
+    pub fn build_with_stats(
+        signal: &Signal,
+        stats: &PrefixStats,
+        config: CoresetConfig,
+    ) -> Self {
+        let sigma = config
+            .sigma
+            .unwrap_or_else(|| bicriteria::bicriteria(stats, config.k).sigma);
+        let gamma = config.gamma.unwrap_or(config.eps / 2.0).clamp(1e-9, 1.0);
+        let rects = partition::partition(stats, gamma, sigma);
+        let blocks = rects
+            .into_iter()
+            .map(|rect| BlockCoreset::from_block(signal, rect))
+            .collect();
+        Self {
+            n: signal.rows(),
+            m: signal.cols(),
+            config,
+            sigma,
+            gamma,
+            blocks,
+        }
+    }
+
+    /// Assemble directly from blocks (merge-and-reduce path).
+    pub fn from_blocks(
+        n: usize,
+        m: usize,
+        config: CoresetConfig,
+        sigma: f64,
+        gamma: f64,
+        blocks: Vec<BlockCoreset>,
+    ) -> Self {
+        Self { n, m, config, sigma, gamma, blocks }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.m
+    }
+
+    /// Number of stored points (4 per block, counting padding — this is
+    /// the honest storage cost).
+    pub fn stored_points(&self) -> usize {
+        self.blocks.len() * 4
+    }
+
+    /// Points with non-zero weight.
+    pub fn active_points(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| b.weights.iter().filter(|&&w| w > 0.0).count())
+            .sum()
+    }
+
+    /// |C| / N.
+    pub fn compression_ratio(&self) -> f64 {
+        self.stored_points() as f64 / (self.n * self.m) as f64
+    }
+
+    /// Σ weights — equals the number of present cells (exactly, by the
+    /// Caratheodory guarantee).
+    pub fn total_weight(&self) -> f64 {
+        self.blocks.iter().map(|b| b.total_weight()).sum()
+    }
+
+    /// The loss the coreset reports for the *optimal constant* model —
+    /// exact, handy for sanity checks.
+    pub fn opt1(&self) -> f64 {
+        let mut m = crate::signal::stats::Moments::ZERO;
+        for b in &self.blocks {
+            m = m.add(&b.moments());
+        }
+        m.opt1()
+    }
+}
+
+impl Coreset for SignalCoreset {
+    fn fitting_loss(&self, s: &KSegmentation) -> f64 {
+        fitting_loss::fitting_loss(self, s)
+    }
+
+    fn weighted_points(&self) -> Vec<WeightedPoint> {
+        self.blocks.iter().flat_map(|b| b.points()).collect()
+    }
+
+    fn size(&self) -> usize {
+        self.stored_points()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::segmentation::random_segmentation;
+    use crate::signal::generate;
+
+    #[test]
+    fn block_coreset_moments_match_signal() {
+        let mut rng = Rng::new(2);
+        let sig = generate::smooth(20, 20, 3, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let rect = Rect::new(2, 9, 3, 14);
+        let bc = BlockCoreset::from_block(&sig, rect);
+        let exact = stats.moments(&rect);
+        let got = bc.moments();
+        let scale = 1.0 + exact.sum_sq.abs();
+        assert!((got.count - exact.count).abs() < 1e-7 * scale);
+        assert!((got.sum - exact.sum).abs() < 1e-7 * scale);
+        assert!((got.sum_sq - exact.sum_sq).abs() < 1e-6 * scale);
+    }
+
+    #[test]
+    fn coreset_total_weight_is_cell_count() {
+        let mut rng = Rng::new(3);
+        let sig = generate::image_like(40, 30, 2, &mut rng);
+        let cs = SignalCoreset::build(&sig, 5, 0.3);
+        assert!((cs.total_weight() - 1200.0).abs() < 1e-6 * 1200.0);
+    }
+
+    #[test]
+    fn coreset_opt1_matches_exact() {
+        let mut rng = Rng::new(4);
+        let sig = generate::smooth(30, 30, 3, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let cs = SignalCoreset::build(&sig, 4, 0.3);
+        let exact = stats.opt1(&sig.bounds());
+        let approx = cs.opt1();
+        assert!(
+            (approx - exact).abs() <= 1e-6 * (1.0 + exact),
+            "{approx} vs {exact}"
+        );
+    }
+
+    #[test]
+    fn piecewise_constant_gives_tiny_coreset() {
+        let mut rng = Rng::new(5);
+        let (sig, _) = generate::piecewise_constant(64, 64, 6, 0.0, &mut rng);
+        let cs = SignalCoreset::build(&sig, 6, 0.2);
+        // Noiseless piecewise constant → σ ≈ 0 → blocks = constant regions;
+        // far fewer than N/16 blocks.
+        assert!(
+            cs.blocks.len() < 64 * 64 / 16,
+            "{} blocks",
+            cs.blocks.len()
+        );
+        // And it is loss-exact on the generating segmentation class:
+        let stats = PrefixStats::new(&sig);
+        for _ in 0..10 {
+            let s = random_segmentation(sig.bounds(), 6, &mut rng);
+            let exact = s.loss(&stats);
+            let approx = Coreset::fitting_loss(&cs, &s);
+            assert!(
+                (approx - exact).abs() <= 0.25 * exact + 1e-6,
+                "{approx} vs {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn eps_controls_size() {
+        let mut rng = Rng::new(6);
+        let sig = generate::smooth(50, 50, 4, &mut rng);
+        let tight = SignalCoreset::build(&sig, 4, 0.1);
+        let loose = SignalCoreset::build(&sig, 4, 0.5);
+        assert!(
+            tight.blocks.len() >= loose.blocks.len(),
+            "tight {} loose {}",
+            tight.blocks.len(),
+            loose.blocks.len()
+        );
+    }
+
+    #[test]
+    fn weighted_points_have_corner_coords() {
+        let mut rng = Rng::new(7);
+        let sig = generate::smooth(20, 20, 2, &mut rng);
+        let cs = SignalCoreset::build(&sig, 3, 0.3);
+        for b in &cs.blocks {
+            let corners = b.rect.corners();
+            for p in b.points() {
+                assert!(corners.contains(&(p.row, p.col)));
+                assert!(p.w > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn config_theory_shrinks_gamma() {
+        let c = CoresetConfig::new(10, 0.2).theory(2.0);
+        assert!(c.gamma.unwrap() < 0.2);
+        assert!((c.gamma.unwrap() - 0.2 * 0.2 / 20.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,134 @@
+//! Uniform random sampling baseline — the paper's `RandomSample(D, τ)`
+//! comparison (§5). Samples τ present cells uniformly without
+//! replacement, each weighted N/τ so the estimator is unbiased, and
+//! evaluates losses by direct weighted summation.
+//!
+//! Unlike the coreset this has **no** worst-case guarantee for
+//! k-segmentations (a thin rectangle can be missed entirely); Fig. 4
+//! quantifies the resulting accuracy gap.
+
+use crate::rng::Rng;
+use crate::segmentation::KSegmentation;
+use crate::signal::Signal;
+
+use super::{Coreset, WeightedPoint};
+
+/// A uniform sample compression of a signal.
+#[derive(Clone, Debug)]
+pub struct UniformSample {
+    pub points: Vec<WeightedPoint>,
+    pub n: usize,
+    pub m: usize,
+}
+
+impl UniformSample {
+    /// Sample `tau` present cells uniformly without replacement.
+    pub fn build(signal: &Signal, tau: usize, rng: &mut Rng) -> Self {
+        let present: Vec<(usize, usize)> = (0..signal.rows())
+            .flat_map(|r| (0..signal.cols()).map(move |c| (r, c)))
+            .filter(|&(r, c)| signal.is_present(r, c))
+            .collect();
+        let tau = tau.min(present.len()).max(1);
+        let idx = rng.sample_indices(present.len(), tau);
+        let w = present.len() as f64 / tau as f64;
+        let points = idx
+            .into_iter()
+            .map(|i| {
+                let (r, c) = present[i];
+                WeightedPoint { row: r, col: c, y: signal.get(r, c), w }
+            })
+            .collect();
+        Self { points, n: signal.rows(), m: signal.cols() }
+    }
+}
+
+impl Coreset for UniformSample {
+    fn fitting_loss(&self, s: &KSegmentation) -> f64 {
+        let mut total = 0.0;
+        for p in &self.points {
+            if let Some(v) = s.value_at(p.row, p.col) {
+                let d = v - p.y;
+                total += p.w * d * d;
+            }
+        }
+        total
+    }
+
+    fn weighted_points(&self) -> Vec<WeightedPoint> {
+        self.points.clone()
+    }
+
+    fn size(&self) -> usize {
+        self.points.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::segmentation::random_segmentation;
+    use crate::signal::{generate, PrefixStats};
+
+    #[test]
+    fn sample_size_and_weights() {
+        let mut rng = Rng::new(20);
+        let sig = generate::smooth(30, 30, 2, &mut rng);
+        let us = UniformSample::build(&sig, 90, &mut rng);
+        assert_eq!(us.size(), 90);
+        let total_w: f64 = us.points.iter().map(|p| p.w).sum();
+        assert!((total_w - 900.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_caps_at_present_cells() {
+        let sig = generate::noise(5, 5, 1.0, &mut Rng::new(1));
+        let us = UniformSample::build(&sig, 1000, &mut Rng::new(2));
+        assert_eq!(us.size(), 25);
+    }
+
+    #[test]
+    fn estimator_is_consistent_at_full_sample() {
+        // τ = N → the estimate is exact.
+        let mut rng = Rng::new(21);
+        let sig = generate::smooth(20, 20, 3, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let us = UniformSample::build(&sig, 400, &mut rng);
+        for _ in 0..5 {
+            let s = random_segmentation(sig.bounds(), 5, &mut rng);
+            let exact = s.loss(&stats);
+            let est = us.fitting_loss(&s);
+            assert!((est - exact).abs() < 1e-8 * (1.0 + exact));
+        }
+    }
+
+    #[test]
+    fn estimator_is_unbiased_in_expectation() {
+        let mut rng = Rng::new(22);
+        let sig = generate::smooth(30, 30, 3, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let s = random_segmentation(sig.bounds(), 6, &mut rng);
+        let exact = s.loss(&stats);
+        let trials = 200;
+        let mut mean = 0.0;
+        for t in 0..trials {
+            let mut r = Rng::new(1000 + t);
+            let us = UniformSample::build(&sig, 60, &mut r);
+            mean += us.fitting_loss(&s);
+        }
+        mean /= trials as f64;
+        assert!(
+            (mean - exact).abs() < 0.1 * exact,
+            "mean {mean} vs exact {exact}"
+        );
+    }
+
+    #[test]
+    fn respects_mask() {
+        let mut sig = generate::smooth(20, 20, 2, &mut Rng::new(3));
+        sig.mask_rect(crate::signal::Rect::new(0, 9, 0, 19));
+        let us = UniformSample::build(&sig, 50, &mut Rng::new(4));
+        for p in &us.points {
+            assert!(p.row >= 10, "sampled masked cell ({}, {})", p.row, p.col);
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! Dataset generators reproducing the paper's experimental inputs.
+//!
+//! * [`blobs`], [`moons`], [`circles`] — reimplementations of
+//!   `sklearn.datasets.make_{blobs,moons,circles}` at the sizes used in
+//!   Figs. 5–7 (17k / 24k / 26k labeled points in the plane).
+//! * [`rasterize`] — the point-cloud → signal bridge: the paper's coreset
+//!   operates on signals, so the planar datasets are binned onto a grid
+//!   whose cell label is the mean point label (empty cells masked).
+//! * [`air_quality_like`], [`gesture_phase_like`] — UCI-dataset
+//!   substitutes with matching shapes (9358×15, 9900×18), see DESIGN.md
+//!   §Substitutions.
+//! * [`holdout_patches`] — the missing-values protocol of §5: mask random
+//!   5×5 patches totalling a target fraction of the matrix.
+
+use crate::rng::Rng;
+use crate::signal::{generate, Rect, Signal};
+
+/// A planar labeled point (the sklearn-style datasets).
+#[derive(Clone, Copy, Debug)]
+pub struct Point2 {
+    pub x: f64,
+    pub y: f64,
+    pub label: f64,
+}
+
+/// `make_blobs`-like: 3 gaussian clusters with sizes 8500/5800/2700 as in
+/// Fig. 5 (sizes scaled by `scale` for tests).
+pub fn blobs(scale: f64, rng: &mut Rng) -> Vec<Point2> {
+    let sizes = [8500usize, 5800, 2700].map(|s| ((s as f64 * scale) as usize).max(10));
+    let centers = [(-5.0, -2.0), (3.0, 4.0), (6.0, -4.0)];
+    let std = 1.6;
+    let mut out = Vec::new();
+    for (i, (&n, &(cx, cy))) in sizes.iter().zip(centers.iter()).enumerate() {
+        for _ in 0..n {
+            out.push(Point2 {
+                x: rng.normal_ms(cx, std),
+                y: rng.normal_ms(cy, std),
+                label: i as f64,
+            });
+        }
+    }
+    out
+}
+
+/// `make_moons`-like: two interleaving half circles, 12k points each in
+/// Fig. 6.
+pub fn moons(scale: f64, noise: f64, rng: &mut Rng) -> Vec<Point2> {
+    let per = ((12_000.0 * scale) as usize).max(10);
+    let mut out = Vec::with_capacity(2 * per);
+    for i in 0..per {
+        let t = std::f64::consts::PI * i as f64 / per as f64;
+        out.push(Point2 {
+            x: t.cos() + rng.normal_ms(0.0, noise),
+            y: t.sin() + rng.normal_ms(0.0, noise),
+            label: 0.0,
+        });
+        out.push(Point2 {
+            x: 1.0 - t.cos() + rng.normal_ms(0.0, noise),
+            y: 0.5 - t.sin() + rng.normal_ms(0.0, noise),
+            label: 1.0,
+        });
+    }
+    out
+}
+
+/// `make_circles`-like: concentric circles, 14k outer / 12k inner in
+/// Fig. 7.
+pub fn circles(scale: f64, noise: f64, rng: &mut Rng) -> Vec<Point2> {
+    let outer = ((14_000.0 * scale) as usize).max(10);
+    let inner = ((12_000.0 * scale) as usize).max(10);
+    let mut out = Vec::with_capacity(outer + inner);
+    for i in 0..outer {
+        let t = std::f64::consts::TAU * i as f64 / outer as f64;
+        out.push(Point2 {
+            x: t.cos() + rng.normal_ms(0.0, noise),
+            y: t.sin() + rng.normal_ms(0.0, noise),
+            label: 0.0,
+        });
+    }
+    for i in 0..inner {
+        let t = std::f64::consts::TAU * i as f64 / inner as f64;
+        out.push(Point2 {
+            x: 0.5 * t.cos() + rng.normal_ms(0.0, noise),
+            y: 0.5 * t.sin() + rng.normal_ms(0.0, noise),
+            label: 1.0,
+        });
+    }
+    out
+}
+
+/// Bin planar points onto an n×m grid; each cell's label is the mean
+/// label of its points, empty cells are masked. This is how the paper's
+/// appendix experiments feed point datasets to the signal coreset.
+pub fn rasterize(points: &[Point2], n: usize, m: usize) -> Signal {
+    assert!(!points.is_empty());
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for p in points {
+        xmin = xmin.min(p.x);
+        xmax = xmax.max(p.x);
+        ymin = ymin.min(p.y);
+        ymax = ymax.max(p.y);
+    }
+    let xr = (xmax - xmin).max(1e-9);
+    let yr = (ymax - ymin).max(1e-9);
+    let mut sums = vec![0.0f64; n * m];
+    let mut counts = vec![0usize; n * m];
+    for p in points {
+        let r = (((p.y - ymin) / yr) * (n as f64 - 1e-9)).floor() as usize;
+        let c = (((p.x - xmin) / xr) * (m as f64 - 1e-9)).floor() as usize;
+        let idx = r.min(n - 1) * m + c.min(m - 1);
+        sums[idx] += p.label;
+        counts[idx] += 1;
+    }
+    let mut values = vec![0.0f64; n * m];
+    let mut mask = vec![false; n * m];
+    for i in 0..n * m {
+        if counts[i] > 0 {
+            values[i] = sums[i] / counts[i] as f64;
+            mask[i] = true;
+        }
+    }
+    Signal::from_values(n, m, values).with_mask(mask)
+}
+
+/// Air Quality substitute: 9358 instances × 15 features (UCI shape),
+/// scaled by `scale` for tests. Sensor-panel structure: slow daily
+/// periodicities + correlated channels + noise, z-normalized.
+pub fn air_quality_like(scale: f64, rng: &mut Rng) -> Signal {
+    let n = ((9358.0 * scale) as usize).max(40);
+    let m = 15;
+    // Sensor panels are smoother than generic tabular data: overlay a
+    // periodic component on the low-rank factors.
+    let mut sig = generate::tabular_like(n, m, 4, 0.1, rng);
+    for r in 0..n {
+        let day = (r as f64) * std::f64::consts::TAU / 24.0;
+        for c in 0..m {
+            let v = sig.get(r, c) + 0.5 * ((day + c as f64).sin());
+            sig.set(r, c, v);
+        }
+    }
+    generate::znormalize_columns(&mut sig);
+    sig
+}
+
+/// Gesture Phase substitute: 9900 instances × 18 features. Gesture data
+/// has segment structure (rest / gesture phases) — stronger regime
+/// switching, less periodicity.
+pub fn gesture_phase_like(scale: f64, rng: &mut Rng) -> Signal {
+    let n = ((9900.0 * scale) as usize).max(40);
+    let m = 18;
+    let mut sig = generate::tabular_like(n, m, 5, 0.05, rng);
+    // Inject phase segments: blocks of rows share an offset per feature.
+    let mut r0 = 0usize;
+    while r0 < n {
+        let len = rng.range(20, 120).min(n - r0);
+        let active = rng.bool(0.5);
+        if active {
+            for c in 0..m {
+                let off = rng.normal_ms(0.0, 0.8);
+                for r in r0..r0 + len {
+                    let v = sig.get(r, c) + off;
+                    sig.set(r, c, v);
+                }
+            }
+        }
+        r0 += len;
+    }
+    generate::znormalize_columns(&mut sig);
+    sig
+}
+
+/// The §5 protocol: mask random 5×5 patches until ≥ `fraction` of cells
+/// are held out; returns the masked signal plus the list of held-out
+/// cells with their ground-truth labels (the test set).
+pub fn holdout_patches(
+    signal: &Signal,
+    fraction: f64,
+    patch: usize,
+    rng: &mut Rng,
+) -> (Signal, Vec<(usize, usize, f64)>) {
+    assert!(fraction > 0.0 && fraction < 1.0);
+    let n = signal.rows();
+    let m = signal.cols();
+    let target = ((n * m) as f64 * fraction) as usize;
+    let mut masked = signal.clone();
+    let mut held: Vec<(usize, usize, f64)> = Vec::new();
+    let mut is_held = vec![false; n * m];
+    let ph = patch.min(n);
+    let pw = patch.min(m);
+    let mut guard = 0usize;
+    while held.len() < target && guard < 100 * target {
+        guard += 1;
+        let r0 = rng.usize(n - ph + 1);
+        let c0 = rng.usize(m - pw + 1);
+        for r in r0..r0 + ph {
+            for c in c0..c0 + pw {
+                let idx = r * m + c;
+                if !is_held[idx] && signal.is_present(r, c) {
+                    is_held[idx] = true;
+                    held.push((r, c, signal.get(r, c)));
+                }
+            }
+        }
+        masked.mask_rect(Rect::new(r0, r0 + ph - 1, c0, c0 + pw - 1));
+    }
+    (masked, held)
+}
+
+/// Convert the *present* cells of a signal into training samples with
+/// features (row, col).
+pub fn signal_to_samples(signal: &Signal) -> Vec<crate::tree::Sample> {
+    let mut out = Vec::with_capacity(signal.present());
+    for r in 0..signal.rows() {
+        for c in 0..signal.cols() {
+            if signal.is_present(r, c) {
+                out.push(crate::tree::Sample::new(
+                    vec![r as f64, c as f64],
+                    signal.get(r, c),
+                    1.0,
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blob_sizes_match_paper() {
+        let mut rng = Rng::new(1);
+        let pts = blobs(1.0, &mut rng);
+        assert_eq!(pts.len(), 17_000);
+        let c0 = pts.iter().filter(|p| p.label == 0.0).count();
+        assert_eq!(c0, 8500);
+    }
+
+    #[test]
+    fn moons_and_circles_sizes() {
+        let mut rng = Rng::new(2);
+        assert_eq!(moons(1.0, 0.05, &mut rng).len(), 24_000);
+        assert_eq!(circles(1.0, 0.05, &mut rng).len(), 26_000);
+    }
+
+    #[test]
+    fn rasterize_covers_and_masks() {
+        let mut rng = Rng::new(3);
+        let pts = blobs(0.05, &mut rng);
+        let sig = rasterize(&pts, 40, 40);
+        let present = sig.present();
+        assert!(present > 0 && present < 1600);
+        // Labels are in [0, 2].
+        for r in 0..40 {
+            for c in 0..40 {
+                if sig.is_present(r, c) {
+                    let v = sig.get(r, c);
+                    assert!((0.0..=2.0).contains(&v));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uci_like_shapes() {
+        let mut rng = Rng::new(4);
+        let air = air_quality_like(0.02, &mut rng);
+        assert_eq!(air.cols(), 15);
+        assert!(air.rows() >= 40);
+        let ges = gesture_phase_like(0.02, &mut rng);
+        assert_eq!(ges.cols(), 18);
+    }
+
+    #[test]
+    fn holdout_reaches_fraction() {
+        let mut rng = Rng::new(5);
+        let sig = air_quality_like(0.05, &mut rng);
+        let (masked, held) = holdout_patches(&sig, 0.3, 5, &mut rng);
+        let total = sig.rows() * sig.cols();
+        assert!(held.len() >= (total as f64 * 0.3) as usize);
+        assert_eq!(masked.present() + held.len(), sig.present());
+        // Held-out cells are masked and retain ground truth.
+        for &(r, c, y) in held.iter().take(50) {
+            assert!(!masked.is_present(r, c));
+            assert_eq!(sig.get(r, c), y);
+        }
+    }
+
+    #[test]
+    fn signal_to_samples_skips_masked() {
+        let mut rng = Rng::new(6);
+        let sig = air_quality_like(0.02, &mut rng);
+        let (masked, _) = holdout_patches(&sig, 0.2, 5, &mut rng);
+        let samples = signal_to_samples(&masked);
+        assert_eq!(samples.len(), masked.present());
+    }
+}

@@ -1,0 +1,188 @@
+//! Experiment harnesses reproducing the paper's evaluation (§5 + App. A).
+//!
+//! The protocol of Fig. 4: hold out 30% of the dataset matrix as random
+//! 5×5 patches; compress the remaining entries (coreset vs. uniform
+//! sample of the same size); train forests on the compression; tune the
+//! hyperparameter k on the compression; report test-set SSE and time.
+
+pub mod tuning;
+
+use std::time::{Duration, Instant};
+
+use crate::coreset::uniform::UniformSample;
+use crate::coreset::{Coreset, SignalCoreset};
+use crate::datasets;
+use crate::rng::Rng;
+use crate::signal::Signal;
+use crate::tree::forest::{ForestParams, RandomForest};
+use crate::tree::gbdt::{Gbdt, GbdtParams};
+use crate::tree::Sample;
+
+/// Which forest implementation plays the "existing solver" role.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Solver {
+    /// Our sklearn RandomForestRegressor substitute.
+    RandomForest,
+    /// Our LightGBM LGBMRegressor substitute.
+    Gbdt,
+}
+
+/// A trained model behind either solver.
+pub enum Model {
+    Forest(RandomForest),
+    Gbdt(Gbdt),
+}
+
+impl Model {
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        match self {
+            Model::Forest(f) => f.predict(x),
+            Model::Gbdt(g) => g.predict(x),
+        }
+    }
+}
+
+/// Train the chosen solver on weighted samples with `k` leaves per tree.
+pub fn train(solver: Solver, samples: &[Sample], k: usize, rng: &mut Rng) -> Model {
+    match solver {
+        Solver::RandomForest => {
+            let params = ForestParams::default().with_trees(10).with_max_leaves(k);
+            Model::Forest(RandomForest::fit(samples, &params, rng))
+        }
+        Solver::Gbdt => {
+            let params = GbdtParams::default()
+                .with_stages(20)
+                .with_leaves(k.clamp(2, 64));
+            Model::Gbdt(Gbdt::fit(samples, &params, rng))
+        }
+    }
+}
+
+/// Test-set SSE of a model on held-out cells.
+pub fn test_sse(model: &Model, held: &[(usize, usize, f64)]) -> f64 {
+    held.iter()
+        .map(|&(r, c, y)| {
+            let d = model.predict(&[r as f64, c as f64]) - y;
+            d * d
+        })
+        .sum()
+}
+
+/// One compression scheme's outcome on the missing-values task.
+#[derive(Clone, Debug)]
+pub struct CompressionOutcome {
+    pub scheme: String,
+    pub size: usize,
+    pub compression_ratio: f64,
+    pub build_time: Duration,
+    pub train_time: Duration,
+    pub test_sse: f64,
+}
+
+/// The §5 experiment for one dataset and one ε:
+/// returns (coreset outcome, uniform-sample outcome at equal size).
+pub fn missing_values_experiment(
+    signal: &Signal,
+    k_coreset: usize,
+    eps: f64,
+    k_train: usize,
+    solver: Solver,
+    seed: u64,
+) -> (CompressionOutcome, CompressionOutcome) {
+    let mut rng = Rng::new(seed);
+    let (masked, held) = datasets::holdout_patches(signal, 0.3, 5, &mut rng);
+
+    // Coreset.
+    let t0 = Instant::now();
+    let coreset = SignalCoreset::build(&masked, k_coreset, eps);
+    let cs_build = t0.elapsed();
+    let cs_samples: Vec<Sample> = coreset
+        .weighted_points()
+        .iter()
+        .map(Sample::from_point)
+        .collect();
+    let t0 = Instant::now();
+    let cs_model = train(solver, &cs_samples, k_train, &mut rng);
+    let cs_train = t0.elapsed();
+    let cs_out = CompressionOutcome {
+        scheme: "DT-coreset".into(),
+        size: cs_samples.len(),
+        compression_ratio: cs_samples.len() as f64 / masked.present() as f64,
+        build_time: cs_build,
+        train_time: cs_train,
+        test_sse: test_sse(&cs_model, &held),
+    };
+
+    // Uniform sample of the same size (the paper's fairness rule).
+    let t0 = Instant::now();
+    let us = UniformSample::build(&masked, cs_samples.len().max(1), &mut rng);
+    let us_build = t0.elapsed();
+    let us_samples: Vec<Sample> = us.weighted_points().iter().map(Sample::from_point).collect();
+    let t0 = Instant::now();
+    let us_model = train(solver, &us_samples, k_train, &mut rng);
+    let us_train = t0.elapsed();
+    let us_out = CompressionOutcome {
+        scheme: "RandomSample".into(),
+        size: us_samples.len(),
+        compression_ratio: us_samples.len() as f64 / masked.present() as f64,
+        build_time: us_build,
+        train_time: us_train,
+        test_sse: test_sse(&us_model, &held),
+    };
+    (cs_out, us_out)
+}
+
+/// Baseline: train on the full (masked) data, report SSE and time.
+pub fn full_data_baseline(
+    signal: &Signal,
+    k_train: usize,
+    solver: Solver,
+    seed: u64,
+) -> CompressionOutcome {
+    let mut rng = Rng::new(seed);
+    let (masked, held) = datasets::holdout_patches(signal, 0.3, 5, &mut rng);
+    let samples = datasets::signal_to_samples(&masked);
+    let t0 = Instant::now();
+    let model = train(solver, &samples, k_train, &mut rng);
+    let train_time = t0.elapsed();
+    CompressionOutcome {
+        scheme: "FullData".into(),
+        size: samples.len(),
+        compression_ratio: 1.0,
+        build_time: Duration::ZERO,
+        train_time,
+        test_sse: test_sse(&model, &held),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_values_pipeline_runs() {
+        let mut rng = Rng::new(80);
+        let sig = datasets::air_quality_like(0.03, &mut rng);
+        let (cs, us) = missing_values_experiment(&sig, 50, 0.4, 20, Solver::RandomForest, 1);
+        assert_eq!(cs.size, us.size);
+        assert!(cs.test_sse.is_finite() && us.test_sse.is_finite());
+        assert!(cs.compression_ratio < 1.0);
+    }
+
+    #[test]
+    fn full_baseline_runs() {
+        let mut rng = Rng::new(81);
+        let sig = datasets::gesture_phase_like(0.02, &mut rng);
+        let out = full_data_baseline(&sig, 20, Solver::RandomForest, 2);
+        assert!(out.test_sse.is_finite());
+        assert_eq!(out.compression_ratio, 1.0);
+    }
+
+    #[test]
+    fn gbdt_solver_works_too() {
+        let mut rng = Rng::new(82);
+        let sig = datasets::air_quality_like(0.02, &mut rng);
+        let (cs, _) = missing_values_experiment(&sig, 30, 0.4, 16, Solver::Gbdt, 3);
+        assert!(cs.test_sse.is_finite());
+    }
+}

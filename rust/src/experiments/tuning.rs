@@ -1,0 +1,187 @@
+//! AutoML / hyperparameter tuning on the coreset (contribution (iv) of
+//! the paper, Fig. 4 bottom): sweep the leaf budget k over a logarithmic
+//! grid, train on either the full data or a compression, and pick the k
+//! with the best held-out loss. The coreset is built **once** and reused
+//! for every candidate k — that is the source of the ×10 speedup.
+
+use std::time::{Duration, Instant};
+
+use crate::coreset::uniform::UniformSample;
+use crate::coreset::{Coreset, SignalCoreset};
+use crate::datasets;
+use crate::rng::Rng;
+use crate::signal::Signal;
+use crate::tree::Sample;
+
+use super::{test_sse, train, Solver};
+
+/// A logarithmic grid of candidate k values in [lo, hi].
+pub fn log_grid(lo: usize, hi: usize, count: usize) -> Vec<usize> {
+    assert!(lo >= 1 && hi >= lo && count >= 1);
+    let (lo_f, hi_f) = (lo as f64, hi as f64);
+    let mut out: Vec<usize> = (0..count)
+        .map(|i| {
+            let t = i as f64 / (count.max(2) - 1) as f64;
+            (lo_f * (hi_f / lo_f).powf(t)).round() as usize
+        })
+        .collect();
+    out.dedup();
+    out
+}
+
+/// The loss curve of a tuning sweep: (k, test SSE) per candidate, plus
+/// the total time spent (compression + all training runs).
+#[derive(Clone, Debug)]
+pub struct TuningCurve {
+    pub scheme: String,
+    pub points: Vec<(usize, f64)>,
+    pub compression_size: usize,
+    pub total_time: Duration,
+}
+
+impl TuningCurve {
+    /// The k minimizing the paper's regularized objective ℓ + k/10⁵.
+    pub fn best_k(&self) -> usize {
+        self.points
+            .iter()
+            .map(|&(k, l)| (k, l + k as f64 / 1e5))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(k, _)| k)
+            .unwrap()
+    }
+}
+
+/// Tune on the full data (the paper's "standard tuning").
+pub fn tune_full(
+    masked: &Signal,
+    held: &[(usize, usize, f64)],
+    grid: &[usize],
+    solver: Solver,
+    seed: u64,
+) -> TuningCurve {
+    let mut rng = Rng::new(seed);
+    let samples = datasets::signal_to_samples(masked);
+    let t0 = Instant::now();
+    let points = grid
+        .iter()
+        .map(|&k| {
+            let model = train(solver, &samples, k, &mut rng);
+            (k, test_sse(&model, held))
+        })
+        .collect();
+    TuningCurve {
+        scheme: "FullData".into(),
+        points,
+        compression_size: samples.len(),
+        total_time: t0.elapsed(),
+    }
+}
+
+/// Tune on the coreset (compress once, sweep on the compression).
+pub fn tune_coreset(
+    masked: &Signal,
+    held: &[(usize, usize, f64)],
+    grid: &[usize],
+    k_coreset: usize,
+    eps: f64,
+    solver: Solver,
+    seed: u64,
+) -> TuningCurve {
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let coreset = SignalCoreset::build(masked, k_coreset, eps);
+    let samples: Vec<Sample> = coreset
+        .weighted_points()
+        .iter()
+        .map(Sample::from_point)
+        .collect();
+    let points = grid
+        .iter()
+        .map(|&k| {
+            let model = train(solver, &samples, k, &mut rng);
+            (k, test_sse(&model, held))
+        })
+        .collect();
+    TuningCurve {
+        scheme: format!("DT-coreset(eps={eps})"),
+        points,
+        compression_size: samples.len(),
+        total_time: t0.elapsed(),
+    }
+}
+
+/// Tune on a uniform sample of `size` points.
+pub fn tune_uniform(
+    masked: &Signal,
+    held: &[(usize, usize, f64)],
+    grid: &[usize],
+    size: usize,
+    solver: Solver,
+    seed: u64,
+) -> TuningCurve {
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let us = UniformSample::build(masked, size.max(1), &mut rng);
+    let samples: Vec<Sample> = us.weighted_points().iter().map(Sample::from_point).collect();
+    let points = grid
+        .iter()
+        .map(|&k| {
+            let model = train(solver, &samples, k, &mut rng);
+            (k, test_sse(&model, held))
+        })
+        .collect();
+    TuningCurve {
+        scheme: format!("RandomSample(τ={size})"),
+        points,
+        compression_size: samples.len(),
+        total_time: t0.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_grid_shape() {
+        let g = log_grid(2, 200, 6);
+        assert_eq!(*g.first().unwrap(), 2);
+        assert_eq!(*g.last().unwrap(), 200);
+        for w in g.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn tuning_curves_run_and_pick_k() {
+        let mut rng = Rng::new(90);
+        let sig = datasets::air_quality_like(0.02, &mut rng);
+        let (masked, held) = datasets::holdout_patches(&sig, 0.3, 5, &mut rng);
+        let grid = log_grid(4, 64, 4);
+        let full = tune_full(&masked, &held, &grid, Solver::RandomForest, 1);
+        let core = tune_coreset(&masked, &held, &grid, 50, 0.4, Solver::RandomForest, 1);
+        assert_eq!(full.points.len(), grid.len());
+        assert_eq!(core.points.len(), grid.len());
+        assert!(grid.contains(&full.best_k()));
+        assert!(grid.contains(&core.best_k()));
+        assert!(core.compression_size < full.compression_size);
+    }
+
+    #[test]
+    fn coreset_tuning_is_faster_than_full() {
+        let mut rng = Rng::new(91);
+        let sig = datasets::air_quality_like(0.05, &mut rng);
+        let (masked, held) = datasets::holdout_patches(&sig, 0.3, 5, &mut rng);
+        let grid = log_grid(4, 64, 5);
+        let full = tune_full(&masked, &held, &grid, Solver::RandomForest, 2);
+        let core = tune_coreset(&masked, &held, &grid, 50, 0.5, Solver::RandomForest, 2);
+        // The headline claim (directional version; the ×10 figure is
+        // measured at the full experiment scale in bench_fig4).
+        assert!(
+            core.total_time < full.total_time,
+            "coreset {:?} !< full {:?}",
+            core.total_time,
+            full.total_time
+        );
+    }
+}

@@ -1,0 +1,51 @@
+//! # sigtree — Coresets for Decision Trees of Signals
+//!
+//! Production-style reproduction of *Coresets for Decision Trees of
+//! Signals* (Jubran, Sanches, Newman, Feldman — NeurIPS 2021).
+//!
+//! The library provides:
+//!
+//! * [`signal`] — 2D signals (matrices with a label in every cell),
+//!   rectangular views, masks, and O(1) block statistics.
+//! * [`segmentation`] — the k-segmentation model class (Definition 1) and
+//!   exact DP solvers (1D, 2D guillotine k-tree, quadtree codec).
+//! * [`bicriteria`] — the (α, β)_k rough approximation (Algorithm 4).
+//! * [`partition`] — the balanced ("simplicial for SSE") partition
+//!   (Algorithms 1–2).
+//! * [`coreset`] — the headline (k, ε)-coreset construction (Algorithm 3),
+//!   the FITTING-LOSS evaluator (Algorithm 5), Caratheodory compression,
+//!   uniform-sampling baseline, and streaming merge-and-reduce.
+//! * [`tree`] — weighted CART regression trees, random forests and
+//!   gradient-boosted trees (the sklearn / LightGBM substitutes that
+//!   consume the coreset).
+//! * [`datasets`] — blobs/moons/circles and UCI-like tabular generators.
+//! * [`experiments`] — the paper's evaluation harnesses (Fig. 4–7).
+//! * [`pipeline`] — the L3 streaming coordinator: sharding, workers,
+//!   merge-and-reduce, backpressure, metrics.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
+//!   artifacts from `artifacts/*.hlo.txt`.
+
+pub mod benchkit;
+pub mod bicriteria;
+pub mod cli;
+pub mod coreset;
+pub mod datasets;
+pub mod experiments;
+pub mod partition;
+pub mod pipeline;
+pub mod rng;
+pub mod runtime;
+pub mod segmentation;
+pub mod signal;
+pub mod tree;
+
+pub mod proptest;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::coreset::{Coreset, SignalCoreset, WeightedPoint};
+    pub use crate::rng::Rng;
+    pub use crate::segmentation::KSegmentation;
+    pub use crate::signal::{PrefixStats, Rect, Signal};
+    pub use crate::tree::{forest::RandomForest, DecisionTree};
+}

@@ -1,0 +1,245 @@
+//! `sigtree` CLI — the L3 launcher.
+//!
+//! Subcommands:
+//!
+//! * `coreset`    — build a coreset of a synthetic signal, print stats.
+//! * `pipeline`   — run the streaming pipeline (bands/workers/backpressure).
+//! * `evaluate`   — coreset-vs-exact loss validation on random queries.
+//! * `experiment` — the paper's §5 missing-values experiment.
+//! * `tune`       — hyperparameter sweep on full data vs coreset.
+//! * `runtime`    — load the PJRT artifacts and run parity checks.
+//! * `help`       — this text.
+
+use std::process::ExitCode;
+
+use sigtree::cli::Args;
+use sigtree::coreset::{Coreset, CoresetConfig, SignalCoreset};
+use sigtree::datasets;
+use sigtree::experiments::{self, Solver};
+use sigtree::pipeline::{self, PipelineConfig};
+use sigtree::rng::Rng;
+use sigtree::segmentation::random_segmentation;
+use sigtree::signal::{generate, PrefixStats, Signal};
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let result = match args.command.as_str() {
+        "coreset" => cmd_coreset(&args),
+        "pipeline" => cmd_pipeline(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "experiment" => cmd_experiment(&args),
+        "tune" => cmd_tune(&args),
+        "runtime" => cmd_runtime(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'");
+            print_help();
+            Err(anyhow::anyhow!("unknown subcommand"))
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "sigtree — Coresets for Decision Trees of Signals (NeurIPS 2021)\n\
+         \n\
+         USAGE: sigtree <command> [--flag value ...]\n\
+         \n\
+         COMMANDS\n\
+           coreset     --n 512 --m 512 --k 64 --eps 0.2 --seed 7 [--signal smooth|image|noise|piecewise]\n\
+           pipeline    --n 2048 --m 512 --k 64 --eps 0.2 --band-rows 128 --workers 2\n\
+           evaluate    --n 256 --m 256 --k 16 --eps 0.2 --queries 100\n\
+           experiment  --dataset air|gesture --scale 0.1 --k 200 --eps 0.3 [--solver forest|gbdt]\n\
+           tune        --dataset air|gesture --scale 0.1 --grid 8 --eps 0.3\n\
+           runtime     [--dir artifacts]\n\
+           help"
+    );
+}
+
+fn make_signal(args: &Args, rng: &mut Rng) -> anyhow::Result<Signal> {
+    let n = args.get_usize("n", 512)?;
+    let m = args.get_usize("m", 512)?;
+    Ok(match args.get_str("signal", "smooth").as_str() {
+        "image" => generate::image_like(n, m, 4, rng),
+        "noise" => generate::noise(n, m, 1.0, rng),
+        "piecewise" => generate::piecewise_constant(n, m, 32, 0.05, rng).0,
+        _ => generate::smooth(n, m, 4, rng),
+    })
+}
+
+fn cmd_coreset(args: &Args) -> anyhow::Result<()> {
+    let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
+    let signal = make_signal(args, &mut rng)?;
+    let k = args.get_usize("k", 64)?;
+    let eps = args.get_f64("eps", 0.2)?;
+    let t0 = std::time::Instant::now();
+    let cs = SignalCoreset::build(&signal, k, eps);
+    let took = t0.elapsed();
+    println!(
+        "signal {}x{} ({} cells)  k={k} eps={eps}",
+        signal.rows(),
+        signal.cols(),
+        signal.len()
+    );
+    println!(
+        "coreset: {} blocks, {} stored points ({:.2}% of input), sigma={:.4e}, built in {:?} ({:.2e} cells/s)",
+        cs.blocks.len(),
+        cs.stored_points(),
+        100.0 * cs.compression_ratio(),
+        cs.sigma,
+        took,
+        signal.len() as f64 / took.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
+    let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
+    let signal = make_signal(args, &mut rng)?;
+    let k = args.get_usize("k", 64)?;
+    let eps = args.get_f64("eps", 0.2)?;
+    let cfg = PipelineConfig::new(CoresetConfig::new(k, eps))
+        .with_band_rows(args.get_usize("band-rows", 128)?)
+        .with_workers(args.get_usize("workers", 2)?);
+    let t0 = std::time::Instant::now();
+    let (cs, metrics) = pipeline::run(&signal, cfg);
+    println!(
+        "pipeline done in {:?}: {} blocks, {:.2}% of input",
+        t0.elapsed(),
+        cs.blocks.len(),
+        100.0 * cs.compression_ratio()
+    );
+    println!("metrics: {}", metrics.summary());
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
+    let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
+    let signal = make_signal(args, &mut rng)?;
+    let k = args.get_usize("k", 16)?;
+    let eps = args.get_f64("eps", 0.2)?;
+    let queries = args.get_usize("queries", 100)?;
+    let stats = PrefixStats::new(&signal);
+    let cs = SignalCoreset::build(&signal, k, eps);
+    let mut worst = 0.0f64;
+    let mut mean = 0.0f64;
+    for _ in 0..queries {
+        let mut s = random_segmentation(signal.bounds(), k, &mut rng);
+        s.refit_values(&stats);
+        let exact = s.loss(&stats);
+        let approx = cs.fitting_loss(&s);
+        let err = sigtree::coreset::fitting_loss::relative_error(approx, exact);
+        worst = worst.max(err);
+        mean += err;
+    }
+    mean /= queries as f64;
+    println!(
+        "coreset size {:.2}%  queries={queries}  mean rel err {:.4}  worst {:.4}  (target eps {eps})",
+        100.0 * cs.compression_ratio(),
+        mean,
+        worst
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
+    let scale = args.get_f64("scale", 0.1)?;
+    let signal = match args.get_str("dataset", "air").as_str() {
+        "gesture" => datasets::gesture_phase_like(scale, &mut rng),
+        _ => datasets::air_quality_like(scale, &mut rng),
+    };
+    let k = args.get_usize("k", 200)?;
+    let eps = args.get_f64("eps", 0.3)?;
+    let k_train = args.get_usize("k-train", 64)?;
+    let solver = match args.get_str("solver", "forest").as_str() {
+        "gbdt" => Solver::Gbdt,
+        _ => Solver::RandomForest,
+    };
+    let (cs, us) = experiments::missing_values_experiment(&signal, k, eps, k_train, solver, 11);
+    let full = experiments::full_data_baseline(&signal, k_train, solver, 11);
+    for o in [&full, &cs, &us] {
+        println!(
+            "{:>14}  size {:>8} ({:>6.2}%)  build {:>10?}  train {:>10?}  test SSE {:.4}",
+            o.scheme,
+            o.size,
+            100.0 * o.compression_ratio,
+            o.build_time,
+            o.train_time,
+            o.test_sse
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    use sigtree::experiments::tuning;
+    let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
+    let scale = args.get_f64("scale", 0.1)?;
+    let signal = match args.get_str("dataset", "air").as_str() {
+        "gesture" => datasets::gesture_phase_like(scale, &mut rng),
+        _ => datasets::air_quality_like(scale, &mut rng),
+    };
+    let (masked, held) = datasets::holdout_patches(&signal, 0.3, 5, &mut rng);
+    let grid = tuning::log_grid(4, 256, args.get_usize("grid", 8)?);
+    let eps = args.get_f64("eps", 0.3)?;
+    let full = tuning::tune_full(&masked, &held, &grid, Solver::RandomForest, 3);
+    let core = tuning::tune_coreset(&masked, &held, &grid, 200, eps, Solver::RandomForest, 3);
+    let uni = tuning::tune_uniform(
+        &masked,
+        &held,
+        &grid,
+        core.compression_size,
+        Solver::RandomForest,
+        3,
+    );
+    for curve in [&full, &core, &uni] {
+        println!(
+            "{:<24} size {:>8}  time {:>10?}  best_k {}",
+            curve.scheme,
+            curve.compression_size,
+            curve.total_time,
+            curve.best_k()
+        );
+        for (k, l) in &curve.points {
+            println!("    k={k:<6} test SSE {l:.4}");
+        }
+    }
+    println!(
+        "speedup (full/coreset tuning time): x{:.1}",
+        full.total_time.as_secs_f64() / core.total_time.as_secs_f64().max(1e-9)
+    );
+    Ok(())
+}
+
+fn cmd_runtime(args: &Args) -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(args.get_str("dir", "artifacts"));
+    let rt = sigtree::runtime::Runtime::load(&dir)?;
+    println!(
+        "platform: {}  artifacts: {:?}",
+        rt.platform(),
+        rt.artifact_names()
+    );
+    // Parity smoke: prefix2d + block_sse against native on a random tile.
+    let mut rng = Rng::new(1);
+    let t = sigtree::runtime::TILE;
+    let tile: Vec<f32> = (0..t * t).map(|_| rng.normal() as f32).collect();
+    let (ii_y, ii_y2) = rt.prefix2d(&tile)?;
+    let p_y = sigtree::runtime::pad_integral(&ii_y);
+    let p_y2 = sigtree::runtime::pad_integral(&ii_y2);
+    let rects = vec![[0i32, 31, 0, 31], [10, 200, 5, 250]];
+    let opt1 = rt.block_sse(&p_y, &p_y2, &rects)?;
+    println!("block_sse parity sample: {opt1:?}");
+    println!("runtime OK");
+    Ok(())
+}

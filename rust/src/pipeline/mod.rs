@@ -1,0 +1,289 @@
+//! The L3 streaming coordinator — the data-pipeline layer of the stack.
+//!
+//! The coreset is a pre-processing compression stage, so the system
+//! contribution at this layer is a streaming orchestrator:
+//!
+//! * a **source** streams the signal as horizontal row-bands,
+//! * a **sharder** places bands on a bounded work queue (backpressure: the
+//!   source blocks when workers lag),
+//! * **workers** (std::thread; tokio is unavailable offline) pull bands
+//!   work-stealing-style and build partial coresets,
+//! * a **reducer** merges partial coresets in stream order and
+//!   periodically re-compacts via [`crate::coreset::merge_reduce::reduce`],
+//! * **metrics** track queue depths, per-stage latency, and throughput.
+
+pub mod metrics;
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use crate::coreset::merge_reduce::{self, offset_rows};
+use crate::coreset::{CoresetConfig, SignalCoreset};
+use crate::signal::{Rect, Signal};
+
+pub use metrics::PipelineMetrics;
+
+/// Pipeline configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    pub coreset: CoresetConfig,
+    /// Rows per streamed band.
+    pub band_rows: usize,
+    /// Worker threads.
+    pub workers: usize,
+    /// Bounded queue capacity between source and workers (backpressure).
+    pub queue_capacity: usize,
+    /// Reduce when accumulated blocks exceed this multiple of last size.
+    pub reduce_factor: f64,
+}
+
+impl PipelineConfig {
+    pub fn new(coreset: CoresetConfig) -> Self {
+        Self {
+            coreset,
+            band_rows: 64,
+            workers: thread::available_parallelism().map_or(1, |p| p.get()),
+            queue_capacity: 4,
+            reduce_factor: 2.0,
+        }
+    }
+
+    pub fn with_band_rows(mut self, rows: usize) -> Self {
+        self.band_rows = rows.max(1);
+        self
+    }
+
+    pub fn with_workers(mut self, w: usize) -> Self {
+        self.workers = w.max(1);
+        self
+    }
+}
+
+/// A band job: global row offset + the band data.
+struct BandJob {
+    seq: usize,
+    row_offset: usize,
+    band: Signal,
+}
+
+/// A worker result: sequence number + the band's (offset) coreset.
+#[allow(dead_code)] // seq kept for debugging / ordered-merge variants
+struct BandResult {
+    seq: usize,
+    coreset: SignalCoreset,
+}
+
+/// Run the full pipeline over an in-memory signal, streaming it in bands.
+/// Returns the final coreset and the collected metrics. This is the
+/// entry point the CLI, examples, and benches use; `run_streaming` below
+/// accepts an arbitrary band iterator (true streaming).
+pub fn run(signal: &Signal, config: PipelineConfig) -> (SignalCoreset, PipelineMetrics) {
+    let m = signal.cols();
+    let bands = band_rects(signal.rows(), m, config.band_rows);
+    let iter = bands
+        .into_iter()
+        .map(|rect| (rect.r0, signal.crop(rect)));
+    run_streaming(m, iter, config)
+}
+
+/// Rectangles of each streamed band of an n×m signal.
+pub fn band_rects(n: usize, m: usize, band_rows: usize) -> Vec<Rect> {
+    let mut out = Vec::new();
+    let mut r0 = 0;
+    while r0 < n {
+        let r1 = (r0 + band_rows - 1).min(n - 1);
+        out.push(Rect::new(r0, r1, 0, m - 1));
+        r0 = r1 + 1;
+    }
+    out
+}
+
+/// Streaming entry point: `bands` yields `(row_offset, band_signal)` in
+/// row order; band widths must equal `m`.
+pub fn run_streaming(
+    m: usize,
+    bands: impl Iterator<Item = (usize, Signal)> + Send,
+    config: PipelineConfig,
+) -> (SignalCoreset, PipelineMetrics) {
+    let metrics = Arc::new(PipelineMetrics::default());
+    let (job_tx, job_rx) = sync_channel::<BandJob>(config.queue_capacity);
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let (res_tx, res_rx) = sync_channel::<BandResult>(config.queue_capacity.max(16));
+
+    let coreset = thread::scope(|scope| {
+        // Workers: pull from the shared bounded queue (work-stealing by
+        // construction — an idle worker takes the next band regardless of
+        // who processed the previous one).
+        for _ in 0..config.workers {
+            let rx = Arc::clone(&job_rx);
+            let tx = res_tx.clone();
+            let met = Arc::clone(&metrics);
+            let ccfg = config.coreset;
+            scope.spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok(job) = job else { break };
+                let t0 = Instant::now();
+                let cs = SignalCoreset::build_with(&job.band, ccfg);
+                let cs = offset_rows(cs, job.row_offset);
+                met.record_build(t0.elapsed(), job.band.len());
+                if tx.send(BandResult { seq: job.seq, coreset: cs }).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(res_tx);
+
+        // Source thread: feeds jobs (blocks on the bounded channel when
+        // the workers are behind — that IS the backpressure).
+        let src_metrics = Arc::clone(&metrics);
+        scope.spawn(move || {
+            for (seq, (row_offset, band)) in bands.enumerate() {
+                let t0 = Instant::now();
+                let job = BandJob { seq, row_offset, band };
+                if job_tx.send(job).is_err() {
+                    break;
+                }
+                src_metrics.record_source_wait(t0.elapsed());
+            }
+            // Dropping job_tx closes the queue; workers drain and exit.
+        });
+
+        // Reducer (this thread): merge results in completion order (the
+        // block lists are coordinate-tagged so order does not matter),
+        // compacting periodically.
+        let reducer = Reducer::new(m, config, Arc::clone(&metrics));
+        reducer.drain(res_rx)
+    });
+
+    let metrics = Arc::try_unwrap(metrics).unwrap_or_default();
+    (coreset, metrics)
+}
+
+struct Reducer {
+    m: usize,
+    config: PipelineConfig,
+    metrics: Arc<PipelineMetrics>,
+}
+
+impl Reducer {
+    fn new(m: usize, config: PipelineConfig, metrics: Arc<PipelineMetrics>) -> Self {
+        Self { m, config, metrics }
+    }
+
+    fn drain(self, rx: Receiver<BandResult>) -> SignalCoreset {
+        let mut acc: Option<SignalCoreset> = None;
+        let mut rows_total = 0usize;
+        let mut last_reduced = 64usize;
+        let mut bands_merged = 0usize;
+        for res in rx {
+            let t0 = Instant::now();
+            rows_total += res.coreset.rows();
+            bands_merged += 1;
+            let merged = match acc.take() {
+                None => res.coreset,
+                Some(a) => merge_reduce::merge(vec![a, res.coreset]),
+            };
+            // Reduce only once composition has actually happened — a
+            // single band's coreset is already the batch answer and must
+            // pass through unchanged (degenerate-equivalence invariant).
+            let merged = if bands_merged > 1
+                && merged.blocks.len() as f64
+                    > self.config.reduce_factor * last_reduced as f64
+            {
+                let tol = merged.gamma * merged.gamma * merged.sigma;
+                let reduced = merge_reduce::reduce(merged, tol);
+                last_reduced = reduced.blocks.len().max(64);
+                self.metrics.record_reduce();
+                reduced
+            } else {
+                merged
+            };
+            self.metrics.record_merge(t0.elapsed());
+            acc = Some(merged);
+        }
+        let mut cs = acc.unwrap_or_else(|| {
+            SignalCoreset::from_blocks(0, self.m, self.config.coreset, 0.0, 1.0, Vec::new())
+        });
+        // Fix the row count (merge() sums band heights; completion order
+        // may interleave, the sum is invariant).
+        cs = SignalCoreset::from_blocks(
+            rows_total,
+            self.m,
+            cs.config,
+            cs.sigma,
+            cs.gamma,
+            cs.blocks,
+        );
+        cs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::Coreset;
+    use crate::rng::Rng;
+    use crate::segmentation::random_segmentation;
+    use crate::signal::{generate, PrefixStats};
+
+    #[test]
+    fn pipeline_weight_matches_signal() {
+        let mut rng = Rng::new(40);
+        let sig = generate::smooth(100, 40, 3, &mut rng);
+        let cfg = PipelineConfig::new(CoresetConfig::new(5, 0.3))
+            .with_band_rows(16)
+            .with_workers(2);
+        let (cs, metrics) = run(&sig, cfg);
+        assert!((cs.total_weight() - 4000.0).abs() < 1e-6 * 4000.0);
+        assert_eq!(cs.rows(), 100);
+        assert!(metrics.bands_built() >= 7);
+    }
+
+    #[test]
+    fn pipeline_quality_close_to_monolithic() {
+        let mut rng = Rng::new(41);
+        let sig = generate::smooth(120, 50, 3, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let cfg = PipelineConfig::new(CoresetConfig::new(6, 0.25)).with_band_rows(24);
+        let (cs, _) = run(&sig, cfg);
+        for _ in 0..10 {
+            let mut s = random_segmentation(sig.bounds(), 6, &mut rng);
+            s.refit_values(&stats);
+            let exact = s.loss(&stats);
+            let approx = cs.fitting_loss(&s);
+            assert!(
+                (approx - exact).abs() <= 0.35 * exact + 1e-6,
+                "{approx} vs {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_worker_single_band_degenerates_to_batch() {
+        let mut rng = Rng::new(42);
+        let sig = generate::image_like(40, 40, 2, &mut rng);
+        let cfg = PipelineConfig::new(CoresetConfig::new(4, 0.3))
+            .with_band_rows(1000)
+            .with_workers(1);
+        let (cs, _) = run(&sig, cfg);
+        let batch = SignalCoreset::build(&sig, 4, 0.3);
+        assert_eq!(cs.blocks.len(), batch.blocks.len());
+        assert!((cs.total_weight() - batch.total_weight()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_capture_stages() {
+        let mut rng = Rng::new(43);
+        let sig = generate::smooth(64, 32, 2, &mut rng);
+        let cfg = PipelineConfig::new(CoresetConfig::new(3, 0.3)).with_band_rows(8);
+        let (_, metrics) = run(&sig, cfg);
+        assert_eq!(metrics.bands_built(), 8);
+        assert!(metrics.cells_processed() == 64 * 32);
+        assert!(metrics.total_build_time().as_nanos() > 0);
+    }
+}

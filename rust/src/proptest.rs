@@ -1,0 +1,111 @@
+//! Minimal property-testing harness (the `proptest` crate is unavailable
+//! offline — DESIGN.md §Substitutions). Provides seeded case generation
+//! with failure reporting and greedy input shrinking for the common
+//! "random signal + random query" shape used by the invariant tests in
+//! `rust/tests/`.
+//!
+//! Shipped as a normal module so both unit tests and the integration
+//! tests under `rust/tests/` can use it.
+
+use crate::rng::Rng;
+
+/// Run `cases` random trials of `prop`, which receives a per-case RNG and
+/// returns `Err(description)` on violation. On failure, panics with the
+/// seed so the case can be replayed exactly.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Property over a generated value with greedy shrinking: `gen` produces
+/// a value from (rng, size); on failure, `size` is shrunk toward
+/// `min_size` and the smallest failing size is reported.
+pub fn check_sized<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    min_size: usize,
+    max_size: usize,
+    gen: impl Fn(&mut Rng, usize) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = 0xFACADE ^ (case as u64).wrapping_mul(0x2545_F491_4F6C_DD1D);
+        let mut rng = Rng::new(seed);
+        let size = min_size + rng.usize(max_size - min_size + 1);
+        let value = gen(&mut rng, size);
+        if let Err(msg) = prop(&value) {
+            // Greedy shrink: halve size toward min_size while still failing.
+            let mut best_size = size;
+            let mut best_msg = msg;
+            let mut s = size;
+            while s > min_size {
+                s = (s / 2).max(min_size);
+                let mut srng = Rng::new(seed);
+                let v = gen(&mut srng, s);
+                match prop(&v) {
+                    Err(m) => {
+                        best_size = s;
+                        best_msg = m;
+                        if s == min_size {
+                            break;
+                        }
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}, size {best_size}): {best_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_silent() {
+        check("always-true", 20, |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "always-false")]
+    fn failing_property_panics_with_seed() {
+        check("always-false", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "size 1")]
+    fn shrinking_reaches_min_size() {
+        // Fails for every size → shrink must land on min_size = 1.
+        check_sized(
+            "shrinks",
+            1,
+            1,
+            64,
+            |rng, size| (0..size).map(|_| rng.f64()).collect::<Vec<f64>>(),
+            |_| Err("always fails".into()),
+        );
+    }
+
+    #[test]
+    fn rng_is_deterministic_per_case() {
+        let mut first = Vec::new();
+        check("record", 3, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("record", 3, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

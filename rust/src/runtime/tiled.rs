@@ -1,0 +1,223 @@
+//! Tiled execution of the PJRT kernels over signals larger than the
+//! compiled TILE — the bridge between the L3 coordinator's arbitrary
+//! signal sizes and the fixed-shape AOT artifacts.
+//!
+//! A signal is cut into TILE×TILE tiles (zero-padded at the edges; zero
+//! cells contribute nothing to Σy/Σy² so block statistics restricted to
+//! the real extent are unaffected). Per-tile integral images let us
+//! answer opt₁ for any rectangle *within a tile*; rectangles spanning
+//! tiles are answered by summing per-tile moments (inclusion–exclusion
+//! inside each covered tile).
+
+use anyhow::Result;
+
+use crate::signal::{Rect, Signal};
+
+use super::{pad_integral, Runtime, RECT_BATCH, TILE};
+
+/// Per-tile padded integral images for a whole signal.
+pub struct TiledPrefix<'rt> {
+    rt: &'rt Runtime,
+    n: usize,
+    m: usize,
+    #[allow(dead_code)]
+    tiles_r: usize,
+    tiles_c: usize,
+    /// Padded (TILE+1)² integral images per tile, row-major tile order.
+    ii_y: Vec<Vec<f32>>,
+    ii_y2: Vec<Vec<f32>>,
+}
+
+impl<'rt> TiledPrefix<'rt> {
+    /// Build the per-tile integral images through the PJRT `prefix2d`
+    /// artifact.
+    pub fn build(rt: &'rt Runtime, signal: &Signal) -> Result<Self> {
+        let n = signal.rows();
+        let m = signal.cols();
+        let tiles_r = n.div_ceil(TILE);
+        let tiles_c = m.div_ceil(TILE);
+        let mut ii_y = Vec::with_capacity(tiles_r * tiles_c);
+        let mut ii_y2 = Vec::with_capacity(tiles_r * tiles_c);
+        let mut tile = vec![0.0f32; TILE * TILE];
+        for tr in 0..tiles_r {
+            for tc in 0..tiles_c {
+                tile.iter_mut().for_each(|v| *v = 0.0);
+                let r0 = tr * TILE;
+                let c0 = tc * TILE;
+                for r in r0..(r0 + TILE).min(n) {
+                    for c in c0..(c0 + TILE).min(m) {
+                        if signal.is_present(r, c) {
+                            tile[(r - r0) * TILE + (c - c0)] = signal.get(r, c) as f32;
+                        }
+                    }
+                }
+                let (y, y2) = rt.prefix2d(&tile)?;
+                ii_y.push(pad_integral(&y));
+                ii_y2.push(pad_integral(&y2));
+            }
+        }
+        Ok(Self { rt, n, m, tiles_r, tiles_c, ii_y, ii_y2 })
+    }
+
+    #[inline]
+    fn tile_idx(&self, tr: usize, tc: usize) -> usize {
+        tr * self.tiles_c + tc
+    }
+
+    /// Sum and sum-of-squares of a rectangle from the padded per-tile
+    /// integral images (CPU-side inclusion–exclusion; no PJRT call).
+    pub fn moments(&self, rect: &Rect) -> (f64, f64) {
+        debug_assert!(rect.r1 < self.n && rect.c1 < self.m);
+        let side = TILE + 1;
+        let mut sum = 0.0f64;
+        let mut sum_sq = 0.0f64;
+        let tr0 = rect.r0 / TILE;
+        let tr1 = rect.r1 / TILE;
+        let tc0 = rect.c0 / TILE;
+        let tc1 = rect.c1 / TILE;
+        for tr in tr0..=tr1 {
+            for tc in tc0..=tc1 {
+                let idx = self.tile_idx(tr, tc);
+                // Rectangle clipped to this tile, in tile-local coords.
+                let lr0 = rect.r0.max(tr * TILE) - tr * TILE;
+                let lr1 = rect.r1.min(tr * TILE + TILE - 1) - tr * TILE;
+                let lc0 = rect.c0.max(tc * TILE) - tc * TILE;
+                let lc1 = rect.c1.min(tc * TILE + TILE - 1) - tc * TILE;
+                let q = |arr: &[f32]| -> f64 {
+                    let (a, b, c, d) = (
+                        arr[(lr1 + 1) * side + (lc1 + 1)] as f64,
+                        arr[lr0 * side + (lc1 + 1)] as f64,
+                        arr[(lr1 + 1) * side + lc0] as f64,
+                        arr[lr0 * side + lc0] as f64,
+                    );
+                    a - b - c + d
+                };
+                sum += q(&self.ii_y[idx]);
+                sum_sq += q(&self.ii_y2[idx]);
+            }
+        }
+        (sum, sum_sq)
+    }
+
+    /// Batched opt₁ for rectangles that each fit inside a single tile,
+    /// dispatched through the `block_sse` PJRT artifact (RECT_BATCH at a
+    /// time). Rects spanning tiles fall back to [`Self::moments`].
+    pub fn batched_opt1(&self, rects: &[Rect]) -> Result<Vec<f64>> {
+        let mut out = vec![0.0f64; rects.len()];
+        // Group in-tile rects by tile.
+        let mut groups: std::collections::HashMap<usize, Vec<usize>> =
+            std::collections::HashMap::new();
+        for (i, r) in rects.iter().enumerate() {
+            let tr0 = r.r0 / TILE;
+            let tr1 = r.r1 / TILE;
+            let tc0 = r.c0 / TILE;
+            let tc1 = r.c1 / TILE;
+            if tr0 == tr1 && tc0 == tc1 {
+                groups.entry(self.tile_idx(tr0, tc0)).or_default().push(i);
+            } else {
+                // Spanning rect: CPU inclusion–exclusion. Count comes from
+                // geometry (full signals; masked cells are zero-filled,
+                // matching the f32 pipeline's semantics).
+                let (s, q) = self.moments(r);
+                let cnt = r.area() as f64;
+                out[i] = (q - s * s / cnt).max(0.0);
+            }
+        }
+        for (tile_idx, members) in groups {
+            for chunk in members.chunks(RECT_BATCH) {
+                let batch: Vec<[i32; 4]> = chunk
+                    .iter()
+                    .map(|&i| {
+                        let r = rects[i];
+                        let tr = (r.r0 / TILE) * TILE;
+                        let tc = (r.c0 / TILE) * TILE;
+                        [
+                            (r.r0 - tr) as i32,
+                            (r.r1 - tr) as i32,
+                            (r.c0 - tc) as i32,
+                            (r.c1 - tc) as i32,
+                        ]
+                    })
+                    .collect();
+                let res = self.rt.block_sse(
+                    &self.ii_y[tile_idx],
+                    &self.ii_y2[tile_idx],
+                    &batch,
+                )?;
+                for (&i, v) in chunk.iter().zip(res) {
+                    out[i] = v as f64;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::signal::{generate, PrefixStats};
+
+    #[test]
+    fn tiled_moments_match_native() {
+        if !super::super::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load_default().unwrap();
+        let mut rng = Rng::new(70);
+        let sig = generate::smooth(300, 280, 3, &mut rng); // spans 2x2 tiles
+        let stats = PrefixStats::new(&sig);
+        let tp = TiledPrefix::build(&rt, &sig).unwrap();
+        for _ in 0..50 {
+            let r0 = rng.usize(300);
+            let r1 = rng.range(r0, 300);
+            let c0 = rng.usize(280);
+            let c1 = rng.range(c0, 280);
+            let rect = Rect::new(r0, r1, c0, c1);
+            let (s, q) = tp.moments(&rect);
+            let exact = stats.moments(&rect);
+            assert!(
+                (s - exact.sum).abs() < 1e-2 * (1.0 + exact.sum.abs()),
+                "sum {s} vs {}",
+                exact.sum
+            );
+            assert!(
+                (q - exact.sum_sq).abs() < 1e-2 * (1.0 + exact.sum_sq.abs()),
+                "sumsq {q} vs {}",
+                exact.sum_sq
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_batched_opt1_matches_native() {
+        if !super::super::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load_default().unwrap();
+        let mut rng = Rng::new(71);
+        let sig = generate::smooth(300, 300, 3, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let tp = TiledPrefix::build(&rt, &sig).unwrap();
+        let rects: Vec<Rect> = (0..100)
+            .map(|_| {
+                let r0 = rng.usize(300);
+                let r1 = rng.range(r0, 300);
+                let c0 = rng.usize(300);
+                let c1 = rng.range(c0, 300);
+                Rect::new(r0, r1, c0, c1)
+            })
+            .collect();
+        let got = tp.batched_opt1(&rects).unwrap();
+        for (g, r) in got.iter().zip(rects.iter()) {
+            let e = stats.opt1(r);
+            assert!(
+                (g - e).abs() <= 0.05 * (1.0 + e.abs()),
+                "{g} vs {e} for {r:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Exact 1D k-segmentation by dynamic programming.
+//!
+//! For a length-n vector signal (a single row), the optimal partition into
+//! k contiguous segments under SSE is computed in O(k n²) time / O(kn)
+//! memory — the classical segmented-least-squares DP. This is the exact
+//! baseline the paper's 1D predecessors ([54, 24, 62]) solve, and our
+//! tests use it as ground truth for `opt_k` on rows/columns.
+
+/// Prefix sums over a 1D sequence for O(1) segment SSE queries.
+#[derive(Clone, Debug)]
+pub struct Prefix1D {
+    sum: Vec<f64>,
+    sum_sq: Vec<f64>,
+}
+
+impl Prefix1D {
+    pub fn new(ys: &[f64]) -> Self {
+        let mut sum = Vec::with_capacity(ys.len() + 1);
+        let mut sum_sq = Vec::with_capacity(ys.len() + 1);
+        sum.push(0.0);
+        sum_sq.push(0.0);
+        for &y in ys {
+            sum.push(sum.last().unwrap() + y);
+            sum_sq.push(sum_sq.last().unwrap() + y * y);
+        }
+        Self { sum, sum_sq }
+    }
+
+    /// SSE of segment `[i, j)` fitted by its mean, O(1).
+    #[inline]
+    pub fn seg_cost(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < j);
+        let cnt = (j - i) as f64;
+        let s = self.sum[j] - self.sum[i];
+        let sq = self.sum_sq[j] - self.sum_sq[i];
+        (sq - s * s / cnt).max(0.0)
+    }
+
+    /// Mean of segment `[i, j)`.
+    #[inline]
+    pub fn seg_mean(&self, i: usize, j: usize) -> f64 {
+        (self.sum[j] - self.sum[i]) / (j - i) as f64
+    }
+}
+
+/// Result of the exact DP: total loss and the segment boundaries.
+#[derive(Clone, Debug)]
+pub struct Segmentation1D {
+    /// Segment boundaries: k+1 indices, `0 = b[0] < b[1] < ... < b[k] = n`;
+    /// segment i covers `[b[i], b[i+1])`.
+    pub boundaries: Vec<usize>,
+    /// Fitted mean per segment.
+    pub values: Vec<f64>,
+    pub loss: f64,
+}
+
+/// Exact optimal k-segmentation of `ys` under SSE. O(k n²).
+///
+/// `k` is clamped to `n` (opt_n = 0 trivially).
+pub fn optimal_1d(ys: &[f64], k: usize) -> Segmentation1D {
+    let n = ys.len();
+    assert!(n > 0 && k > 0);
+    let k = k.min(n);
+    let pre = Prefix1D::new(ys);
+
+    // dp[j][i] = optimal loss of first i points using j segments.
+    // back[j][i] = start index of the last segment.
+    let mut dp = vec![vec![f64::INFINITY; n + 1]; k + 1];
+    let mut back = vec![vec![0usize; n + 1]; k + 1];
+    dp[0][0] = 0.0;
+    for j in 1..=k {
+        for i in j..=n {
+            // last segment [t, i), t >= j-1
+            let mut best = f64::INFINITY;
+            let mut best_t = j - 1;
+            for t in (j - 1)..i {
+                let cand = dp[j - 1][t] + pre.seg_cost(t, i);
+                if cand < best {
+                    best = cand;
+                    best_t = t;
+                }
+            }
+            dp[j][i] = best;
+            back[j][i] = best_t;
+        }
+    }
+
+    // Reconstruct boundaries.
+    let mut boundaries = vec![n];
+    let mut i = n;
+    for j in (1..=k).rev() {
+        let t = back[j][i];
+        boundaries.push(t);
+        i = t;
+    }
+    boundaries.reverse();
+    let values = boundaries
+        .windows(2)
+        .map(|w| pre.seg_mean(w[0], w[1]))
+        .collect();
+    Segmentation1D { boundaries, values, loss: dp[k][n] }
+}
+
+/// `opt_k` for a 1D signal without reconstruction (same DP, less memory).
+pub fn opt_k_1d(ys: &[f64], k: usize) -> f64 {
+    optimal_1d(ys, k).loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn k1_is_variance() {
+        let ys = [1.0, 2.0, 3.0, 4.0];
+        let seg = optimal_1d(&ys, 1);
+        // mean 2.5, SSE = 2*(1.5^2 + 0.5^2) = 5
+        assert!((seg.loss - 5.0).abs() < 1e-12);
+        assert_eq!(seg.boundaries, vec![0, 4]);
+    }
+
+    #[test]
+    fn kn_is_zero() {
+        let ys = [3.0, 1.0, 4.0, 1.0, 5.0];
+        let seg = optimal_1d(&ys, 5);
+        assert!(seg.loss < 1e-15);
+    }
+
+    #[test]
+    fn recovers_planted_step() {
+        // Two clean levels → k=2 must cut exactly at the step and get 0.
+        let mut ys = vec![2.0; 10];
+        ys.extend(vec![7.0; 15]);
+        let seg = optimal_1d(&ys, 2);
+        assert!(seg.loss < 1e-15);
+        assert_eq!(seg.boundaries, vec![0, 10, 25]);
+        assert!((seg.values[0] - 2.0).abs() < 1e-12);
+        assert!((seg.values[1] - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loss_monotone_in_k() {
+        let mut rng = Rng::new(8);
+        let ys: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
+        let mut prev = f64::INFINITY;
+        for k in 1..=10 {
+            let l = opt_k_1d(&ys, k);
+            assert!(l <= prev + 1e-12, "k={k}");
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn dp_beats_every_random_partition() {
+        let mut rng = Rng::new(13);
+        let ys: Vec<f64> = (0..40).map(|i| ((i / 7) as f64) + 0.1 * rng.normal()).collect();
+        let k = 4;
+        let opt = opt_k_1d(&ys, k);
+        let pre = Prefix1D::new(&ys);
+        for _ in 0..200 {
+            // Random k-partition boundaries.
+            let mut cuts = rng.sample_indices(39, k - 1);
+            cuts.iter_mut().for_each(|c| *c += 1);
+            cuts.sort_unstable();
+            let mut bounds = vec![0];
+            bounds.extend(cuts);
+            bounds.push(40);
+            let loss: f64 = bounds.windows(2).map(|w| pre.seg_cost(w[0], w[1])).sum();
+            assert!(opt <= loss + 1e-9);
+        }
+    }
+
+    #[test]
+    fn boundaries_are_strictly_increasing() {
+        let mut rng = Rng::new(21);
+        let ys: Vec<f64> = (0..30).map(|_| rng.f64()).collect();
+        for k in [1, 3, 7, 30] {
+            let seg = optimal_1d(&ys, k);
+            for w in seg.boundaries.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert_eq!(seg.boundaries.len(), seg.values.len() + 1);
+        }
+    }
+}

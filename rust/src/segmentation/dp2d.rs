@@ -1,0 +1,217 @@
+//! Exact optimal k-tree of a 2D signal by dynamic programming over
+//! guillotine (recursive binary) partitions — the O(k²n⁵)-flavour DP the
+//! paper cites ([5], Bellman) and calls "impractical even for small
+//! datasets, unless applied on a small coreset". We implement it (a)
+//! because the paper's pipeline is exactly "run the expensive solver on
+//! the coreset", and (b) as ground-truth `opt_k` for small instances in
+//! tests.
+//!
+//! State: (rectangle, k) → minimal SSE of a k-leaf decision tree on that
+//! rectangle. Transition: either k = 1 (fit the mean), or split the
+//! rectangle horizontally/vertically at any cut and distribute the leaf
+//! budget. Memoized over the O(n²m²) rectangles; feasible for signals up
+//! to ~32×32 with small k — precisely the "on the coreset" regime.
+
+use std::collections::HashMap;
+
+use crate::signal::{PrefixStats, Rect};
+
+use super::KSegmentation;
+
+/// Exact k-tree DP solver with memoization.
+pub struct TreeDP<'a> {
+    stats: &'a PrefixStats,
+    memo: HashMap<(Rect, usize), f64>,
+}
+
+impl<'a> TreeDP<'a> {
+    pub fn new(stats: &'a PrefixStats) -> Self {
+        Self { stats, memo: HashMap::new() }
+    }
+
+    /// Minimal SSE of a decision tree with at most `k` leaves on `rect`.
+    pub fn opt(&mut self, rect: Rect, k: usize) -> f64 {
+        assert!(k >= 1);
+        if k == 1 {
+            return self.stats.opt1(&rect);
+        }
+        if let Some(&v) = self.memo.get(&(rect, k)) {
+            return v;
+        }
+        // A rect of `a` cells never needs more than `a` leaves.
+        let area = rect.area();
+        if k >= area {
+            self.memo.insert((rect, k), 0.0);
+            return 0.0;
+        }
+        let mut best = self.stats.opt1(&rect);
+        // Horizontal cuts (split rows).
+        for cut in rect.r0..rect.r1 {
+            let top = Rect::new(rect.r0, cut, rect.c0, rect.c1);
+            let bot = Rect::new(cut + 1, rect.r1, rect.c0, rect.c1);
+            best = best.min(self.best_split(top, bot, k, best));
+        }
+        // Vertical cuts (split cols).
+        for cut in rect.c0..rect.c1 {
+            let left = Rect::new(rect.r0, rect.r1, rect.c0, cut);
+            let right = Rect::new(rect.r0, rect.r1, cut + 1, rect.c1);
+            best = best.min(self.best_split(left, right, k, best));
+        }
+        self.memo.insert((rect, k), best);
+        best
+    }
+
+    /// Optimal distribution of the leaf budget over a fixed split.
+    fn best_split(&mut self, a: Rect, b: Rect, k: usize, upper: f64) -> f64 {
+        let mut best = upper;
+        let ka_max = (k - 1).min(a.area());
+        for ka in 1..=ka_max {
+            let kb = k - ka;
+            if kb < 1 {
+                break;
+            }
+            let la = self.opt(a, ka);
+            if la >= best {
+                continue; // prune: left side alone already too costly
+            }
+            let lb = self.opt(b, kb.min(b.area()));
+            if la + lb < best {
+                best = la + lb;
+            }
+        }
+        best
+    }
+
+    /// Reconstruct an optimal k-tree as a `KSegmentation` (re-running the
+    /// argmin search using memoized values; O(same) but no extra state).
+    pub fn solve(&mut self, rect: Rect, k: usize) -> KSegmentation {
+        let mut pieces = Vec::new();
+        self.reconstruct(rect, k, &mut pieces);
+        KSegmentation::new(pieces)
+    }
+
+    fn reconstruct(&mut self, rect: Rect, k: usize, out: &mut Vec<(Rect, f64)>) {
+        let target = self.opt(rect, k);
+        let leaf = self.stats.opt1(&rect);
+        if k == 1 || (leaf - target).abs() <= 1e-9 * (1.0 + target) {
+            out.push((rect, self.stats.mean(&rect)));
+            return;
+        }
+        // Find a split achieving `target`.
+        let tol = 1e-9 * (1.0 + target);
+        for horizontal in [true, false] {
+            let (lo, hi) = if horizontal { (rect.r0, rect.r1) } else { (rect.c0, rect.c1) };
+            for cut in lo..hi {
+                let (a, b) = if horizontal {
+                    (
+                        Rect::new(rect.r0, cut, rect.c0, rect.c1),
+                        Rect::new(cut + 1, rect.r1, rect.c0, rect.c1),
+                    )
+                } else {
+                    (
+                        Rect::new(rect.r0, rect.r1, rect.c0, cut),
+                        Rect::new(rect.r0, rect.r1, cut + 1, rect.c1),
+                    )
+                };
+                for ka in 1..k {
+                    let kb = k - ka;
+                    let la = self.opt(a, ka.min(a.area()));
+                    let lb = self.opt(b, kb.min(b.area()));
+                    if (la + lb - target).abs() <= tol {
+                        self.reconstruct(a, ka.min(a.area()), out);
+                        self.reconstruct(b, kb.min(b.area()), out);
+                        return;
+                    }
+                }
+            }
+        }
+        // Fallback (numerically ambiguous): emit as a single leaf.
+        out.push((rect, self.stats.mean(&rect)));
+    }
+}
+
+/// Convenience: optimal k-tree loss of a whole signal.
+pub fn opt_k_tree(stats: &PrefixStats, k: usize) -> f64 {
+    let rect = Rect::new(0, stats.rows() - 1, 0, stats.cols() - 1);
+    TreeDP::new(stats).opt(rect, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::segmentation::random_segmentation;
+    use crate::signal::{generate, Signal};
+
+    #[test]
+    fn k1_equals_opt1() {
+        let sig = Signal::from_fn(6, 6, |r, c| (r * c) as f64);
+        let stats = PrefixStats::new(&sig);
+        let whole = sig.bounds();
+        assert_eq!(opt_k_tree(&stats, 1), stats.opt1(&whole));
+    }
+
+    #[test]
+    fn recovers_planted_quadrants() {
+        // 4 constant quadrants → k=4 achieves 0.
+        let sig = Signal::from_fn(8, 8, |r, c| {
+            match (r < 4, c < 4) {
+                (true, true) => 1.0,
+                (true, false) => 2.0,
+                (false, true) => 3.0,
+                (false, false) => 4.0,
+            }
+        });
+        let stats = PrefixStats::new(&sig);
+        assert!(opt_k_tree(&stats, 4) < 1e-12);
+        assert!(opt_k_tree(&stats, 3) > 1e-6);
+        let seg = TreeDP::new(&stats).solve(sig.bounds(), 4);
+        assert_eq!(seg.k(), 4);
+        assert!(seg.is_partition_of(sig.bounds()));
+        assert!(seg.loss(&stats) < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_k() {
+        let mut rng = Rng::new(3);
+        let sig = generate::noise(7, 7, 1.0, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let mut prev = f64::INFINITY;
+        for k in 1..=6 {
+            let l = opt_k_tree(&stats, k);
+            assert!(l <= prev + 1e-12);
+            prev = l;
+        }
+    }
+
+    #[test]
+    fn dp_lower_bounds_random_segmentations() {
+        // opt over trees lower-bounds loss of any guillotine k-segmentation
+        // (random_segmentation builds guillotine partitions).
+        let mut rng = Rng::new(10);
+        let sig = generate::smooth(9, 9, 3, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let k = 5;
+        let opt = opt_k_tree(&stats, k);
+        for _ in 0..50 {
+            let mut s = random_segmentation(sig.bounds(), k, &mut rng);
+            s.refit_values(&stats);
+            assert!(opt <= s.loss(&stats) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn solve_matches_opt_value() {
+        let mut rng = Rng::new(99);
+        let sig = generate::image_like(10, 10, 2, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        for k in [2, 3, 5] {
+            let mut dp = TreeDP::new(&stats);
+            let target = dp.opt(sig.bounds(), k);
+            let seg = dp.solve(sig.bounds(), k);
+            assert!(seg.k() <= k);
+            assert!(seg.is_partition_of(sig.bounds()));
+            assert!((seg.loss(&stats) - target).abs() <= 1e-6 * (1.0 + target));
+        }
+    }
+}

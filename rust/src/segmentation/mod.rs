@@ -1,0 +1,238 @@
+//! k-segmentation models (Definition 1): a partition of the grid into k
+//! axis-parallel rectangles, each carrying one real value. Decision trees
+//! with k leaves over the two grid coordinates are a strict subset of this
+//! class, so every guarantee against `KSegmentation` holds for k-trees.
+
+pub mod dp1d;
+pub mod dp2d;
+pub mod greedy;
+pub mod quadtree;
+
+use crate::rng::Rng;
+use crate::signal::{PrefixStats, Rect, Signal};
+
+/// A k-segmentation: disjoint rectangles covering (a subset of) the grid,
+/// each with an assigned value. Constructors validate disjointness; full
+/// coverage is validated separately (`is_partition_of`) because some
+/// intermediate objects (bicriteria output) are legitimately partial.
+#[derive(Clone, Debug)]
+pub struct KSegmentation {
+    pieces: Vec<(Rect, f64)>,
+}
+
+impl KSegmentation {
+    /// Build from pieces, asserting pairwise disjointness (debug builds
+    /// check exhaustively; release trusts the caller for O(k²) savings).
+    pub fn new(pieces: Vec<(Rect, f64)>) -> Self {
+        debug_assert!(
+            Self::pairwise_disjoint(&pieces),
+            "k-segmentation pieces must be disjoint"
+        );
+        Self { pieces }
+    }
+
+    pub fn pairwise_disjoint(pieces: &[(Rect, f64)]) -> bool {
+        for i in 0..pieces.len() {
+            for j in (i + 1)..pieces.len() {
+                if pieces[i].0.intersects(&pieces[j].0) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// The trivial 1-segmentation: one rectangle, one value.
+    pub fn constant(bounds: Rect, value: f64) -> Self {
+        Self { pieces: vec![(bounds, value)] }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.pieces.len()
+    }
+
+    #[inline]
+    pub fn pieces(&self) -> &[(Rect, f64)] {
+        &self.pieces
+    }
+
+    /// Value assigned to cell (r, c); `None` if uncovered.
+    pub fn value_at(&self, r: usize, c: usize) -> Option<f64> {
+        self.pieces
+            .iter()
+            .find(|(rect, _)| rect.contains(r, c))
+            .map(|&(_, v)| v)
+    }
+
+    /// Does this segmentation exactly partition `bounds` (disjoint + full
+    /// coverage by area)?
+    pub fn is_partition_of(&self, bounds: Rect) -> bool {
+        if !Self::pairwise_disjoint(&self.pieces) {
+            return false;
+        }
+        if !self.pieces.iter().all(|(r, _)| bounds.contains_rect(r)) {
+            return false;
+        }
+        let area: usize = self.pieces.iter().map(|(r, _)| r.area()).sum();
+        area == bounds.area()
+    }
+
+    /// Does `s` intersect rectangle `B` in the paper's sense — i.e. does it
+    /// assign ≥ 2 distinct values to B's cells? Equivalent (for a
+    /// partitioning segmentation) to B not being contained in one piece.
+    pub fn intersects_rect(&self, b: &Rect) -> bool {
+        !self.pieces.iter().any(|(rect, _)| rect.contains_rect(b))
+    }
+
+    /// SSE loss ℓ(D, s) against a signal (Definition 2), computed exactly
+    /// in O(k) from prefix statistics: for each piece, Σ(y − v)² over
+    /// present cells. Pieces must cover the signal for this to equal the
+    /// full loss; uncovered cells contribute nothing.
+    pub fn loss(&self, stats: &PrefixStats) -> f64 {
+        self.pieces
+            .iter()
+            .map(|(rect, v)| stats.sse_to(rect, *v))
+            .sum()
+    }
+
+    /// Brute-force SSE against the signal — O(N); used by tests as oracle.
+    pub fn loss_bruteforce(&self, signal: &Signal) -> f64 {
+        signal.sse_against(|r, c| self.value_at(r, c).unwrap_or(0.0))
+    }
+
+    /// Replace each piece's value with the signal mean of its rectangle —
+    /// the optimal values for this fixed partition.
+    pub fn refit_values(&mut self, stats: &PrefixStats) {
+        for (rect, v) in &mut self.pieces {
+            *v = stats.mean(rect);
+        }
+    }
+
+    /// Render into a dense signal (uncovered cells → 0). Used by examples
+    /// and the image codec.
+    pub fn render(&self, n: usize, m: usize) -> Signal {
+        let mut sig = Signal::constant(n, m, 0.0);
+        for (rect, v) in &self.pieces {
+            for (r, c) in rect.cells() {
+                sig.set(r, c, *v);
+            }
+        }
+        sig
+    }
+}
+
+/// Generate a *random* k-segmentation of `bounds` by recursive random
+/// guillotine cuts with values fitted or random. These are the query
+/// models used to validate the coreset's for-all-s guarantee empirically.
+pub fn random_segmentation(bounds: Rect, k: usize, rng: &mut Rng) -> KSegmentation {
+    let mut rects = vec![bounds];
+    while rects.len() < k {
+        let candidates: Vec<usize> = rects
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.height() > 1 || r.width() > 1)
+            .map(|(i, _)| i)
+            .collect();
+        if candidates.is_empty() {
+            break; // grid exhausted: fewer than k cells
+        }
+        let idx = candidates[rng.usize(candidates.len())];
+        let rect = rects.swap_remove(idx);
+        let split_rows = rect.height() > 1 && (rect.width() <= 1 || rng.bool(0.5));
+        if split_rows {
+            let cut = rng.range(rect.r0, rect.r1);
+            rects.push(Rect::new(rect.r0, cut, rect.c0, rect.c1));
+            rects.push(Rect::new(cut + 1, rect.r1, rect.c0, rect.c1));
+        } else {
+            let cut = rng.range(rect.c0, rect.c1);
+            rects.push(Rect::new(rect.r0, rect.r1, rect.c0, cut));
+            rects.push(Rect::new(rect.r0, rect.r1, cut + 1, rect.c1));
+        }
+    }
+    let pieces = rects
+        .into_iter()
+        .map(|r| (r, rng.uniform(-10.0, 10.0)))
+        .collect();
+    KSegmentation::new(pieces)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> Rect {
+        Rect::new(0, 9, 0, 9)
+    }
+
+    #[test]
+    fn constant_segmentation_covers() {
+        let s = KSegmentation::constant(grid(), 1.0);
+        assert!(s.is_partition_of(grid()));
+        assert_eq!(s.k(), 1);
+        assert_eq!(s.value_at(5, 5), Some(1.0));
+    }
+
+    #[test]
+    fn random_segmentation_is_partition() {
+        let mut rng = Rng::new(123);
+        for k in [1, 2, 5, 17, 40] {
+            let s = random_segmentation(grid(), k, &mut rng);
+            assert_eq!(s.k(), k);
+            assert!(s.is_partition_of(grid()), "k={k}");
+        }
+    }
+
+    #[test]
+    fn loss_prefix_matches_bruteforce() {
+        let mut rng = Rng::new(42);
+        let sig = Signal::from_fn(10, 10, |r, c| ((r * 3 + c) % 7) as f64);
+        let stats = PrefixStats::new(&sig);
+        for k in [1, 4, 9] {
+            let s = random_segmentation(grid(), k, &mut rng);
+            let fast = s.loss(&stats);
+            let slow = s.loss_bruteforce(&sig);
+            assert!((fast - slow).abs() < 1e-8 * (1.0 + slow), "k={k}");
+        }
+    }
+
+    #[test]
+    fn intersects_rect_detects_straddling() {
+        // Two vertical halves.
+        let s = KSegmentation::new(vec![
+            (Rect::new(0, 9, 0, 4), 0.0),
+            (Rect::new(0, 9, 5, 9), 1.0),
+        ]);
+        assert!(!s.intersects_rect(&Rect::new(0, 3, 0, 3))); // inside left
+        assert!(s.intersects_rect(&Rect::new(0, 3, 3, 6))); // straddles cut
+    }
+
+    #[test]
+    fn refit_values_minimizes_loss() {
+        let mut rng = Rng::new(9);
+        let sig = Signal::from_fn(10, 10, |r, c| (r as f64 - c as f64).powi(2) / 10.0);
+        let stats = PrefixStats::new(&sig);
+        let mut s = random_segmentation(grid(), 6, &mut rng);
+        let before = s.loss(&stats);
+        s.refit_values(&stats);
+        let after = s.loss(&stats);
+        assert!(after <= before + 1e-12);
+        // Perturbing any value increases loss (local optimality of means).
+        let mut worse = s.clone();
+        let pieces: Vec<(Rect, f64)> = worse
+            .pieces()
+            .iter()
+            .map(|&(r, v)| (r, v + 0.1))
+            .collect();
+        worse = KSegmentation::new(pieces);
+        assert!(worse.loss(&stats) >= after);
+    }
+
+    #[test]
+    fn render_roundtrip_loss_zero() {
+        let mut rng = Rng::new(4);
+        let s = random_segmentation(grid(), 5, &mut rng);
+        let rendered = s.render(10, 10);
+        assert!(s.loss_bruteforce(&rendered) < 1e-18);
+    }
+}

@@ -1,0 +1,169 @@
+//! Quadtree segmentation — the MPEG4-style image-compression use case the
+//! paper's introduction motivates ([46, 55]): recursively split a block
+//! into 4 quadrants while its opt₁ exceeds a tolerance (or a leaf budget
+//! is exhausted). A quadtree with k leaves is a special k-segmentation, so
+//! the coreset guarantee covers it.
+
+use crate::signal::{PrefixStats, Rect};
+
+use super::KSegmentation;
+
+/// Greedy quadtree compression: always split the leaf with the largest
+/// opt₁ until either every leaf is within `tolerance` or `max_leaves` is
+/// reached. Returns the resulting segmentation with mean-fitted values.
+pub fn quadtree_compress(
+    stats: &PrefixStats,
+    tolerance: f64,
+    max_leaves: usize,
+) -> KSegmentation {
+    assert!(max_leaves >= 1);
+    let bounds = Rect::new(0, stats.rows() - 1, 0, stats.cols() - 1);
+    // Max-heap by opt1 — a simple Vec with linear max scan is fine at the
+    // scales involved (≤ max_leaves entries); keeps us dependency-free.
+    let mut leaves: Vec<(Rect, f64)> = vec![(bounds, stats.opt1(&bounds))];
+    loop {
+        if leaves.len() >= max_leaves {
+            break;
+        }
+        // Worst leaf that is still splittable.
+        let worst = leaves
+            .iter()
+            .enumerate()
+            .filter(|(_, (r, loss))| *loss > tolerance && (r.height() > 1 || r.width() > 1))
+            .max_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap());
+        let Some((idx, _)) = worst else { break };
+        let (rect, _) = leaves.swap_remove(idx);
+        let budget = max_leaves - leaves.len();
+        for q in quadrants(&rect).into_iter().take(budget.max(2)) {
+            leaves.push((q, stats.opt1(&q)));
+        }
+    }
+    let pieces = leaves
+        .into_iter()
+        .map(|(r, _)| (r, stats.mean(&r)))
+        .collect();
+    KSegmentation::new(pieces)
+}
+
+/// Split a rectangle into its (up to 4) quadrants. Degenerate axes yield
+/// fewer pieces (a 1×w rect splits into 2 halves, etc.).
+pub fn quadrants(rect: &Rect) -> Vec<Rect> {
+    let mut out = Vec::with_capacity(4);
+    let rsplit = rect.height() > 1;
+    let csplit = rect.width() > 1;
+    let rmid = rect.r0 + (rect.height() - 1) / 2; // last row of top half
+    let cmid = rect.c0 + (rect.width() - 1) / 2;
+    match (rsplit, csplit) {
+        (true, true) => {
+            out.push(Rect::new(rect.r0, rmid, rect.c0, cmid));
+            out.push(Rect::new(rect.r0, rmid, cmid + 1, rect.c1));
+            out.push(Rect::new(rmid + 1, rect.r1, rect.c0, cmid));
+            out.push(Rect::new(rmid + 1, rect.r1, cmid + 1, rect.c1));
+        }
+        (true, false) => {
+            out.push(Rect::new(rect.r0, rmid, rect.c0, rect.c1));
+            out.push(Rect::new(rmid + 1, rect.r1, rect.c0, rect.c1));
+        }
+        (false, true) => {
+            out.push(Rect::new(rect.r0, rect.r1, rect.c0, cmid));
+            out.push(Rect::new(rect.r0, rect.r1, cmid + 1, rect.c1));
+        }
+        (false, false) => out.push(*rect),
+    }
+    out
+}
+
+/// PSNR-style compression report for the image example.
+#[derive(Clone, Copy, Debug)]
+pub struct CompressionReport {
+    pub leaves: usize,
+    pub sse: f64,
+    pub mse: f64,
+    /// Compression ratio: original cells / (leaves × 5 numbers per leaf).
+    pub ratio: f64,
+}
+
+pub fn report(stats: &PrefixStats, seg: &KSegmentation) -> CompressionReport {
+    let n = stats.rows() * stats.cols();
+    let sse = seg.loss(stats);
+    CompressionReport {
+        leaves: seg.k(),
+        sse,
+        mse: sse / n as f64,
+        ratio: n as f64 / (seg.k() as f64 * 5.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::signal::{generate, Signal, PrefixStats};
+
+    #[test]
+    fn quadrants_tile_parent() {
+        for rect in [
+            Rect::new(0, 7, 0, 7),
+            Rect::new(2, 2, 0, 5),
+            Rect::new(1, 6, 3, 3),
+            Rect::new(4, 4, 4, 4),
+        ] {
+            let qs = quadrants(&rect);
+            let total: usize = qs.iter().map(|q| q.area()).sum();
+            assert_eq!(total, rect.area(), "{rect:?}");
+            for i in 0..qs.len() {
+                assert!(rect.contains_rect(&qs[i]));
+                for j in (i + 1)..qs.len() {
+                    assert!(!qs[i].intersects(&qs[j]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compress_constant_image_is_one_leaf() {
+        let sig = Signal::constant(16, 16, 5.0);
+        let stats = PrefixStats::new(&sig);
+        let seg = quadtree_compress(&stats, 1e-9, 100);
+        assert_eq!(seg.k(), 1);
+        assert!(seg.loss(&stats) < 1e-12);
+    }
+
+    #[test]
+    fn compress_respects_budget_and_partitions() {
+        let mut rng = Rng::new(5);
+        let sig = generate::image_like(32, 32, 3, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let seg = quadtree_compress(&stats, 0.0, 40);
+        assert!(seg.k() <= 40 + 3, "k={}", seg.k()); // split adds ≤3 net leaves
+        assert!(seg.is_partition_of(sig.bounds()));
+    }
+
+    #[test]
+    fn more_leaves_never_hurts() {
+        let mut rng = Rng::new(6);
+        let sig = generate::image_like(32, 32, 4, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let mut prev = f64::INFINITY;
+        for budget in [1, 4, 16, 64, 256] {
+            let seg = quadtree_compress(&stats, 0.0, budget);
+            let loss = seg.loss(&stats);
+            assert!(loss <= prev + 1e-9, "budget {budget}");
+            prev = loss;
+        }
+    }
+
+    #[test]
+    fn tolerance_is_enforced_when_budget_allows() {
+        let mut rng = Rng::new(7);
+        let sig = generate::image_like(32, 32, 2, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let tol = 1.0;
+        let seg = quadtree_compress(&stats, tol, 100_000);
+        for (rect, _) in seg.pieces() {
+            if rect.area() > 1 {
+                assert!(stats.opt1(rect) <= tol + 1e-9);
+            }
+        }
+    }
+}

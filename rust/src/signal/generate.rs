@@ -1,0 +1,237 @@
+//! Synthetic signal generators used by tests, examples and benchmarks.
+//!
+//! Real signals in the paper's motivation are images, sensor grids, and
+//! z-normalized tabular matrices; the generators below cover the same
+//! regimes: piecewise-constant (the model class itself), piecewise-smooth,
+//! low-rank + noise (tabular-like), and pure noise (worst case).
+
+use super::{Rect, Signal};
+use crate::rng::Rng;
+
+/// A piecewise-constant signal that *is* a k-segmentation: recursively
+/// split the grid into `k` rectangles (random guillotine cuts) and assign
+/// each a random level, plus optional gaussian noise. The ground-truth
+/// segmentation is returned alongside so tests can verify recovery.
+pub fn piecewise_constant(
+    n: usize,
+    m: usize,
+    k: usize,
+    noise_std: f64,
+    rng: &mut Rng,
+) -> (Signal, Vec<(Rect, f64)>) {
+    assert!(k >= 1);
+    let mut pieces: Vec<Rect> = vec![Rect::new(0, n - 1, 0, m - 1)];
+    // Greedily split the largest piece until we have k.
+    while pieces.len() < k {
+        // Pick the piece with the largest area that is splittable.
+        let (idx, _) = pieces
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.height() > 1 || r.width() > 1)
+            .max_by_key(|(_, r)| r.area())
+            .expect("cannot split further: k too large for grid");
+        let rect = pieces.swap_remove(idx);
+        let split_rows = rect.height() > 1 && (rect.width() <= 1 || rng.bool(0.5));
+        if split_rows {
+            let cut = rng.range(rect.r0, rect.r1); // split after row `cut`
+            pieces.push(Rect::new(rect.r0, cut, rect.c0, rect.c1));
+            pieces.push(Rect::new(cut + 1, rect.r1, rect.c0, rect.c1));
+        } else {
+            let cut = rng.range(rect.c0, rect.c1); // split after col `cut`
+            pieces.push(Rect::new(rect.r0, rect.r1, rect.c0, cut));
+            pieces.push(Rect::new(rect.r0, rect.r1, cut + 1, rect.c1));
+        }
+    }
+    let labeled: Vec<(Rect, f64)> = pieces
+        .into_iter()
+        .map(|r| (r, rng.uniform(-10.0, 10.0)))
+        .collect();
+    let mut sig = Signal::constant(n, m, 0.0);
+    for (rect, level) in &labeled {
+        for (r, c) in rect.cells() {
+            let noise = if noise_std > 0.0 { rng.normal_ms(0.0, noise_std) } else { 0.0 };
+            sig.set(r, c, level + noise);
+        }
+    }
+    (sig, labeled)
+}
+
+/// A smooth 2D signal: sum of a few random low-frequency sinusoids.
+/// Mimics natural images / sensor fields — the regime where the balanced
+/// partition produces large flat cells.
+pub fn smooth(n: usize, m: usize, components: usize, rng: &mut Rng) -> Signal {
+    let waves: Vec<(f64, f64, f64, f64)> = (0..components)
+        .map(|_| {
+            (
+                rng.uniform(0.2, 2.5),               // amplitude
+                rng.uniform(0.5, 3.0) / n as f64,    // row frequency
+                rng.uniform(0.5, 3.0) / m as f64,    // col frequency
+                rng.uniform(0.0, std::f64::consts::TAU), // phase
+            )
+        })
+        .collect();
+    Signal::from_fn(n, m, |r, c| {
+        waves
+            .iter()
+            .map(|&(a, fr, fc, ph)| {
+                a * (std::f64::consts::TAU * (fr * r as f64 + fc * c as f64) + ph).sin()
+            })
+            .sum()
+    })
+}
+
+/// Low-rank + piecewise + noise matrix mimicking a z-normalized tabular
+/// dataset (rows = instances, cols = features). This is the UCI-dataset
+/// substitute documented in DESIGN.md §Substitutions: features are linear
+/// combinations of a few latent factors that drift smoothly over the
+/// instance axis, with regime switches (the piecewise part) and i.i.d.
+/// measurement noise, then z-normalized per feature exactly like the
+/// paper's preprocessing.
+pub fn tabular_like(n: usize, m: usize, rank: usize, noise_std: f64, rng: &mut Rng) -> Signal {
+    // Latent factors: random walks with occasional jumps.
+    let mut factors = vec![vec![0.0f64; n]; rank];
+    for f in factors.iter_mut() {
+        let mut x = rng.normal();
+        for v in f.iter_mut() {
+            if rng.bool(0.002) {
+                x = rng.normal_ms(0.0, 2.0); // regime switch
+            }
+            x += rng.normal_ms(0.0, 0.02);
+            *v = x;
+        }
+    }
+    // Feature loadings.
+    let loadings: Vec<Vec<f64>> = (0..m)
+        .map(|_| (0..rank).map(|_| rng.normal()).collect())
+        .collect();
+    let mut sig = Signal::from_fn(n, m, |r, c| {
+        let mut v = 0.0;
+        for (f, l) in factors.iter().zip(loadings[c].iter()) {
+            v += f[r] * l;
+        }
+        v + rng.normal_ms(0.0, noise_std)
+    });
+    znormalize_columns(&mut sig);
+    sig
+}
+
+/// Z-normalize every column (feature) to zero mean / unit variance —
+/// the paper's preprocessing for the UCI datasets.
+pub fn znormalize_columns(sig: &mut Signal) {
+    let (n, m) = (sig.rows(), sig.cols());
+    for c in 0..m {
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for r in 0..n {
+            let y = sig.get(r, c);
+            sum += y;
+            sq += y * y;
+        }
+        let mean = sum / n as f64;
+        let var = (sq / n as f64 - mean * mean).max(1e-12);
+        let inv_std = 1.0 / var.sqrt();
+        for r in 0..n {
+            sig.set(r, c, (sig.get(r, c) - mean) * inv_std);
+        }
+    }
+}
+
+/// Pure gaussian noise — the adversarial regime where no small coreset is
+/// information-theoretically possible for *point sets*, but the signal
+/// assumption still yields a valid (large-ish) coreset.
+pub fn noise(n: usize, m: usize, std: f64, rng: &mut Rng) -> Signal {
+    Signal::from_fn(n, m, |_, _| rng.normal_ms(0.0, std))
+}
+
+/// A synthetic "photo-like" image: smooth background + a few constant
+/// rectangles (objects) + light noise. Used by the image-compression
+/// example (the paper's MPEG4/quadtree motivation).
+pub fn image_like(n: usize, m: usize, objects: usize, rng: &mut Rng) -> Signal {
+    let mut sig = smooth(n, m, 3, rng);
+    for _ in 0..objects {
+        let h = rng.range(n / 8 + 1, n / 3 + 2).min(n);
+        let w = rng.range(m / 8 + 1, m / 3 + 2).min(m);
+        let r0 = rng.usize(n - h + 1);
+        let c0 = rng.usize(m - w + 1);
+        let level = rng.uniform(-8.0, 8.0);
+        for r in r0..r0 + h {
+            for c in c0..c0 + w {
+                sig.set(r, c, level);
+            }
+        }
+    }
+    for r in 0..n {
+        for c in 0..m {
+            let v = sig.get(r, c) + rng.normal_ms(0.0, 0.05);
+            sig.set(r, c, v);
+        }
+    }
+    sig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::PrefixStats;
+
+    #[test]
+    fn piecewise_constant_pieces_partition_grid() {
+        let mut rng = Rng::new(1);
+        let (sig, pieces) = piecewise_constant(20, 30, 7, 0.0, &mut rng);
+        assert_eq!(pieces.len(), 7);
+        // Pieces tile the grid exactly: areas sum and no overlaps.
+        let total: usize = pieces.iter().map(|(r, _)| r.area()).sum();
+        assert_eq!(total, 600);
+        for i in 0..pieces.len() {
+            for j in (i + 1)..pieces.len() {
+                assert!(!pieces[i].0.intersects(&pieces[j].0), "{i} {j}");
+            }
+        }
+        // Noiseless: each piece is constant → opt1 = 0.
+        let stats = PrefixStats::new(&sig);
+        for (rect, level) in &pieces {
+            assert!(stats.opt1(rect) < 1e-9);
+            assert!((stats.mean(rect) - level).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn tabular_like_is_znormalized() {
+        let mut rng = Rng::new(5);
+        let sig = tabular_like(200, 10, 3, 0.1, &mut rng);
+        for c in 0..10 {
+            let mut sum = 0.0;
+            let mut sq = 0.0;
+            for r in 0..200 {
+                sum += sig.get(r, c);
+                sq += sig.get(r, c).powi(2);
+            }
+            let mean = sum / 200.0;
+            let var = sq / 200.0 - mean * mean;
+            assert!(mean.abs() < 1e-9, "col {c} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-6, "col {c} var {var}");
+        }
+    }
+
+    #[test]
+    fn smooth_is_bounded() {
+        let mut rng = Rng::new(9);
+        let sig = smooth(40, 40, 4, &mut rng);
+        for &v in sig.values() {
+            assert!(v.abs() < 11.0); // ≤ sum of amplitudes
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = {
+            let mut rng = Rng::new(77);
+            image_like(30, 30, 3, &mut rng)
+        };
+        let b = {
+            let mut rng = Rng::new(77);
+            image_like(30, 30, 3, &mut rng)
+        };
+        assert_eq!(a.values(), b.values());
+    }
+}

@@ -1,0 +1,353 @@
+//! Signal representation: an `n × m` grid where every cell carries a real
+//! label (the paper's "2D-signal"), plus rectangular sub-signal views and
+//! optional masks (for the missing-values experiment, where held-out cells
+//! must not contribute to any statistic).
+
+pub mod generate;
+pub mod stats;
+
+pub use stats::PrefixStats;
+
+/// An axis-parallel rectangle of grid cells, **inclusive** on both ends,
+/// using 0-based `(row, col)` coordinates: rows `r0..=r1`, cols `c0..=c1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Rect {
+    pub r0: usize,
+    pub r1: usize,
+    pub c0: usize,
+    pub c1: usize,
+}
+
+impl Rect {
+    pub fn new(r0: usize, r1: usize, c0: usize, c1: usize) -> Self {
+        debug_assert!(r0 <= r1 && c0 <= c1, "degenerate rect {r0}..{r1} x {c0}..{c1}");
+        Self { r0, r1, c0, c1 }
+    }
+
+    /// Number of rows spanned.
+    #[inline]
+    pub fn height(&self) -> usize {
+        self.r1 - self.r0 + 1
+    }
+
+    /// Number of columns spanned.
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.c1 - self.c0 + 1
+    }
+
+    /// Number of cells (not accounting for masks).
+    #[inline]
+    pub fn area(&self) -> usize {
+        self.height() * self.width()
+    }
+
+    #[inline]
+    pub fn contains(&self, r: usize, c: usize) -> bool {
+        r >= self.r0 && r <= self.r1 && c >= self.c0 && c <= self.c1
+    }
+
+    /// Do two rectangles share at least one cell?
+    #[inline]
+    pub fn intersects(&self, other: &Rect) -> bool {
+        self.r0 <= other.r1 && other.r0 <= self.r1 && self.c0 <= other.c1 && other.c0 <= self.c1
+    }
+
+    /// The intersection rectangle, if non-empty.
+    pub fn intersection(&self, other: &Rect) -> Option<Rect> {
+        if !self.intersects(other) {
+            return None;
+        }
+        Some(Rect::new(
+            self.r0.max(other.r0),
+            self.r1.min(other.r1),
+            self.c0.max(other.c0),
+            self.c1.min(other.c1),
+        ))
+    }
+
+    /// Is `other` fully inside `self`?
+    #[inline]
+    pub fn contains_rect(&self, other: &Rect) -> bool {
+        self.r0 <= other.r0 && other.r1 <= self.r1 && self.c0 <= other.c0 && other.c1 <= self.c1
+    }
+
+    /// Transpose (swap row/col axes) — used by SLICEPARTITION's recursive
+    /// call on `B^T`.
+    #[inline]
+    pub fn transposed(&self) -> Rect {
+        Rect::new(self.c0, self.c1, self.r0, self.r1)
+    }
+
+    /// The four corner coordinates (used by Algorithm 3 Line 6, which pins
+    /// each Caratheodory point to a corner of its block).
+    pub fn corners(&self) -> [(usize, usize); 4] {
+        [
+            (self.r0, self.c0),
+            (self.r0, self.c1),
+            (self.r1, self.c0),
+            (self.r1, self.c1),
+        ]
+    }
+
+    /// Iterate all `(r, c)` cells in row-major order.
+    pub fn cells(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let (c0, c1) = (self.c0, self.c1);
+        (self.r0..=self.r1).flat_map(move |r| (c0..=c1).map(move |c| (r, c)))
+    }
+}
+
+/// A dense `n × m` signal. Labels are stored row-major in `values`;
+/// `mask[i]` is false for cells that are *missing* (excluded from every
+/// statistic). A fully-present signal has `mask == None` (fast path).
+#[derive(Clone, Debug)]
+pub struct Signal {
+    n: usize,
+    m: usize,
+    values: Vec<f64>,
+    mask: Option<Vec<bool>>,
+}
+
+impl Signal {
+    /// Build from row-major values.
+    pub fn from_values(n: usize, m: usize, values: Vec<f64>) -> Self {
+        assert_eq!(values.len(), n * m, "values length must be n*m");
+        assert!(n > 0 && m > 0, "signal must be non-empty");
+        Self { n, m, values, mask: None }
+    }
+
+    /// Build a constant signal.
+    pub fn constant(n: usize, m: usize, value: f64) -> Self {
+        Self::from_values(n, m, vec![value; n * m])
+    }
+
+    /// Build from a generator function over `(row, col)`.
+    pub fn from_fn(n: usize, m: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut values = Vec::with_capacity(n * m);
+        for r in 0..n {
+            for c in 0..m {
+                values.push(f(r, c));
+            }
+        }
+        Self::from_values(n, m, values)
+    }
+
+    /// Attach a mask (true = present). Panics on length mismatch.
+    pub fn with_mask(mut self, mask: Vec<bool>) -> Self {
+        assert_eq!(mask.len(), self.n * self.m);
+        self.mask = Some(mask);
+        self
+    }
+
+    /// Mark a rectangle of cells missing (used by the 5×5-patch holdout).
+    pub fn mask_rect(&mut self, rect: Rect) {
+        assert!(rect.r1 < self.n && rect.c1 < self.m, "rect out of bounds");
+        let mask = self
+            .mask
+            .get_or_insert_with(|| vec![true; self.n * self.m]);
+        for (r, c) in rect.cells() {
+            mask[r * self.m + c] = false;
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.m
+    }
+
+    /// Total cells (present or not).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n * self.m
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        false // constructor enforces n, m > 0
+    }
+
+    /// Number of *present* cells.
+    pub fn present(&self) -> usize {
+        match &self.mask {
+            None => self.len(),
+            Some(m) => m.iter().filter(|&&b| b).count(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.values[r * self.m + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.values[r * self.m + c] = v;
+    }
+
+    /// Is the cell present (not masked out)?
+    #[inline]
+    pub fn is_present(&self, r: usize, c: usize) -> bool {
+        match &self.mask {
+            None => true,
+            Some(m) => m[r * self.m + c],
+        }
+    }
+
+    #[inline]
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn mask(&self) -> Option<&[bool]> {
+        self.mask.as_deref()
+    }
+
+    /// The full-signal bounding rectangle.
+    #[inline]
+    pub fn bounds(&self) -> Rect {
+        Rect::new(0, self.n - 1, 0, self.m - 1)
+    }
+
+    /// Extract the sub-signal of `rect` as an owned `Signal` (mask carried
+    /// over). Used by the streaming sharder to hand bands to workers.
+    pub fn crop(&self, rect: Rect) -> Signal {
+        assert!(rect.r1 < self.n && rect.c1 < self.m, "crop out of bounds");
+        let mut values = Vec::with_capacity(rect.area());
+        let mut mask = self.mask.as_ref().map(|_| Vec::with_capacity(rect.area()));
+        for r in rect.r0..=rect.r1 {
+            let row0 = r * self.m;
+            values.extend_from_slice(&self.values[row0 + rect.c0..=row0 + rect.c1]);
+            if let (Some(dst), Some(src)) = (mask.as_mut(), self.mask.as_ref()) {
+                dst.extend_from_slice(&src[row0 + rect.c0..=row0 + rect.c1]);
+            }
+        }
+        let mut s = Signal::from_values(rect.height(), rect.width(), values);
+        if let Some(m) = mask {
+            s.mask = Some(m);
+        }
+        s
+    }
+
+    /// Transposed copy.
+    pub fn transposed(&self) -> Signal {
+        let mut values = vec![0.0; self.len()];
+        for r in 0..self.n {
+            for c in 0..self.m {
+                values[c * self.n + r] = self.get(r, c);
+            }
+        }
+        let mut out = Signal::from_values(self.m, self.n, values);
+        if let Some(mask) = &self.mask {
+            let mut tm = vec![true; self.len()];
+            for r in 0..self.n {
+                for c in 0..self.m {
+                    tm[c * self.n + r] = mask[r * self.m + c];
+                }
+            }
+            out.mask = Some(tm);
+        }
+        out
+    }
+
+    /// Sum of squared differences between this signal's present cells and a
+    /// predictor function. The ground-truth loss used all over the tests.
+    pub fn sse_against(&self, mut pred: impl FnMut(usize, usize) -> f64) -> f64 {
+        let mut total = 0.0;
+        for r in 0..self.n {
+            for c in 0..self.m {
+                if self.is_present(r, c) {
+                    let d = pred(r, c) - self.get(r, c);
+                    total += d * d;
+                }
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_geometry() {
+        let r = Rect::new(1, 3, 2, 5);
+        assert_eq!(r.height(), 3);
+        assert_eq!(r.width(), 4);
+        assert_eq!(r.area(), 12);
+        assert!(r.contains(2, 4));
+        assert!(!r.contains(0, 4));
+        assert_eq!(r.transposed(), Rect::new(2, 5, 1, 3));
+        assert_eq!(r.cells().count(), 12);
+    }
+
+    #[test]
+    fn rect_intersection() {
+        let a = Rect::new(0, 4, 0, 4);
+        let b = Rect::new(3, 6, 2, 8);
+        assert!(a.intersects(&b));
+        assert_eq!(a.intersection(&b), Some(Rect::new(3, 4, 2, 4)));
+        let c = Rect::new(5, 6, 0, 4);
+        assert!(!a.intersects(&c));
+        assert_eq!(a.intersection(&c), None);
+        assert!(a.contains_rect(&Rect::new(1, 2, 1, 2)));
+        assert!(!a.contains_rect(&b));
+    }
+
+    #[test]
+    fn signal_basic_accessors() {
+        let s = Signal::from_fn(3, 4, |r, c| (r * 10 + c) as f64);
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.cols(), 4);
+        assert_eq!(s.len(), 12);
+        assert_eq!(s.get(2, 3), 23.0);
+        assert_eq!(s.present(), 12);
+        assert_eq!(s.bounds(), Rect::new(0, 2, 0, 3));
+    }
+
+    #[test]
+    fn crop_matches_direct_indexing() {
+        let s = Signal::from_fn(6, 7, |r, c| (r * 100 + c) as f64);
+        let rect = Rect::new(1, 4, 2, 5);
+        let cropped = s.crop(rect);
+        assert_eq!(cropped.rows(), 4);
+        assert_eq!(cropped.cols(), 4);
+        for r in 0..4 {
+            for c in 0..4 {
+                assert_eq!(cropped.get(r, c), s.get(r + 1, c + 2));
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let s = Signal::from_fn(3, 5, |r, c| (r * 31 + c * 7) as f64);
+        let tt = s.transposed().transposed();
+        assert_eq!(tt.values(), s.values());
+    }
+
+    #[test]
+    fn mask_rect_excludes_cells() {
+        let mut s = Signal::from_fn(5, 5, |r, c| (r + c) as f64);
+        s.mask_rect(Rect::new(1, 2, 1, 2));
+        assert_eq!(s.present(), 25 - 4);
+        assert!(!s.is_present(1, 1));
+        assert!(s.is_present(0, 0));
+        // Crop carries the mask.
+        let cropped = s.crop(Rect::new(0, 2, 0, 2));
+        assert_eq!(cropped.present(), 9 - 4);
+    }
+
+    #[test]
+    fn sse_against_constant() {
+        let s = Signal::from_values(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        // SSE to constant 2.5 = 1.5^2+0.5^2+0.5^2+1.5^2 = 5.0
+        let sse = s.sse_against(|_, _| 2.5);
+        assert!((sse - 5.0).abs() < 1e-12);
+    }
+}

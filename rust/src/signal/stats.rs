@@ -1,0 +1,310 @@
+//! Prefix-sum ("integral image") statistics over a signal.
+//!
+//! This is the O(1) `opt₁` oracle that Lemmas 12/13 of the paper rely on:
+//! after an O(N) preprocessing pass we can answer, for any rectangle `B`,
+//!
+//! * `count(B)`  — number of *present* cells,
+//! * `sum(B)`    — Σ y over present cells,
+//! * `sum_sq(B)` — Σ y² over present cells,
+//! * `opt1(B)`   — min_c Σ (y − c)² = Σy² − (Σy)²/count  (the 1-segmentation
+//!   loss, attained by the mean),
+//!
+//! each in O(1) via inclusion–exclusion. All accumulators are f64; `opt1`
+//! clamps at zero to absorb floating-point cancellation on near-constant
+//! blocks.
+
+use super::{Rect, Signal};
+
+/// Integral images of (count, Σy, Σy²) with one row/col of zero padding so
+/// that queries need no boundary branches.
+#[derive(Clone, Debug)]
+pub struct PrefixStats {
+    n: usize,
+    m: usize,
+    /// (m+1)-stride arrays, entry [(r+1)*(m+1) + (c+1)] = prefix over
+    /// rows 0..=r, cols 0..=c.
+    count: Vec<f64>,
+    sum: Vec<f64>,
+    sum_sq: Vec<f64>,
+}
+
+/// Aggregate moments of a rectangle: the triple the Caratheodory step
+/// must preserve exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Moments {
+    pub count: f64,
+    pub sum: f64,
+    pub sum_sq: f64,
+}
+
+impl Moments {
+    pub const ZERO: Moments = Moments { count: 0.0, sum: 0.0, sum_sq: 0.0 };
+
+    /// Mean label (0 for empty blocks).
+    #[inline]
+    pub fn mean(&self) -> f64 {
+        if self.count <= 0.0 {
+            0.0
+        } else {
+            self.sum / self.count
+        }
+    }
+
+    /// The optimal 1-segmentation loss: Σ(y − mean)².
+    #[inline]
+    pub fn opt1(&self) -> f64 {
+        if self.count <= 0.0 {
+            return 0.0;
+        }
+        (self.sum_sq - self.sum * self.sum / self.count).max(0.0)
+    }
+
+    /// SSE of fitting the constant `c` to this block: Σ(y − c)².
+    #[inline]
+    pub fn sse_to(&self, c: f64) -> f64 {
+        (self.sum_sq - 2.0 * c * self.sum + c * c * self.count).max(0.0)
+    }
+
+    #[inline]
+    pub fn add(&self, other: &Moments) -> Moments {
+        Moments {
+            count: self.count + other.count,
+            sum: self.sum + other.sum,
+            sum_sq: self.sum_sq + other.sum_sq,
+        }
+    }
+}
+
+impl PrefixStats {
+    /// O(N) construction. Masked-out cells contribute zero to every
+    /// accumulator.
+    pub fn new(signal: &Signal) -> Self {
+        let n = signal.rows();
+        let m = signal.cols();
+        let stride = m + 1;
+        let mut count = vec![0.0; (n + 1) * stride];
+        let mut sum = vec![0.0; (n + 1) * stride];
+        let mut sum_sq = vec![0.0; (n + 1) * stride];
+        for r in 0..n {
+            // Running row accumulators avoid one extra pass.
+            let mut row_cnt = 0.0;
+            let mut row_sum = 0.0;
+            let mut row_sq = 0.0;
+            let up = r * stride;
+            let cur = (r + 1) * stride;
+            for c in 0..m {
+                if signal.is_present(r, c) {
+                    let y = signal.get(r, c);
+                    row_cnt += 1.0;
+                    row_sum += y;
+                    row_sq += y * y;
+                }
+                count[cur + c + 1] = count[up + c + 1] + row_cnt;
+                sum[cur + c + 1] = sum[up + c + 1] + row_sum;
+                sum_sq[cur + c + 1] = sum_sq[up + c + 1] + row_sq;
+            }
+        }
+        Self { n, m, count, sum, sum_sq }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.m
+    }
+
+    #[inline]
+    fn query(&self, arr: &[f64], rect: &Rect) -> f64 {
+        let stride = self.m + 1;
+        let (r0, r1, c0, c1) = (rect.r0, rect.r1 + 1, rect.c0, rect.c1 + 1);
+        arr[r1 * stride + c1] - arr[r0 * stride + c1] - arr[r1 * stride + c0]
+            + arr[r0 * stride + c0]
+    }
+
+    /// All three moments of a rectangle in O(1).
+    #[inline]
+    pub fn moments(&self, rect: &Rect) -> Moments {
+        debug_assert!(rect.r1 < self.n && rect.c1 < self.m, "rect out of bounds");
+        Moments {
+            count: self.query(&self.count, rect),
+            sum: self.query(&self.sum, rect),
+            sum_sq: self.query(&self.sum_sq, rect),
+        }
+    }
+
+    /// Number of present cells in `rect`.
+    #[inline]
+    pub fn count(&self, rect: &Rect) -> f64 {
+        self.query(&self.count, rect)
+    }
+
+    /// Σ y over present cells in `rect`.
+    #[inline]
+    pub fn sum(&self, rect: &Rect) -> f64 {
+        self.query(&self.sum, rect)
+    }
+
+    /// Σ y² over present cells in `rect`.
+    #[inline]
+    pub fn sum_sq(&self, rect: &Rect) -> f64 {
+        self.query(&self.sum_sq, rect)
+    }
+
+    /// Mean label of `rect` (0 if the rect is empty/masked out).
+    #[inline]
+    pub fn mean(&self, rect: &Rect) -> f64 {
+        self.moments(rect).mean()
+    }
+
+    /// `opt₁(rect)`: the 1-segmentation SSE loss, in O(1).
+    #[inline]
+    pub fn opt1(&self, rect: &Rect) -> f64 {
+        self.moments(rect).opt1()
+    }
+
+    /// SSE of fitting constant `c` to `rect`, in O(1).
+    #[inline]
+    pub fn sse_to(&self, rect: &Rect, c: f64) -> f64 {
+        self.moments(rect).sse_to(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Brute-force moments for cross-checking.
+    fn brute(signal: &Signal, rect: &Rect) -> Moments {
+        let mut m = Moments::ZERO;
+        for (r, c) in rect.cells() {
+            if signal.is_present(r, c) {
+                let y = signal.get(r, c);
+                m.count += 1.0;
+                m.sum += y;
+                m.sum_sq += y * y;
+            }
+        }
+        m
+    }
+
+    fn brute_opt1(signal: &Signal, rect: &Rect) -> f64 {
+        let mom = brute(signal, rect);
+        if mom.count == 0.0 {
+            return 0.0;
+        }
+        let mean = mom.sum / mom.count;
+        let mut loss = 0.0;
+        for (r, c) in rect.cells() {
+            if signal.is_present(r, c) {
+                let d = signal.get(r, c) - mean;
+                loss += d * d;
+            }
+        }
+        loss
+    }
+
+    #[test]
+    fn moments_match_bruteforce_random_rects() {
+        let mut rng = Rng::new(2024);
+        let sig = Signal::from_fn(17, 23, |r, c| ((r * 7 + c * 13) % 11) as f64 - 5.0);
+        let stats = PrefixStats::new(&sig);
+        for _ in 0..200 {
+            let r0 = rng.usize(17);
+            let r1 = rng.range(r0, 17);
+            let c0 = rng.usize(23);
+            let c1 = rng.range(c0, 23);
+            let rect = Rect::new(r0, r1, c0, c1);
+            let a = stats.moments(&rect);
+            let b = brute(&sig, &rect);
+            assert_eq!(a.count, b.count);
+            assert!((a.sum - b.sum).abs() < 1e-9);
+            assert!((a.sum_sq - b.sum_sq).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn opt1_matches_bruteforce() {
+        let mut rng = Rng::new(7);
+        let sig = Signal::from_fn(12, 9, |r, c| {
+            ((r as f64) * 0.3 - (c as f64) * 1.7).sin() * 4.0
+        });
+        let stats = PrefixStats::new(&sig);
+        for _ in 0..100 {
+            let r0 = rng.usize(12);
+            let r1 = rng.range(r0, 12);
+            let c0 = rng.usize(9);
+            let c1 = rng.range(c0, 9);
+            let rect = Rect::new(r0, r1, c0, c1);
+            let fast = stats.opt1(&rect);
+            let slow = brute_opt1(&sig, &rect);
+            assert!(
+                (fast - slow).abs() <= 1e-8 * (1.0 + slow),
+                "rect {rect:?}: {fast} vs {slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn opt1_near_zero_for_constant_blocks() {
+        // Inclusion–exclusion roundoff can leave a tiny positive residue;
+        // the clamp guarantees non-negativity, and the residue must be at
+        // machine-epsilon scale relative to Σy².
+        let sig = Signal::constant(10, 10, 3.7);
+        let stats = PrefixStats::new(&sig);
+        let whole = Rect::new(0, 9, 0, 9);
+        assert!(stats.opt1(&whole) >= 0.0);
+        assert!(stats.opt1(&whole) <= 1e-9 * stats.sum_sq(&whole));
+        let cell = Rect::new(3, 3, 4, 4);
+        assert!(stats.opt1(&cell) <= 1e-12 * (1.0 + stats.sum_sq(&cell)));
+    }
+
+    #[test]
+    fn masked_cells_are_excluded() {
+        let mut sig = Signal::from_fn(6, 6, |r, c| (r * 6 + c) as f64);
+        sig.mask_rect(Rect::new(0, 2, 0, 2));
+        let stats = PrefixStats::new(&sig);
+        let whole = sig.bounds();
+        let mom = stats.moments(&whole);
+        assert_eq!(mom.count, 36.0 - 9.0);
+        let b = brute(&sig, &whole);
+        assert!((mom.sum - b.sum).abs() < 1e-9);
+        // Fully masked rect → zero moments, zero opt1.
+        let dead = Rect::new(0, 2, 0, 2);
+        assert_eq!(stats.count(&dead), 0.0);
+        assert_eq!(stats.opt1(&dead), 0.0);
+    }
+
+    #[test]
+    fn sse_to_constant_matches_signal_sse() {
+        let sig = Signal::from_fn(8, 8, |r, c| ((r + 2 * c) % 5) as f64);
+        let stats = PrefixStats::new(&sig);
+        let rect = Rect::new(1, 6, 2, 7);
+        let c = 1.9;
+        let fast = stats.sse_to(&rect, c);
+        let mut slow = 0.0;
+        for (r, cc) in rect.cells() {
+            let d = sig.get(r, cc) - c;
+            slow += d * d;
+        }
+        assert!((fast - slow).abs() < 1e-9);
+    }
+
+    #[test]
+    fn moments_add_is_consistent() {
+        let sig = Signal::from_fn(4, 8, |r, c| (r * c) as f64);
+        let stats = PrefixStats::new(&sig);
+        let left = Rect::new(0, 3, 0, 3);
+        let right = Rect::new(0, 3, 4, 7);
+        let both = Rect::new(0, 3, 0, 7);
+        let sum = stats.moments(&left).add(&stats.moments(&right));
+        let direct = stats.moments(&both);
+        assert!((sum.sum - direct.sum).abs() < 1e-9);
+        assert!((sum.sum_sq - direct.sum_sq).abs() < 1e-9);
+        assert_eq!(sum.count, direct.count);
+    }
+}

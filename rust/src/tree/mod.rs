@@ -1,0 +1,445 @@
+//! Weighted CART regression trees — the `sklearn.tree.DecisionTreeRegressor`
+//! substitute (DESIGN.md §Substitutions).
+//!
+//! The trainer consumes **weighted** samples, which is what makes it able
+//! to train directly on a coreset: each coreset point carries the weight
+//! of the cells it represents, and variance-reduction splitting on
+//! weighted samples optimizes exactly the weighted SSE the coreset
+//! preserves.
+//!
+//! Features are generic d-dimensional `f64` vectors; for signal problems
+//! d = 2 (the grid coordinates). Splits are axis-parallel thresholds
+//! chosen to maximize weighted SSE reduction, leaves predict the weighted
+//! mean — precisely CART with the MSE criterion.
+
+pub mod forest;
+pub mod gbdt;
+
+use crate::coreset::WeightedPoint;
+
+/// A training sample: feature vector, target, weight.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub x: Vec<f64>,
+    pub y: f64,
+    pub w: f64,
+}
+
+impl Sample {
+    pub fn new(x: Vec<f64>, y: f64, w: f64) -> Self {
+        Self { x, y, w }
+    }
+
+    /// From a coreset point: features = (row, col).
+    pub fn from_point(p: &WeightedPoint) -> Self {
+        Self { x: vec![p.row as f64, p.col as f64], y: p.y, w: p.w }
+    }
+}
+
+/// Training hyperparameters (mirroring sklearn's names where sensible).
+#[derive(Clone, Copy, Debug)]
+pub struct TreeParams {
+    /// Maximum number of leaves (the paper's k).
+    pub max_leaves: usize,
+    /// Maximum depth (usize::MAX = unbounded).
+    pub max_depth: usize,
+    /// Minimum total weight to consider splitting a node.
+    pub min_weight_split: f64,
+    /// Minimum weighted SSE improvement to accept a split.
+    pub min_impurity_decrease: f64,
+    /// Number of features examined per split; `None` = all (set by the
+    /// forest for feature subsampling).
+    pub max_features: Option<usize>,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        Self {
+            max_leaves: usize::MAX,
+            max_depth: usize::MAX,
+            min_weight_split: 2.0,
+            min_impurity_decrease: 1e-12,
+            max_features: None,
+        }
+    }
+}
+
+impl TreeParams {
+    pub fn with_max_leaves(mut self, k: usize) -> Self {
+        self.max_leaves = k.max(1);
+        self
+    }
+
+    pub fn with_max_depth(mut self, d: usize) -> Self {
+        self.max_depth = d;
+        self
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf {
+        value: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+}
+
+/// A trained regression tree.
+#[derive(Clone, Debug)]
+pub struct DecisionTree {
+    nodes: Vec<Node>,
+    n_features: usize,
+    leaves: usize,
+}
+
+/// Candidate split found for one node.
+struct BestSplit {
+    feature: usize,
+    threshold: f64,
+    gain: f64,
+}
+
+/// A node awaiting processing in best-first growth.
+struct Work {
+    node_idx: usize,
+    indices: Vec<usize>,
+    depth: usize,
+    sse: f64,
+}
+
+impl DecisionTree {
+    /// Fit a tree on weighted samples (best-first leaf growth, so
+    /// `max_leaves` cuts the *globally* least useful splits first,
+    /// matching sklearn's `max_leaf_nodes` behaviour).
+    pub fn fit(samples: &[Sample], params: &TreeParams, rng: Option<&mut crate::rng::Rng>) -> Self {
+        assert!(!samples.is_empty(), "cannot fit on empty data");
+        let n_features = samples[0].x.len();
+        debug_assert!(samples.iter().all(|s| s.x.len() == n_features));
+        let mut tree = Self { nodes: Vec::new(), n_features, leaves: 0 };
+        let all: Vec<usize> = (0..samples.len()).collect();
+        let (value, sse) = weighted_stats(samples, &all);
+        tree.nodes.push(Node::Leaf { value });
+        tree.leaves = 1;
+        // Best-first frontier ordered by achievable gain.
+        let mut rng_local = crate::rng::Rng::new(0x5eed);
+        let rng = match rng {
+            Some(r) => r,
+            None => &mut rng_local,
+        };
+        let mut frontier: Vec<(Work, Option<BestSplit>)> = Vec::new();
+        let work = Work { node_idx: 0, indices: all, depth: 0, sse };
+        let split = find_best_split(samples, &work, params, rng);
+        frontier.push((work, split));
+        while tree.leaves < params.max_leaves {
+            // Pop the frontier entry with the largest gain.
+            let best_idx = frontier
+                .iter()
+                .enumerate()
+                .filter(|(_, (_, s))| s.is_some())
+                .max_by(|a, b| {
+                    let ga = a.1 .1.as_ref().unwrap().gain;
+                    let gb = b.1 .1.as_ref().unwrap().gain;
+                    ga.partial_cmp(&gb).unwrap()
+                })
+                .map(|(i, _)| i);
+            let Some(best_idx) = best_idx else { break };
+            let (work, split) = frontier.swap_remove(best_idx);
+            let split = split.unwrap();
+            if split.gain < params.min_impurity_decrease {
+                break;
+            }
+            // Partition the indices.
+            let (left_idx, right_idx): (Vec<usize>, Vec<usize>) = work
+                .indices
+                .iter()
+                .partition(|&&i| samples[i].x[split.feature] <= split.threshold);
+            if left_idx.is_empty() || right_idx.is_empty() {
+                continue; // numerically degenerate; skip this split
+            }
+            let (lv, lsse) = weighted_stats(samples, &left_idx);
+            let (rv, rsse) = weighted_stats(samples, &right_idx);
+            let li = tree.nodes.len();
+            tree.nodes.push(Node::Leaf { value: lv });
+            let ri = tree.nodes.len();
+            tree.nodes.push(Node::Leaf { value: rv });
+            tree.nodes[work.node_idx] = Node::Split {
+                feature: split.feature,
+                threshold: split.threshold,
+                left: li,
+                right: ri,
+            };
+            tree.leaves += 1; // replaced 1 leaf by 2
+            let depth = work.depth + 1;
+            for (idx, indices, sse) in [(li, left_idx, lsse), (ri, right_idx, rsse)] {
+                let w = Work { node_idx: idx, indices, depth, sse };
+                let s = if depth < params.max_depth {
+                    find_best_split(samples, &w, params, rng)
+                } else {
+                    None
+                };
+                frontier.push((w, s));
+            }
+        }
+        tree
+    }
+
+    /// Predict a single feature vector.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.n_features);
+        let mut idx = 0usize;
+        loop {
+            match &self.nodes[idx] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right } => {
+                    idx = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.leaves
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Weighted SSE on a sample set.
+    pub fn sse(&self, samples: &[Sample]) -> f64 {
+        samples
+            .iter()
+            .map(|s| {
+                let d = self.predict(&s.x) - s.y;
+                s.w * d * d
+            })
+            .sum()
+    }
+}
+
+/// Weighted mean and SSE-about-mean of a subset.
+fn weighted_stats(samples: &[Sample], idx: &[usize]) -> (f64, f64) {
+    let mut w = 0.0;
+    let mut wy = 0.0;
+    let mut wyy = 0.0;
+    for &i in idx {
+        let s = &samples[i];
+        w += s.w;
+        wy += s.w * s.y;
+        wyy += s.w * s.y * s.y;
+    }
+    if w <= 0.0 {
+        return (0.0, 0.0);
+    }
+    let mean = wy / w;
+    ((mean), (wyy - wy * wy / w).max(0.0))
+}
+
+/// Exact best split on one node: for each candidate feature, sort the
+/// node's samples and scan thresholds between consecutive distinct
+/// values, tracking weighted prefix moments. O(d · n log n).
+fn find_best_split(
+    samples: &[Sample],
+    work: &Work,
+    params: &TreeParams,
+    rng: &mut crate::rng::Rng,
+) -> Option<BestSplit> {
+    let idx = &work.indices;
+    if idx.len() < 2 {
+        return None;
+    }
+    let total_w: f64 = idx.iter().map(|&i| samples[i].w).sum();
+    if total_w < params.min_weight_split {
+        return None;
+    }
+    if work.sse <= 0.0 {
+        return None; // already pure
+    }
+    let d = samples[0].x.len();
+    // Feature subsampling (forests).
+    let features: Vec<usize> = match params.max_features {
+        Some(k) if k < d => rng.sample_indices(d, k),
+        _ => (0..d).collect(),
+    };
+    let mut best: Option<BestSplit> = None;
+    let mut order: Vec<usize> = Vec::with_capacity(idx.len());
+    for &f in &features {
+        order.clear();
+        order.extend_from_slice(idx);
+        order.sort_by(|&a, &b| {
+            samples[a].x[f]
+                .partial_cmp(&samples[b].x[f])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut lw = 0.0;
+        let mut lwy = 0.0;
+        let mut lwyy = 0.0;
+        let (mut tw, mut twy, mut twyy) = (0.0, 0.0, 0.0);
+        for &i in order.iter() {
+            let s = &samples[i];
+            tw += s.w;
+            twy += s.w * s.y;
+            twyy += s.w * s.y * s.y;
+        }
+        let parent_sse = (twyy - twy * twy / tw).max(0.0);
+        for win in 0..order.len() - 1 {
+            let s = &samples[order[win]];
+            lw += s.w;
+            lwy += s.w * s.y;
+            lwyy += s.w * s.y * s.y;
+            let xv = s.x[f];
+            let xn = samples[order[win + 1]].x[f];
+            if xn <= xv {
+                continue; // same value — not a valid threshold
+            }
+            let rw = tw - lw;
+            if lw <= 0.0 || rw <= 0.0 {
+                continue;
+            }
+            let lsse = (lwyy - lwy * lwy / lw).max(0.0);
+            let rwy = twy - lwy;
+            let rwyy = twyy - lwyy;
+            let rsse = (rwyy - rwy * rwy / rw).max(0.0);
+            let gain = parent_sse - lsse - rsse;
+            if best.as_ref().map_or(true, |b| gain > b.gain) {
+                best = Some(BestSplit { feature: f, threshold: 0.5 * (xv + xn), gain });
+            }
+        }
+    }
+    best.filter(|b| b.gain > 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn grid_samples(n: usize, m: usize, f: impl Fn(usize, usize) -> f64) -> Vec<Sample> {
+        let mut out = Vec::new();
+        for r in 0..n {
+            for c in 0..m {
+                out.push(Sample::new(vec![r as f64, c as f64], f(r, c), 1.0));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fits_axis_aligned_step_exactly() {
+        let samples = grid_samples(8, 8, |r, _| if r < 4 { 1.0 } else { 5.0 });
+        let tree = DecisionTree::fit(&samples, &TreeParams::default().with_max_leaves(2), None);
+        assert_eq!(tree.n_leaves(), 2);
+        assert!(tree.sse(&samples) < 1e-18);
+        assert!((tree.predict(&[0.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert!((tree.predict(&[7.0, 3.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fits_quadrants_with_four_leaves() {
+        let samples = grid_samples(8, 8, |r, c| match (r < 4, c < 4) {
+            (true, true) => 1.0,
+            (true, false) => 2.0,
+            (false, true) => 3.0,
+            (false, false) => 4.0,
+        });
+        let tree = DecisionTree::fit(&samples, &TreeParams::default().with_max_leaves(4), None);
+        assert_eq!(tree.n_leaves(), 4);
+        assert!(tree.sse(&samples) < 1e-18);
+    }
+
+    #[test]
+    fn respects_max_leaves() {
+        let mut rng = Rng::new(2);
+        let samples: Vec<Sample> = (0..200)
+            .map(|i| Sample::new(vec![i as f64, rng.f64()], rng.normal(), 1.0))
+            .collect();
+        for k in [1, 3, 10, 50] {
+            let tree =
+                DecisionTree::fit(&samples, &TreeParams::default().with_max_leaves(k), None);
+            assert!(tree.n_leaves() <= k, "k={k} got {}", tree.n_leaves());
+        }
+    }
+
+    #[test]
+    fn more_leaves_monotone_loss() {
+        let mut rng = Rng::new(3);
+        let samples: Vec<Sample> = (0..300)
+            .map(|i| {
+                Sample::new(
+                    vec![(i % 20) as f64, (i / 20) as f64],
+                    ((i % 20) as f64 / 3.0).sin() + 0.1 * rng.normal(),
+                    1.0,
+                )
+            })
+            .collect();
+        let mut prev = f64::INFINITY;
+        for k in [1, 2, 4, 8, 16] {
+            let tree =
+                DecisionTree::fit(&samples, &TreeParams::default().with_max_leaves(k), None);
+            let sse = tree.sse(&samples);
+            assert!(sse <= prev + 1e-9, "k={k}: {sse} > {prev}");
+            prev = sse;
+        }
+    }
+
+    #[test]
+    fn weights_matter() {
+        // Two clusters; the heavy one dominates the root prediction.
+        let samples = vec![
+            Sample::new(vec![0.0], 0.0, 100.0),
+            Sample::new(vec![1.0], 10.0, 1.0),
+        ];
+        let tree = DecisionTree::fit(&samples, &TreeParams::default().with_max_leaves(1), None);
+        let pred = tree.predict(&[0.5]);
+        assert!((pred - (10.0 / 101.0)).abs() < 1e-9, "pred {pred}");
+    }
+
+    #[test]
+    fn weighted_duplicate_equals_replication() {
+        // Training on (x, w=3) must equal training on x repeated 3 times.
+        let mut rng = Rng::new(4);
+        let base: Vec<(f64, f64)> = (0..50).map(|_| (rng.f64() * 10.0, rng.normal())).collect();
+        let weighted: Vec<Sample> = base
+            .iter()
+            .map(|&(x, y)| Sample::new(vec![x], y, 3.0))
+            .collect();
+        let replicated: Vec<Sample> = base
+            .iter()
+            .flat_map(|&(x, y)| (0..3).map(move |_| Sample::new(vec![x], y, 1.0)))
+            .collect();
+        let p = TreeParams::default().with_max_leaves(8);
+        let tw = DecisionTree::fit(&weighted, &p, None);
+        let tr = DecisionTree::fit(&replicated, &p, None);
+        for i in 0..20 {
+            let x = [i as f64 / 2.0];
+            assert!(
+                (tw.predict(&x) - tr.predict(&x)).abs() < 1e-9,
+                "x={x:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn max_depth_limits_structure() {
+        let samples = grid_samples(16, 16, |r, c| (r * 16 + c) as f64);
+        let tree = DecisionTree::fit(
+            &samples,
+            &TreeParams::default().with_max_depth(2).with_max_leaves(1000),
+            None,
+        );
+        // Depth-2 binary tree has at most 4 leaves.
+        assert!(tree.n_leaves() <= 4);
+    }
+
+    #[test]
+    fn pure_node_not_split() {
+        let samples = grid_samples(6, 6, |_, _| 1.23);
+        let tree = DecisionTree::fit(&samples, &TreeParams::default().with_max_leaves(10), None);
+        assert_eq!(tree.n_leaves(), 1);
+    }
+}

@@ -1,0 +1,174 @@
+//! Cross-module integration tests: the full Algorithm 3 → Algorithm 5
+//! path over every signal regime, driven by the in-repo property-test
+//! harness (`sigtree::proptest`).
+
+use sigtree::coreset::fitting_loss::relative_error;
+use sigtree::coreset::{Coreset, SignalCoreset};
+use sigtree::partition::is_exact_tiling;
+use sigtree::rng::Rng;
+use sigtree::segmentation::random_segmentation;
+use sigtree::signal::{generate, PrefixStats, Signal};
+
+fn random_signal(rng: &mut Rng, size: usize) -> Signal {
+    let n = size.max(8);
+    let m = (size / 2).max(8);
+    match rng.usize(4) {
+        0 => generate::smooth(n, m, 3, rng),
+        1 => generate::image_like(n, m, 3, rng),
+        2 => generate::piecewise_constant(n, m, 6, 0.1, rng).0,
+        _ => generate::noise(n, m, 1.0, rng),
+    }
+}
+
+#[test]
+fn prop_coreset_blocks_tile_signal() {
+    sigtree::proptest::check_sized(
+        "blocks-tile-signal",
+        12,
+        8,
+        96,
+        |rng, size| random_signal(rng, size),
+        |sig| {
+            let cs = SignalCoreset::build(sig, 8, 0.3);
+            let rects: Vec<_> = cs.blocks.iter().map(|b| b.rect).collect();
+            if !is_exact_tiling(&rects, sig.bounds()) {
+                return Err(format!("{} blocks do not tile the signal", rects.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_total_weight_equals_present_cells() {
+    sigtree::proptest::check_sized(
+        "weight-conservation",
+        12,
+        8,
+        96,
+        |rng, size| {
+            let mut sig = random_signal(rng, size);
+            if rng.bool(0.5) {
+                // Random mask patch.
+                let r0 = rng.usize(sig.rows());
+                let c0 = rng.usize(sig.cols());
+                let r1 = rng.range(r0, sig.rows());
+                let c1 = rng.range(c0, sig.cols());
+                sig.mask_rect(sigtree::signal::Rect::new(r0, r1, c0, c1));
+            }
+            sig
+        },
+        |sig| {
+            let cs = SignalCoreset::build(sig, 6, 0.3);
+            let w = cs.total_weight();
+            let p = sig.present() as f64;
+            if (w - p).abs() > 1e-6 * (1.0 + p) {
+                return Err(format!("weight {w} != present {p}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_constant_queries_are_exact() {
+    sigtree::proptest::check("constant-query-exact", 10, |rng| {
+        let size = 8 + rng.usize(60);
+        let sig = random_signal(rng, size);
+        let stats = PrefixStats::new(&sig);
+        let cs = SignalCoreset::build(&sig, 4, 0.3);
+        let v = rng.uniform(-5.0, 5.0);
+        let s = sigtree::segmentation::KSegmentation::constant(sig.bounds(), v);
+        let exact = s.loss(&stats);
+        let approx = cs.fitting_loss(&s);
+        if (approx - exact).abs() > 1e-6 * (1.0 + exact) {
+            return Err(format!("{approx} vs {exact}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eps_bound_on_fitted_queries() {
+    // Refit (mean-valued) random segmentations — the realistic query
+    // class (what tree learners produce) — must respect ~ε.
+    sigtree::proptest::check("eps-bound", 8, |rng| {
+        let sig = generate::smooth(64 + rng.usize(64), 48 + rng.usize(48), 3, rng);
+        let stats = PrefixStats::new(&sig);
+        let k = 4 + rng.usize(12);
+        let eps = 0.25;
+        let cs = SignalCoreset::build(&sig, k, eps);
+        for _ in 0..10 {
+            let mut s = random_segmentation(sig.bounds(), k, rng);
+            s.refit_values(&stats);
+            let exact = s.loss(&stats);
+            let approx = cs.fitting_loss(&s);
+            let err = relative_error(approx, exact);
+            if err > eps {
+                return Err(format!("rel err {err} > ε {eps} at k={k}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uniform_sample_same_interface() {
+    sigtree::proptest::check("uniform-interface", 6, |rng| {
+        let sig = random_signal(rng, 40);
+        let cs = SignalCoreset::build(&sig, 4, 0.4);
+        let us = sigtree::coreset::uniform::UniformSample::build(&sig, cs.size(), rng);
+        let s = random_segmentation(sig.bounds(), 4, rng);
+        let a = cs.fitting_loss(&s);
+        let b = us.fitting_loss(&s);
+        if !(a.is_finite() && b.is_finite()) {
+            return Err("non-finite loss".into());
+        }
+        if cs.weighted_points().is_empty() || us.weighted_points().is_empty() {
+            return Err("empty point sets".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn coreset_beats_uniform_on_adversarial_thin_stripe() {
+    // The regime where uniform sampling provably fails: a thin stripe of
+    // outlier labels that a uniform sample of modest size misses, but the
+    // balanced partition must isolate (its opt₁ forces fine blocks there).
+    let mut rng = Rng::new(99);
+    let n = 128;
+    let mut sig = generate::smooth(n, n, 2, &mut rng);
+    for c in 0..n {
+        sig.set(60, c, 40.0); // one hot row
+    }
+    let stats = PrefixStats::new(&sig);
+    let cs = SignalCoreset::build(&sig, 8, 0.2);
+    let us = sigtree::coreset::uniform::UniformSample::build(&sig, cs.size(), &mut rng);
+    // Query that isolates the stripe.
+    let s = sigtree::segmentation::KSegmentation::new(vec![
+        (sigtree::signal::Rect::new(0, 59, 0, n - 1), 0.0),
+        (sigtree::signal::Rect::new(60, 60, 0, n - 1), 40.0),
+        (sigtree::signal::Rect::new(61, n - 1, 0, n - 1), 0.0),
+    ]);
+    let exact = s.loss(&stats);
+    let cs_err = relative_error(cs.fitting_loss(&s), exact);
+    let us_err = relative_error(us.fitting_loss(&s), exact);
+    assert!(
+        cs_err < us_err * 1.05 && cs_err < 0.25,
+        "coreset err {cs_err} vs uniform err {us_err}"
+    );
+}
+
+#[test]
+fn theory_config_is_finer_than_practical() {
+    let mut rng = Rng::new(17);
+    let sig = generate::smooth(48, 48, 3, &mut rng);
+    let practical = SignalCoreset::build(&sig, 4, 0.3);
+    let theory = SignalCoreset::build_with(
+        &sig,
+        sigtree::coreset::CoresetConfig::new(4, 0.3).theory(2.0),
+    );
+    assert!(theory.blocks.len() >= practical.blocks.len());
+    assert!(theory.gamma < practical.gamma);
+}

@@ -1,0 +1,132 @@
+//! Integration tests over the L3 coordinator: pipeline vs. batch
+//! equivalences, backpressure, merge-and-reduce invariants, solver
+//! training on pipeline output.
+
+use sigtree::coreset::{Coreset, CoresetConfig, SignalCoreset};
+use sigtree::pipeline::{run, run_streaming, PipelineConfig};
+use sigtree::rng::Rng;
+use sigtree::segmentation::random_segmentation;
+use sigtree::signal::{generate, PrefixStats, Signal};
+use sigtree::tree::forest::{ForestParams, RandomForest};
+use sigtree::tree::Sample;
+
+#[test]
+fn prop_pipeline_weight_conservation_all_shapes() {
+    sigtree::proptest::check("pipeline-weight", 6, |rng| {
+        let n = 32 + rng.usize(200);
+        let m = 16 + rng.usize(80);
+        let sig = generate::smooth(n, m, 3, rng);
+        let cfg = PipelineConfig::new(CoresetConfig::new(4, 0.3))
+            .with_band_rows(1 + rng.usize(64))
+            .with_workers(1 + rng.usize(3));
+        let (cs, _) = run(&sig, cfg);
+        let w = cs.total_weight();
+        if (w - (n * m) as f64).abs() > 1e-6 * (n * m) as f64 {
+            return Err(format!("weight {w} != {}", n * m));
+        }
+        if cs.rows() != n || cs.cols() != m {
+            return Err("dimension mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pipeline_and_batch_agree_on_losses() {
+    let mut rng = Rng::new(7);
+    let sig = generate::image_like(256, 96, 4, &mut rng);
+    let stats = PrefixStats::new(&sig);
+    let cfg = PipelineConfig::new(CoresetConfig::new(8, 0.25)).with_band_rows(64);
+    let (pipe, _) = run(&sig, cfg);
+    let batch = SignalCoreset::build(&sig, 8, 0.25);
+    for _ in 0..20 {
+        let mut s = random_segmentation(sig.bounds(), 8, &mut rng);
+        s.refit_values(&stats);
+        let exact = s.loss(&stats);
+        let a = pipe.fitting_loss(&s);
+        let b = batch.fitting_loss(&s);
+        assert!((a - exact).abs() <= 0.3 * exact + 1e-6, "pipe {a} vs {exact}");
+        assert!((b - exact).abs() <= 0.3 * exact + 1e-6, "batch {b} vs {exact}");
+    }
+}
+
+#[test]
+fn backpressure_source_blocks_with_tiny_queue() {
+    // A queue of capacity 1 with a slow single worker: the source must
+    // accumulate blocking time (i.e., backpressure engages).
+    let mut rng = Rng::new(9);
+    let sig = generate::noise(512, 64, 1.0, &mut rng);
+    let mut cfg = PipelineConfig::new(CoresetConfig::new(16, 0.1))
+        .with_band_rows(16)
+        .with_workers(1);
+    cfg.queue_capacity = 1;
+    let (_, metrics) = run(&sig, cfg);
+    assert_eq!(metrics.cells_processed(), 512 * 64);
+    assert!(metrics.bands_built() == 32);
+    // With 32 bands through a capacity-1 queue, some waiting is
+    // essentially guaranteed; assert the counter moved at all.
+    assert!(metrics.source_wait().as_nanos() > 0);
+}
+
+#[test]
+fn streaming_generator_equivalent_to_materialized() {
+    let mut rng = Rng::new(11);
+    let sig = generate::smooth(320, 64, 3, &mut rng);
+    let cfg = PipelineConfig::new(CoresetConfig::new(6, 0.3))
+        .with_band_rows(80)
+        .with_workers(1);
+    let (a, _) = run(&sig, cfg);
+    // Same bands, fed through the generator entry point.
+    let bands: Vec<(usize, Signal)> = sigtree::pipeline::band_rects(320, 64, 80)
+        .into_iter()
+        .map(|r| (r.r0, sig.crop(r)))
+        .collect();
+    let (b, _) = run_streaming(64, bands.into_iter(), cfg);
+    assert_eq!(a.blocks.len(), b.blocks.len());
+    assert!((a.total_weight() - b.total_weight()).abs() < 1e-9);
+}
+
+#[test]
+fn forest_trained_on_pipeline_coreset_predicts() {
+    // Full-stack: stream → coreset → weighted samples → forest → predict.
+    let mut rng = Rng::new(13);
+    // Light noise: per-band σ estimates shrink with band size, so heavy
+    // noise at small bands forces near-singleton blocks (correct but not
+    // compressive) — the full-signal regime is exercised elsewhere.
+    let (sig, pieces) = generate::piecewise_constant(128, 64, 6, 0.02, &mut rng);
+    let cfg = PipelineConfig::new(CoresetConfig::new(12, 0.25)).with_band_rows(64);
+    let (cs, _) = run(&sig, cfg);
+    let samples: Vec<Sample> = cs
+        .weighted_points()
+        .iter()
+        .map(Sample::from_point)
+        .collect();
+    assert!(samples.len() < sig.len() / 2, "coreset not compressive");
+    let forest = RandomForest::fit(
+        &samples,
+        &ForestParams::default().with_trees(10).with_max_leaves(16),
+        &mut rng,
+    );
+    // The forest must recover the piecewise structure decently: check the
+    // centroid of each generating piece.
+    let mut total = 0.0;
+    let mut count = 0.0;
+    for (rect, level) in &pieces {
+        let r = (rect.r0 + rect.r1) / 2;
+        let c = (rect.c0 + rect.c1) / 2;
+        let pred = forest.predict(&[r as f64, c as f64]);
+        total += (pred - level).abs();
+        count += 1.0;
+    }
+    let mae = total / count;
+    assert!(mae < 1.5, "forest MAE on piece centers {mae}");
+}
+
+#[test]
+fn empty_stream_yields_empty_coreset() {
+    let cfg = PipelineConfig::new(CoresetConfig::new(4, 0.3));
+    let (cs, metrics) = run_streaming(16, std::iter::empty(), cfg);
+    assert_eq!(cs.blocks.len(), 0);
+    assert_eq!(metrics.bands_built(), 0);
+    assert_eq!(cs.total_weight(), 0.0);
+}

@@ -1,0 +1,150 @@
+//! Integration tests across solvers and the coreset: the paper's central
+//! empirical claim — training on the coreset ≈ training on the full data
+//! — plus exact-solver cross-checks (greedy vs DP vs coreset estimates).
+
+use sigtree::coreset::{Coreset, SignalCoreset};
+use sigtree::datasets;
+use sigtree::rng::Rng;
+use sigtree::segmentation::dp2d::TreeDP;
+use sigtree::segmentation::greedy::greedy_tree;
+use sigtree::signal::{generate, PrefixStats};
+use sigtree::tree::forest::{ForestParams, RandomForest};
+use sigtree::tree::gbdt::{Gbdt, GbdtParams};
+use sigtree::tree::{DecisionTree, Sample, TreeParams};
+
+/// Train-on-coreset ≈ train-on-full for single CART trees (the Fig. 5–7
+/// appendix claim, numeric version).
+#[test]
+fn tree_on_coreset_close_to_tree_on_full() {
+    let mut rng = Rng::new(31);
+    let (sig, _) = generate::piecewise_constant(96, 96, 8, 0.2, &mut rng);
+    let full_samples = datasets::signal_to_samples(&sig);
+    let cs = SignalCoreset::build(&sig, 16, 0.25);
+    let cs_samples: Vec<Sample> = cs.weighted_points().iter().map(Sample::from_point).collect();
+    assert!(
+        cs_samples.len() * 3 < full_samples.len(),
+        "coreset must compress ({} vs {})",
+        cs_samples.len(),
+        full_samples.len()
+    );
+    let params = TreeParams::default().with_max_leaves(16);
+    let t_full = DecisionTree::fit(&full_samples, &params, None);
+    let t_core = DecisionTree::fit(&cs_samples, &params, None);
+    // Compare both trees' SSE on the full data.
+    let sse_full = t_full.sse(&full_samples);
+    let sse_core = t_core.sse(&full_samples);
+    let whole_var = PrefixStats::new(&sig).opt1(&sig.bounds());
+    assert!(
+        sse_core <= sse_full + 0.15 * whole_var,
+        "coreset-trained tree SSE {sse_core} vs full-trained {sse_full} (var {whole_var})"
+    );
+}
+
+/// The pipeline the paper actually proposes: run the *expensive exact DP*
+/// on the coreset-compressed signal. We verify the DP-on-coreset chooses
+/// a segmentation whose true loss is near the DP-on-full optimum.
+#[test]
+fn exact_dp_on_coreset_approximates_optimum() {
+    let mut rng = Rng::new(37);
+    let (sig, _) = generate::piecewise_constant(20, 20, 4, 0.05, &mut rng);
+    let stats = PrefixStats::new(&sig);
+    let k = 4;
+    let opt = TreeDP::new(&stats).opt(sig.bounds(), k);
+    // Coreset route: evaluate the greedy candidates through the coreset
+    // and pick the best (a solver that never touches the full data).
+    let cs = SignalCoreset::build(&sig, k, 0.2);
+    let candidates: Vec<_> = (2..=8)
+        .map(|kk| greedy_tree(&stats, kk))
+        .collect();
+    let best_by_coreset = candidates
+        .iter()
+        .min_by(|a, b| {
+            cs.fitting_loss(a)
+                .partial_cmp(&cs.fitting_loss(b))
+                .unwrap()
+        })
+        .unwrap();
+    let true_loss = best_by_coreset.loss(&stats);
+    let whole = stats.opt1(&sig.bounds());
+    assert!(
+        true_loss <= opt + 0.1 * whole + 1e-9,
+        "coreset-selected loss {true_loss} vs opt {opt}"
+    );
+}
+
+#[test]
+fn forest_and_gbdt_on_coreset_generalize() {
+    let mut rng = Rng::new(41);
+    let sig = datasets::air_quality_like(0.05, &mut rng);
+    let (masked, held) = datasets::holdout_patches(&sig, 0.3, 5, &mut rng);
+    let full_samples = datasets::signal_to_samples(&masked);
+    let cs = SignalCoreset::build(&masked, 300, 0.3);
+    let cs_samples: Vec<Sample> = cs.weighted_points().iter().map(Sample::from_point).collect();
+
+    let fp = ForestParams::default().with_trees(8).with_max_leaves(64);
+    let f_full = RandomForest::fit(&full_samples, &fp, &mut rng);
+    let f_core = RandomForest::fit(&cs_samples, &fp, &mut rng);
+    let sse = |f: &RandomForest| -> f64 {
+        held.iter()
+            .map(|&(r, c, y)| (f.predict(&[r as f64, c as f64]) - y).powi(2))
+            .sum()
+    };
+    let (s_full, s_core) = (sse(&f_full), sse(&f_core));
+    // "similar accuracy": within 3× on this noisy task at 5% dataset
+    // scale (the paper reports a 0.03 SSE gap on normalized data at full
+    // scale with k=2000; bench_fig4 reproduces that regime — this test
+    // only guards against qualitative regression).
+    assert!(
+        s_core <= 3.0 * s_full,
+        "forest on coreset {s_core} vs full {s_full}"
+    );
+
+    let gp = GbdtParams::default().with_stages(15).with_leaves(16);
+    let g_core = Gbdt::fit(&cs_samples, &gp, &mut rng);
+    let g_sse: f64 = held
+        .iter()
+        .map(|&(r, c, y)| (g_core.predict(&[r as f64, c as f64]) - y).powi(2))
+        .sum();
+    assert!(g_sse.is_finite() && g_sse <= 5.0 * s_full.max(1.0), "gbdt {g_sse} vs forest-on-full {s_full}");
+}
+
+/// Rasterized point datasets (Figs. 5–7) flow through the whole system.
+#[test]
+fn rasterized_blobs_coreset_and_tree() {
+    let mut rng = Rng::new(43);
+    let pts = datasets::blobs(0.1, &mut rng);
+    let sig = datasets::rasterize(&pts, 64, 64);
+    let cs = SignalCoreset::build(&sig, 32, 0.3);
+    assert!(cs.stored_points() > 0);
+    assert!((cs.total_weight() - sig.present() as f64).abs() < 1e-6 * sig.present() as f64);
+    let samples: Vec<Sample> = cs.weighted_points().iter().map(Sample::from_point).collect();
+    let tree = DecisionTree::fit(
+        &samples,
+        &TreeParams::default().with_max_leaves(16),
+        None,
+    );
+    // The 3 blob labels (0, 1, 2) should be predicted within broad bands.
+    let preds: Vec<f64> = (0..64)
+        .flat_map(|r| (0..64).map(move |c| (r, c)))
+        .filter(|&(r, c)| sig.is_present(r, c))
+        .map(|(r, c)| tree.predict(&[r as f64, c as f64]))
+        .collect();
+    let spread = preds.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        - preds.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(spread > 0.5, "tree collapsed to a constant (spread {spread})");
+}
+
+#[test]
+fn prop_greedy_tree_never_below_dp() {
+    sigtree::proptest::check("greedy>=dp", 5, |rng| {
+        let sig = generate::noise(8 + rng.usize(4), 8 + rng.usize(4), 1.0, rng);
+        let stats = PrefixStats::new(&sig);
+        let k = 2 + rng.usize(3);
+        let g = greedy_tree(&stats, k).loss(&stats);
+        let o = TreeDP::new(&stats).opt(sig.bounds(), k);
+        if g < o - 1e-9 {
+            return Err(format!("greedy {g} below optimal {o}"));
+        }
+        Ok(())
+    });
+}
