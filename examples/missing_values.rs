@@ -2,8 +2,8 @@
 //! workload, exercising every layer of the system:
 //!
 //! * L3 streaming pipeline builds the coreset of the masked dataset,
-//! * the PJRT runtime (L2/L1 artifacts) cross-checks block statistics
-//!   when the artifacts are present,
+//! * the kernel backend (pure-Rust native by default; PJRT with
+//!   `--features pjrt` + artifacts) cross-checks block statistics,
 //! * forests (sklearn substitute) and GBDT (LightGBM substitute) train on
 //!   full data / coreset / uniform sample,
 //! * hyperparameter k is tuned on each compression,
@@ -52,20 +52,24 @@ fn main() {
             metrics.summary()
         );
 
-        // --- Runtime cross-check (skipped if artifacts not built). ---
-        if sigtree::runtime::artifacts_available() {
-            let rt = sigtree::runtime::Runtime::load_default().expect("runtime");
-            let tp = sigtree::runtime::tiled::TiledPrefix::build(&rt, &masked).expect("tiled");
+        // --- Kernel-backend cross-check (PJRT when compiled in + the
+        // artifacts exist, the pure-Rust native backend otherwise). ---
+        {
+            let backend = sigtree::runtime::default_backend();
+            let tp = sigtree::runtime::TiledPrefix::build(backend.as_ref(), &masked)
+                .expect("tiled prefix build");
             let stats = sigtree::signal::PrefixStats::new(&masked);
             let probe = Rect::new(0, masked.rows().min(200) - 1, 0, masked.cols() - 1);
             let (s, q) = tp.moments(&probe);
             let exact = stats.moments(&probe);
             println!(
-                "PJRT parity: sum {:.3} vs {:.3}, sumsq {:.3} vs {:.3} (platform {})",
-                s, exact.sum, q, exact.sum_sq, rt.platform()
+                "kernel parity: sum {:.3} vs {:.3}, sumsq {:.3} vs {:.3} (backend {})",
+                s,
+                exact.sum,
+                q,
+                exact.sum_sq,
+                tp.backend_name()
             );
-        } else {
-            println!("PJRT artifacts not built — run `make artifacts` for the runtime check");
         }
 
         // --- Fig. 4 protocol: tune k on full vs coreset vs uniform. ---

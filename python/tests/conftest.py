@@ -1,6 +1,24 @@
 """Make the `compile` package importable when pytest runs from the repo
-root (the Makefile runs it from python/; both must work)."""
+root (the Makefile runs it from python/; both must work), and keep
+offline runs green: modules whose optional deps (jax / hypothesis) are
+absent are excluded from collection instead of erroring — the JAX/Pallas
+kernels are an optional AOT path; the Rust native backend is the
+offline default."""
+import importlib.util
 import pathlib
 import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+
+def _missing(module: str) -> bool:
+    return importlib.util.find_spec(module) is None
+
+
+collect_ignore = []
+if _missing("jax"):
+    # Everything here exercises the JAX kernels/AOT pipeline.
+    collect_ignore += ["test_kernels.py", "test_model_aot.py"]
+if _missing("hypothesis"):
+    # The kernel sweeps are hypothesis-driven.
+    collect_ignore += ["test_kernels.py"]

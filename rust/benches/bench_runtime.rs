@@ -1,48 +1,49 @@
-//! PJRT runtime benchmarks: artifact execution throughput vs native Rust
-//! for the same statistics (the L1/L2 perf pass measurements recorded in
-//! EXPERIMENTS.md §Perf). Skips cleanly when artifacts are absent.
+//! Kernel-backend benchmarks: artifact-contract execution throughput per
+//! backend vs the native f64 statistics for the same quantities (the
+//! L1/L2 perf pass measurements recorded in EXPERIMENTS.md §Perf).
+//!
+//! Always benches the pure-Rust `NativeBackend`; with `--features pjrt`
+//! and the artifacts built, the PJRT backend is benched side by side.
 
 use sigtree::benchkit::{bench, fmt_duration, fmt_f, Table};
 use sigtree::rng::Rng;
-use sigtree::runtime::{artifacts_available, pad_integral, Runtime, RECT_BATCH, TILE};
+use sigtree::runtime::{pad_integral, KernelBackend, NativeBackend, RECT_BATCH, TILE};
 use sigtree::signal::{PrefixStats, Rect, Signal};
 use std::time::Duration;
 
-fn main() {
-    if !artifacts_available() {
-        println!("bench_runtime: artifacts not built (run `make artifacts`) — skipping");
-        return;
+#[cfg(feature = "pjrt")]
+fn pjrt_backend() -> Option<Box<dyn KernelBackend>> {
+    if !sigtree::runtime::artifacts_available() {
+        println!("bench_runtime: PJRT artifacts not built (run `make artifacts`) — native only");
+        return None;
     }
-    let rt = Runtime::load_default().expect("runtime load");
-    println!("platform: {}, artifacts: {:?}", rt.platform(), rt.artifact_names());
+    match sigtree::runtime::pjrt::Runtime::load_default() {
+        Ok(rt) => Some(Box::new(rt)),
+        Err(e) => {
+            println!("bench_runtime: pjrt backend unavailable ({e}) — native only");
+            None
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend() -> Option<Box<dyn KernelBackend>> {
+    None
+}
+
+fn main() {
+    let mut backends: Vec<Box<dyn KernelBackend>> = vec![Box::new(NativeBackend::new())];
+    if let Some(rt) = pjrt_backend() {
+        backends.push(rt);
+    }
+    let names: Vec<String> = backends.iter().map(|b| b.name()).collect();
+    println!("backends: {names:?}");
 
     let mut rng = Rng::new(12);
     let tile: Vec<f32> = (0..TILE * TILE).map(|_| rng.normal() as f32).collect();
     let sig = Signal::from_fn(TILE, TILE, |r, c| tile[r * TILE + c] as f64);
-
-    let mut table = Table::new(&["op", "impl", "median", "throughput"]);
-
-    // prefix2d: PJRT vs native.
-    let t_pjrt = bench(1, 8, Duration::from_secs(4), || rt.prefix2d(&tile).unwrap());
-    let t_native = bench(1, 8, Duration::from_secs(4), || PrefixStats::new(&sig));
     let cells = (TILE * TILE) as f64;
-    table.row(&[
-        "prefix2d (integral images)".into(),
-        "PJRT f32".into(),
-        fmt_duration(t_pjrt.median),
-        format!("{} cells/s", fmt_f(cells / t_pjrt.median.as_secs_f64())),
-    ]);
-    table.row(&[
-        "prefix2d (integral images)".into(),
-        "native f64".into(),
-        fmt_duration(t_native.median),
-        format!("{} cells/s", fmt_f(cells / t_native.median.as_secs_f64())),
-    ]);
 
-    // block_sse: PJRT batched vs native loop.
-    let (ii_y, ii_y2) = rt.prefix2d(&tile).unwrap();
-    let p_y = pad_integral(&ii_y);
-    let p_y2 = pad_integral(&ii_y2);
     let rects: Vec<[i32; 4]> = (0..RECT_BATCH)
         .map(|_| {
             let r0 = rng.usize(TILE);
@@ -56,42 +57,71 @@ fn main() {
         .iter()
         .map(|r| Rect::new(r[0] as usize, r[1] as usize, r[2] as usize, r[3] as usize))
         .collect();
+    let rendered: Vec<f32> = (0..TILE * TILE).map(|_| rng.normal() as f32).collect();
+
+    let mut table = Table::new(&["op", "impl", "median", "throughput"]);
+
+    // f64 reference rows (PrefixStats — the exact oracle the kernels
+    // approximate).
+    let t_ref = bench(1, 8, Duration::from_secs(4), || PrefixStats::new(&sig));
+    table.row(&[
+        "prefix2d (integral images)".into(),
+        "f64 PrefixStats".into(),
+        fmt_duration(t_ref.median),
+        format!("{} cells/s", fmt_f(cells / t_ref.median.as_secs_f64())),
+    ]);
     let stats = PrefixStats::new(&sig);
-    let t_pjrt = bench(1, 8, Duration::from_secs(4), || {
-        rt.block_sse(&p_y, &p_y2, &rects).unwrap()
-    });
-    let t_native = bench(1, 8, Duration::from_secs(4), || {
+    let t_ref = bench(1, 8, Duration::from_secs(4), || {
         native_rects.iter().map(|r| stats.opt1(r)).sum::<f64>()
     });
     table.row(&[
         format!("block_sse ({RECT_BATCH} rects)"),
-        "PJRT f32".into(),
-        fmt_duration(t_pjrt.median),
-        format!("{} rects/s", fmt_f(RECT_BATCH as f64 / t_pjrt.median.as_secs_f64())),
-    ]);
-    table.row(&[
-        format!("block_sse ({RECT_BATCH} rects)"),
-        "native f64".into(),
-        fmt_duration(t_native.median),
-        format!("{} rects/s", fmt_f(RECT_BATCH as f64 / t_native.median.as_secs_f64())),
+        "f64 PrefixStats".into(),
+        fmt_duration(t_ref.median),
+        format!("{} rects/s", fmt_f(RECT_BATCH as f64 / t_ref.median.as_secs_f64())),
     ]);
 
-    // seg_loss.
-    let rendered: Vec<f32> = (0..TILE * TILE).map(|_| rng.normal() as f32).collect();
-    let t_pjrt = bench(1, 8, Duration::from_secs(4), || {
-        rt.seg_loss(&tile, &rendered).unwrap()
-    });
-    table.row(&[
-        "seg_loss (SSE of tile)".into(),
-        "PJRT f32".into(),
-        fmt_duration(t_pjrt.median),
-        format!("{} cells/s", fmt_f(cells / t_pjrt.median.as_secs_f64())),
-    ]);
+    // Per-backend kernel rows.
+    for backend in &backends {
+        let name = backend.name();
+        let t = bench(1, 8, Duration::from_secs(4), || backend.prefix2d(&tile).unwrap());
+        table.row(&[
+            "prefix2d (integral images)".into(),
+            name.clone(),
+            fmt_duration(t.median),
+            format!("{} cells/s", fmt_f(cells / t.median.as_secs_f64())),
+        ]);
 
-    table.print("PJRT artifact execution vs native (TILE=256)");
-    println!(
-        "\nnote: PJRT CPU runs the interpret-lowered Pallas kernels; real-TPU\n\
-         projections are derived from VMEM/bytes-moved analysis in DESIGN.md §Perf,\n\
-         not from these CPU timings."
-    );
+        let (ii_y, ii_y2) = backend.prefix2d(&tile).unwrap();
+        let p_y = pad_integral(&ii_y);
+        let p_y2 = pad_integral(&ii_y2);
+        let t = bench(1, 8, Duration::from_secs(4), || {
+            backend.block_sse(&p_y, &p_y2, &rects).unwrap()
+        });
+        table.row(&[
+            format!("block_sse ({RECT_BATCH} rects)"),
+            name.clone(),
+            fmt_duration(t.median),
+            format!("{} rects/s", fmt_f(RECT_BATCH as f64 / t.median.as_secs_f64())),
+        ]);
+
+        let t = bench(1, 8, Duration::from_secs(4), || {
+            backend.seg_loss(&tile, &rendered).unwrap()
+        });
+        table.row(&[
+            "seg_loss (SSE of tile)".into(),
+            name,
+            fmt_duration(t.median),
+            format!("{} cells/s", fmt_f(cells / t.median.as_secs_f64())),
+        ]);
+    }
+
+    table.print("kernel backends vs f64 reference (TILE=256)");
+    if names.iter().any(|n| n.starts_with("pjrt")) {
+        println!(
+            "\nnote: PJRT CPU runs the interpret-lowered Pallas kernels; real-TPU\n\
+             projections are derived from VMEM/bytes-moved analysis in DESIGN.md §Perf,\n\
+             not from these CPU timings."
+        );
+    }
 }

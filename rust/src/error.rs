@@ -1,0 +1,133 @@
+//! Crate-wide error type — a tiny `anyhow` substitute (the offline
+//! registry has neither `anyhow` nor `thiserror`; DESIGN.md
+//! §Substitutions). An [`Error`] carries a message plus a chain of
+//! context frames; [`Result`] defaults its error type to it so function
+//! signatures stay as terse as with anyhow.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-carrying error with optional context frames (outermost
+/// frame printed first, like `anyhow`'s `{:#}` format).
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build from any displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { msg: msg.to_string(), context: Vec::new() }
+    }
+
+    /// Wrap with an outer context frame (builder style):
+    /// `Error::msg("file not found").context("loading artifacts")`
+    /// displays as `loading artifacts: file not found`.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Self {
+        self.context.push(ctx.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for ctx in self.context.iter().rev() {
+            write!(f, "{ctx}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<crate::cli::CliError> for Error {
+    fn from(e: crate::cli::CliError) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Extension trait adding anyhow-style `.context(...)` to results.
+pub trait Context<T> {
+    /// Attach a context frame to the error side.
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    /// Attach a lazily-built context frame to the error side.
+    fn with_context(self, ctx: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(ctx))
+    }
+
+    fn with_context(self, ctx: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(ctx()))
+    }
+}
+
+/// `ensure!(cond, "message {args}")` — early-return an [`Error`] when the
+/// condition fails (the `anyhow::ensure!` shape).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::error::Error::msg(format!($($arg)+)));
+        }
+    };
+}
+
+/// `bail!("message {args}")` — early-return an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::error::Error::msg(format!($($arg)+)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_chains_context_outermost_first() {
+        let e = Error::msg("root cause").context("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner: root cause");
+    }
+
+    #[test]
+    fn result_context_wraps_error_side() {
+        let r: std::result::Result<(), String> = Err("boom".to_string());
+        let e = r.context("stage").unwrap_err();
+        assert_eq!(e.to_string(), "stage: boom");
+        let ok: std::result::Result<u8, String> = Ok(7);
+        assert_eq!(ok.with_context(|| "unused".into()).unwrap(), 7);
+    }
+
+    #[test]
+    fn ensure_macro_returns_error() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(-1).unwrap_err().to_string().contains("-1"));
+    }
+
+    #[test]
+    fn converts_from_io_and_cli_errors() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "missing");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("missing"));
+        let cli = crate::cli::CliError::Missing("k".into());
+        let e: Error = cli.into();
+        assert!(e.to_string().contains("--k"));
+    }
+}

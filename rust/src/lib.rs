@@ -22,14 +22,19 @@
 //! * [`experiments`] — the paper's evaluation harnesses (Fig. 4–7).
 //! * [`pipeline`] — the L3 streaming coordinator: sharding, workers,
 //!   merge-and-reduce, backpressure, metrics.
-//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas
-//!   artifacts from `artifacts/*.hlo.txt`.
+//! * [`runtime`] — pluggable kernel backends behind one artifact
+//!   contract: the pure-Rust [`runtime::NativeBackend`] (default) and,
+//!   behind the off-by-default `pjrt` cargo feature, PJRT execution of
+//!   the AOT-compiled JAX/Pallas artifacts from `artifacts/*.hlo.txt`.
+//! * [`error`] — the crate-wide error/result types (std-only `anyhow`
+//!   substitute).
 
 pub mod benchkit;
 pub mod bicriteria;
 pub mod cli;
 pub mod coreset;
 pub mod datasets;
+pub mod error;
 pub mod experiments;
 pub mod partition;
 pub mod pipeline;
@@ -42,6 +47,36 @@ pub mod tree;
 pub mod proptest;
 
 /// Convenience re-exports for downstream users and the examples.
+///
+/// Doc-tested quickstart (the minimal end-to-end path every example
+/// builds on — signal → coreset → kernel backend):
+///
+/// ```
+/// use sigtree::prelude::*;
+/// use sigtree::runtime::{KernelBackend, NativeBackend, TILE};
+///
+/// // A small signal and its (k, ε)-coreset.
+/// let signal = Signal::from_fn(64, 48, |r, c| ((r + 2 * c) % 7) as f64);
+/// let stats = PrefixStats::new(&signal);
+/// let coreset = SignalCoreset::build(&signal, 4, 0.3);
+/// let cells = signal.len() as f64;
+/// assert!((coreset.total_weight() - cells).abs() < 1e-6 * cells);
+///
+/// // The kernel backend answers the same block statistics in f32.
+/// let backend = NativeBackend::new();
+/// let mut tile = vec![0.0f32; TILE * TILE];
+/// for r in 0..signal.rows() {
+///     for c in 0..signal.cols() {
+///         tile[r * TILE + c] = signal.get(r, c) as f32;
+///     }
+/// }
+/// let (ii_y, _ii_y2) = backend.prefix2d(&tile).unwrap();
+/// let whole = Rect::new(0, signal.rows() - 1, 0, signal.cols() - 1);
+/// let sum_native = stats.sum(&whole);
+/// // Bottom-right corner of the zero-padded region's integral image.
+/// let sum_kernel = ii_y[(signal.rows() - 1) * TILE + (signal.cols() - 1)] as f64;
+/// assert!((sum_native - sum_kernel).abs() < 1e-3 * (1.0 + sum_native.abs()));
+/// ```
 pub mod prelude {
     pub use crate::coreset::{Coreset, SignalCoreset, WeightedPoint};
     pub use crate::rng::Rng;

@@ -7,7 +7,7 @@
 //! * `evaluate`   — coreset-vs-exact loss validation on random queries.
 //! * `experiment` — the paper's §5 missing-values experiment.
 //! * `tune`       — hyperparameter sweep on full data vs coreset.
-//! * `runtime`    — load the PJRT artifacts and run parity checks.
+//! * `runtime`    — run kernel-backend parity checks (`--backend native|pjrt`).
 //! * `help`       — this text.
 
 use std::process::ExitCode;
@@ -15,11 +15,13 @@ use std::process::ExitCode;
 use sigtree::cli::Args;
 use sigtree::coreset::{Coreset, CoresetConfig, SignalCoreset};
 use sigtree::datasets;
+use sigtree::error::{Error, Result};
 use sigtree::experiments::{self, Solver};
 use sigtree::pipeline::{self, PipelineConfig};
 use sigtree::rng::Rng;
+use sigtree::runtime::{pad_integral, KernelBackend, TiledPrefix, TILE};
 use sigtree::segmentation::random_segmentation;
-use sigtree::signal::{generate, PrefixStats, Signal};
+use sigtree::signal::{generate, PrefixStats, Rect, Signal};
 
 fn main() -> ExitCode {
     let args = Args::from_env();
@@ -35,15 +37,14 @@ fn main() -> ExitCode {
             Ok(())
         }
         other => {
-            eprintln!("unknown subcommand '{other}'");
             print_help();
-            Err(anyhow::anyhow!("unknown subcommand"))
+            Err(sigtree::cli::CliError::UnknownCommand(other.to_string()).into())
         }
     };
     match result {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("error: {e}");
             ExitCode::FAILURE
         }
     }
@@ -61,12 +62,12 @@ fn print_help() {
            evaluate    --n 256 --m 256 --k 16 --eps 0.2 --queries 100\n\
            experiment  --dataset air|gesture --scale 0.1 --k 200 --eps 0.3 [--solver forest|gbdt]\n\
            tune        --dataset air|gesture --scale 0.1 --grid 8 --eps 0.3\n\
-           runtime     [--dir artifacts]\n\
+           runtime     [--backend native|pjrt] [--dir artifacts]\n\
            help"
     );
 }
 
-fn make_signal(args: &Args, rng: &mut Rng) -> anyhow::Result<Signal> {
+fn make_signal(args: &Args, rng: &mut Rng) -> Result<Signal> {
     let n = args.get_usize("n", 512)?;
     let m = args.get_usize("m", 512)?;
     Ok(match args.get_str("signal", "smooth").as_str() {
@@ -77,7 +78,7 @@ fn make_signal(args: &Args, rng: &mut Rng) -> anyhow::Result<Signal> {
     })
 }
 
-fn cmd_coreset(args: &Args) -> anyhow::Result<()> {
+fn cmd_coreset(args: &Args) -> Result<()> {
     let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
     let signal = make_signal(args, &mut rng)?;
     let k = args.get_usize("k", 64)?;
@@ -103,7 +104,7 @@ fn cmd_coreset(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
+fn cmd_pipeline(args: &Args) -> Result<()> {
     let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
     let signal = make_signal(args, &mut rng)?;
     let k = args.get_usize("k", 64)?;
@@ -123,7 +124,7 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
+fn cmd_evaluate(args: &Args) -> Result<()> {
     let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
     let signal = make_signal(args, &mut rng)?;
     let k = args.get_usize("k", 16)?;
@@ -152,7 +153,7 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+fn cmd_experiment(args: &Args) -> Result<()> {
     let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
     let scale = args.get_f64("scale", 0.1)?;
     let signal = match args.get_str("dataset", "air").as_str() {
@@ -182,7 +183,7 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+fn cmd_tune(args: &Args) -> Result<()> {
     use sigtree::experiments::tuning;
     let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
     let scale = args.get_f64("scale", 0.1)?;
@@ -222,24 +223,45 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_runtime(args: &Args) -> anyhow::Result<()> {
+fn cmd_runtime(args: &Args) -> Result<()> {
+    let name = args.get_str("backend", "native");
     let dir = std::path::PathBuf::from(args.get_str("dir", "artifacts"));
-    let rt = sigtree::runtime::Runtime::load(&dir)?;
-    println!(
-        "platform: {}  artifacts: {:?}",
-        rt.platform(),
-        rt.artifact_names()
-    );
-    // Parity smoke: prefix2d + block_sse against native on a random tile.
+    let backend = sigtree::runtime::backend_from_name(&name, Some(&dir))?;
+    println!("backend: {}", backend.name());
+
+    // Parity smoke: prefix2d + block_sse against the exact f64 prefix
+    // statistics on a random tile.
     let mut rng = Rng::new(1);
-    let t = sigtree::runtime::TILE;
-    let tile: Vec<f32> = (0..t * t).map(|_| rng.normal() as f32).collect();
-    let (ii_y, ii_y2) = rt.prefix2d(&tile)?;
-    let p_y = sigtree::runtime::pad_integral(&ii_y);
-    let p_y2 = sigtree::runtime::pad_integral(&ii_y2);
-    let rects = vec![[0i32, 31, 0, 31], [10, 200, 5, 250]];
-    let opt1 = rt.block_sse(&p_y, &p_y2, &rects)?;
-    println!("block_sse parity sample: {opt1:?}");
+    let tile: Vec<f32> = (0..TILE * TILE).map(|_| rng.normal() as f32).collect();
+    let (ii_y, ii_y2) = backend.prefix2d(&tile)?;
+    let p_y = pad_integral(&ii_y);
+    let p_y2 = pad_integral(&ii_y2);
+    let rects = [[0i32, 31, 0, 31], [10, 200, 5, 250]];
+    let opt1 = backend.block_sse(&p_y, &p_y2, &rects)?;
+    let sig = Signal::from_fn(TILE, TILE, |r, c| tile[r * TILE + c] as f64);
+    let stats = PrefixStats::new(&sig);
+    for (got, r) in opt1.iter().zip(rects.iter()) {
+        let rect = Rect::new(r[0] as usize, r[1] as usize, r[2] as usize, r[3] as usize);
+        let exact = stats.opt1(&rect);
+        let err = (*got as f64 - exact).abs() / (1.0 + exact.abs());
+        println!("block_sse parity {rect:?}: kernel {got:.4} vs exact {exact:.4} (rel {err:.2e})");
+        if err > 0.05 {
+            return Err(Error::msg(format!(
+                "block_sse parity failure on {rect:?}: {got} vs {exact}"
+            )));
+        }
+    }
+
+    // Tiled path over a non-TILE-aligned signal.
+    let signal = generate::smooth(300, 280, 3, &mut rng);
+    let tp = TiledPrefix::build(backend.as_ref(), &signal)?;
+    let probe = Rect::new(0, 299, 0, 279);
+    let (s, q) = tp.moments(&probe);
+    let exact = PrefixStats::new(&signal).moments(&probe);
+    println!(
+        "tiled moments parity: sum {s:.3} vs {:.3}, sumsq {q:.3} vs {:.3}",
+        exact.sum, exact.sum_sq
+    );
     println!("runtime OK");
     Ok(())
 }

@@ -1,0 +1,216 @@
+//! Pure-Rust kernel backend — a std-only implementation of the artifact
+//! contract ([`super::KernelBackend`]), always available and the default
+//! execution path. Shapes and output precision (f32) match the AOT
+//! kernels exactly; internal accumulation is f64, which stays within the
+//! f32 tolerance the contract allows (the PJRT kernels accumulate in f32,
+//! so the native backend is the *more* accurate of the two).
+
+use crate::ensure;
+use crate::error::Result;
+
+use super::{KernelBackend, RECT_BATCH, TILE};
+
+/// The native (pure-Rust) kernel backend. Stateless; construction is
+/// free, so build one wherever a [`KernelBackend`] is needed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl KernelBackend for NativeBackend {
+    fn name(&self) -> String {
+        "native".to_string()
+    }
+
+    /// Inclusive 2D prefix sums of y and y² over a TILE×TILE tile
+    /// (row-major), returned as unpadded TILE×TILE integral images.
+    fn prefix2d(&self, tile: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        ensure!(tile.len() == TILE * TILE, "tile must be {TILE}x{TILE}");
+        let mut ii_y = vec![0.0f32; TILE * TILE];
+        let mut ii_y2 = vec![0.0f32; TILE * TILE];
+        for r in 0..TILE {
+            let mut row_y = 0.0f64;
+            let mut row_y2 = 0.0f64;
+            for c in 0..TILE {
+                let v = tile[r * TILE + c] as f64;
+                row_y += v;
+                row_y2 += v * v;
+                let (up_y, up_y2) = if r > 0 {
+                    (
+                        ii_y[(r - 1) * TILE + c] as f64,
+                        ii_y2[(r - 1) * TILE + c] as f64,
+                    )
+                } else {
+                    (0.0, 0.0)
+                };
+                ii_y[r * TILE + c] = (up_y + row_y) as f32;
+                ii_y2[r * TILE + c] = (up_y2 + row_y2) as f32;
+            }
+        }
+        Ok((ii_y, ii_y2))
+    }
+
+    /// Batched opt₁ over tile-local rectangles from *padded* (TILE+1)²
+    /// integral images. Rects are (r0, r1, c0, c1) inclusive; the count
+    /// in opt₁ comes from rectangle geometry (masked cells are zero-filled
+    /// upstream — the f32 pipeline's semantics).
+    fn block_sse(
+        &self,
+        padded_ii_y: &[f32],
+        padded_ii_y2: &[f32],
+        rects: &[[i32; 4]],
+    ) -> Result<Vec<f32>> {
+        let side = TILE + 1;
+        ensure!(padded_ii_y.len() == side * side, "padded ii shape");
+        ensure!(padded_ii_y2.len() == side * side, "padded ii shape");
+        ensure!(rects.len() <= RECT_BATCH, "≤ {RECT_BATCH} rects per call");
+        let mut out = Vec::with_capacity(rects.len());
+        for rect in rects {
+            let (r0, r1, c0, c1) = (rect[0], rect[1], rect[2], rect[3]);
+            ensure!(
+                0 <= r0 && r0 <= r1 && (r1 as usize) < TILE
+                    && 0 <= c0 && c0 <= c1 && (c1 as usize) < TILE,
+                "rect {rect:?} out of tile bounds"
+            );
+            let (r0, r1, c0, c1) = (r0 as usize, r1 as usize, c0 as usize, c1 as usize);
+            let q = |arr: &[f32]| -> f64 {
+                arr[(r1 + 1) * side + (c1 + 1)] as f64
+                    - arr[r0 * side + (c1 + 1)] as f64
+                    - arr[(r1 + 1) * side + c0] as f64
+                    + arr[r0 * side + c0] as f64
+            };
+            let moments = crate::signal::stats::Moments {
+                count: ((r1 - r0 + 1) * (c1 - c0 + 1)) as f64,
+                sum: q(padded_ii_y),
+                sum_sq: q(padded_ii_y2),
+            };
+            out.push(moments.opt1() as f32);
+        }
+        Ok(out)
+    }
+
+    /// SSE between a signal tile and a rendered segmentation tile.
+    fn seg_loss(&self, signal: &[f32], rendered: &[f32]) -> Result<f32> {
+        ensure!(
+            signal.len() == TILE * TILE && rendered.len() == TILE * TILE,
+            "seg_loss tiles must be {TILE}x{TILE}"
+        );
+        let mut total = 0.0f64;
+        for (a, b) in signal.iter().zip(rendered.iter()) {
+            let d = (*a - *b) as f64;
+            total += d * d;
+        }
+        Ok(total as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::runtime::pad_integral;
+    use crate::signal::{PrefixStats, Rect, Signal};
+
+    /// Reference prefix sums in f64.
+    fn ref_prefix(tile: &[f32]) -> (Vec<f64>, Vec<f64>) {
+        let mut py = vec![0.0f64; TILE * TILE];
+        let mut py2 = vec![0.0f64; TILE * TILE];
+        for r in 0..TILE {
+            let mut row_y = 0.0;
+            let mut row_y2 = 0.0;
+            for c in 0..TILE {
+                let v = tile[r * TILE + c] as f64;
+                row_y += v;
+                row_y2 += v * v;
+                let up_y = if r > 0 { py[(r - 1) * TILE + c] } else { 0.0 };
+                let up_y2 = if r > 0 { py2[(r - 1) * TILE + c] } else { 0.0 };
+                py[r * TILE + c] = up_y + row_y;
+                py2[r * TILE + c] = up_y2 + row_y2;
+            }
+        }
+        (py, py2)
+    }
+
+    #[test]
+    fn prefix2d_matches_f64_reference() {
+        let backend = NativeBackend::new();
+        let mut rng = Rng::new(60);
+        let tile: Vec<f32> = (0..TILE * TILE).map(|_| rng.normal() as f32).collect();
+        let (got_y, got_y2) = backend.prefix2d(&tile).unwrap();
+        let (ref_y, ref_y2) = ref_prefix(&tile);
+        for i in (0..TILE * TILE).step_by(997) {
+            assert!(
+                (got_y[i] as f64 - ref_y[i]).abs() < 1e-2 * (1.0 + ref_y[i].abs()),
+                "ii_y[{i}]"
+            );
+            assert!(
+                (got_y2[i] as f64 - ref_y2[i]).abs() < 1e-2 * (1.0 + ref_y2[i].abs()),
+                "ii_y2[{i}]"
+            );
+        }
+    }
+
+    #[test]
+    fn block_sse_matches_prefix_stats_opt1() {
+        let backend = NativeBackend::new();
+        let mut rng = Rng::new(61);
+        let tile: Vec<f32> = (0..TILE * TILE).map(|_| rng.normal() as f32).collect();
+        let (ii_y, ii_y2) = backend.prefix2d(&tile).unwrap();
+        let p_y = pad_integral(&ii_y);
+        let p_y2 = pad_integral(&ii_y2);
+        let sig = Signal::from_fn(TILE, TILE, |r, c| tile[r * TILE + c] as f64);
+        let stats = PrefixStats::new(&sig);
+        let mut rects = Vec::new();
+        let mut expect = Vec::new();
+        for _ in 0..64 {
+            let r0 = rng.usize(TILE);
+            let r1 = rng.range(r0, TILE);
+            let c0 = rng.usize(TILE);
+            let c1 = rng.range(c0, TILE);
+            rects.push([r0 as i32, r1 as i32, c0 as i32, c1 as i32]);
+            expect.push(stats.opt1(&Rect::new(r0, r1, c0, c1)));
+        }
+        let got = backend.block_sse(&p_y, &p_y2, &rects).unwrap();
+        assert_eq!(got.len(), rects.len());
+        for (g, e) in got.iter().zip(expect.iter()) {
+            // f32 integral images lose precision on large blocks; relative
+            // tolerance scaled by the block magnitude.
+            assert!((*g as f64 - e).abs() <= 5e-2 * (1.0 + e.abs()), "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn seg_loss_matches_direct_sum() {
+        let backend = NativeBackend::new();
+        let mut rng = Rng::new(62);
+        let a: Vec<f32> = (0..TILE * TILE).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..TILE * TILE).map(|_| rng.normal() as f32).collect();
+        let got = backend.seg_loss(&a, &b).unwrap() as f64;
+        let expect: f64 = a
+            .iter()
+            .zip(b.iter())
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum();
+        assert!((got - expect).abs() < 1e-3 * (1.0 + expect), "{got} vs {expect}");
+    }
+
+    #[test]
+    fn shape_violations_are_errors() {
+        let backend = NativeBackend::new();
+        assert!(backend.prefix2d(&[0.0; 4]).is_err());
+        assert!(backend.seg_loss(&[0.0; 4], &[0.0; 4]).is_err());
+        let side = TILE + 1;
+        let padded = vec![0.0f32; side * side];
+        // Out-of-tile rect rejected.
+        assert!(backend
+            .block_sse(&padded, &padded, &[[0, TILE as i32, 0, 0]])
+            .is_err());
+        // Oversized batch rejected.
+        let too_many = vec![[0i32, 0, 0, 0]; RECT_BATCH + 1];
+        assert!(backend.block_sse(&padded, &padded, &too_many).is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! PJRT backend (cargo feature `pjrt`) — loads the AOT-compiled
+//! JAX/Pallas artifacts (`artifacts/*.hlo.txt`, produced once by
+//! `make artifacts`) and executes them from the Rust hot path. Python
+//! never runs at request time.
+//!
+//! Off by default so the crate builds offline with no non-std
+//! dependencies; the default build uses [`super::NativeBackend`]
+//! instead. The `xla` dependency resolves to the bundled compile-only
+//! stub under `rust/vendor/xla` — swap in a real PJRT binding (see that
+//! crate's docs) to execute on actual hardware; this module's code is
+//! identical either way.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::ensure;
+use crate::error::{Error, Result};
+
+use super::{KernelBackend, RECT_BATCH, TILE};
+
+/// The PJRT runtime: CPU client + compiled executables keyed by artifact
+/// name. Compilation happens once at load; execution is pure compute.
+/// Implements [`KernelBackend`], so everything downstream of the trait
+/// (tiled execution, CLI, benches) is backend-agnostic.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load every `*.hlo.txt` in `dir` and compile it on the CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| Error::msg(format!("pjrt client: {e:?}")))?;
+        let mut execs = HashMap::new();
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| Error::msg(e).context(format!("artifacts dir {dir:?} (run `make artifacts`)")))?;
+        for entry in entries {
+            let path = entry.map_err(Error::msg)?.path();
+            let Some(name) = path.file_name().and_then(|s| s.to_str()) else { continue };
+            let Some(stem) = name.strip_suffix(".hlo.txt") else { continue };
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| Error::msg(format!("parse {name}: {e:?}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| Error::msg(format!("compile {name}: {e:?}")))?;
+            execs.insert(stem.to_string(), exe);
+        }
+        Ok(Self { client, execs })
+    }
+
+    /// Load from the default directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&super::default_artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.execs.contains_key(name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.execs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    fn exec(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.execs
+            .get(name)
+            .ok_or_else(|| Error::msg(format!("artifact '{name}' not loaded")))
+    }
+}
+
+impl KernelBackend for Runtime {
+    fn name(&self) -> String {
+        format!("pjrt({})", self.platform())
+    }
+
+    /// `prefix2d`: inclusive 2D prefix sums of a TILE×TILE tile.
+    /// Returns (Σy, Σy²) integral images (inclusive, unpadded).
+    fn prefix2d(&self, tile: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        ensure!(tile.len() == TILE * TILE, "tile must be {TILE}x{TILE}");
+        let exe = self.exec("prefix2d")?;
+        let x = xla::Literal::vec1(tile)
+            .reshape(&[TILE as i64, TILE as i64])
+            .map_err(|e| Error::msg(format!("reshape: {e:?}")))?;
+        let result = exe
+            .execute::<xla::Literal>(&[x])
+            .map_err(|e| Error::msg(format!("execute prefix2d: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::msg(format!("to_literal: {e:?}")))?;
+        let (a, b) = result
+            .to_tuple2()
+            .map_err(|e| Error::msg(format!("tuple2: {e:?}")))?;
+        Ok((
+            a.to_vec::<f32>().map_err(|e| Error::msg(format!("{e:?}")))?,
+            b.to_vec::<f32>().map_err(|e| Error::msg(format!("{e:?}")))?,
+        ))
+    }
+
+    /// `block_sse`: batched opt₁ over rectangles, given *padded*
+    /// (TILE+1)² integral images. Rects are (r0, r1, c0, c1) inclusive;
+    /// entries beyond the real batch should be (0,0,0,0) (their output is
+    /// ignored by the caller).
+    fn block_sse(
+        &self,
+        padded_ii_y: &[f32],
+        padded_ii_y2: &[f32],
+        rects: &[[i32; 4]],
+    ) -> Result<Vec<f32>> {
+        let side = TILE + 1;
+        ensure!(padded_ii_y.len() == side * side, "padded ii shape");
+        ensure!(padded_ii_y2.len() == side * side, "padded ii shape");
+        ensure!(rects.len() <= RECT_BATCH, "≤ {RECT_BATCH} rects per call");
+        let exe = self.exec("block_sse")?;
+        let mut flat: Vec<i32> = Vec::with_capacity(RECT_BATCH * 4);
+        for r in rects {
+            flat.extend_from_slice(r);
+        }
+        flat.resize(RECT_BATCH * 4, 0);
+        let ii_y = xla::Literal::vec1(padded_ii_y)
+            .reshape(&[side as i64, side as i64])
+            .map_err(|e| Error::msg(format!("{e:?}")))?;
+        let ii_y2 = xla::Literal::vec1(padded_ii_y2)
+            .reshape(&[side as i64, side as i64])
+            .map_err(|e| Error::msg(format!("{e:?}")))?;
+        let r = xla::Literal::vec1(&flat)
+            .reshape(&[RECT_BATCH as i64, 4])
+            .map_err(|e| Error::msg(format!("{e:?}")))?;
+        let result = exe
+            .execute::<xla::Literal>(&[ii_y, ii_y2, r])
+            .map_err(|e| Error::msg(format!("execute block_sse: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::msg(format!("{e:?}")))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| Error::msg(format!("{e:?}")))?;
+        let mut v = out
+            .to_vec::<f32>()
+            .map_err(|e| Error::msg(format!("{e:?}")))?;
+        v.truncate(rects.len());
+        Ok(v)
+    }
+
+    /// `seg_loss`: SSE between a signal tile and a rendered segmentation
+    /// tile (both TILE×TILE).
+    fn seg_loss(&self, signal: &[f32], rendered: &[f32]) -> Result<f32> {
+        ensure!(
+            signal.len() == TILE * TILE && rendered.len() == TILE * TILE,
+            "seg_loss tiles must be {TILE}x{TILE}"
+        );
+        let exe = self.exec("seg_loss")?;
+        let a = xla::Literal::vec1(signal)
+            .reshape(&[TILE as i64, TILE as i64])
+            .map_err(|e| Error::msg(format!("{e:?}")))?;
+        let b = xla::Literal::vec1(rendered)
+            .reshape(&[TILE as i64, TILE as i64])
+            .map_err(|e| Error::msg(format!("{e:?}")))?;
+        let result = exe
+            .execute::<xla::Literal>(&[a, b])
+            .map_err(|e| Error::msg(format!("execute seg_loss: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::msg(format!("{e:?}")))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| Error::msg(format!("{e:?}")))?;
+        let v = out
+            .to_vec::<f32>()
+            .map_err(|e| Error::msg(format!("{e:?}")))?;
+        Ok(v[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::artifacts_available;
+    use super::*;
+    use crate::rng::Rng;
+
+    fn runtime_or_skip() -> Option<Runtime> {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        match Runtime::load_default() {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                // The bundled xla stub compiles but cannot execute; a real
+                // binding is needed for these tests to run.
+                eprintln!("skipping: pjrt runtime unavailable ({e})");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn prefix2d_matches_native_backend() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let native = super::super::NativeBackend::new();
+        let mut rng = Rng::new(60);
+        let tile: Vec<f32> = (0..TILE * TILE).map(|_| rng.normal() as f32).collect();
+        let (got_y, got_y2) = rt.prefix2d(&tile).unwrap();
+        let (ref_y, ref_y2) = native.prefix2d(&tile).unwrap();
+        for i in (0..TILE * TILE).step_by(997) {
+            let (ry, ry2) = (ref_y[i] as f64, ref_y2[i] as f64);
+            assert!((got_y[i] as f64 - ry).abs() < 1e-2 * (1.0 + ry.abs()), "ii_y[{i}]");
+            assert!((got_y2[i] as f64 - ry2).abs() < 1e-2 * (1.0 + ry2.abs()), "ii_y2[{i}]");
+        }
+    }
+
+    #[test]
+    fn runtime_lists_artifacts() {
+        let Some(rt) = runtime_or_skip() else { return };
+        for expected in ["block_sse", "prefix2d", "seg_loss"] {
+            assert!(rt.has(expected), "{expected} missing from {:?}", rt.artifact_names());
+        }
+        assert!(!rt.platform().is_empty());
+    }
+}

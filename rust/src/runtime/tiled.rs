@@ -1,6 +1,7 @@
-//! Tiled execution of the PJRT kernels over signals larger than the
+//! Tiled execution of the runtime kernels over signals larger than the
 //! compiled TILE — the bridge between the L3 coordinator's arbitrary
-//! signal sizes and the fixed-shape AOT artifacts.
+//! signal sizes and the fixed-shape kernel contract. Backend-agnostic:
+//! works identically over [`super::NativeBackend`] and the PJRT runtime.
 //!
 //! A signal is cut into TILE×TILE tiles (zero-padded at the edges; zero
 //! cells contribute nothing to Σy/Σy² so block statistics restricted to
@@ -9,15 +10,15 @@
 //! tiles are answered by summing per-tile moments (inclusion–exclusion
 //! inside each covered tile).
 
-use anyhow::Result;
-
+use crate::error::Result;
 use crate::signal::{Rect, Signal};
 
-use super::{pad_integral, Runtime, RECT_BATCH, TILE};
+use super::{pad_integral, KernelBackend, RECT_BATCH, TILE};
 
-/// Per-tile padded integral images for a whole signal.
-pub struct TiledPrefix<'rt> {
-    rt: &'rt Runtime,
+/// Per-tile padded integral images for a whole signal, built through any
+/// [`KernelBackend`].
+pub struct TiledPrefix<'b> {
+    backend: &'b dyn KernelBackend,
     n: usize,
     m: usize,
     #[allow(dead_code)]
@@ -28,10 +29,12 @@ pub struct TiledPrefix<'rt> {
     ii_y2: Vec<Vec<f32>>,
 }
 
-impl<'rt> TiledPrefix<'rt> {
-    /// Build the per-tile integral images through the PJRT `prefix2d`
-    /// artifact.
-    pub fn build(rt: &'rt Runtime, signal: &Signal) -> Result<Self> {
+impl<'b> TiledPrefix<'b> {
+    /// Build the per-tile integral images through the backend's
+    /// `prefix2d` kernel. Masked cells are zero-filled (the f32
+    /// pipeline's semantics: moments over the real extent are exact,
+    /// opt₁ counts come from rectangle geometry).
+    pub fn build(backend: &'b dyn KernelBackend, signal: &Signal) -> Result<Self> {
         let n = signal.rows();
         let m = signal.cols();
         let tiles_r = n.div_ceil(TILE);
@@ -51,12 +54,17 @@ impl<'rt> TiledPrefix<'rt> {
                         }
                     }
                 }
-                let (y, y2) = rt.prefix2d(&tile)?;
+                let (y, y2) = backend.prefix2d(&tile)?;
                 ii_y.push(pad_integral(&y));
                 ii_y2.push(pad_integral(&y2));
             }
         }
-        Ok(Self { rt, n, m, tiles_r, tiles_c, ii_y, ii_y2 })
+        Ok(Self { backend, n, m, tiles_r, tiles_c, ii_y, ii_y2 })
+    }
+
+    /// The backend this instance executes on.
+    pub fn backend_name(&self) -> String {
+        self.backend.name()
     }
 
     #[inline]
@@ -65,7 +73,7 @@ impl<'rt> TiledPrefix<'rt> {
     }
 
     /// Sum and sum-of-squares of a rectangle from the padded per-tile
-    /// integral images (CPU-side inclusion–exclusion; no PJRT call).
+    /// integral images (CPU-side inclusion–exclusion; no kernel call).
     pub fn moments(&self, rect: &Rect) -> (f64, f64) {
         debug_assert!(rect.r1 < self.n && rect.c1 < self.m);
         let side = TILE + 1;
@@ -100,8 +108,8 @@ impl<'rt> TiledPrefix<'rt> {
     }
 
     /// Batched opt₁ for rectangles that each fit inside a single tile,
-    /// dispatched through the `block_sse` PJRT artifact (RECT_BATCH at a
-    /// time). Rects spanning tiles fall back to [`Self::moments`].
+    /// dispatched through the backend's `block_sse` kernel (RECT_BATCH at
+    /// a time). Rects spanning tiles fall back to [`Self::moments`].
     pub fn batched_opt1(&self, rects: &[Rect]) -> Result<Vec<f64>> {
         let mut out = vec![0.0f64; rects.len()];
         // Group in-tile rects by tile.
@@ -139,7 +147,7 @@ impl<'rt> TiledPrefix<'rt> {
                         ]
                     })
                     .collect();
-                let res = self.rt.block_sse(
+                let res = self.backend.block_sse(
                     &self.ii_y[tile_idx],
                     &self.ii_y2[tile_idx],
                     &batch,
@@ -155,21 +163,18 @@ impl<'rt> TiledPrefix<'rt> {
 
 #[cfg(test)]
 mod tests {
+    use super::super::NativeBackend;
     use super::*;
     use crate::rng::Rng;
     use crate::signal::{generate, PrefixStats};
 
     #[test]
     fn tiled_moments_match_native() {
-        if !super::super::artifacts_available() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let rt = Runtime::load_default().unwrap();
+        let backend = NativeBackend::new();
         let mut rng = Rng::new(70);
         let sig = generate::smooth(300, 280, 3, &mut rng); // spans 2x2 tiles
         let stats = PrefixStats::new(&sig);
-        let tp = TiledPrefix::build(&rt, &sig).unwrap();
+        let tp = TiledPrefix::build(&backend, &sig).unwrap();
         for _ in 0..50 {
             let r0 = rng.usize(300);
             let r1 = rng.range(r0, 300);
@@ -193,15 +198,11 @@ mod tests {
 
     #[test]
     fn tiled_batched_opt1_matches_native() {
-        if !super::super::artifacts_available() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let rt = Runtime::load_default().unwrap();
+        let backend = NativeBackend::new();
         let mut rng = Rng::new(71);
         let sig = generate::smooth(300, 300, 3, &mut rng);
         let stats = PrefixStats::new(&sig);
-        let tp = TiledPrefix::build(&rt, &sig).unwrap();
+        let tp = TiledPrefix::build(&backend, &sig).unwrap();
         let rects: Vec<Rect> = (0..100)
             .map(|_| {
                 let r0 = rng.usize(300);
@@ -214,10 +215,7 @@ mod tests {
         let got = tp.batched_opt1(&rects).unwrap();
         for (g, r) in got.iter().zip(rects.iter()) {
             let e = stats.opt1(r);
-            assert!(
-                (g - e).abs() <= 0.05 * (1.0 + e.abs()),
-                "{g} vs {e} for {r:?}"
-            );
+            assert!((g - e).abs() <= 0.05 * (1.0 + e.abs()), "{g} vs {e} for {r:?}");
         }
     }
 }

@@ -1,0 +1,201 @@
+//! Differential tests: the native kernel backend (f32 artifact
+//! semantics, tiled execution) against the exact f64 [`PrefixStats`]
+//! oracle, across signal regimes the tiling must handle — TILE-aligned,
+//! non-TILE-aligned, smaller-than-TILE, and masked.
+//!
+//! Masked semantics: the f32 kernel pipeline zero-fills masked cells and
+//! takes opt₁ counts from rectangle geometry, so the oracle for masked
+//! signals is `PrefixStats` over the zero-filled, fully-present signal
+//! (see `runtime::tiled` docs).
+
+use sigtree::rng::Rng;
+use sigtree::runtime::{KernelBackend, NativeBackend, TiledPrefix, TILE};
+use sigtree::signal::{generate, PrefixStats, Rect, Signal};
+
+/// The f64 oracle for the kernel pipeline: masked cells become 0-valued
+/// present cells.
+fn zero_filled(sig: &Signal) -> Signal {
+    Signal::from_fn(sig.rows(), sig.cols(), |r, c| {
+        if sig.is_present(r, c) {
+            sig.get(r, c)
+        } else {
+            0.0
+        }
+    })
+}
+
+fn random_rects(n: usize, m: usize, count: usize, rng: &mut Rng) -> Vec<Rect> {
+    (0..count)
+        .map(|_| {
+            let r0 = rng.usize(n);
+            let r1 = rng.range(r0, n);
+            let c0 = rng.usize(m);
+            let c1 = rng.range(c0, m);
+            Rect::new(r0, r1, c0, c1)
+        })
+        .collect()
+}
+
+/// Assert tiled moments + batched opt₁ agree with the f64 oracle to f32
+/// tolerance on `count` random rects.
+fn assert_differential(sig: &Signal, seed: u64, count: usize, label: &str) {
+    let backend = NativeBackend::new();
+    let oracle = zero_filled(sig);
+    let stats = PrefixStats::new(&oracle);
+    let tp = TiledPrefix::build(&backend, sig).unwrap();
+    let mut rng = Rng::new(seed);
+    let rects = random_rects(sig.rows(), sig.cols(), count, &mut rng);
+    for rect in &rects {
+        let (s, q) = tp.moments(rect);
+        let exact = stats.moments(rect);
+        assert!(
+            (s - exact.sum).abs() < 1e-2 * (1.0 + exact.sum.abs()),
+            "{label} {rect:?}: sum {s} vs {}",
+            exact.sum
+        );
+        assert!(
+            (q - exact.sum_sq).abs() < 1e-2 * (1.0 + exact.sum_sq.abs()),
+            "{label} {rect:?}: sumsq {q} vs {}",
+            exact.sum_sq
+        );
+    }
+    let got = tp.batched_opt1(&rects).unwrap();
+    for (g, rect) in got.iter().zip(rects.iter()) {
+        let e = stats.opt1(rect);
+        assert!(
+            (g - e).abs() <= 0.05 * (1.0 + e.abs()),
+            "{label} {rect:?}: opt1 {g} vs {e}"
+        );
+    }
+}
+
+#[test]
+fn differential_tile_aligned_signal() {
+    // Exactly 1×1 tiles — no edge padding in play.
+    let mut rng = Rng::new(201);
+    let sig = generate::image_like(TILE, TILE, 4, &mut rng);
+    assert_differential(&sig, 2011, 60, "aligned-256x256");
+}
+
+#[test]
+fn differential_non_tile_aligned_signal() {
+    // 300×280 spans 2×2 tiles with ragged edges on both axes.
+    let mut rng = Rng::new(202);
+    let sig = generate::smooth(300, 280, 3, &mut rng);
+    assert_differential(&sig, 2021, 60, "ragged-300x280");
+}
+
+#[test]
+fn differential_smaller_than_tile_signal() {
+    // Whole signal fits in one zero-padded tile.
+    let mut rng = Rng::new(203);
+    let sig = generate::noise(190, 70, 1.0, &mut rng);
+    assert_differential(&sig, 2031, 60, "small-190x70");
+}
+
+#[test]
+fn differential_masked_signal() {
+    // Masked patches across a tile boundary: the kernel path must treat
+    // them as zeros everywhere, bit-consistently with the oracle.
+    let mut rng = Rng::new(204);
+    let mut sig = generate::smooth(300, 120, 3, &mut rng);
+    sig.mask_rect(Rect::new(10, 40, 5, 60));
+    sig.mask_rect(Rect::new(250, 299, 100, 119));
+    sig.mask_rect(Rect::new(120, 180, 30, 90));
+    assert_differential(&sig, 2041, 60, "masked-300x120");
+}
+
+#[test]
+fn differential_prefix2d_raw_tile() {
+    // The raw kernel (no tiling): f32 integral images vs f64 prefix sums.
+    let backend = NativeBackend::new();
+    let mut rng = Rng::new(205);
+    let sig = generate::piecewise_constant(TILE, TILE, 9, 0.05, &mut rng).0;
+    let tile: Vec<f32> = sig.values().iter().map(|&v| v as f32).collect();
+    let (ii_y, ii_y2) = backend.prefix2d(&tile).unwrap();
+    let stats = PrefixStats::new(&sig);
+    let mut checked = 0;
+    for r in (0..TILE).step_by(37) {
+        for c in (0..TILE).step_by(41) {
+            let rect = Rect::new(0, r, 0, c);
+            let exact = stats.moments(&rect);
+            let gy = ii_y[r * TILE + c] as f64;
+            let gy2 = ii_y2[r * TILE + c] as f64;
+            assert!(
+                (gy - exact.sum).abs() < 1e-2 * (1.0 + exact.sum.abs()),
+                "({r},{c}) sum"
+            );
+            assert!(
+                (gy2 - exact.sum_sq).abs() < 1e-2 * (1.0 + exact.sum_sq.abs()),
+                "({r},{c}) sumsq"
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 20);
+}
+
+#[test]
+fn differential_seg_loss_vs_exact() {
+    let backend = NativeBackend::new();
+    let mut rng = Rng::new(206);
+    let sig = generate::smooth(TILE, TILE, 4, &mut rng);
+    let stats = PrefixStats::new(&sig);
+    for k in [1, 7, 23] {
+        let mut seg = sigtree::segmentation::random_segmentation(sig.bounds(), k, &mut rng);
+        seg.refit_values(&stats);
+        let rendered = seg.render(TILE, TILE);
+        let a: Vec<f32> = sig.values().iter().map(|&v| v as f32).collect();
+        let b: Vec<f32> = rendered.values().iter().map(|&v| v as f32).collect();
+        let got = backend.seg_loss(&a, &b).unwrap() as f64;
+        let exact = seg.loss(&stats);
+        assert!(
+            (got - exact).abs() <= 1e-2 * (1.0 + exact),
+            "k={k}: {got} vs {exact}"
+        );
+    }
+}
+
+#[test]
+fn differential_block_sse_batching_boundaries() {
+    // Batch sizes around RECT_BATCH exercise the chunking path.
+    use sigtree::runtime::RECT_BATCH;
+    let backend = NativeBackend::new();
+    let mut rng = Rng::new(207);
+    let sig = generate::smooth(TILE, TILE, 3, &mut rng);
+    let stats = PrefixStats::new(&sig);
+    let tp = TiledPrefix::build(&backend, &sig).unwrap();
+    let rects = random_rects(TILE, TILE, RECT_BATCH + 17, &mut rng);
+    let got = tp.batched_opt1(&rects).unwrap();
+    assert_eq!(got.len(), rects.len());
+    for (g, rect) in got.iter().zip(rects.iter()).step_by(97) {
+        let e = stats.opt1(rect);
+        assert!((g - e).abs() <= 0.05 * (1.0 + e.abs()), "{rect:?}: {g} vs {e}");
+    }
+}
+
+#[test]
+fn prelude_surface_smoke() {
+    // The example/doctest surface in one tiny end-to-end pass (the
+    // `cargo build --examples` smoke companion; the examples themselves
+    // are built by scripts/verify.sh).
+    use sigtree::prelude::*;
+    let mut rng = Rng::new(208);
+    let signal = Signal::from_fn(40, 30, |r, c| ((r * 3 + c) % 5) as f64);
+    let stats = PrefixStats::new(&signal);
+    let coreset = SignalCoreset::build(&signal, 4, 0.3);
+    assert!(coreset.stored_points() > 0);
+    let forest = RandomForest::fit(
+        &coreset
+            .blocks
+            .iter()
+            .flat_map(|b| b.points())
+            .map(|p| sigtree::tree::Sample::from_point(&p))
+            .collect::<Vec<_>>(),
+        &sigtree::tree::forest::ForestParams::default().with_trees(3),
+        &mut rng,
+    );
+    let pred = forest.predict(&[2.0, 2.0]);
+    assert!(pred.is_finite());
+    assert!(stats.opt1(&Rect::new(0, 39, 0, 29)) >= 0.0);
+}

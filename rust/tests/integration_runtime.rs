@@ -1,93 +1,137 @@
-//! Integration tests for the PJRT runtime path: artifacts → compile →
-//! execute → parity with the native f64 implementation. All tests skip
-//! gracefully (with a log line) when `make artifacts` has not run.
+//! Integration tests for the kernel-runtime path: backend → execute →
+//! parity with the native f64 implementation. They run against every
+//! backend this build offers: the pure-Rust [`NativeBackend`] always,
+//! plus the PJRT backend when compiled with `--features pjrt` and the
+//! AOT artifacts load (skipped with a log line otherwise).
 
 use sigtree::rng::Rng;
-use sigtree::runtime::{artifacts_available, pad_integral, Runtime, TILE};
+use sigtree::runtime::{pad_integral, KernelBackend, NativeBackend, TILE};
 use sigtree::signal::{generate, PrefixStats, Rect};
 
-fn runtime_or_skip() -> Option<Runtime> {
-    if !artifacts_available() {
-        eprintln!("skipping runtime integration: artifacts not built");
+#[cfg(feature = "pjrt")]
+fn pjrt_backend() -> Option<Box<dyn KernelBackend>> {
+    if !sigtree::runtime::artifacts_available() {
+        eprintln!("skipping pjrt backend: artifacts not built (run `make artifacts`)");
         return None;
     }
-    Some(Runtime::load_default().expect("runtime load"))
+    match sigtree::runtime::pjrt::Runtime::load_default() {
+        Ok(rt) => Some(Box::new(rt)),
+        Err(e) => {
+            eprintln!("skipping pjrt backend: {e}");
+            None
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend() -> Option<Box<dyn KernelBackend>> {
+    None
+}
+
+/// Every backend available in this build (native is unconditional).
+fn backends() -> Vec<Box<dyn KernelBackend>> {
+    let mut v: Vec<Box<dyn KernelBackend>> = vec![Box::new(NativeBackend::new())];
+    if let Some(rt) = pjrt_backend() {
+        v.push(rt);
+    }
+    v
 }
 
 #[test]
-fn all_three_artifacts_load_and_list() {
-    let Some(rt) = runtime_or_skip() else { return };
-    let names = rt.artifact_names();
-    for expected in ["block_sse", "prefix2d", "seg_loss"] {
-        assert!(names.iter().any(|n| n == expected), "{expected} missing from {names:?}");
-    }
-    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+fn native_backend_is_always_available() {
+    let names: Vec<String> = backends().iter().map(|b| b.name()).collect();
+    assert!(names.iter().any(|n| n == "native"), "{names:?}");
 }
 
 #[test]
 fn full_tile_roundtrip_matches_native_f64() {
-    let Some(rt) = runtime_or_skip() else { return };
-    let mut rng = Rng::new(123);
-    let sig = generate::image_like(TILE, TILE, 4, &mut rng);
-    let tile: Vec<f32> = sig.values().iter().map(|&v| v as f32).collect();
-    let (ii_y, ii_y2) = rt.prefix2d(&tile).unwrap();
-    let p_y = pad_integral(&ii_y);
-    let p_y2 = pad_integral(&ii_y2);
-    let stats = PrefixStats::new(&sig);
-    // Batch of structured rects: rows, columns, squares, full tile.
-    let mut rects = Vec::new();
-    for i in 0..32 {
-        let a = i * 8;
-        rects.push([a as i32, a as i32, 0, (TILE - 1) as i32]); // row
-        rects.push([0, (TILE - 1) as i32, a as i32, a as i32]); // col
-        rects.push([a as i32, (a + 7) as i32, a as i32, (a + 7) as i32]); // square
+    for backend in backends() {
+        let mut rng = Rng::new(123);
+        let sig = generate::image_like(TILE, TILE, 4, &mut rng);
+        let tile: Vec<f32> = sig.values().iter().map(|&v| v as f32).collect();
+        let (ii_y, ii_y2) = backend.prefix2d(&tile).unwrap();
+        let p_y = pad_integral(&ii_y);
+        let p_y2 = pad_integral(&ii_y2);
+        let stats = PrefixStats::new(&sig);
+        // Batch of structured rects: rows, columns, squares, full tile.
+        let mut rects = Vec::new();
+        for i in 0..32 {
+            let a = i * 8;
+            rects.push([a as i32, a as i32, 0, (TILE - 1) as i32]); // row
+            rects.push([0, (TILE - 1) as i32, a as i32, a as i32]); // col
+            rects.push([a as i32, (a + 7) as i32, a as i32, (a + 7) as i32]); // square
+        }
+        rects.push([0, (TILE - 1) as i32, 0, (TILE - 1) as i32]);
+        let got = backend.block_sse(&p_y, &p_y2, &rects).unwrap();
+        for (g, r) in got.iter().zip(rects.iter()) {
+            let rect = Rect::new(r[0] as usize, r[1] as usize, r[2] as usize, r[3] as usize);
+            let e = stats.opt1(&rect);
+            assert!(
+                (*g as f64 - e).abs() <= 0.05 * (1.0 + e),
+                "backend {}, rect {rect:?}: kernel {g} vs native {e}",
+                backend.name()
+            );
+        }
     }
-    rects.push([0, (TILE - 1) as i32, 0, (TILE - 1) as i32]);
-    let got = rt.block_sse(&p_y, &p_y2, &rects).unwrap();
-    for (g, r) in got.iter().zip(rects.iter()) {
-        let rect = Rect::new(r[0] as usize, r[1] as usize, r[2] as usize, r[3] as usize);
-        let e = stats.opt1(&rect);
+}
+
+#[test]
+fn seg_loss_kernel_evaluates_segmentations() {
+    for backend in backends() {
+        let mut rng = Rng::new(321);
+        let sig = generate::smooth(TILE, TILE, 3, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let mut seg = sigtree::segmentation::random_segmentation(sig.bounds(), 12, &mut rng);
+        seg.refit_values(&stats);
+        let rendered = seg.render(TILE, TILE);
+        let a: Vec<f32> = sig.values().iter().map(|&v| v as f32).collect();
+        let b: Vec<f32> = rendered.values().iter().map(|&v| v as f32).collect();
+        let got = backend.seg_loss(&a, &b).unwrap() as f64;
+        let exact = seg.loss(&stats);
         assert!(
-            (*g as f64 - e).abs() <= 0.05 * (1.0 + e),
-            "rect {rect:?}: pjrt {g} vs native {e}"
+            (got - exact).abs() <= 1e-2 * (1.0 + exact),
+            "backend {}: kernel {got} vs native {exact}",
+            backend.name()
         );
     }
 }
 
 #[test]
-fn seg_loss_artifact_evaluates_segmentations() {
-    let Some(rt) = runtime_or_skip() else { return };
-    let mut rng = Rng::new(321);
-    let sig = generate::smooth(TILE, TILE, 3, &mut rng);
-    let stats = PrefixStats::new(&sig);
-    let mut seg = sigtree::segmentation::random_segmentation(sig.bounds(), 12, &mut rng);
-    seg.refit_values(&stats);
-    let rendered = seg.render(TILE, TILE);
-    let a: Vec<f32> = sig.values().iter().map(|&v| v as f32).collect();
-    let b: Vec<f32> = rendered.values().iter().map(|&v| v as f32).collect();
-    let got = rt.seg_loss(&a, &b).unwrap() as f64;
-    let exact = seg.loss(&stats);
-    assert!(
-        (got - exact).abs() <= 1e-2 * (1.0 + exact),
-        "pjrt {got} vs native {exact}"
-    );
+fn backend_is_reusable_across_many_calls() {
+    // The compile-once property: repeated execution must not re-compile
+    // (smoke: repeated calls complete quickly and agree with each other).
+    for backend in backends() {
+        let tile = vec![1.0f32; TILE * TILE];
+        let (first, _) = backend.prefix2d(&tile).unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..10 {
+            let (again, _) = backend.prefix2d(&tile).unwrap();
+            assert_eq!(again[TILE * TILE - 1], first[TILE * TILE - 1]);
+        }
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(30),
+            "backend {}: 10 executions took {:?} — looks like recompilation per call",
+            backend.name(),
+            t0.elapsed()
+        );
+    }
 }
 
 #[test]
-fn runtime_is_reusable_across_many_calls() {
-    // The compile-once property: repeated execution must not re-compile
-    // (smoke: 50 calls complete quickly and agree with each other).
-    let Some(rt) = runtime_or_skip() else { return };
-    let tile = vec![1.0f32; TILE * TILE];
-    let (first, _) = rt.prefix2d(&tile).unwrap();
-    let t0 = std::time::Instant::now();
-    for _ in 0..10 {
-        let (again, _) = rt.prefix2d(&tile).unwrap();
-        assert_eq!(again[TILE * TILE - 1], first[TILE * TILE - 1]);
+fn backend_from_name_cli_contract() {
+    // The CLI's `--backend` switch: native always resolves; pjrt either
+    // resolves (feature + artifacts) or returns a descriptive error.
+    let native = sigtree::runtime::backend_from_name("native", None).unwrap();
+    assert_eq!(native.name(), "native");
+    match sigtree::runtime::backend_from_name("pjrt", None) {
+        Ok(b) => assert!(b.name().starts_with("pjrt")),
+        Err(e) => {
+            let msg = e.to_string();
+            assert!(
+                msg.contains("pjrt") || msg.contains("artifacts"),
+                "unhelpful error: {msg}"
+            );
+        }
     }
-    assert!(
-        t0.elapsed() < std::time::Duration::from_secs(30),
-        "10 executions took {:?} — looks like recompilation per call",
-        t0.elapsed()
-    );
+    assert!(sigtree::runtime::backend_from_name("bogus", None).is_err());
 }

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 verification (ROADMAP.md): build + test + example smoke, all on
+# the default (no-pjrt) feature set so it runs offline with zero
+# external dependencies.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+cargo build --examples
+
+echo "verify.sh: OK"
