@@ -36,7 +36,7 @@ fn main() {
     let k = 256;
     let coreset = SignalCoreset::build(&image, k, 0.2);
     println!(
-        "\ncoreset: {:.2}% of image",
+        "\ncoreset: {:.2}% of present image cells",
         100.0 * coreset.compression_ratio()
     );
     let mut table = Table::new(&["codec", "exact SSE", "coreset SSE", "err %"]);

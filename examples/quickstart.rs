@@ -23,7 +23,7 @@ fn main() {
     let t0 = std::time::Instant::now();
     let coreset = SignalCoreset::build(&signal, k, eps);
     println!(
-        "coreset: {} points = {:.2}% of the input, built in {:?}",
+        "coreset: {} points = {:.2}% of the present cells, built in {:?}",
         coreset.stored_points(),
         100.0 * coreset.compression_ratio(),
         t0.elapsed()

@@ -51,27 +51,32 @@ pub struct Bicriteria {
 pub fn grid_lower_bound(stats: &PrefixStats, k: usize, rounds: usize) -> Option<f64> {
     let n = stats.rows();
     let m = stats.cols();
-    let mut best: Option<f64> = None;
-    // Try a geometric ladder of granularities; all are valid lower bounds,
-    // keep the max.
+    // Shape adjustment: grow an axis until the counting argument
+    // pq > 2k(p+q) holds. This is pure feasibility search and must not
+    // consume `rounds` — the old accounting burned one round per
+    // doubling, so small-grid/large-k shapes (several doublings away
+    // from feasibility) exhausted the default 4-round budget and
+    // returned `None` even though a certified bound existed.
     let mut p = (4 * k + 1).min(n);
     let mut q = (4 * k + 1).min(m);
-    for _ in 0..rounds.max(1) {
-        if p * q <= 2 * k * (p + q) {
-            // Not enough blocks for the counting argument at this shape;
-            // try growing the bigger axis.
-            if p < n {
-                p = (p * 2).min(n);
-                continue;
-            } else if q < m {
-                q = (q * 2).min(m);
-                continue;
-            }
-            break;
+    while p * q <= 2 * k * (p + q) {
+        if p < n {
+            p = (p * 2).min(n);
+        } else if q < m {
+            q = (q * 2).min(m);
+        } else {
+            // No granularity of this grid supports the argument.
+            return None;
         }
+    }
+    // Geometric ladder of granularities; every rung is a valid lower
+    // bound, keep the max. Feasibility is preserved under doubling:
+    // pq > 2k(p+q) forces p > 2k and q > 2k, and the margin is then
+    // monotone in each axis.
+    let mut best: Option<f64> = None;
+    for _ in 0..rounds.max(1) {
         let bound = grid_bound_once(stats, k, p, q);
         best = Some(best.map_or(bound, |b: f64| b.max(bound)));
-        // Refine.
         if p >= n && q >= m {
             break;
         }
@@ -219,6 +224,27 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn shape_adjustment_does_not_consume_rounds() {
+        // Narrow-matrix shapes need several doublings of the row axis
+        // before pq > 2k(p+q) holds. Those doublings used to consume
+        // `rounds` iterations, so these inputs returned None even though
+        // a certified bound exists.
+        let mut rng = Rng::new(77);
+        // Two doublings needed (p: 21 → 42 → 84 at q = 12, k = 5): with a
+        // 1-round budget the old accounting never computed a bound.
+        let sig = generate::noise(200, 12, 1.0, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let lb = grid_lower_bound(&stats, 5, 1);
+        assert!(lb.is_some(), "bound must exist after shape adjustment");
+        assert!(lb.unwrap() > 0.0, "multi-cell noise blocks have opt1 > 0");
+        // Large-k flavour: four doublings (p: 81 → … → 1296 at q = 42,
+        // k = 20) exhausted the default 4-round budget entirely.
+        let sig = generate::noise(2000, 42, 1.0, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        assert!(grid_lower_bound(&stats, 20, 4).is_some());
     }
 
     #[test]

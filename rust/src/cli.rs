@@ -85,6 +85,20 @@ impl Args {
         }
     }
 
+    /// The `--threads` convention shared by every subcommand: `0` (and
+    /// the literal `auto`) mean "all available cores" — resolution
+    /// happens downstream in `sigtree::par::resolve_threads`. `default`
+    /// is used when the flag is absent.
+    pub fn get_threads(&self, default: usize) -> Result<usize, CliError> {
+        match self.get("threads") {
+            None => Ok(default),
+            Some("auto") => Ok(0),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError::Invalid("threads".into(), v.into())),
+        }
+    }
+
     pub fn get_flag(&self, name: &str) -> bool {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
@@ -126,6 +140,14 @@ mod tests {
         assert_eq!(a.get_usize("missing", 3).unwrap(), 3);
         assert!((a.get_f64("eps", 0.0).unwrap() - 0.5).abs() < 1e-12);
         assert!(a.get_usize("eps", 1).is_err());
+    }
+
+    #[test]
+    fn threads_flag_conventions() {
+        assert_eq!(Args::parse(argv("x --threads 4")).get_threads(1).unwrap(), 4);
+        assert_eq!(Args::parse(argv("x --threads auto")).get_threads(1).unwrap(), 0);
+        assert_eq!(Args::parse(argv("x")).get_threads(2).unwrap(), 2);
+        assert!(Args::parse(argv("x --threads lots")).get_threads(1).is_err());
     }
 
     #[test]

@@ -87,6 +87,19 @@ pub fn block_loss(block: &BlockCoreset, s: &KSegmentation) -> f64 {
     loss
 }
 
+/// Batch FITTING-LOSS: evaluate many k-segmentations against one coreset
+/// concurrently on the [`crate::par`] worker pool. Queries are
+/// independent reads of the immutable coreset, so this is embarrassingly
+/// parallel; results are in query order and identical to a sequential
+/// [`fitting_loss`] loop for any thread count (`0` = all cores).
+pub fn fitting_loss_batch(
+    coreset: &SignalCoreset,
+    queries: &[KSegmentation],
+    threads: usize,
+) -> Vec<f64> {
+    crate::par::parallel_map(queries, threads, |_, s| fitting_loss(coreset, s))
+}
+
 /// Relative approximation error |approx − exact| / exact of the coreset
 /// on a specific query — the quantity Theorem 8 bounds by ε.
 pub fn relative_error(approx: f64, exact: f64) -> f64 {

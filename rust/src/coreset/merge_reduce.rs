@@ -24,14 +24,20 @@ use super::caratheodory::CaratheodoryReducer;
 use super::{BlockCoreset, CoresetConfig, SignalCoreset};
 
 /// Union of band coresets (bands must tile the signal's rows and share
-/// its width). σ/γ of the merged coreset are the most conservative
-/// (smallest σ, smallest γ) of the parts.
+/// its width). γ of the merged coreset is the most conservative
+/// (smallest) of the parts; σ is the **sum** of the parts' σ: the bands
+/// are disjoint and tile the signal, so the optimal k-segmentation of
+/// the union restricts to a valid ≤k-segmentation of every band and
+/// Σᵢ σᵢ ≤ Σᵢ opt_k(Dᵢ) ≤ opt_k(D) — the same calibration the
+/// monolithic build uses. (Taking the minimum instead would let one
+/// flat or fully-masked band with σᵢ = 0 poison the merged tolerance to
+/// zero and permanently disable [`reduce`] compaction.)
 pub fn merge(parts: Vec<SignalCoreset>) -> SignalCoreset {
     assert!(!parts.is_empty());
     let m = parts[0].cols();
     assert!(parts.iter().all(|p| p.cols() == m), "bands must share width");
     let n: usize = parts.iter().map(|p| p.rows()).sum();
-    let sigma = parts.iter().map(|p| p.sigma).fold(f64::INFINITY, f64::min);
+    let sigma: f64 = parts.iter().map(|p| p.sigma).sum();
     let gamma = parts.iter().map(|p| p.gamma).fold(f64::INFINITY, f64::min);
     let config = parts[0].config;
     let blocks = parts.into_iter().flat_map(|p| p.blocks).collect();
@@ -56,9 +62,11 @@ pub fn offset_rows(mut coreset: SignalCoreset, row_offset: usize) -> SignalCores
 /// blocks with matching column extents while the merged opt₁ (from
 /// moments) stays ≤ `tol`. Returns the compacted coreset.
 pub fn reduce(coreset: SignalCoreset, tol: f64) -> SignalCoreset {
-    let SignalCoreset { blocks, config, sigma, gamma, .. } = coreset.clone();
+    // Consume by move — this runs on every streaming `push_band`
+    // compaction, and the block list is the bulk of the coreset.
     let n = coreset.rows();
     let m = coreset.cols();
+    let SignalCoreset { blocks, config, sigma, gamma, .. } = coreset;
     // Index blocks by (c0, c1, r0): a block ending at row r merges with a
     // block starting at row r+1 with the same column span.
     let mut by_start: HashMap<(usize, usize, usize), usize> = HashMap::new();
@@ -102,8 +110,7 @@ pub fn reduce(coreset: SignalCoreset, tol: f64) -> SignalCoreset {
         }
     }
     let blocks: Vec<BlockCoreset> = pool.into_iter().flatten().collect();
-    let _ = config;
-    SignalCoreset::from_blocks(n, m, coreset.config, sigma, gamma, blocks)
+    SignalCoreset::from_blocks(n, m, config, sigma, gamma, blocks)
 }
 
 /// Streaming builder: feed row-bands as they arrive; coresets are built
@@ -118,6 +125,14 @@ pub struct StreamingCoreset {
     /// of the last reduced size.
     reduce_factor: f64,
     last_reduced_len: usize,
+    /// Per-band construction engine: `None` = the sequential
+    /// [`SignalCoreset::build_with`] (the default); `Some(t)` = the
+    /// sharded [`SignalCoreset::build_par`] with `t` workers. Kept as an
+    /// opt-in rather than a count so that the streamed coreset's
+    /// *content* never depends on a worker count — `build_par` is
+    /// thread-count-invariant, so every `Some(_)` produces the identical
+    /// stream.
+    threads: Option<usize>,
 }
 
 impl StreamingCoreset {
@@ -129,13 +144,28 @@ impl StreamingCoreset {
             acc: None,
             reduce_factor: 2.0,
             last_reduced_len: 64,
+            threads: None,
         }
+    }
+
+    /// Build every incoming band through the parallel sharded builder
+    /// ([`SignalCoreset::build_par`]) with this many workers (`0` = all
+    /// available cores). A pure performance knob: the streamed coreset
+    /// is bit-identical for every `threads` value, though it may differ
+    /// from the default sequential path (sharded vs monolithic per-band
+    /// partitions).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
     }
 
     /// Ingest the next band (must have width m).
     pub fn push_band(&mut self, band: &crate::signal::Signal) {
         assert_eq!(band.cols(), self.m);
-        let part = SignalCoreset::build_with(band, self.config);
+        let part = match self.threads {
+            None => SignalCoreset::build_with(band, self.config),
+            Some(t) => SignalCoreset::build_par(band, self.config, t),
+        };
         let part = offset_rows(part, self.rows_seen);
         self.rows_seen += band.rows();
         let merged = match self.acc.take() {
@@ -218,6 +248,20 @@ mod tests {
                 "{approx} vs {exact}"
             );
         }
+    }
+
+    #[test]
+    fn merge_sums_sigma_and_keeps_min_gamma() {
+        // A flat/fully-masked band has σ = 0; summing (not min-ing) keeps
+        // the merged reduce tolerance alive (σ stays ≤ opt_k of the
+        // union, which is additive over disjoint row-bands).
+        let config = CoresetConfig::new(3, 0.3);
+        let a = SignalCoreset::from_blocks(4, 8, config, 1.5, 0.2, Vec::new());
+        let b = SignalCoreset::from_blocks(4, 8, config, 0.0, 0.1, Vec::new());
+        let merged = merge(vec![a, b]);
+        assert!((merged.sigma - 1.5).abs() < 1e-15);
+        assert!((merged.gamma - 0.1).abs() < 1e-15);
+        assert_eq!(merged.rows(), 8);
     }
 
     #[test]

@@ -14,6 +14,11 @@
 //! 4. [`fitting_loss`] (Algorithm 5) evaluates any k-segmentation against
 //!    the coreset in O(k·|blocks|).
 //!
+//! The construction is band-shardable with no loss of correctness (the
+//! merge-and-reduce property): [`SignalCoreset::build_par`] runs the
+//! pipeline per row-shard on the [`crate::par`] worker pool and composes
+//! via [`merge_reduce`] — see DESIGN.md §Parallelism.
+//!
 //! ## Theory vs. practice (γ)
 //!
 //! The worst-case theory sets γ = ε²/(βk), which the paper itself calls
@@ -114,6 +119,15 @@ impl BlockCoreset {
         self.weights.iter().sum()
     }
 
+    /// True when the block carries no weight — its source cells were all
+    /// masked out. Such blocks contribute nothing to any statistic or
+    /// fitting loss; the build path drops them so that
+    /// [`SignalCoreset::stored_points`] / `weighted_points()` accounting
+    /// never counts dead storage.
+    pub fn is_empty(&self) -> bool {
+        self.weights.iter().all(|&w| w <= 0.0)
+    }
+
     /// The 4 weighted points with corner coordinates (zero-weight entries
     /// skipped).
     pub fn points(&self) -> impl Iterator<Item = WeightedPoint> + '_ {
@@ -202,9 +216,13 @@ impl SignalCoreset {
             .unwrap_or_else(|| bicriteria::bicriteria(stats, config.k).sigma);
         let gamma = config.gamma.unwrap_or(config.eps / 2.0).clamp(1e-9, 1.0);
         let rects = partition::partition(stats, gamma, sigma);
+        // Fully-masked blocks compress to an all-zero-weight support;
+        // drop them (they carry no moments and would only pad
+        // `stored_points`).
         let blocks = rects
             .into_iter()
             .map(|rect| BlockCoreset::from_block(signal, rect))
+            .filter(|b| !b.is_empty())
             .collect();
         Self {
             n: signal.rows(),
@@ -214,6 +232,51 @@ impl SignalCoreset {
             gamma,
             blocks,
         }
+    }
+
+    /// Parallel Algorithm 3 on the [`crate::par`] worker pool: row-shard
+    /// the signal into ⌊n/64⌋ near-equal bands (64–127 rows each, via
+    /// [`bicriteria::band_edges`]), run the full bicriteria → partition →
+    /// per-block Caratheodory pipeline per shard on scoped workers, then
+    /// compose through the existing merge-and-reduce path.
+    /// Every per-block guarantee is local to its band (the merge-and-
+    /// reduce property, §1.1 Challenge (iv)), so sharding never weakens
+    /// the coreset — see DESIGN.md §Parallelism.
+    ///
+    /// The shard plan depends only on the signal shape, never on
+    /// `threads`, so any thread count produces the bit-identical coreset;
+    /// `threads == 0` means "all available cores". Signals shorter than
+    /// 128 rows (fewer than two shards) fall back to the sequential
+    /// [`Self::build_with`].
+    pub fn build_par(signal: &Signal, config: CoresetConfig, threads: usize) -> Self {
+        const SHARD_ROWS: usize = 64;
+        let n = signal.rows();
+        let shards = n / SHARD_ROWS;
+        if shards <= 1 {
+            return Self::build_with(signal, config);
+        }
+        let edges = bicriteria::band_edges(n, shards);
+        let rects: Vec<Rect> = edges
+            .windows(2)
+            .map(|w| Rect::new(w[0], w[1] - 1, 0, signal.cols() - 1))
+            .collect();
+        let parts = crate::par::parallel_map(&rects, threads, |_, &rect| {
+            let band = signal.crop(rect);
+            merge_reduce::offset_rows(Self::build_with(&band, config), rect.r0)
+        });
+        let merged = merge_reduce::merge(parts);
+        let tol = merged.gamma * merged.gamma * merged.sigma;
+        merge_reduce::reduce(merged, tol)
+    }
+
+    /// Approximate ℓ(D, s) for many k-segmentations concurrently on the
+    /// [`crate::par`] worker pool — the forest/tuning workload, where a
+    /// sweep evaluates hundreds of candidate segmentations against one
+    /// coreset. Results are in query order and identical to calling
+    /// [`Coreset::fitting_loss`] per query; `threads == 0` uses all
+    /// available cores.
+    pub fn fitting_loss_batch(&self, queries: &[KSegmentation], threads: usize) -> Vec<f64> {
+        fitting_loss::fitting_loss_batch(self, queries, threads)
     }
 
     /// Assemble directly from blocks (merge-and-reduce path).
@@ -252,9 +315,17 @@ impl SignalCoreset {
             .sum()
     }
 
-    /// |C| / N.
+    /// |C| / (number of present input cells). The denominator is
+    /// [`Self::total_weight`], which equals the present-cell count
+    /// exactly by the Caratheodory guarantee — dividing by n·m would
+    /// overstate compression on masked signals, where absent cells were
+    /// never part of the input. Returns 0 for an empty coreset.
     pub fn compression_ratio(&self) -> f64 {
-        self.stored_points() as f64 / (self.n * self.m) as f64
+        let present = self.total_weight();
+        if present <= 0.0 {
+            return 0.0;
+        }
+        self.stored_points() as f64 / present
     }
 
     /// Σ weights — equals the number of present cells (exactly, by the
@@ -381,6 +452,74 @@ mod tests {
             for p in b.points() {
                 assert!(corners.contains(&(p.row, p.col)));
                 assert!(p.w > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn compression_ratio_counts_present_cells_only() {
+        let mut rng = Rng::new(8);
+        let mut sig = generate::smooth(40, 40, 3, &mut rng);
+        // Mask out the left half: 800 of 1600 cells remain.
+        sig.mask_rect(Rect::new(0, 39, 0, 19));
+        let cs = SignalCoreset::build(&sig, 4, 0.3);
+        assert!((cs.total_weight() - 800.0).abs() < 1e-6 * 800.0);
+        let expected = cs.stored_points() as f64 / cs.total_weight();
+        assert!(
+            (cs.compression_ratio() - expected).abs() < 1e-12,
+            "ratio must divide by present cells, not n*m"
+        );
+        // Dividing by n*m would halve the reported ratio here.
+        let overstated = cs.stored_points() as f64 / 1600.0;
+        assert!(cs.compression_ratio() > 1.5 * overstated);
+    }
+
+    #[test]
+    fn fully_masked_blocks_are_dropped() {
+        let mut rng = Rng::new(9);
+        let mut sig = generate::smooth(20, 20, 2, &mut rng);
+        // Top half fully masked → its partition blocks compress to
+        // zero-weight supports and must not be stored.
+        sig.mask_rect(Rect::new(0, 9, 0, 19));
+        let cs = SignalCoreset::build(&sig, 3, 0.3);
+        assert!(!cs.blocks.is_empty());
+        for b in &cs.blocks {
+            assert!(!b.is_empty(), "zero-weight block stored: {:?}", b.rect);
+            assert!(b.total_weight() > 0.0);
+        }
+        assert!((cs.total_weight() - 200.0).abs() < 1e-6 * 200.0);
+        // weighted_points / stored_points accounting stays consistent.
+        let w: f64 = cs.weighted_points().iter().map(|p| p.w).sum();
+        assert!((w - cs.total_weight()).abs() < 1e-9 * 200.0);
+        assert!(cs.weighted_points().len() <= cs.stored_points());
+    }
+
+    #[test]
+    fn from_block_fully_masked_is_empty() {
+        let mut sig = Signal::constant(8, 8, 1.0);
+        sig.mask_rect(Rect::new(0, 3, 0, 7));
+        let bc = BlockCoreset::from_block(&sig, Rect::new(0, 3, 0, 7));
+        assert!(bc.is_empty());
+        assert_eq!(bc.points().count(), 0);
+        assert_eq!(bc.total_weight(), 0.0);
+        let m = bc.moments();
+        assert_eq!((m.count, m.sum, m.sum_sq), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn build_par_matches_across_thread_counts() {
+        let mut rng = Rng::new(10);
+        let sig = generate::smooth(192, 40, 3, &mut rng);
+        let config = CoresetConfig::new(4, 0.3);
+        let reference = SignalCoreset::build_par(&sig, config, 1);
+        assert!((reference.total_weight() - (192 * 40) as f64).abs() < 1e-6);
+        for threads in [0, 2, 3, 4] {
+            let cs = SignalCoreset::build_par(&sig, config, threads);
+            assert_eq!(cs.blocks.len(), reference.blocks.len(), "threads {threads}");
+            for (a, b) in cs.blocks.iter().zip(&reference.blocks) {
+                assert_eq!(a.rect, b.rect, "threads {threads}");
+                assert_eq!(a.labels, b.labels, "threads {threads}");
+                assert_eq!(a.weights, b.weights, "threads {threads}");
             }
         }
     }

@@ -22,6 +22,9 @@
 //! * [`experiments`] — the paper's evaluation harnesses (Fig. 4–7).
 //! * [`pipeline`] — the L3 streaming coordinator: sharding, workers,
 //!   merge-and-reduce, backpressure, metrics.
+//! * [`par`] — the std-only parallel construction engine (scoped-thread
+//!   worker pool) behind [`coreset::SignalCoreset::build_par`],
+//!   [`signal::PrefixStats::new_par`], and the batch fitting-loss API.
 //! * [`runtime`] — pluggable kernel backends behind one artifact
 //!   contract: the pure-Rust [`runtime::NativeBackend`] (default) and,
 //!   behind the off-by-default `pjrt` cargo feature, PJRT execution of
@@ -36,6 +39,7 @@ pub mod coreset;
 pub mod datasets;
 pub mod error;
 pub mod experiments;
+pub mod par;
 pub mod partition;
 pub mod pipeline;
 pub mod rng;

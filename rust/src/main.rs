@@ -13,7 +13,7 @@
 use std::process::ExitCode;
 
 use sigtree::cli::Args;
-use sigtree::coreset::{Coreset, CoresetConfig, SignalCoreset};
+use sigtree::coreset::{CoresetConfig, SignalCoreset};
 use sigtree::datasets;
 use sigtree::error::{Error, Result};
 use sigtree::experiments::{self, Solver};
@@ -57,13 +57,19 @@ fn print_help() {
          USAGE: sigtree <command> [--flag value ...]\n\
          \n\
          COMMANDS\n\
-           coreset     --n 512 --m 512 --k 64 --eps 0.2 --seed 7 [--signal smooth|image|noise|piecewise]\n\
-           pipeline    --n 2048 --m 512 --k 64 --eps 0.2 --band-rows 128 --workers 2\n\
-           evaluate    --n 256 --m 256 --k 16 --eps 0.2 --queries 100\n\
+           coreset     --n 512 --m 512 --k 64 --eps 0.2 --seed 7 [--signal smooth|image|noise|piecewise] [--threads N]\n\
+           pipeline    --n 2048 --m 512 --k 64 --eps 0.2 --band-rows 128 --workers 2 [--threads N]\n\
+           evaluate    --n 256 --m 256 --k 16 --eps 0.2 --queries 100 [--threads N]\n\
            experiment  --dataset air|gesture --scale 0.1 --k 200 --eps 0.3 [--solver forest|gbdt]\n\
            tune        --dataset air|gesture --scale 0.1 --grid 8 --eps 0.3\n\
-           runtime     [--backend native|pjrt] [--dir artifacts]\n\
-           help"
+           runtime     [--backend native|pjrt] [--dir artifacts] [--threads N]\n\
+           help\n\
+         \n\
+         --threads N routes coreset/evaluate construction through the sharded\n\
+         parallel builder (sigtree::par) with N workers — output is identical\n\
+         for every N; 0 or 'auto' = all cores. Omit the flag for the classic\n\
+         monolithic build. For pipeline, --threads is an alias for --workers\n\
+         (completion-order merge: fast, but not bitwise-reproducible)."
     );
 }
 
@@ -78,22 +84,42 @@ fn make_signal(args: &Args, rng: &mut Rng) -> Result<Signal> {
     })
 }
 
+/// The `--threads` convention shared by `coreset` and `evaluate`: flag
+/// absent → the classic monolithic build; flag present (any value, even
+/// 1) → the sharded parallel builder, a pure performance knob whose
+/// output is identical for every thread count.
+fn build_coreset_from_args(args: &Args, signal: &Signal, k: usize, eps: f64) -> Result<SignalCoreset> {
+    Ok(match args.get("threads") {
+        None => SignalCoreset::build(signal, k, eps),
+        Some(_) => {
+            SignalCoreset::build_par(signal, CoresetConfig::new(k, eps), args.get_threads(1)?)
+        }
+    })
+}
+
 fn cmd_coreset(args: &Args) -> Result<()> {
     let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
     let signal = make_signal(args, &mut rng)?;
     let k = args.get_usize("k", 64)?;
     let eps = args.get_f64("eps", 0.2)?;
+    let engine = match args.get("threads") {
+        None => "monolithic".to_string(),
+        Some(_) => format!(
+            "par({} threads)",
+            sigtree::par::resolve_threads(args.get_threads(1)?)
+        ),
+    };
     let t0 = std::time::Instant::now();
-    let cs = SignalCoreset::build(&signal, k, eps);
+    let cs = build_coreset_from_args(args, &signal, k, eps)?;
     let took = t0.elapsed();
     println!(
-        "signal {}x{} ({} cells)  k={k} eps={eps}",
+        "signal {}x{} ({} cells)  k={k} eps={eps}  engine={engine}",
         signal.rows(),
         signal.cols(),
         signal.len()
     );
     println!(
-        "coreset: {} blocks, {} stored points ({:.2}% of input), sigma={:.4e}, built in {:?} ({:.2e} cells/s)",
+        "coreset: {} blocks, {} stored points ({:.2}% of present cells), sigma={:.4e}, built in {:?} ({:.2e} cells/s)",
         cs.blocks.len(),
         cs.stored_points(),
         100.0 * cs.compression_ratio(),
@@ -110,12 +136,18 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let k = args.get_usize("k", 64)?;
     let eps = args.get_f64("eps", 0.2)?;
     let cfg = PipelineConfig::new(CoresetConfig::new(k, eps))
-        .with_band_rows(args.get_usize("band-rows", 128)?)
-        .with_workers(args.get_usize("workers", 2)?);
+        .with_band_rows(args.get_usize("band-rows", 128)?);
+    // `--workers` is the historical spelling, taken literally (clamped to
+    // ≥ 1) as before; `--threads` follows the crate-wide convention
+    // (0/auto = all cores). `--workers` wins when both are given.
+    let cfg = match args.get("workers") {
+        Some(_) => cfg.with_workers(args.get_usize("workers", 2)?),
+        None => cfg.with_threads(args.get_threads(2)?),
+    };
     let t0 = std::time::Instant::now();
     let (cs, metrics) = pipeline::run(&signal, cfg);
     println!(
-        "pipeline done in {:?}: {} blocks, {:.2}% of input",
+        "pipeline done in {:?}: {} blocks, {:.2}% of present cells",
         t0.elapsed(),
         cs.blocks.len(),
         100.0 * cs.compression_ratio()
@@ -130,20 +162,27 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
     let k = args.get_usize("k", 16)?;
     let eps = args.get_f64("eps", 0.2)?;
     let queries = args.get_usize("queries", 100)?;
+    let threads = args.get_threads(1)?;
     let stats = PrefixStats::new(&signal);
-    let cs = SignalCoreset::build(&signal, k, eps);
+    let cs = build_coreset_from_args(args, &signal, k, eps)?;
+    let qs: Vec<_> = (0..queries)
+        .map(|_| {
+            let mut s = random_segmentation(signal.bounds(), k, &mut rng);
+            s.refit_values(&stats);
+            s
+        })
+        .collect();
+    // Batch evaluation runs the queries concurrently on the par pool.
+    let approxs = cs.fitting_loss_batch(&qs, threads);
     let mut worst = 0.0f64;
     let mut mean = 0.0f64;
-    for _ in 0..queries {
-        let mut s = random_segmentation(signal.bounds(), k, &mut rng);
-        s.refit_values(&stats);
+    for (s, approx) in qs.iter().zip(approxs) {
         let exact = s.loss(&stats);
-        let approx = cs.fitting_loss(&s);
         let err = sigtree::coreset::fitting_loss::relative_error(approx, exact);
         worst = worst.max(err);
         mean += err;
     }
-    mean /= queries as f64;
+    mean /= queries.max(1) as f64;
     println!(
         "coreset size {:.2}%  queries={queries}  mean rel err {:.4}  worst {:.4}  (target eps {eps})",
         100.0 * cs.compression_ratio(),
@@ -262,6 +301,38 @@ fn cmd_runtime(args: &Args) -> Result<()> {
         "tiled moments parity: sum {s:.3} vs {:.3}, sumsq {q:.3} vs {:.3}",
         exact.sum, exact.sum_sq
     );
+
+    // Parallel-engine parity (--threads N, 0/auto = all cores): the
+    // sharded builders must agree with their sequential counterparts.
+    let threads = args.get_threads(1)?;
+    if threads != 1 {
+        let resolved = sigtree::par::resolve_threads(threads);
+        let sig = generate::smooth(320, 200, 3, &mut rng);
+        let seq = PrefixStats::new(&sig);
+        let par = PrefixStats::new_par(&sig, threads);
+        let probe = Rect::new(3, 311, 11, 189);
+        let (a, b) = (seq.moments(&probe), par.moments(&probe));
+        let scale = 1.0 + a.sum_sq.abs();
+        if (a.sum - b.sum).abs() > 1e-9 * scale || (a.sum_sq - b.sum_sq).abs() > 1e-9 * scale {
+            return Err(Error::msg(format!(
+                "parallel PrefixStats parity failure: {a:?} vs {b:?}"
+            )));
+        }
+        println!("parallel PrefixStats parity OK ({resolved} threads)");
+        let cs_seq = SignalCoreset::build(&sig, 8, 0.3);
+        let cs_par = SignalCoreset::build_par(&sig, CoresetConfig::new(8, 0.3), threads);
+        let (w_seq, w_par) = (cs_seq.total_weight(), cs_par.total_weight());
+        if (w_seq - w_par).abs() > 1e-6 * (1.0 + w_seq) {
+            return Err(Error::msg(format!(
+                "build_par weight parity failure: {w_par} vs {w_seq}"
+            )));
+        }
+        println!(
+            "build_par parity OK ({} blocks par vs {} seq, weight {w_par:.1})",
+            cs_par.blocks.len(),
+            cs_seq.blocks.len()
+        );
+    }
     println!("runtime OK");
     Ok(())
 }

@@ -1,0 +1,149 @@
+//! `sigtree::par` — the std-only parallel construction engine.
+//!
+//! The paper's construction is "embarrassingly" shardable: the
+//! merge-and-reduce property (§1.1, Challenge (iv)) makes every per-block
+//! guarantee local to its row-band, so band-sharded construction composes
+//! through [`crate::coreset::merge_reduce`] with zero loss of
+//! correctness (the same observation behind the streaming/distributed
+//! compositions in Bachem et al., *Practical Coreset Constructions for
+//! Machine Learning*). This module provides the worker pool those
+//! compositions run on:
+//!
+//! * [`parallel_map`] — order-preserving map over a slice on a scoped
+//!   worker pool with atomic work-stealing (an idle worker always takes
+//!   the next unclaimed item, so ragged per-item costs balance out).
+//! * [`resolve_threads`] / [`available_threads`] — the `--threads`
+//!   convention: `0` means "all available cores".
+//!
+//! Everything is `std::thread::scope`-based — no external crates (the
+//! default build is std-only, see DESIGN.md §Substitutions) and no
+//! `'static` bounds, so workers borrow the signal directly instead of
+//! cloning it.
+//!
+//! **Determinism.** `parallel_map` returns results in input order, and
+//! the higher-level users ([`crate::coreset::SignalCoreset::build_par`],
+//! [`crate::signal::PrefixStats::new_par`]) derive their shard plans from
+//! the input alone — never from `threads` — so any thread count produces
+//! bit-identical output for the same input.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of hardware threads available to this process (≥ 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map_or(1, |p| p.get())
+}
+
+/// Resolve a `--threads` request: `0` → [`available_threads`], anything
+/// else is taken literally.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        available_threads()
+    } else {
+        threads
+    }
+}
+
+/// Map `f` over `items` on `threads` scoped workers, returning results in
+/// input order. Work distribution is a shared atomic cursor: each worker
+/// repeatedly claims the next unprocessed index, so uneven per-item costs
+/// (ragged shards, heterogeneous queries) self-balance.
+///
+/// `threads == 0` uses all available cores; `threads <= 1` (or a 0/1-item
+/// input) degenerates to a plain sequential map with no thread spawned,
+/// so callers can pass user-supplied values straight through.
+///
+/// Panics in `f` are propagated (the pool does not swallow worker
+/// panics).
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = resolve_threads(threads).min(items.len().max(1));
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut tagged: Vec<(usize, R)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        local.push((i, f(i, &items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        let mut all = Vec::with_capacity(items.len());
+        for h in handles {
+            match h.join() {
+                Ok(local) => all.extend(local),
+                // Rethrow the original payload so the caller sees the
+                // worker's actual panic message, not a generic wrapper.
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        all
+    });
+    tagged.sort_unstable_by_key(|&(i, _)| i);
+    tagged.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_zero_is_all_cores() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(0), available_threads());
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let expect: Vec<usize> = items.iter().map(|&x| x * x + 1).collect();
+        for threads in [0, 1, 2, 3, 4, 8] {
+            let got = parallel_map(&items, threads, |_, &x| x * x + 1);
+            assert_eq!(got, expect, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_map_passes_index() {
+        let items = vec!["a"; 64];
+        let got = parallel_map(&items, 4, |i, _| i);
+        assert_eq!(got, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_handles_small_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(&empty, 4, |_, &x| x).is_empty());
+        assert_eq!(parallel_map(&[7u32], 4, |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn parallel_map_balances_ragged_work() {
+        // Ragged per-item cost: results must still be exact and ordered.
+        let items: Vec<usize> = (0..40).collect();
+        let got = parallel_map(&items, 4, |_, &x| {
+            let mut acc = 0u64;
+            for i in 0..(x * 1000) {
+                acc = acc.wrapping_add(i as u64);
+            }
+            (x, acc)
+        });
+        for (i, &(x, _)) in got.iter().enumerate() {
+            assert_eq!(i, x);
+        }
+    }
+}

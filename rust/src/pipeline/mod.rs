@@ -59,6 +59,13 @@ impl PipelineConfig {
         self.workers = w.max(1);
         self
     }
+
+    /// Alias for [`Self::with_workers`] matching the CLI's `--threads`
+    /// convention: `0` means all available cores
+    /// ([`crate::par::resolve_threads`]).
+    pub fn with_threads(self, threads: usize) -> Self {
+        self.with_workers(crate::par::resolve_threads(threads))
+    }
 }
 
 /// A band job: global row offset + the band data.

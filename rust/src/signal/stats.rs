@@ -75,23 +75,43 @@ impl Moments {
     }
 }
 
-impl PrefixStats {
-    /// O(N) construction. Masked-out cells contribute zero to every
-    /// accumulator.
-    pub fn new(signal: &Signal) -> Self {
-        let n = signal.rows();
-        let m = signal.cols();
-        let stride = m + 1;
-        let mut count = vec![0.0; (n + 1) * stride];
-        let mut sum = vec![0.0; (n + 1) * stride];
-        let mut sum_sq = vec![0.0; (n + 1) * stride];
-        for r in 0..n {
-            // Running row accumulators avoid one extra pass.
-            let mut row_cnt = 0.0;
-            let mut row_sum = 0.0;
-            let mut row_sq = 0.0;
-            let up = r * stride;
-            let cur = (r + 1) * stride;
+/// Fill band-local prefix rows for signal rows `r0..r1` into
+/// `(r1 - r0) × (m + 1)` slices: local row `lr` (at offset
+/// `lr * (m + 1)`) holds the prefix over signal rows `r0..=r0+lr`, and
+/// the virtual row *above* the band is zero (the first local row is
+/// written without reading a predecessor, so disjoint bands can fill
+/// concurrently). Column 0 of every row stays untouched (callers pass
+/// zeroed buffers).
+fn fill_band_local(
+    signal: &Signal,
+    r0: usize,
+    r1: usize,
+    count: &mut [f64],
+    sum: &mut [f64],
+    sum_sq: &mut [f64],
+) {
+    let m = signal.cols();
+    let stride = m + 1;
+    for (lr, r) in (r0..r1).enumerate() {
+        // Running row accumulators avoid one extra pass.
+        let mut row_cnt = 0.0;
+        let mut row_sum = 0.0;
+        let mut row_sq = 0.0;
+        let cur = lr * stride;
+        if lr == 0 {
+            for c in 0..m {
+                if signal.is_present(r, c) {
+                    let y = signal.get(r, c);
+                    row_cnt += 1.0;
+                    row_sum += y;
+                    row_sq += y * y;
+                }
+                count[cur + c + 1] = row_cnt;
+                sum[cur + c + 1] = row_sum;
+                sum_sq[cur + c + 1] = row_sq;
+            }
+        } else {
+            let up = cur - stride;
             for c in 0..m {
                 if signal.is_present(r, c) {
                     let y = signal.get(r, c);
@@ -102,6 +122,113 @@ impl PrefixStats {
                 count[cur + c + 1] = count[up + c + 1] + row_cnt;
                 sum[cur + c + 1] = sum[up + c + 1] + row_sum;
                 sum_sq[cur + c + 1] = sum_sq[up + c + 1] + row_sq;
+            }
+        }
+    }
+}
+
+impl PrefixStats {
+    /// O(N) construction. Masked-out cells contribute zero to every
+    /// accumulator.
+    pub fn new(signal: &Signal) -> Self {
+        let n = signal.rows();
+        let m = signal.cols();
+        let stride = m + 1;
+        let mut count = vec![0.0; (n + 1) * stride];
+        let mut sum = vec![0.0; (n + 1) * stride];
+        let mut sum_sq = vec![0.0; (n + 1) * stride];
+        fill_band_local(
+            signal,
+            0,
+            n,
+            &mut count[stride..],
+            &mut sum[stride..],
+            &mut sum_sq[stride..],
+        );
+        Self { n, m, count, sum, sum_sq }
+    }
+
+    /// Parallel construction on scoped worker threads: ~64-row bands each
+    /// build their local integral images concurrently — written in place
+    /// into the disjoint row ranges each band owns, so peak memory equals
+    /// the sequential path — then a sequential O(n·m) add-only stitch
+    /// shifts every band by the final global row of the band above it.
+    /// The band plan depends only on the signal shape — never on
+    /// `threads` — so any thread count ≥ 2 yields bit-identical
+    /// statistics (and all of them match [`Self::new`] up to f64
+    /// reassociation noise, ≲ 1e-12 relative). `threads == 0` uses all
+    /// available cores; small signals fall back to the sequential path.
+    pub fn new_par(signal: &Signal, threads: usize) -> Self {
+        const BAND_ROWS: usize = 64;
+        let threads = crate::par::resolve_threads(threads);
+        let n = signal.rows();
+        let m = signal.cols();
+        let bands = n.div_ceil(BAND_ROWS);
+        if threads <= 1 || bands <= 1 {
+            return Self::new(signal);
+        }
+        let stride = m + 1;
+        let ranges: Vec<(usize, usize)> = (0..bands)
+            .map(|b| (b * BAND_ROWS, ((b + 1) * BAND_ROWS).min(n)))
+            .collect();
+        let mut count = vec![0.0; (n + 1) * stride];
+        let mut sum = vec![0.0; (n + 1) * stride];
+        let mut sum_sq = vec![0.0; (n + 1) * stride];
+        // Phase 1 (parallel): band-local prefixes, each band writing its
+        // own array rows r0+1 ..= r1 (disjoint `split_at_mut` slices).
+        {
+            type BandJob<'a> = ((usize, usize), (&'a mut [f64], &'a mut [f64], &'a mut [f64]));
+            let mut jobs: Vec<BandJob<'_>> = Vec::with_capacity(bands);
+            let mut c_rest: &mut [f64] = &mut count[stride..];
+            let mut s_rest: &mut [f64] = &mut sum[stride..];
+            let mut q_rest: &mut [f64] = &mut sum_sq[stride..];
+            for &(r0, r1) in &ranges {
+                let len = (r1 - r0) * stride;
+                let (c_band, c_tail) = std::mem::take(&mut c_rest).split_at_mut(len);
+                let (s_band, s_tail) = std::mem::take(&mut s_rest).split_at_mut(len);
+                let (q_band, q_tail) = std::mem::take(&mut q_rest).split_at_mut(len);
+                c_rest = c_tail;
+                s_rest = s_tail;
+                q_rest = q_tail;
+                jobs.push(((r0, r1), (c_band, s_band, q_band)));
+            }
+            // Static round-robin assignment: bands have near-equal cost
+            // by construction, and &mut slices cannot go through the
+            // shared-cursor pool.
+            let workers = threads.min(jobs.len()).max(1);
+            let mut assigned: Vec<Vec<BandJob<'_>>> = (0..workers).map(|_| Vec::new()).collect();
+            for (i, job) in jobs.into_iter().enumerate() {
+                assigned[i % workers].push(job);
+            }
+            std::thread::scope(|scope| {
+                for work in assigned {
+                    scope.spawn(move || {
+                        for ((r0, r1), (c, s, q)) in work {
+                            fill_band_local(signal, r0, r1, c, s, q);
+                        }
+                    });
+                }
+            });
+        }
+        // Phase 2 (sequential O(n·m) stitch): band 0 is already global;
+        // every later band adds the final global row the band above it
+        // produced (pure adds, no branches — cheaper per cell than the
+        // accumulation pass above).
+        let mut off_cnt = vec![0.0; stride];
+        let mut off_sum = vec![0.0; stride];
+        let mut off_sq = vec![0.0; stride];
+        for &(r0, r1) in ranges.iter().skip(1) {
+            let off = r0 * stride;
+            off_cnt.copy_from_slice(&count[off..off + stride]);
+            off_sum.copy_from_slice(&sum[off..off + stride]);
+            off_sq.copy_from_slice(&sum_sq[off..off + stride]);
+            for t in (r0 + 1)..=r1 {
+                let base = t * stride;
+                for c in 1..stride {
+                    count[base + c] += off_cnt[c];
+                    sum[base + c] += off_sum[c];
+                    sum_sq[base + c] += off_sq[c];
+                }
             }
         }
         Self { n, m, count, sum, sum_sq }
@@ -292,6 +419,41 @@ mod tests {
             slow += d * d;
         }
         assert!((fast - slow).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_construction_matches_sequential() {
+        let mut rng = Rng::new(2026);
+        // Ragged height (not a multiple of the 64-row band), masked cells.
+        let mut sig = Signal::from_fn(150, 37, |r, c| ((r * 13 + c * 29) % 17) as f64 - 8.0);
+        sig.mask_rect(Rect::new(40, 90, 5, 20));
+        let seq = PrefixStats::new(&sig);
+        for threads in [0, 1, 2, 3, 4] {
+            let par = PrefixStats::new_par(&sig, threads);
+            for _ in 0..100 {
+                let r0 = rng.usize(150);
+                let r1 = rng.range(r0, 150);
+                let c0 = rng.usize(37);
+                let c1 = rng.range(c0, 37);
+                let rect = Rect::new(r0, r1, c0, c1);
+                let a = seq.moments(&rect);
+                let b = par.moments(&rect);
+                assert_eq!(a.count, b.count, "threads {threads} rect {rect:?}");
+                let scale = 1.0 + a.sum.abs() + a.sum_sq.abs();
+                assert!((a.sum - b.sum).abs() < 1e-9 * scale, "threads {threads}");
+                assert!((a.sum_sq - b.sum_sq).abs() < 1e-9 * scale, "threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_construction_small_signal_falls_back() {
+        // Below one band the parallel path must be the sequential one.
+        let sig = Signal::from_fn(20, 8, |r, c| (r + c) as f64);
+        let seq = PrefixStats::new(&sig);
+        let par = PrefixStats::new_par(&sig, 4);
+        let whole = sig.bounds();
+        assert_eq!(seq.moments(&whole), par.moments(&whole));
     }
 
     #[test]

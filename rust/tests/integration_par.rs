@@ -1,0 +1,220 @@
+//! Differential tests for the parallel construction engine
+//! (`sigtree::par`): the sharded builders must be thread-count-invariant
+//! (bit-identical output for any worker count) and agree with the
+//! sequential pipeline on weight, moments, and fitting loss — on
+//! aligned, ragged, and masked signals.
+
+use sigtree::coreset::merge_reduce::StreamingCoreset;
+use sigtree::coreset::{Coreset, CoresetConfig, SignalCoreset};
+use sigtree::rng::Rng;
+use sigtree::segmentation::random_segmentation;
+use sigtree::signal::{generate, PrefixStats, Rect, Signal};
+
+/// Aggregate (count, Σwy, Σwy²) over all blocks of a coreset.
+fn aggregate_moments(cs: &SignalCoreset) -> (f64, f64, f64) {
+    let mut c = 0.0;
+    let mut s = 0.0;
+    let mut q = 0.0;
+    for b in &cs.blocks {
+        let m = b.moments();
+        c += m.count;
+        s += m.sum;
+        q += m.sum_sq;
+    }
+    (c, s, q)
+}
+
+/// Core differential check: build_par at 1..=4 threads must produce the
+/// identical coreset; its weight/moments must match the sequential build;
+/// its fitting loss must sit within the sequential tolerance.
+fn assert_par_matches_sequential(sig: &Signal, k: usize, eps: f64, loss_tol: f64, seed: u64) {
+    let config = CoresetConfig::new(k, eps);
+    let stats = PrefixStats::new(sig);
+    let seq = SignalCoreset::build_with(sig, config);
+    let reference = SignalCoreset::build_par(sig, config, 1);
+
+    // Thread-count invariance: bit-identical blocks for every count.
+    for threads in 2..=4 {
+        let par = SignalCoreset::build_par(sig, config, threads);
+        assert_eq!(
+            par.blocks.len(),
+            reference.blocks.len(),
+            "threads {threads}: block count"
+        );
+        for (a, b) in par.blocks.iter().zip(&reference.blocks) {
+            assert_eq!(a.rect, b.rect, "threads {threads}");
+            assert_eq!(a.labels, b.labels, "threads {threads}");
+            assert_eq!(a.weights, b.weights, "threads {threads}");
+        }
+    }
+
+    // Weight and global moments match the sequential build exactly
+    // (both are the exact moments of the present cells).
+    let w_scale = 1.0 + seq.total_weight();
+    assert!(
+        (reference.total_weight() - seq.total_weight()).abs() <= 1e-9 * w_scale,
+        "weight {} vs {}",
+        reference.total_weight(),
+        seq.total_weight()
+    );
+    let (pc, ps, pq) = aggregate_moments(&reference);
+    let (sc, ss, sq) = aggregate_moments(&seq);
+    let m_scale = 1.0 + sc.abs() + ss.abs() + sq.abs();
+    assert!((pc - sc).abs() <= 1e-7 * m_scale, "count {pc} vs {sc}");
+    assert!((ps - ss).abs() <= 1e-7 * m_scale, "sum {ps} vs {ss}");
+    assert!((pq - sq).abs() <= 1e-6 * m_scale, "sum_sq {pq} vs {sq}");
+
+    // Fitting loss within the sequential tolerance on random queries.
+    let mut rng = Rng::new(seed);
+    for _ in 0..10 {
+        let mut s = random_segmentation(sig.bounds(), k, &mut rng);
+        s.refit_values(&stats);
+        let exact = s.loss(&stats);
+        let par_loss = reference.fitting_loss(&s);
+        let seq_loss = seq.fitting_loss(&s);
+        assert!(
+            (par_loss - exact).abs() <= loss_tol * exact + 1e-6,
+            "par {par_loss} vs exact {exact}"
+        );
+        assert!(
+            (seq_loss - exact).abs() <= loss_tol * exact + 1e-6,
+            "seq {seq_loss} vs exact {exact}"
+        );
+    }
+}
+
+#[test]
+fn build_par_aligned_signal() {
+    // Height is an exact multiple of the 64-row shard.
+    let mut rng = Rng::new(300);
+    let sig = generate::smooth(256, 48, 3, &mut rng);
+    assert_par_matches_sequential(&sig, 4, 0.3, 0.35, 1300);
+}
+
+#[test]
+fn build_par_ragged_signal() {
+    // 250 rows → 3 uneven shards (83/83/84 rows).
+    let mut rng = Rng::new(301);
+    let sig = generate::image_like(250, 40, 3, &mut rng);
+    assert_par_matches_sequential(&sig, 5, 0.3, 0.5, 1301);
+}
+
+#[test]
+fn build_par_masked_signal() {
+    let mut rng = Rng::new(302);
+    let mut sig = generate::smooth(192, 40, 3, &mut rng);
+    // A fully-masked middle shard (rows 64..=127) plus a partial patch:
+    // exercises zero-weight block dropping inside the workers.
+    sig.mask_rect(Rect::new(64, 127, 0, 39));
+    sig.mask_rect(Rect::new(10, 20, 5, 15));
+    let present = sig.present() as f64;
+    let config = CoresetConfig::new(4, 0.3);
+    let reference = SignalCoreset::build_par(&sig, config, 1);
+    for threads in 2..=4 {
+        let par = SignalCoreset::build_par(&sig, config, threads);
+        assert_eq!(par.blocks.len(), reference.blocks.len());
+        for (a, b) in par.blocks.iter().zip(&reference.blocks) {
+            assert_eq!(a.rect, b.rect);
+            assert_eq!(a.weights, b.weights);
+        }
+    }
+    assert!(
+        (reference.total_weight() - present).abs() <= 1e-6 * present,
+        "weight {} vs present {present}",
+        reference.total_weight()
+    );
+    for b in &reference.blocks {
+        assert!(b.total_weight() > 0.0, "empty block survived: {:?}", b.rect);
+    }
+    // compression_ratio must divide by present cells (satellite fix).
+    let expected = reference.stored_points() as f64 / reference.total_weight();
+    assert!((reference.compression_ratio() - expected).abs() < 1e-12);
+}
+
+#[test]
+fn batch_fitting_loss_matches_sequential_for_any_thread_count() {
+    let mut rng = Rng::new(303);
+    let sig = generate::smooth(128, 64, 3, &mut rng);
+    let stats = PrefixStats::new(&sig);
+    let cs = SignalCoreset::build(&sig, 6, 0.25);
+    let queries: Vec<_> = (0..17)
+        .map(|_| {
+            let mut s = random_segmentation(sig.bounds(), 6, &mut rng);
+            s.refit_values(&stats);
+            s
+        })
+        .collect();
+    let expect: Vec<f64> = queries.iter().map(|s| cs.fitting_loss(s)).collect();
+    for threads in [0, 1, 2, 3, 4] {
+        let got = cs.fitting_loss_batch(&queries, threads);
+        assert_eq!(got, expect, "threads {threads}");
+    }
+}
+
+#[test]
+fn streaming_through_parallel_builder() {
+    // Drive row-bands through StreamingCoreset with the parallel
+    // per-band builder: weight conservation and query quality must match
+    // the sequential streaming path.
+    let mut rng = Rng::new(304);
+    let sig = generate::smooth(320, 30, 3, &mut rng);
+    let stats = PrefixStats::new(&sig);
+    let config = CoresetConfig::new(4, 0.3);
+    let mut stream = StreamingCoreset::new(30, config).with_threads(3);
+    // 160-row bands → each band is 2 shards wide, so every push actually
+    // exercises the parallel sharded builder (not its small-band
+    // sequential fallback).
+    let mut r0 = 0;
+    while r0 < 320 {
+        let r1 = (r0 + 159).min(319);
+        stream.push_band(&sig.crop(Rect::new(r0, r1, 0, 29)));
+        r0 = r1 + 1;
+    }
+    assert_eq!(stream.rows_seen(), 320);
+    let cs = stream.finish().unwrap();
+    let cells = (320 * 30) as f64;
+    assert!((cs.total_weight() - cells).abs() < 1e-6 * cells);
+    // The worker count is a pure performance knob: with_threads(1) must
+    // stream the bit-identical coreset.
+    let mut stream1 = StreamingCoreset::new(30, config).with_threads(1);
+    let mut r0 = 0;
+    while r0 < 320 {
+        let r1 = (r0 + 159).min(319);
+        stream1.push_band(&sig.crop(Rect::new(r0, r1, 0, 29)));
+        r0 = r1 + 1;
+    }
+    let cs1 = stream1.finish().unwrap();
+    assert_eq!(cs.blocks.len(), cs1.blocks.len());
+    for (a, b) in cs.blocks.iter().zip(&cs1.blocks) {
+        assert_eq!(a.rect, b.rect);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.weights, b.weights);
+    }
+    for _ in 0..5 {
+        let mut s = random_segmentation(sig.bounds(), 4, &mut rng);
+        s.refit_values(&stats);
+        let exact = s.loss(&stats);
+        let approx = cs.fitting_loss(&s);
+        assert!(
+            (approx - exact).abs() <= 0.35 * exact + 1e-6,
+            "{approx} vs {exact}"
+        );
+    }
+}
+
+#[test]
+fn parallel_prefix_stats_agree_on_coreset_path() {
+    // Building a coreset from parallel-constructed statistics must match
+    // the sequential-statistics build (same partition decisions — the
+    // stats agree to ~1e-12 relative).
+    let mut rng = Rng::new(305);
+    let sig = generate::smooth(200, 50, 3, &mut rng);
+    let config = CoresetConfig::new(4, 0.3);
+    let seq_stats = PrefixStats::new(&sig);
+    let par_stats = PrefixStats::new_par(&sig, 4);
+    let a = SignalCoreset::build_with_stats(&sig, &seq_stats, config);
+    let b = SignalCoreset::build_with_stats(&sig, &par_stats, config);
+    let scale = 1.0 + a.total_weight();
+    assert!((a.total_weight() - b.total_weight()).abs() < 1e-9 * scale);
+    assert!((a.opt1() - b.opt1()).abs() <= 1e-6 * (1.0 + a.opt1()));
+}

@@ -9,4 +9,11 @@ cargo build --release
 cargo test -q
 cargo build --examples
 
+# The PJRT path must stay compile-clean against the bundled stub.
+cargo check --features pjrt
+
+# Multi-thread smoke: exercises the sigtree::par code paths (sharded
+# build, parallel prefix stats) plus the kernel parity checks.
+cargo run --release -- runtime --backend native --threads 2
+
 echo "verify.sh: OK"
