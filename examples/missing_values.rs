@@ -76,7 +76,8 @@ fn main() {
         let grid = log_grid(8, 512, 6);
         let full = tune_full(&masked, &held, &grid, Solver::RandomForest, 9);
         let core = tune_coreset(&masked, &held, &grid, 500, 0.3, Solver::RandomForest, 9);
-        let uni = tune_uniform(&masked, &held, &grid, core.compression_size, Solver::RandomForest, 9);
+        let uni =
+            tune_uniform(&masked, &held, &grid, core.compression_size, Solver::RandomForest, 9);
 
         let mut table = Table::new(&["scheme", "size", "time", "best k", "best test SSE"]);
         for curve in [&full, &core, &uni] {

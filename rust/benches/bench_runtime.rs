@@ -11,7 +11,53 @@ use sigtree::rng::Rng;
 use sigtree::runtime::{pad_integral, KernelBackend, NativeBackend, RECT_BATCH, TILE};
 use sigtree::segmentation::{random_segmentation, KSegmentation};
 use sigtree::signal::{generate, PrefixStats, Rect, Signal};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+/// Counting wrapper around the system allocator, so the zero-copy build
+/// path's allocation profile is a first-class bench output: before the
+/// SignalView/shared-stats refactor every shard paid an O(area) crop
+/// plus three O(area) integral images; now shards are `(&PrefixStats,
+/// Rect)` windows and per-shard allocations are small and flat.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+fn alloc_snapshot() -> (u64, u64) {
+    (
+        ALLOC_CALLS.load(Ordering::Relaxed),
+        ALLOC_BYTES.load(Ordering::Relaxed),
+    )
+}
 
 #[cfg(feature = "pjrt")]
 fn pjrt_backend() -> Option<Box<dyn KernelBackend>> {
@@ -175,6 +221,47 @@ fn main() {
          ({} cores available); shard plans are thread-independent, so every row\n\
          computes the bit-identical result.",
         sigtree::par::available_threads()
+    );
+
+    // ---- zero-copy allocation profile -----------------------------------
+    // One uninstrumented run per thread count (outside `bench` so warmup
+    // repetitions don't inflate the counters). The one-time shared
+    // PrefixStats (3 integral arrays, ~6 MiB at 512²) is measured
+    // separately and subtracted, so the per-shard columns show only the
+    // shard-attributable allocations — which stay small and flat in the
+    // shard area now that shards are `(&PrefixStats, Rect)` windows
+    // instead of O(area) crops + per-shard integral rebuilds.
+    let shards = (512 / 64) as f64;
+    let mut alloc_table = Table::new(&[
+        "op",
+        "threads",
+        "allocs total",
+        "stats allocs",
+        "allocs/shard",
+        "KiB/shard",
+    ]);
+    for &t in &[1usize, 2, 4, 8] {
+        let (c0, b0) = alloc_snapshot();
+        let stats_probe = PrefixStats::new_par(&sig512, t);
+        let (c1, b1) = alloc_snapshot();
+        drop(stats_probe);
+        let cs = SignalCoreset::build_par(&sig512, config, t);
+        let (c2, b2) = alloc_snapshot();
+        let stats_allocs = (c1 - c0) as f64;
+        let stats_bytes = (b1 - b0) as f64;
+        let shard_allocs = ((c2 - c1) as f64 - stats_allocs).max(0.0);
+        let shard_kib = ((b2 - b1) as f64 - stats_bytes).max(0.0) / 1024.0;
+        alloc_table.row(&[
+            format!("build_par (512x512, {} blocks)", cs.blocks.len()),
+            format!("{t}"),
+            fmt_f((c2 - c1) as f64),
+            fmt_f(stats_allocs),
+            fmt_f(shard_allocs / shards),
+            fmt_f(shard_kib / shards),
+        ]);
+    }
+    alloc_table.print(
+        "allocation counts on the build path (8 shards; shared-stats cost subtracted)",
     );
 
     if names.iter().any(|n| n.starts_with("pjrt")) {

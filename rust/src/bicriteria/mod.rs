@@ -49,8 +49,20 @@ pub struct Bicriteria {
 /// at smaller scales; we keep the best bound). Returns `None` when no
 /// grid granularity satisfies pq > 2k(p+q) (grid too small for this k).
 pub fn grid_lower_bound(stats: &PrefixStats, k: usize, rounds: usize) -> Option<f64> {
-    let n = stats.rows();
-    let m = stats.cols();
+    grid_lower_bound_in(stats, stats.bounds(), k, rounds)
+}
+
+/// [`grid_lower_bound`] restricted to `region` — all grid blocks are
+/// sub-rectangles of `region`, answered by the same globally built
+/// `stats` (shards never build their own integral images).
+pub fn grid_lower_bound_in(
+    stats: &PrefixStats,
+    region: Rect,
+    k: usize,
+    rounds: usize,
+) -> Option<f64> {
+    let n = region.height();
+    let m = region.width();
     // Shape adjustment: grow an axis until the counting argument
     // pq > 2k(p+q) holds. This is pure feasibility search and must not
     // consume `rounds` — the old accounting burned one round per
@@ -75,7 +87,7 @@ pub fn grid_lower_bound(stats: &PrefixStats, k: usize, rounds: usize) -> Option<
     // monotone in each axis.
     let mut best: Option<f64> = None;
     for _ in 0..rounds.max(1) {
-        let bound = grid_bound_once(stats, k, p, q);
+        let bound = grid_bound_once(stats, region, k, p, q);
         best = Some(best.map_or(bound, |b: f64| b.max(bound)));
         if p >= n && q >= m {
             break;
@@ -86,17 +98,20 @@ pub fn grid_lower_bound(stats: &PrefixStats, k: usize, rounds: usize) -> Option<
     best
 }
 
-/// One grid round: p row-bands × q col-bands, keep the pq − 2k(p+q)
-/// smallest opt₁ values.
-fn grid_bound_once(stats: &PrefixStats, k: usize, p: usize, q: usize) -> f64 {
-    let n = stats.rows();
-    let m = stats.cols();
-    let row_edges = band_edges(n, p);
-    let col_edges = band_edges(m, q);
+/// One grid round: p row-bands × q col-bands of `region`, keep the
+/// pq − 2k(p+q) smallest opt₁ values.
+fn grid_bound_once(stats: &PrefixStats, region: Rect, k: usize, p: usize, q: usize) -> f64 {
+    let row_edges = band_edges(region.height(), p);
+    let col_edges = band_edges(region.width(), q);
     let mut losses: Vec<f64> = Vec::with_capacity(p * q);
     for rw in row_edges.windows(2) {
         for cw in col_edges.windows(2) {
-            let rect = Rect::new(rw[0], rw[1] - 1, cw[0], cw[1] - 1);
+            let rect = Rect::new(
+                region.r0 + rw[0],
+                region.r0 + rw[1] - 1,
+                region.c0 + cw[0],
+                region.c0 + cw[1] - 1,
+            );
             losses.push(stats.opt1(&rect));
         }
     }
@@ -128,6 +143,11 @@ pub fn greedy_upper(stats: &PrefixStats, budget: usize) -> f64 {
     crate::segmentation::greedy::greedy_tree_loss(stats, budget.max(1))
 }
 
+/// [`greedy_upper`] restricted to `region` of the shared statistics.
+pub fn greedy_upper_in(stats: &PrefixStats, region: Rect, budget: usize) -> f64 {
+    crate::segmentation::greedy::greedy_tree_loss_on(stats, region, budget.max(1))
+}
+
 /// Nominal (α, β) constants used by Algorithm 3 to derive γ; kept small
 /// (the paper's worst-case k^{O(1)} log² N blows γ to uselessness for any
 /// real input — see the paper's own §4 "Coreset size" discussion; the
@@ -144,8 +164,16 @@ pub fn nominal_alpha_beta(n: usize, m: usize, k: usize) -> (f64, f64) {
 /// exist and the greedy estimate stays below the certified ceiling
 /// (σ must never exceed opt_k, and certified ≤ opt_k always holds).
 pub fn bicriteria(stats: &PrefixStats, k: usize) -> Bicriteria {
-    let n = stats.rows();
-    let m = stats.cols();
+    bicriteria_in(stats, stats.bounds(), k)
+}
+
+/// [`bicriteria`] restricted to `region`: the estimator the sharded
+/// builders run per row-band against the one shared `PrefixStats` —
+/// no per-shard integral images, no cropped signals. For
+/// `region == stats.bounds()` this is exactly [`bicriteria`].
+pub fn bicriteria_in(stats: &PrefixStats, region: Rect, k: usize) -> Bicriteria {
+    let n = region.height();
+    let m = region.width();
     let (alpha, beta) = nominal_alpha_beta(n, m, k);
     // σ estimation. Theory says σ = ℓ(D,s)/α with α = k log N, but for a
     // *good* s that divisor is ~100× too conservative, driving the
@@ -162,8 +190,8 @@ pub fn bicriteria(stats: &PrefixStats, k: usize) -> Bicriteria {
     let budget = ((4.0 * beta * k as f64) as usize)
         .min((n * m / 32).max(8))
         .max(8);
-    let upper = greedy_upper(stats, budget);
-    let certified = grid_lower_bound(stats, k, 4);
+    let upper = greedy_upper_in(stats, region, budget);
+    let certified = grid_lower_bound_in(stats, region, k, 4);
     let floor_estimate = upper / 2.0;
     match certified {
         Some(lb) if lb > 0.0 => Bicriteria {
@@ -301,6 +329,34 @@ mod tests {
         assert!(bc.sigma > 0.0);
         assert!(bc.loss > 0.0);
         assert!(bc.alpha >= 1.0 && bc.beta >= 1.0);
+    }
+
+    #[test]
+    fn region_bicriteria_tracks_cropped_stats() {
+        // The shard path estimates σ for a row-band against the shared
+        // global statistics; it must agree with the old crop-and-rebuild
+        // estimate. Exact equality is not guaranteed (global prefixes
+        // subtract where local ones accumulate, and a ~1e-12 gain tie can
+        // flip one greedy cut), so assert tight relative agreement.
+        let mut rng = Rng::new(33);
+        let sig = generate::smooth(120, 40, 3, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let band = Rect::new(40, 99, 0, 39);
+        let shared = bicriteria_in(&stats, band, 4);
+        let local = bicriteria(&PrefixStats::new(&sig.crop(band)), 4);
+        assert_eq!(shared.certified, local.certified);
+        assert!(
+            (shared.sigma - local.sigma).abs() <= 0.02 * (1.0 + local.sigma),
+            "sigma {} vs {}",
+            shared.sigma,
+            local.sigma
+        );
+        assert!(
+            (shared.loss - local.loss).abs() <= 0.02 * (1.0 + local.loss),
+            "loss {} vs {}",
+            shared.loss,
+            local.loss
+        );
     }
 
     #[test]

@@ -351,7 +351,8 @@ mod tests {
             let r1: f64 = ys.iter().zip(&l).map(|(y, li)| y * y * li).sum();
             let r2: f64 = l.iter().sum();
             assert!(r0.abs() < 1e-6 * norm, "{r0}");
-            assert!(r1.abs() < 1e-5 * norm * (1.0 + ys.iter().map(|y| y*y).fold(0.0, f64::max)), "{r1}");
+            let y2_max = ys.iter().map(|y| y * y).fold(0.0, f64::max);
+            assert!(r1.abs() < 1e-5 * norm * (1.0 + y2_max), "{r1}");
             assert!(r2.abs() < 1e-6 * norm, "{r2}");
         }
     }

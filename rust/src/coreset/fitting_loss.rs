@@ -14,6 +14,12 @@
 //!   the weight it covers inside B, and the coreset points are consumed
 //!   in order, possibly fractionally, until each piece's demand is met.
 //!   Lemma 14 bounds the resulting error by ε·ℓ(B,s) + O(opt₁(B)/ε).
+//!
+//! Evaluation is already zero-copy end to end: it reads only the stored
+//! `(Rect, moments)` per block — never the signal — and the exact-loss
+//! oracle it is tested against (`KSegmentation::loss`) runs on
+//! `(&PrefixStats, Rect)` queries, so no code path here materializes a
+//! sub-signal (DESIGN.md §Views & Memory).
 
 use crate::segmentation::KSegmentation;
 use super::{BlockCoreset, SignalCoreset};

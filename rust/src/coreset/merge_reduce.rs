@@ -18,7 +18,7 @@
 
 use std::collections::HashMap;
 
-use crate::signal::Rect;
+use crate::signal::{Rect, SignalSource};
 
 use super::caratheodory::CaratheodoryReducer;
 use super::{BlockCoreset, CoresetConfig, SignalCoreset};
@@ -159,8 +159,12 @@ impl StreamingCoreset {
         self
     }
 
-    /// Ingest the next band (must have width m).
-    pub fn push_band(&mut self, band: &crate::signal::Signal) {
+    /// Ingest the next band (must have width m). Generic over
+    /// [`SignalSource`]: callers that still hold the full signal can
+    /// stream zero-copy [`crate::signal::SignalView`] windows; true
+    /// streaming sources keep handing in owned [`crate::signal::Signal`]
+    /// bands. Either way the band coreset is identical.
+    pub fn push_band<S: SignalSource>(&mut self, band: &S) {
         assert_eq!(band.cols(), self.m);
         let part = match self.threads {
             None => SignalCoreset::build_with(band, self.config),
@@ -201,13 +205,15 @@ mod tests {
     use crate::coreset::Coreset;
     use crate::rng::Rng;
     use crate::segmentation::random_segmentation;
-    use crate::signal::{generate, PrefixStats, Signal};
+    use crate::signal::{generate, PrefixStats, Signal, SignalView};
 
-    fn band_split(sig: &Signal, bands: usize) -> Vec<Signal> {
+    /// Zero-copy row-bands of `sig` (the builders are generic over
+    /// [`SignalSource`], so tests stream views instead of crops).
+    fn band_split(sig: &Signal, bands: usize) -> Vec<SignalView<'_>> {
         let edges = crate::bicriteria::band_edges(sig.rows(), bands);
         edges
             .windows(2)
-            .map(|w| sig.crop(Rect::new(w[0], w[1] - 1, 0, sig.cols() - 1)))
+            .map(|w| sig.view(Rect::new(w[0], w[1] - 1, 0, sig.cols() - 1)))
             .collect()
     }
 

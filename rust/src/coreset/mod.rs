@@ -37,7 +37,7 @@ pub mod uniform;
 use crate::bicriteria;
 use crate::partition;
 use crate::segmentation::KSegmentation;
-use crate::signal::{PrefixStats, Rect, Signal};
+use crate::signal::{PrefixStats, Rect, SignalSource};
 
 /// One weighted coreset point: grid coordinates, label, weight.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -59,29 +59,25 @@ pub struct BlockCoreset {
 }
 
 impl BlockCoreset {
-    /// Build from a signal block via Caratheodory compression.
-    /// Row-contiguous iteration over the raw value buffer (perf pass,
-    /// EXPERIMENTS.md §Perf): avoids the per-cell (r, c) → index
-    /// arithmetic of the generic cell iterator.
-    pub fn from_block(signal: &Signal, rect: Rect) -> Self {
+    /// Build from a signal block via Caratheodory compression, over any
+    /// [`SignalSource`] (owned signal or zero-copy view; `rect` is in the
+    /// source's coordinates). Row-contiguous iteration over the source's
+    /// row slices (perf pass, EXPERIMENTS.md §Perf): avoids the per-cell
+    /// (r, c) → index arithmetic of the generic cell iterator.
+    pub fn from_block<S: SignalSource>(signal: &S, rect: Rect) -> Self {
         let mut red = caratheodory::CaratheodoryReducer::new();
-        let m = signal.cols();
-        let values = signal.values();
-        match signal.mask() {
-            None => {
-                for r in rect.r0..=rect.r1 {
-                    let row = &values[r * m + rect.c0..=r * m + rect.c1];
+        for r in rect.r0..=rect.r1 {
+            let row = &signal.row_values(r)[rect.c0..=rect.c1];
+            match signal.row_mask(r) {
+                None => {
                     for &y in row {
                         red.push(y, 1.0);
                     }
                 }
-            }
-            Some(mask) => {
-                for r in rect.r0..=rect.r1 {
-                    let base = r * m;
-                    for c in rect.c0..=rect.c1 {
-                        if mask[base + c] {
-                            red.push(values[base + c], 1.0);
+                Some(mask) => {
+                    for (&y, &present) in row.iter().zip(&mask[rect.c0..=rect.c1]) {
+                        if present {
+                            red.push(y, 1.0);
                         }
                     }
                 }
@@ -194,28 +190,67 @@ pub struct SignalCoreset {
 }
 
 impl SignalCoreset {
-    /// Algorithm 3 with the practical default calibration.
-    pub fn build(signal: &Signal, k: usize, eps: f64) -> Self {
+    /// Algorithm 3 with the practical default calibration. Generic over
+    /// [`SignalSource`]: building over a zero-copy [`crate::signal::SignalView`]
+    /// is bit-identical to building over the equivalent [`crate::signal::Signal::crop`]
+    /// (same data, same iteration order — the view/crop differential
+    /// suite in `tests/integration_views.rs` pins this down).
+    pub fn build<S: SignalSource>(signal: &S, k: usize, eps: f64) -> Self {
         Self::build_with(signal, CoresetConfig::new(k, eps))
     }
 
     /// Algorithm 3 with explicit configuration.
-    pub fn build_with(signal: &Signal, config: CoresetConfig) -> Self {
+    pub fn build_with<S: SignalSource>(signal: &S, config: CoresetConfig) -> Self {
         let stats = PrefixStats::new(signal);
         Self::build_with_stats(signal, &stats, config)
     }
 
     /// Variant reusing precomputed prefix statistics (the pipeline path).
-    pub fn build_with_stats(
-        signal: &Signal,
+    /// `stats` must cover `signal`'s coordinate frame.
+    pub fn build_with_stats<S: SignalSource>(
+        signal: &S,
         stats: &PrefixStats,
         config: CoresetConfig,
     ) -> Self {
+        Self::build_in(signal, stats, signal.bounds(), config)
+    }
+
+    /// Region-scoped Algorithm 3 — the zero-copy shard primitive: run
+    /// bicriteria → partition → per-block Caratheodory on the
+    /// sub-rectangle `region` of `signal`, answering every statistics
+    /// query from the one shared `stats` (built once for the whole
+    /// signal). Blocks come out directly in `signal`'s coordinates, so
+    /// band shards need no cropped copies, no per-shard integral images,
+    /// and no row-offset fixups. For `region == signal.bounds()` this is
+    /// exactly the monolithic [`Self::build_with_stats`].
+    ///
+    /// **Coordinate contract.** Blocks stay in `signal`'s frame while
+    /// the returned coreset's `rows()`/`cols()` are the *region's*
+    /// dimensions (what [`merge_reduce::merge`] sums when composing
+    /// row-bands). Consequently a partial coreset from an interior
+    /// region must be queried with segmentations expressed in the
+    /// signal's coordinate frame (as [`Coreset::fitting_loss`] is over
+    /// the merged result), not in a region-local 0-based frame — if you
+    /// want a self-contained region-local coreset instead, build over
+    /// `signal.view(region)`.
+    pub fn build_in<S: SignalSource>(
+        signal: &S,
+        stats: &PrefixStats,
+        region: Rect,
+        config: CoresetConfig,
+    ) -> Self {
+        // Hard assert (two usize compares vs an O(area) build): mixing a
+        // view with the parent signal's stats would otherwise produce a
+        // silently wrong coreset or a slice panic deep in the build.
+        assert!(
+            stats.rows() == signal.rows() && stats.cols() == signal.cols(),
+            "stats must be built over the same coordinate frame as signal"
+        );
         let sigma = config
             .sigma
-            .unwrap_or_else(|| bicriteria::bicriteria(stats, config.k).sigma);
+            .unwrap_or_else(|| bicriteria::bicriteria_in(stats, region, config.k).sigma);
         let gamma = config.gamma.unwrap_or(config.eps / 2.0).clamp(1e-9, 1.0);
-        let rects = partition::partition(stats, gamma, sigma);
+        let rects = partition::partition_in(stats, region, gamma, sigma);
         // Fully-masked blocks compress to an all-zero-weight support;
         // drop them (they carry no moments and would only pad
         // `stored_points`).
@@ -225,8 +260,8 @@ impl SignalCoreset {
             .filter(|b| !b.is_empty())
             .collect();
         Self {
-            n: signal.rows(),
-            m: signal.cols(),
+            n: region.height(),
+            m: region.width(),
             config,
             sigma,
             gamma,
@@ -234,35 +269,43 @@ impl SignalCoreset {
         }
     }
 
-    /// Parallel Algorithm 3 on the [`crate::par`] worker pool: row-shard
-    /// the signal into ⌊n/64⌋ near-equal bands (64–127 rows each, via
+    /// Parallel Algorithm 3 on the [`crate::par`] worker pool: build one
+    /// shared [`PrefixStats`] for the whole signal (via the thread-
+    /// invariant [`PrefixStats::new_par`]), row-shard into ⌊n/64⌋
+    /// near-equal bands (64–127 rows each, via
     /// [`bicriteria::band_edges`]), run the full bicriteria → partition →
-    /// per-block Caratheodory pipeline per shard on scoped workers, then
-    /// compose through the existing merge-and-reduce path.
+    /// per-block Caratheodory pipeline per shard through
+    /// [`Self::build_in`] — each shard an O(1) `(&PrefixStats, Rect)`
+    /// window, **zero per-shard copies or integral-image rebuilds** —
+    /// then compose through the existing merge-and-reduce path.
     /// Every per-block guarantee is local to its band (the merge-and-
     /// reduce property, §1.1 Challenge (iv)), so sharding never weakens
-    /// the coreset — see DESIGN.md §Parallelism.
+    /// the coreset — see DESIGN.md §Parallelism and §Views & Memory.
     ///
-    /// The shard plan depends only on the signal shape, never on
-    /// `threads`, so any thread count produces the bit-identical coreset;
-    /// `threads == 0` means "all available cores". Signals shorter than
-    /// 128 rows (fewer than two shards) fall back to the sequential
-    /// [`Self::build_with`].
-    pub fn build_par(signal: &Signal, config: CoresetConfig, threads: usize) -> Self {
+    /// The shard plan and the shared statistics depend only on the
+    /// signal shape, never on `threads`, so any thread count produces
+    /// the bit-identical coreset; `threads == 0` means "all available
+    /// cores". Signals shorter than 128 rows (fewer than two shards)
+    /// fall back to the sequential [`Self::build_with`].
+    pub fn build_par<S: SignalSource>(
+        signal: &S,
+        config: CoresetConfig,
+        threads: usize,
+    ) -> Self {
         const SHARD_ROWS: usize = 64;
         let n = signal.rows();
         let shards = n / SHARD_ROWS;
         if shards <= 1 {
             return Self::build_with(signal, config);
         }
+        let stats = PrefixStats::new_par(signal, threads);
         let edges = bicriteria::band_edges(n, shards);
-        let rects: Vec<Rect> = edges
+        let regions: Vec<Rect> = edges
             .windows(2)
             .map(|w| Rect::new(w[0], w[1] - 1, 0, signal.cols() - 1))
             .collect();
-        let parts = crate::par::parallel_map(&rects, threads, |_, &rect| {
-            let band = signal.crop(rect);
-            merge_reduce::offset_rows(Self::build_with(&band, config), rect.r0)
+        let parts = crate::par::parallel_map(&regions, threads, |_, &region| {
+            Self::build_in(signal, &stats, region, config)
         });
         let merged = merge_reduce::merge(parts);
         let tol = merged.gamma * merged.gamma * merged.sigma;
@@ -364,7 +407,7 @@ mod tests {
     use super::*;
     use crate::rng::Rng;
     use crate::segmentation::random_segmentation;
-    use crate::signal::generate;
+    use crate::signal::{generate, Signal};
 
     #[test]
     fn block_coreset_moments_match_signal() {

@@ -6,7 +6,9 @@
 //! The library provides:
 //!
 //! * [`signal`] — 2D signals (matrices with a label in every cell),
-//!   rectangular views, masks, and O(1) block statistics.
+//!   zero-copy rectangular views behind the [`signal::SignalSource`]
+//!   seam, masks, and O(1) block statistics answerable for any
+//!   sub-rectangle from one shared [`signal::PrefixStats`].
 //! * [`segmentation`] — the k-segmentation model class (Definition 1) and
 //!   exact DP solvers (1D, 2D guillotine k-tree, quadtree codec).
 //! * [`bicriteria`] — the (α, β)_k rough approximation (Algorithm 4).
@@ -85,6 +87,6 @@ pub mod prelude {
     pub use crate::coreset::{Coreset, SignalCoreset, WeightedPoint};
     pub use crate::rng::Rng;
     pub use crate::segmentation::KSegmentation;
-    pub use crate::signal::{PrefixStats, Rect, Signal};
+    pub use crate::signal::{PrefixStats, Rect, Signal, SignalSource, SignalView};
     pub use crate::tree::{forest::RandomForest, DecisionTree};
 }

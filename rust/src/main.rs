@@ -88,7 +88,12 @@ fn make_signal(args: &Args, rng: &mut Rng) -> Result<Signal> {
 /// absent → the classic monolithic build; flag present (any value, even
 /// 1) → the sharded parallel builder, a pure performance knob whose
 /// output is identical for every thread count.
-fn build_coreset_from_args(args: &Args, signal: &Signal, k: usize, eps: f64) -> Result<SignalCoreset> {
+fn build_coreset_from_args(
+    args: &Args,
+    signal: &Signal,
+    k: usize,
+    eps: f64,
+) -> Result<SignalCoreset> {
     Ok(match args.get("threads") {
         None => SignalCoreset::build(signal, k, eps),
         Some(_) => {

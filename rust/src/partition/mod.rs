@@ -148,9 +148,17 @@ pub struct PartitionReport {
 /// `gamma` ∈ (0, 1); `sigma ≥ 0` (σ = 0 degrades gracefully: blocks are
 /// maximal constant runs).
 pub fn partition(stats: &PrefixStats, gamma: f64, sigma: f64) -> Vec<Rect> {
+    partition_in(stats, stats.bounds(), gamma, sigma)
+}
+
+/// [`partition`] restricted to `region`: the sharded builders partition
+/// each row-band in place against the one shared `PrefixStats`, emitting
+/// blocks directly in global coordinates (no cropped signals, no
+/// per-shard integral images, no row-offset fixups afterwards). For
+/// `region == stats.bounds()` this is exactly [`partition`].
+pub fn partition_in(stats: &PrefixStats, region: Rect, gamma: f64, sigma: f64) -> Vec<Rect> {
     assert!(gamma > 0.0 && gamma <= 1.0, "gamma must be in (0,1]");
     assert!(sigma >= 0.0);
-    let n = stats.rows();
     let tol = gamma * gamma * sigma;
     // Blocks allowed per slab. The theoretical 1/γ can fall below the
     // column count m; for narrow matrices with decorrelated columns
@@ -161,14 +169,14 @@ pub fn partition(stats: &PrefixStats, gamma: f64, sigma: f64) -> Vec<Rect> {
     // horizontal query boundaries cross hundreds of blocks (measured in
     // EXPERIMENTS.md §Calibration).
     let base = (1.0 / gamma).ceil() as usize;
-    let m = stats.cols();
+    let m = region.width();
     let limit = if m <= 2 * base { base.max(m) } else { base };
+    let slab = |r0: usize, r1: usize| Rect::new(r0, r1, region.c0, region.c1);
     let mut out: Vec<Rect> = Vec::new();
-    let mut r0 = 0usize;
-    while r0 < n {
+    let mut r0 = region.r0;
+    while r0 <= region.r1 {
         // Single-row slab first (the unconditional base case).
-        let single = slab(stats, r0, r0);
-        let first = slice_partition(stats, single, tol);
+        let first = slice_partition(stats, slab(r0, r0), tol);
         if first.len() > limit {
             // Yellow case in Fig. 2: emit the over-long single-row
             // partition itself and move on.
@@ -186,15 +194,15 @@ pub fn partition(stats: &PrefixStats, gamma: f64, sigma: f64) -> Vec<Rect> {
         let mut good_parts = first;
         let mut step = 1usize;
         loop {
-            let probe = (good_r1 + step).min(n - 1);
+            let probe = (good_r1 + step).min(region.r1);
             if probe == good_r1 {
                 break;
             }
-            let parts = slice_partition(stats, slab(stats, r0, probe), tol);
+            let parts = slice_partition(stats, slab(r0, probe), tol);
             if parts.len() <= limit {
                 good_r1 = probe;
                 good_parts = parts;
-                if probe == n - 1 {
+                if probe == region.r1 {
                     break;
                 }
                 step *= 2;
@@ -203,11 +211,11 @@ pub fn partition(stats: &PrefixStats, gamma: f64, sigma: f64) -> Vec<Rect> {
             }
         }
         // Binary refine between good_r1 and good_r1 + step.
-        let mut hi = (good_r1 + step).min(n - 1);
+        let mut hi = (good_r1 + step).min(region.r1);
         let mut lo = good_r1;
         while lo < hi {
             let mid = lo + (hi - lo + 1) / 2;
-            let parts = slice_partition(stats, slab(stats, r0, mid), tol);
+            let parts = slice_partition(stats, slab(r0, mid), tol);
             if parts.len() <= limit {
                 lo = mid;
                 good_parts = parts;
@@ -219,11 +227,6 @@ pub fn partition(stats: &PrefixStats, gamma: f64, sigma: f64) -> Vec<Rect> {
         r0 = lo + 1;
     }
     out
-}
-
-#[inline]
-fn slab(stats: &PrefixStats, r0: usize, r1: usize) -> Rect {
-    Rect::new(r0, r1, 0, stats.cols() - 1)
 }
 
 /// Validate Definition 6 on a concrete partition; used by tests and the
@@ -328,6 +331,24 @@ mod tests {
         // Far fewer blocks than cells: constant regions merge.
         assert!(blocks.len() < sig.len() / 4, "{} blocks", blocks.len());
         let _ = pieces;
+    }
+
+    #[test]
+    fn partition_in_tiles_the_region_only() {
+        // Region-scoped partitioning against shared stats: blocks tile
+        // exactly the band (in global coordinates) and respect the
+        // tolerance — the shard path's invariant.
+        let mut rng = Rng::new(21);
+        let sig = generate::smooth(60, 36, 3, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let region = Rect::new(12, 47, 0, 35);
+        let tol = 0.25 * 0.25 * 5.0;
+        let blocks = partition_in(&stats, region, 0.25, 5.0);
+        assert!(is_exact_tiling(&blocks, region));
+        for b in &blocks {
+            assert!(region.contains_rect(b));
+            assert!(stats.opt1(b) <= tol + 1e-9);
+        }
     }
 
     #[test]

@@ -11,6 +11,17 @@
 //! * a **reducer** merges partial coresets in stream order and
 //!   periodically re-compacts via [`crate::coreset::merge_reduce::reduce`],
 //! * **metrics** track queue depths, per-stage latency, and throughput.
+//!
+//! Two entry points with different ownership models (DESIGN.md §Views &
+//! Memory):
+//!
+//! * [`run`] — the in-memory path: the signal already exists, so one
+//!   shared [`PrefixStats`] is built up front and each window job is just
+//!   a `Rect`; workers run [`SignalCoreset::build_in`] against the shared
+//!   statistics — **zero per-window copies or integral-image rebuilds**.
+//! * [`run_streaming`] — true streaming: bands arrive as owned
+//!   [`Signal`]s from a source that may never hold the full signal, so
+//!   each band necessarily builds its own band-local statistics.
 
 pub mod metrics;
 
@@ -21,7 +32,7 @@ use std::time::Instant;
 
 use crate::coreset::merge_reduce::{self, offset_rows};
 use crate::coreset::{CoresetConfig, SignalCoreset};
-use crate::signal::{Rect, Signal};
+use crate::signal::{PrefixStats, Rect, Signal, SignalSource};
 
 pub use metrics::PipelineMetrics;
 
@@ -86,13 +97,73 @@ struct BandResult {
 /// Returns the final coreset and the collected metrics. This is the
 /// entry point the CLI, examples, and benches use; `run_streaming` below
 /// accepts an arbitrary band iterator (true streaming).
-pub fn run(signal: &Signal, config: PipelineConfig) -> (SignalCoreset, PipelineMetrics) {
+///
+/// Zero-copy: one shared [`PrefixStats`] is built up front (via the
+/// thread-invariant [`PrefixStats::new_par`]) and every window job on
+/// the queue is a bare `Rect` — workers answer all statistics queries
+/// from the shared object and read cell labels straight from `signal`,
+/// so no band is ever cropped and no per-band integral image is ever
+/// rebuilt. Peak memory is O(N) regardless of worker count.
+pub fn run<S: SignalSource>(
+    signal: &S,
+    config: PipelineConfig,
+) -> (SignalCoreset, PipelineMetrics) {
     let m = signal.cols();
+    let stats = PrefixStats::new_par(signal, config.workers);
     let bands = band_rects(signal.rows(), m, config.band_rows);
-    let iter = bands
-        .into_iter()
-        .map(|rect| (rect.r0, signal.crop(rect)));
-    run_streaming(m, iter, config)
+    let metrics = Arc::new(PipelineMetrics::default());
+    let (job_tx, job_rx) = sync_channel::<(usize, Rect)>(config.queue_capacity);
+    let job_rx = Arc::new(Mutex::new(job_rx));
+    let (res_tx, res_rx) = sync_channel::<BandResult>(config.queue_capacity.max(16));
+
+    let coreset = thread::scope(|scope| {
+        // Workers: pull window rects from the shared bounded queue and
+        // build against the shared statistics (blocks come out directly
+        // in global coordinates — no offset fixups).
+        for _ in 0..config.workers {
+            let rx = Arc::clone(&job_rx);
+            let tx = res_tx.clone();
+            let met = Arc::clone(&metrics);
+            let ccfg = config.coreset;
+            let stats = &stats;
+            scope.spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok((seq, rect)) = job else { break };
+                let t0 = Instant::now();
+                let cs = SignalCoreset::build_in(signal, stats, rect, ccfg);
+                met.record_build(t0.elapsed(), rect.area());
+                if tx.send(BandResult { seq, coreset: cs }).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(res_tx);
+
+        // Source thread: feeds window rects (blocks on the bounded
+        // channel when the workers are behind — that IS the
+        // backpressure).
+        let src_metrics = Arc::clone(&metrics);
+        scope.spawn(move || {
+            for (seq, rect) in bands.into_iter().enumerate() {
+                let t0 = Instant::now();
+                if job_tx.send((seq, rect)).is_err() {
+                    break;
+                }
+                src_metrics.record_source_wait(t0.elapsed());
+            }
+            // Dropping job_tx closes the queue; workers drain and exit.
+        });
+
+        // Reducer (this thread): merge results in completion order.
+        let reducer = Reducer::new(m, config, Arc::clone(&metrics));
+        reducer.drain(res_rx)
+    });
+
+    let metrics = Arc::try_unwrap(metrics).unwrap_or_default();
+    (coreset, metrics)
 }
 
 /// Rectangles of each streamed band of an n×m signal.

@@ -33,8 +33,9 @@ impl Runtime {
         let client =
             xla::PjRtClient::cpu().map_err(|e| Error::msg(format!("pjrt client: {e:?}")))?;
         let mut execs = HashMap::new();
-        let entries = std::fs::read_dir(dir)
-            .map_err(|e| Error::msg(e).context(format!("artifacts dir {dir:?} (run `make artifacts`)")))?;
+        let entries = std::fs::read_dir(dir).map_err(|e| {
+            Error::msg(e).context(format!("artifacts dir {dir:?} (run `make artifacts`)"))
+        })?;
         for entry in entries {
             let path = entry.map_err(Error::msg)?.path();
             let Some(name) = path.file_name().and_then(|s| s.to_str()) else { continue };

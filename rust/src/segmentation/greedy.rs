@@ -143,7 +143,14 @@ pub fn greedy_tree_on(stats: &PrefixStats, bounds: Rect, k: usize) -> KSegmentat
 
 /// Total loss of the greedy k-tree (convenience for bicriteria).
 pub fn greedy_tree_loss(stats: &PrefixStats, k: usize) -> f64 {
-    greedy_tree(stats, k).loss(stats)
+    greedy_tree_loss_on(stats, stats.bounds(), k)
+}
+
+/// Total loss of the greedy k-tree restricted to `bounds` — the
+/// region-scoped flavour the shared-stats bicriteria stage uses, so a
+/// shard's greedy estimate never needs shard-local statistics.
+pub fn greedy_tree_loss_on(stats: &PrefixStats, bounds: Rect, k: usize) -> f64 {
+    greedy_tree_on(stats, bounds, k).loss(stats)
 }
 
 #[cfg(test)]

@@ -2,6 +2,20 @@
 //! label (the paper's "2D-signal"), plus rectangular sub-signal views and
 //! optional masks (for the missing-values experiment, where held-out cells
 //! must not contribute to any statistic).
+//!
+//! Two ways to look at a sub-rectangle:
+//!
+//! * [`SignalView`] — a borrowed, rect-offset window into a [`Signal`]:
+//!   O(1) to create, zero copies, composable (`view.view(rect)` stays a
+//!   view of the root signal). This is what the sharded builders hand to
+//!   workers.
+//! * [`Signal::crop`] — an owned copy of the window, kept for tests,
+//!   examples, and true streaming sources that hand off ownership.
+//!
+//! Both implement [`SignalSource`], the read-only access seam the whole
+//! build stack ([`PrefixStats`], bicriteria, partition, Caratheodory
+//! extraction) is generic over — and the hook later sparse/tiled/mmap
+//! backends plug into (DESIGN.md §Views & Memory).
 
 pub mod generate;
 pub mod stats;
@@ -94,6 +108,127 @@ impl Rect {
     pub fn cells(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
         let (c0, c1) = (self.c0, self.c1);
         (self.r0..=self.r1).flat_map(move |r| (c0..=c1).map(move |c| (r, c)))
+    }
+}
+
+/// Read-only access to a (possibly windowed) 2D signal — the seam the
+/// build stack is generic over, implemented by the owned [`Signal`] and
+/// the borrowed [`SignalView`].
+///
+/// The contract mirrors `Signal`'s accessors: `(r, c)` are local
+/// coordinates in `0..rows() × 0..cols()`, rows are contiguous `f64`
+/// slices, and a `None` row mask means "every cell of that row present".
+/// `view` must be O(1) — no data is copied, only offsets composed —
+/// which is what keeps shards, bands, and streaming windows allocation-
+/// free. `Sync` is a supertrait so sources can be shared across the
+/// scoped worker pools in [`crate::par`] without extra bounds at every
+/// call site.
+pub trait SignalSource: Sync {
+    /// Number of rows.
+    fn rows(&self) -> usize;
+
+    /// Number of columns.
+    fn cols(&self) -> usize;
+
+    /// Row `r`'s labels as a contiguous slice of length [`Self::cols`].
+    fn row_values(&self, r: usize) -> &[f64];
+
+    /// Row `r`'s presence mask (`true` = present), `None` when the whole
+    /// row is present (the unmasked fast path).
+    fn row_mask(&self, r: usize) -> Option<&[bool]>;
+
+    /// O(1) sub-view of `rect` (local coordinates).
+    fn view(&self, rect: Rect) -> SignalView<'_>;
+
+    /// Label at `(r, c)`.
+    #[inline]
+    fn get(&self, r: usize, c: usize) -> f64 {
+        self.row_values(r)[c]
+    }
+
+    /// Is the cell present (not masked out)?
+    #[inline]
+    fn is_present(&self, r: usize, c: usize) -> bool {
+        match self.row_mask(r) {
+            None => true,
+            Some(mask) => mask[c],
+        }
+    }
+
+    /// Total cells (present or not).
+    #[inline]
+    fn len(&self) -> usize {
+        self.rows() * self.cols()
+    }
+
+    /// Sources are non-empty by construction (`Signal` enforces
+    /// `n, m > 0`; `Rect` is never degenerate).
+    #[inline]
+    fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// The full bounding rectangle in local coordinates.
+    #[inline]
+    fn bounds(&self) -> Rect {
+        Rect::new(0, self.rows() - 1, 0, self.cols() - 1)
+    }
+
+    /// Number of *present* cells.
+    fn present(&self) -> usize {
+        let mut count = 0;
+        for r in 0..self.rows() {
+            count += match self.row_mask(r) {
+                None => self.cols(),
+                Some(mask) => mask.iter().filter(|&&b| b).count(),
+            };
+        }
+        count
+    }
+}
+
+/// References delegate, so generic consumers accept `&S` and `&&S`
+/// alike (generic parameters do not auto-deref the way method receivers
+/// do).
+impl<S: SignalSource + ?Sized> SignalSource for &S {
+    #[inline]
+    fn rows(&self) -> usize {
+        (**self).rows()
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        (**self).cols()
+    }
+
+    #[inline]
+    fn row_values(&self, r: usize) -> &[f64] {
+        (**self).row_values(r)
+    }
+
+    #[inline]
+    fn row_mask(&self, r: usize) -> Option<&[bool]> {
+        (**self).row_mask(r)
+    }
+
+    #[inline]
+    fn view(&self, rect: Rect) -> SignalView<'_> {
+        (**self).view(rect)
+    }
+
+    #[inline]
+    fn get(&self, r: usize, c: usize) -> f64 {
+        (**self).get(r, c)
+    }
+
+    #[inline]
+    fn is_present(&self, r: usize, c: usize) -> bool {
+        (**self).is_present(r, c)
+    }
+
+    #[inline]
+    fn present(&self) -> usize {
+        (**self).present()
     }
 }
 
@@ -214,23 +349,12 @@ impl Signal {
     }
 
     /// Extract the sub-signal of `rect` as an owned `Signal` (mask carried
-    /// over). Used by the streaming sharder to hand bands to workers.
+    /// over): [`SignalView::to_signal`] on the equivalent view. Kept for
+    /// tests, examples, and streaming sources that hand off ownership —
+    /// builder hot paths use O(1) [`SignalSource::view`]s instead.
     pub fn crop(&self, rect: Rect) -> Signal {
         assert!(rect.r1 < self.n && rect.c1 < self.m, "crop out of bounds");
-        let mut values = Vec::with_capacity(rect.area());
-        let mut mask = self.mask.as_ref().map(|_| Vec::with_capacity(rect.area()));
-        for r in rect.r0..=rect.r1 {
-            let row0 = r * self.m;
-            values.extend_from_slice(&self.values[row0 + rect.c0..=row0 + rect.c1]);
-            if let (Some(dst), Some(src)) = (mask.as_mut(), self.mask.as_ref()) {
-                dst.extend_from_slice(&src[row0 + rect.c0..=row0 + rect.c1]);
-            }
-        }
-        let mut s = Signal::from_values(rect.height(), rect.width(), values);
-        if let Some(m) = mask {
-            s.mask = Some(m);
-        }
-        s
+        SignalView::new(self, rect).to_signal()
     }
 
     /// Transposed copy.
@@ -267,6 +391,161 @@ impl Signal {
             }
         }
         total
+    }
+}
+
+impl SignalSource for Signal {
+    #[inline]
+    fn rows(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        self.m
+    }
+
+    #[inline]
+    fn row_values(&self, r: usize) -> &[f64] {
+        &self.values[r * self.m..(r + 1) * self.m]
+    }
+
+    #[inline]
+    fn row_mask(&self, r: usize) -> Option<&[bool]> {
+        self.mask
+            .as_ref()
+            .map(|mask| &mask[r * self.m..(r + 1) * self.m])
+    }
+
+    #[inline]
+    fn view(&self, rect: Rect) -> SignalView<'_> {
+        SignalView::new(self, rect)
+    }
+
+    #[inline]
+    fn get(&self, r: usize, c: usize) -> f64 {
+        Signal::get(self, r, c)
+    }
+
+    #[inline]
+    fn is_present(&self, r: usize, c: usize) -> bool {
+        Signal::is_present(self, r, c)
+    }
+
+    #[inline]
+    fn present(&self) -> usize {
+        Signal::present(self)
+    }
+}
+
+/// A borrowed, rect-offset window into a [`Signal`]: zero-copy, O(1) to
+/// create and to sub-view. Local coordinate `(r, c)` maps to the parent's
+/// `(rect.r0 + r, rect.c0 + c)`; masks are inherited. Sub-views compose —
+/// `view.view(inner)` borrows the *root* signal with summed offsets, so
+/// arbitrarily nested windowing never chains indirections.
+#[derive(Clone, Copy, Debug)]
+pub struct SignalView<'a> {
+    signal: &'a Signal,
+    rect: Rect,
+}
+
+impl<'a> SignalView<'a> {
+    /// View of `rect` (parent coordinates). Panics when out of bounds.
+    pub fn new(signal: &'a Signal, rect: Rect) -> Self {
+        assert!(
+            rect.r1 < signal.rows() && rect.c1 < signal.cols(),
+            "view out of bounds"
+        );
+        Self { signal, rect }
+    }
+
+    /// The window rectangle in the parent signal's coordinates.
+    #[inline]
+    pub fn rect(&self) -> Rect {
+        self.rect
+    }
+
+    /// The backing signal.
+    #[inline]
+    pub fn parent(&self) -> &'a Signal {
+        self.signal
+    }
+
+    /// Materialize the window as an owned [`Signal`] — per-row
+    /// `copy_from_slice` into preallocated buffers (no per-cell `get`
+    /// indirection, no incremental growth checks), mask carried over.
+    pub fn to_signal(&self) -> Signal {
+        let (h, w) = (self.rect.height(), self.rect.width());
+        let mut values = vec![0.0f64; h * w];
+        for (lr, dst) in values.chunks_exact_mut(w).enumerate() {
+            dst.copy_from_slice(self.row_values(lr));
+        }
+        let mut out = Signal::from_values(h, w, values);
+        if self.signal.mask.is_some() {
+            let mut mask = vec![true; h * w];
+            for (lr, dst) in mask.chunks_exact_mut(w).enumerate() {
+                if let Some(src) = self.row_mask(lr) {
+                    dst.copy_from_slice(src);
+                }
+            }
+            out.mask = Some(mask);
+        }
+        out
+    }
+}
+
+impl SignalSource for SignalView<'_> {
+    #[inline]
+    fn rows(&self) -> usize {
+        self.rect.height()
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        self.rect.width()
+    }
+
+    #[inline]
+    fn row_values(&self, r: usize) -> &[f64] {
+        debug_assert!(r < self.rect.height());
+        let row0 = (self.rect.r0 + r) * self.signal.m;
+        &self.signal.values[row0 + self.rect.c0..=row0 + self.rect.c1]
+    }
+
+    #[inline]
+    fn row_mask(&self, r: usize) -> Option<&[bool]> {
+        debug_assert!(r < self.rect.height());
+        self.signal.mask.as_ref().map(|mask| {
+            let row0 = (self.rect.r0 + r) * self.signal.m;
+            &mask[row0 + self.rect.c0..=row0 + self.rect.c1]
+        })
+    }
+
+    #[inline]
+    fn view(&self, rect: Rect) -> SignalView<'_> {
+        assert!(
+            rect.r1 < self.rect.height() && rect.c1 < self.rect.width(),
+            "sub-view out of bounds"
+        );
+        SignalView::new(
+            self.signal,
+            Rect::new(
+                self.rect.r0 + rect.r0,
+                self.rect.r0 + rect.r1,
+                self.rect.c0 + rect.c0,
+                self.rect.c0 + rect.c1,
+            ),
+        )
+    }
+
+    #[inline]
+    fn get(&self, r: usize, c: usize) -> f64 {
+        self.signal.get(self.rect.r0 + r, self.rect.c0 + c)
+    }
+
+    #[inline]
+    fn is_present(&self, r: usize, c: usize) -> bool {
+        self.signal.is_present(self.rect.r0 + r, self.rect.c0 + c)
     }
 }
 
@@ -349,5 +628,60 @@ mod tests {
         // SSE to constant 2.5 = 1.5^2+0.5^2+0.5^2+1.5^2 = 5.0
         let sse = s.sse_against(|_, _| 2.5);
         assert!((sse - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn view_matches_crop_cell_for_cell() {
+        let mut s = Signal::from_fn(9, 11, |r, c| (r * 100 + c) as f64);
+        s.mask_rect(Rect::new(2, 4, 3, 6));
+        let rect = Rect::new(1, 6, 2, 9);
+        let view = s.view(rect);
+        let crop = s.crop(rect);
+        assert_eq!(view.rows(), crop.rows());
+        assert_eq!(view.cols(), crop.cols());
+        assert_eq!(SignalSource::present(&view), crop.present());
+        for r in 0..view.rows() {
+            assert_eq!(view.row_values(r), crop.row_values(r));
+            assert_eq!(view.row_mask(r), crop.row_mask(r));
+            for c in 0..view.cols() {
+                assert_eq!(view.get(r, c), crop.get(r, c));
+                assert_eq!(view.is_present(r, c), crop.is_present(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn views_compose_against_the_root_signal() {
+        let s = Signal::from_fn(10, 10, |r, c| (r * 10 + c) as f64);
+        let outer = s.view(Rect::new(2, 8, 1, 9));
+        let inner = outer.view(Rect::new(1, 4, 2, 5));
+        // Nested view borrows the root with summed offsets…
+        assert_eq!(inner.rect(), Rect::new(3, 6, 3, 6));
+        assert!(std::ptr::eq(inner.parent(), &s));
+        // …and reads the same cells as composing crops.
+        let twice = s.crop(Rect::new(2, 8, 1, 9)).crop(Rect::new(1, 4, 2, 5));
+        for r in 0..inner.rows() {
+            assert_eq!(inner.row_values(r), twice.row_values(r));
+        }
+    }
+
+    #[test]
+    fn to_signal_materializes_mask() {
+        let mut s = Signal::from_fn(6, 6, |r, c| (r + c) as f64);
+        s.mask_rect(Rect::new(0, 1, 0, 1));
+        let owned = s.view(Rect::new(0, 3, 0, 3)).to_signal();
+        assert_eq!(owned.present(), 16 - 4);
+        assert!(!owned.is_present(1, 1));
+        assert!(owned.is_present(2, 2));
+    }
+
+    #[test]
+    fn unmasked_view_has_no_row_mask() {
+        let s = Signal::from_fn(4, 5, |r, c| (r * c) as f64);
+        let view = s.view(s.bounds());
+        for r in 0..4 {
+            assert!(view.row_mask(r).is_none());
+        }
+        assert!(view.to_signal().mask().is_none());
     }
 }

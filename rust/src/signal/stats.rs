@@ -13,7 +13,7 @@
 //! clamps at zero to absorb floating-point cancellation on near-constant
 //! blocks.
 
-use super::{Rect, Signal};
+use super::{Rect, SignalSource};
 
 /// Integral images of (count, Σy, Σy²) with one row/col of zero padding so
 /// that queries need no boundary branches.
@@ -82,8 +82,8 @@ impl Moments {
 /// written without reading a predecessor, so disjoint bands can fill
 /// concurrently). Column 0 of every row stays untouched (callers pass
 /// zeroed buffers).
-fn fill_band_local(
-    signal: &Signal,
+fn fill_band_local<S: SignalSource>(
+    signal: &S,
     r0: usize,
     r1: usize,
     count: &mut [f64],
@@ -93,15 +93,23 @@ fn fill_band_local(
     let m = signal.cols();
     let stride = m + 1;
     for (lr, r) in (r0..r1).enumerate() {
-        // Running row accumulators avoid one extra pass.
+        // Running row accumulators avoid one extra pass; the row slices
+        // from the source keep the inner loop free of (r, c) → index
+        // arithmetic for owned signals and views alike.
+        let row = signal.row_values(r);
+        let row_mask = signal.row_mask(r);
         let mut row_cnt = 0.0;
         let mut row_sum = 0.0;
         let mut row_sq = 0.0;
         let cur = lr * stride;
         if lr == 0 {
             for c in 0..m {
-                if signal.is_present(r, c) {
-                    let y = signal.get(r, c);
+                let present = match row_mask {
+                    None => true,
+                    Some(mask) => mask[c],
+                };
+                if present {
+                    let y = row[c];
                     row_cnt += 1.0;
                     row_sum += y;
                     row_sq += y * y;
@@ -113,8 +121,12 @@ fn fill_band_local(
         } else {
             let up = cur - stride;
             for c in 0..m {
-                if signal.is_present(r, c) {
-                    let y = signal.get(r, c);
+                let present = match row_mask {
+                    None => true,
+                    Some(mask) => mask[c],
+                };
+                if present {
+                    let y = row[c];
                     row_cnt += 1.0;
                     row_sum += y;
                     row_sq += y * y;
@@ -128,9 +140,10 @@ fn fill_band_local(
 }
 
 impl PrefixStats {
-    /// O(N) construction. Masked-out cells contribute zero to every
+    /// O(N) construction over any [`SignalSource`] (owned signal or
+    /// zero-copy view). Masked-out cells contribute zero to every
     /// accumulator.
-    pub fn new(signal: &Signal) -> Self {
+    pub fn new<S: SignalSource>(signal: &S) -> Self {
         let n = signal.rows();
         let m = signal.cols();
         let stride = m + 1;
@@ -153,18 +166,23 @@ impl PrefixStats {
     /// into the disjoint row ranges each band owns, so peak memory equals
     /// the sequential path — then a sequential O(n·m) add-only stitch
     /// shifts every band by the final global row of the band above it.
-    /// The band plan depends only on the signal shape — never on
-    /// `threads` — so any thread count ≥ 2 yields bit-identical
-    /// statistics (and all of them match [`Self::new`] up to f64
-    /// reassociation noise, ≲ 1e-12 relative). `threads == 0` uses all
-    /// available cores; small signals fall back to the sequential path.
-    pub fn new_par(signal: &Signal, threads: usize) -> Self {
+    ///
+    /// The band plan *and* the summation order depend only on the signal
+    /// shape — never on `threads` — so **every** thread count (including
+    /// 1, which runs the same band fills sequentially) yields
+    /// bit-identical statistics; this is what lets the sharded coreset
+    /// builders share one `new_par` result and stay thread-count-
+    /// invariant. All results match [`Self::new`] up to f64 reassociation
+    /// noise (≲ 1e-12 relative). `threads == 0` uses all available
+    /// cores; single-band signals fall back to the sequential path
+    /// (a shape-only decision, so still thread-invariant).
+    pub fn new_par<S: SignalSource>(signal: &S, threads: usize) -> Self {
         const BAND_ROWS: usize = 64;
         let threads = crate::par::resolve_threads(threads);
         let n = signal.rows();
         let m = signal.cols();
         let bands = n.div_ceil(BAND_ROWS);
-        if threads <= 1 || bands <= 1 {
+        if bands <= 1 {
             return Self::new(signal);
         }
         let stride = m + 1;
@@ -192,23 +210,33 @@ impl PrefixStats {
                 q_rest = q_tail;
                 jobs.push(((r0, r1), (c_band, s_band, q_band)));
             }
-            // Static round-robin assignment: bands have near-equal cost
-            // by construction, and &mut slices cannot go through the
-            // shared-cursor pool.
-            let workers = threads.min(jobs.len()).max(1);
-            let mut assigned: Vec<Vec<BandJob<'_>>> = (0..workers).map(|_| Vec::new()).collect();
-            for (i, job) in jobs.into_iter().enumerate() {
-                assigned[i % workers].push(job);
-            }
-            std::thread::scope(|scope| {
-                for work in assigned {
-                    scope.spawn(move || {
-                        for ((r0, r1), (c, s, q)) in work {
-                            fill_band_local(signal, r0, r1, c, s, q);
-                        }
-                    });
+            if threads <= 1 {
+                // Same band fills, run in band order on this thread —
+                // identical floats to the multi-threaded path (each band's
+                // arithmetic is independent; only scheduling differs).
+                for ((r0, r1), (c, s, q)) in jobs {
+                    fill_band_local(signal, r0, r1, c, s, q);
                 }
-            });
+            } else {
+                // Static round-robin assignment: bands have near-equal
+                // cost by construction, and &mut slices cannot go through
+                // the shared-cursor pool.
+                let workers = threads.min(jobs.len()).max(1);
+                let mut assigned: Vec<Vec<BandJob<'_>>> =
+                    (0..workers).map(|_| Vec::new()).collect();
+                for (i, job) in jobs.into_iter().enumerate() {
+                    assigned[i % workers].push(job);
+                }
+                std::thread::scope(|scope| {
+                    for work in assigned {
+                        scope.spawn(move || {
+                            for ((r0, r1), (c, s, q)) in work {
+                                fill_band_local(signal, r0, r1, c, s, q);
+                            }
+                        });
+                    }
+                });
+            }
         }
         // Phase 2 (sequential O(n·m) stitch): band 0 is already global;
         // every later band adds the final global row the band above it
@@ -242,6 +270,16 @@ impl PrefixStats {
     #[inline]
     pub fn cols(&self) -> usize {
         self.m
+    }
+
+    /// The full rectangle these statistics cover. Every query below is
+    /// already rect-parameterized, so one globally built `PrefixStats`
+    /// answers moments/SSE for **any** sub-rectangle — the builders pass
+    /// `(&PrefixStats, Rect)` around instead of recomputing per-shard
+    /// integral images (DESIGN.md §Views & Memory).
+    #[inline]
+    pub fn bounds(&self) -> Rect {
+        Rect::new(0, self.n - 1, 0, self.m - 1)
     }
 
     #[inline]
@@ -304,6 +342,7 @@ impl PrefixStats {
 mod tests {
     use super::*;
     use crate::rng::Rng;
+    use crate::signal::Signal;
 
     /// Brute-force moments for cross-checking.
     fn brute(signal: &Signal, rect: &Rect) -> Moments {
@@ -454,6 +493,72 @@ mod tests {
         let par = PrefixStats::new_par(&sig, 4);
         let whole = sig.bounds();
         assert_eq!(seq.moments(&whole), par.moments(&whole));
+    }
+
+    #[test]
+    fn parallel_construction_is_thread_invariant() {
+        // Band plan and summation order depend on shape only: every
+        // thread count (1 included) must produce bit-identical arrays.
+        let mut sig = Signal::from_fn(200, 23, |r, c| ((r * 31 + c * 7) % 13) as f64 - 6.0);
+        sig.mask_rect(Rect::new(70, 80, 2, 9));
+        let reference = PrefixStats::new_par(&sig, 1);
+        for threads in [2, 3, 4, 8] {
+            let par = PrefixStats::new_par(&sig, threads);
+            assert_eq!(par.count, reference.count, "threads {threads}");
+            assert_eq!(par.sum, reference.sum, "threads {threads}");
+            assert_eq!(par.sum_sq, reference.sum_sq, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn stats_over_view_match_stats_over_crop_bitwise() {
+        // A view presents the same data in the same order as its crop, so
+        // the integral images must be bit-identical.
+        let mut sig = Signal::from_fn(40, 30, |r, c| ((r * 17 + c * 3) % 23) as f64 * 0.5);
+        sig.mask_rect(Rect::new(5, 12, 4, 11));
+        let window = Rect::new(3, 30, 2, 25);
+        let from_view = PrefixStats::new(&sig.view(window));
+        let from_crop = PrefixStats::new(&sig.crop(window));
+        assert_eq!(from_view.count, from_crop.count);
+        assert_eq!(from_view.sum, from_crop.sum);
+        assert_eq!(from_view.sum_sq, from_crop.sum_sq);
+    }
+
+    #[test]
+    fn rect_queries_match_cropped_stats() {
+        // One global PrefixStats answers any sub-rectangle: offset rect
+        // queries agree with stats freshly built over the crop (up to f64
+        // reassociation noise — global prefixes subtract, local ones
+        // accumulate).
+        let mut rng = Rng::new(99);
+        let mut sig = Signal::from_fn(64, 48, |r, c| ((r * 13 + c * 29) % 31) as f64 - 15.0);
+        sig.mask_rect(Rect::new(20, 33, 10, 22));
+        let global = PrefixStats::new(&sig);
+        let window = Rect::new(7, 55, 5, 40);
+        let local = PrefixStats::new(&sig.view(window));
+        for _ in 0..100 {
+            let r0 = rng.usize(window.height());
+            let r1 = rng.range(r0, window.height());
+            let c0 = rng.usize(window.width());
+            let c1 = rng.range(c0, window.width());
+            let local_rect = Rect::new(r0, r1, c0, c1);
+            let global_rect = Rect::new(
+                window.r0 + r0,
+                window.r0 + r1,
+                window.c0 + c0,
+                window.c0 + c1,
+            );
+            let a = global.moments(&global_rect);
+            let b = local.moments(&local_rect);
+            let scale = 1.0 + a.sum.abs() + a.sum_sq.abs();
+            assert_eq!(a.count, b.count, "{local_rect:?}");
+            assert!((a.sum - b.sum).abs() < 1e-9 * scale, "{local_rect:?}");
+            assert!((a.sum_sq - b.sum_sq).abs() < 1e-9 * scale, "{local_rect:?}");
+            assert!(
+                (a.opt1() - b.opt1()).abs() <= 1e-8 * (1.0 + a.opt1()),
+                "{local_rect:?}"
+            );
+        }
     }
 
     #[test]

@@ -6,6 +6,9 @@
 //! proportional to weight (weighted bootstrap), so a forest trained on a
 //! coreset sees the same expected sample distribution as one trained on
 //! the full data — the property the paper's experiments rely on.
+//! Resampling is by index with per-index weight accumulation: each tree
+//! fits via [`DecisionTree::fit_reweighted`], borrowing the caller's
+//! samples instead of cloning one feature vector per draw.
 
 use crate::rng::Rng;
 
@@ -77,10 +80,13 @@ impl RandomForest {
         let trees = (0..params.n_trees)
             .map(|t| {
                 let mut trng = Rng::new(rng.next_u64() ^ (t as u64).wrapping_mul(0x9E37));
-                // Weighted bootstrap: draw indices ∝ weight, weight 1 each
-                // (weights are "spent" by the draw probability), scaled so
-                // the bootstrap totals the original weight.
-                let mut boot: Vec<Sample> = Vec::with_capacity(draws);
+                // Weighted bootstrap by *index*: draw indices ∝ weight and
+                // accumulate per-index bootstrap weight (each draw adds
+                // total_w/draws, so the bootstrap totals the original
+                // weight). Fitting then borrows the original samples via
+                // `fit_reweighted` — no per-draw feature-vector clones,
+                // O(n) scratch per tree instead of O(draws · d).
+                let mut boot_w = vec![0.0f64; samples.len()];
                 let per_draw_w = total_w / draws as f64;
                 for _ in 0..draws {
                     let u = trng.f64() * total_w;
@@ -88,10 +94,9 @@ impl RandomForest {
                         Ok(i) => i,
                         Err(i) => i.min(samples.len() - 1),
                     };
-                    let s = &samples[idx];
-                    boot.push(Sample::new(s.x.clone(), s.y, per_draw_w));
+                    boot_w[idx] += per_draw_w;
                 }
-                DecisionTree::fit(&boot, &tree_params, Some(&mut trng))
+                DecisionTree::fit_reweighted(samples, &boot_w, &tree_params, Some(&mut trng))
             })
             .collect();
         Self { trees }

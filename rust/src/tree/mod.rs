@@ -118,11 +118,39 @@ impl DecisionTree {
     /// matching sklearn's `max_leaf_nodes` behaviour).
     pub fn fit(samples: &[Sample], params: &TreeParams, rng: Option<&mut crate::rng::Rng>) -> Self {
         assert!(!samples.is_empty(), "cannot fit on empty data");
+        let weights: Vec<f64> = samples.iter().map(|s| s.w).collect();
+        let all: Vec<usize> = (0..samples.len()).collect();
+        Self::fit_core(samples, &weights, all, params, rng)
+    }
+
+    /// Fit on a *borrowed* sample set with per-sample override weights —
+    /// the bootstrap path: resampling assigns new weights to existing
+    /// samples (zero-weight = not drawn), so no feature vector is ever
+    /// cloned. `weights` must have `samples.len()` entries with at least
+    /// one positive; samples' own `w` fields are ignored.
+    pub fn fit_reweighted(
+        samples: &[Sample],
+        weights: &[f64],
+        params: &TreeParams,
+        rng: Option<&mut crate::rng::Rng>,
+    ) -> Self {
+        assert_eq!(samples.len(), weights.len(), "one weight per sample");
+        let active: Vec<usize> = (0..samples.len()).filter(|&i| weights[i] > 0.0).collect();
+        assert!(!active.is_empty(), "cannot fit on zero total weight");
+        Self::fit_core(samples, weights, active, params, rng)
+    }
+
+    fn fit_core(
+        samples: &[Sample],
+        weights: &[f64],
+        all: Vec<usize>,
+        params: &TreeParams,
+        rng: Option<&mut crate::rng::Rng>,
+    ) -> Self {
         let n_features = samples[0].x.len();
         debug_assert!(samples.iter().all(|s| s.x.len() == n_features));
         let mut tree = Self { nodes: Vec::new(), n_features, leaves: 0 };
-        let all: Vec<usize> = (0..samples.len()).collect();
-        let (value, sse) = weighted_stats(samples, &all);
+        let (value, sse) = weighted_stats(samples, weights, &all);
         tree.nodes.push(Node::Leaf { value });
         tree.leaves = 1;
         // Best-first frontier ordered by achievable gain.
@@ -133,7 +161,7 @@ impl DecisionTree {
         };
         let mut frontier: Vec<(Work, Option<BestSplit>)> = Vec::new();
         let work = Work { node_idx: 0, indices: all, depth: 0, sse };
-        let split = find_best_split(samples, &work, params, rng);
+        let split = find_best_split(samples, weights, &work, params, rng);
         frontier.push((work, split));
         while tree.leaves < params.max_leaves {
             // Pop the frontier entry with the largest gain.
@@ -161,8 +189,8 @@ impl DecisionTree {
             if left_idx.is_empty() || right_idx.is_empty() {
                 continue; // numerically degenerate; skip this split
             }
-            let (lv, lsse) = weighted_stats(samples, &left_idx);
-            let (rv, rsse) = weighted_stats(samples, &right_idx);
+            let (lv, lsse) = weighted_stats(samples, weights, &left_idx);
+            let (rv, rsse) = weighted_stats(samples, weights, &right_idx);
             let li = tree.nodes.len();
             tree.nodes.push(Node::Leaf { value: lv });
             let ri = tree.nodes.len();
@@ -178,7 +206,7 @@ impl DecisionTree {
             for (idx, indices, sse) in [(li, left_idx, lsse), (ri, right_idx, rsse)] {
                 let w = Work { node_idx: idx, indices, depth, sse };
                 let s = if depth < params.max_depth {
-                    find_best_split(samples, &w, params, rng)
+                    find_best_split(samples, weights, &w, params, rng)
                 } else {
                     None
                 };
@@ -222,16 +250,18 @@ impl DecisionTree {
     }
 }
 
-/// Weighted mean and SSE-about-mean of a subset.
-fn weighted_stats(samples: &[Sample], idx: &[usize]) -> (f64, f64) {
+/// Weighted mean and SSE-about-mean of a subset (`weights` overrides the
+/// samples' own `w` — the indirection that lets bootstrap reweighting
+/// borrow samples instead of duplicating them).
+fn weighted_stats(samples: &[Sample], weights: &[f64], idx: &[usize]) -> (f64, f64) {
     let mut w = 0.0;
     let mut wy = 0.0;
     let mut wyy = 0.0;
     for &i in idx {
-        let s = &samples[i];
-        w += s.w;
-        wy += s.w * s.y;
-        wyy += s.w * s.y * s.y;
+        let (sw, sy) = (weights[i], samples[i].y);
+        w += sw;
+        wy += sw * sy;
+        wyy += sw * sy * sy;
     }
     if w <= 0.0 {
         return (0.0, 0.0);
@@ -245,6 +275,7 @@ fn weighted_stats(samples: &[Sample], idx: &[usize]) -> (f64, f64) {
 /// values, tracking weighted prefix moments. O(d · n log n).
 fn find_best_split(
     samples: &[Sample],
+    weights: &[f64],
     work: &Work,
     params: &TreeParams,
     rng: &mut crate::rng::Rng,
@@ -253,7 +284,7 @@ fn find_best_split(
     if idx.len() < 2 {
         return None;
     }
-    let total_w: f64 = idx.iter().map(|&i| samples[i].w).sum();
+    let total_w: f64 = idx.iter().map(|&i| weights[i]).sum();
     if total_w < params.min_weight_split {
         return None;
     }
@@ -281,17 +312,18 @@ fn find_best_split(
         let mut lwyy = 0.0;
         let (mut tw, mut twy, mut twyy) = (0.0, 0.0, 0.0);
         for &i in order.iter() {
-            let s = &samples[i];
-            tw += s.w;
-            twy += s.w * s.y;
-            twyy += s.w * s.y * s.y;
+            let (sw, sy) = (weights[i], samples[i].y);
+            tw += sw;
+            twy += sw * sy;
+            twyy += sw * sy * sy;
         }
         let parent_sse = (twyy - twy * twy / tw).max(0.0);
         for win in 0..order.len() - 1 {
             let s = &samples[order[win]];
-            lw += s.w;
-            lwy += s.w * s.y;
-            lwyy += s.w * s.y * s.y;
+            let sw = weights[order[win]];
+            lw += sw;
+            lwy += sw * s.y;
+            lwyy += sw * s.y * s.y;
             let xv = s.x[f];
             let xn = samples[order[win + 1]].x[f];
             if xn <= xv {
@@ -421,6 +453,32 @@ mod tests {
                 (tw.predict(&x) - tr.predict(&x)).abs() < 1e-9,
                 "x={x:?}"
             );
+        }
+    }
+
+    #[test]
+    fn fit_reweighted_matches_materialized_fit() {
+        // Overriding weights on borrowed samples (zero = not drawn) must
+        // train the same tree as materializing the weighted subset.
+        let base = grid_samples(10, 10, |r, c| ((r * 3 + c) % 5) as f64);
+        let weights: Vec<f64> = (0..base.len()).map(|i| ((i * 7) % 4) as f64).collect();
+        let materialized: Vec<Sample> = base
+            .iter()
+            .zip(&weights)
+            .filter_map(|(s, &w)| (w > 0.0).then(|| Sample::new(s.x.clone(), s.y, w)))
+            .collect();
+        let p = TreeParams::default().with_max_leaves(8);
+        let a = DecisionTree::fit_reweighted(&base, &weights, &p, None);
+        let b = DecisionTree::fit(&materialized, &p, None);
+        assert_eq!(a.n_leaves(), b.n_leaves());
+        for r in 0..10 {
+            for c in 0..10 {
+                let x = [r as f64, c as f64];
+                assert!(
+                    (a.predict(&x) - b.predict(&x)).abs() < 1e-12,
+                    "x={x:?}"
+                );
+            }
         }
     }
 

@@ -8,7 +8,7 @@ use sigtree::coreset::merge_reduce::StreamingCoreset;
 use sigtree::coreset::{Coreset, CoresetConfig, SignalCoreset};
 use sigtree::rng::Rng;
 use sigtree::segmentation::random_segmentation;
-use sigtree::signal::{generate, PrefixStats, Rect, Signal};
+use sigtree::signal::{generate, PrefixStats, Rect, Signal, SignalSource};
 
 /// Aggregate (count, Σwy, Σwy²) over all blocks of a coreset.
 fn aggregate_moments(cs: &SignalCoreset) -> (f64, f64, f64) {
@@ -33,8 +33,9 @@ fn assert_par_matches_sequential(sig: &Signal, k: usize, eps: f64, loss_tol: f64
     let seq = SignalCoreset::build_with(sig, config);
     let reference = SignalCoreset::build_par(sig, config, 1);
 
-    // Thread-count invariance: bit-identical blocks for every count.
-    for threads in 2..=4 {
+    // Thread-count invariance: bit-identical blocks for every count
+    // (the shared PrefixStats and the shard plan are shape-only).
+    for threads in [2, 3, 4, 8] {
         let par = SignalCoreset::build_par(sig, config, threads);
         assert_eq!(
             par.blocks.len(),
@@ -167,7 +168,7 @@ fn streaming_through_parallel_builder() {
     let mut r0 = 0;
     while r0 < 320 {
         let r1 = (r0 + 159).min(319);
-        stream.push_band(&sig.crop(Rect::new(r0, r1, 0, 29)));
+        stream.push_band(&sig.view(Rect::new(r0, r1, 0, 29)));
         r0 = r1 + 1;
     }
     assert_eq!(stream.rows_seen(), 320);
@@ -180,7 +181,7 @@ fn streaming_through_parallel_builder() {
     let mut r0 = 0;
     while r0 < 320 {
         let r1 = (r0 + 159).min(319);
-        stream1.push_band(&sig.crop(Rect::new(r0, r1, 0, 29)));
+        stream1.push_band(&sig.view(Rect::new(r0, r1, 0, 29)));
         r0 = r1 + 1;
     }
     let cs1 = stream1.finish().unwrap();

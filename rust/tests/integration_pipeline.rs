@@ -70,20 +70,44 @@ fn backpressure_source_blocks_with_tiny_queue() {
 
 #[test]
 fn streaming_generator_equivalent_to_materialized() {
+    // The generator entry point must be exactly equivalent to feeding the
+    // same owned bands from a materialized Vec (lazy vs eager sources).
     let mut rng = Rng::new(11);
     let sig = generate::smooth(320, 64, 3, &mut rng);
     let cfg = PipelineConfig::new(CoresetConfig::new(6, 0.3))
         .with_band_rows(80)
         .with_workers(1);
-    let (a, _) = run(&sig, cfg);
-    // Same bands, fed through the generator entry point.
     let bands: Vec<(usize, Signal)> = sigtree::pipeline::band_rects(320, 64, 80)
         .into_iter()
         .map(|r| (r.r0, sig.crop(r)))
         .collect();
+    // True generator: bands are cropped on demand as the source thread
+    // pulls them, never materialized as a whole.
+    let lazy = sigtree::pipeline::band_rects(320, 64, 80)
+        .into_iter()
+        .map(|r| (r.r0, sig.crop(r)));
+    let (a, _) = run_streaming(64, lazy, cfg);
     let (b, _) = run_streaming(64, bands.into_iter(), cfg);
     assert_eq!(a.blocks.len(), b.blocks.len());
     assert!((a.total_weight() - b.total_weight()).abs() < 1e-9);
+
+    // The in-memory shared-stats path (`run`) answers band statistics
+    // from one global PrefixStats instead of band-local rebuilds, so it
+    // is equivalent in weight/quality but not bitwise in block layout.
+    let (c, _) = run(&sig, cfg);
+    assert!((c.total_weight() - a.total_weight()).abs() < 1e-6 * a.total_weight());
+    assert_eq!(c.rows(), 320);
+    let stats = PrefixStats::new(&sig);
+    for _ in 0..10 {
+        let mut s = random_segmentation(sig.bounds(), 6, &mut rng);
+        s.refit_values(&stats);
+        let exact = s.loss(&stats);
+        assert!(
+            (c.fitting_loss(&s) - exact).abs() <= 0.35 * exact + 1e-6,
+            "shared-stats pipeline off: {} vs {exact}",
+            c.fitting_loss(&s)
+        );
+    }
 }
 
 #[test]

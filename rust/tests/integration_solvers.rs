@@ -105,7 +105,10 @@ fn forest_and_gbdt_on_coreset_generalize() {
         .iter()
         .map(|&(r, c, y)| (g_core.predict(&[r as f64, c as f64]) - y).powi(2))
         .sum();
-    assert!(g_sse.is_finite() && g_sse <= 5.0 * s_full.max(1.0), "gbdt {g_sse} vs forest-on-full {s_full}");
+    assert!(
+        g_sse.is_finite() && g_sse <= 5.0 * s_full.max(1.0),
+        "gbdt {g_sse} vs forest-on-full {s_full}"
+    );
 }
 
 /// Rasterized point datasets (Figs. 5–7) flow through the whole system.

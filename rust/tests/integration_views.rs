@@ -1,0 +1,170 @@
+//! View/crop differential suite — the zero-copy acceptance tests.
+//!
+//! A [`SignalView`] presents the same cells in the same order as the
+//! equivalent [`Signal::crop`], so every generic consumer must produce
+//! **bit-identical** results over either; and the shared-stats shard
+//! path (`build_in` / `build_par`) must be thread-count-invariant at
+//! 1/2/4/8 workers. Quality-level equivalences (shared global stats vs
+//! per-band local stats) are tested with tolerances where bit-equality
+//! is not mathematically guaranteed.
+
+use sigtree::coreset::merge_reduce::StreamingCoreset;
+use sigtree::coreset::{Coreset, CoresetConfig, SignalCoreset};
+use sigtree::rng::Rng;
+use sigtree::segmentation::random_segmentation;
+use sigtree::signal::{generate, PrefixStats, Rect, Signal, SignalSource};
+
+/// Assert two coresets are bitwise equal (blocks, labels, weights).
+fn assert_bit_identical(a: &SignalCoreset, b: &SignalCoreset, ctx: &str) {
+    assert_eq!(a.blocks.len(), b.blocks.len(), "{ctx}: block count");
+    for (x, y) in a.blocks.iter().zip(&b.blocks) {
+        assert_eq!(x.rect, y.rect, "{ctx}");
+        assert_eq!(x.labels, y.labels, "{ctx}");
+        assert_eq!(x.weights, y.weights, "{ctx}");
+    }
+}
+
+/// Build over a view vs over the equivalent crop: bit-identical.
+fn assert_view_crop_identical(sig: &Signal, window: Rect, k: usize, eps: f64, ctx: &str) {
+    let from_view = SignalCoreset::build(&sig.view(window), k, eps);
+    let from_crop = SignalCoreset::build(&sig.crop(window), k, eps);
+    assert_bit_identical(&from_view, &from_crop, ctx);
+    assert_eq!(from_view.rows(), window.height(), "{ctx}");
+    assert_eq!(from_view.cols(), window.width(), "{ctx}");
+}
+
+#[test]
+fn view_vs_crop_aligned_signal() {
+    // Window height a multiple of the 64-row shard granularity.
+    let mut rng = Rng::new(400);
+    let sig = generate::smooth(160, 48, 3, &mut rng);
+    assert_view_crop_identical(&sig, Rect::new(16, 143, 0, 47), 4, 0.3, "aligned");
+}
+
+#[test]
+fn view_vs_crop_ragged_signal() {
+    let mut rng = Rng::new(401);
+    let sig = generate::image_like(150, 41, 3, &mut rng);
+    assert_view_crop_identical(&sig, Rect::new(7, 129, 3, 37), 5, 0.25, "ragged");
+}
+
+#[test]
+fn view_vs_crop_masked_signal() {
+    let mut rng = Rng::new(402);
+    let mut sig = generate::smooth(120, 40, 3, &mut rng);
+    sig.mask_rect(Rect::new(30, 70, 5, 20));
+    sig.mask_rect(Rect::new(0, 10, 0, 39)); // window edge fully masked
+    assert_view_crop_identical(&sig, Rect::new(0, 99, 0, 39), 4, 0.3, "masked");
+}
+
+#[test]
+fn build_par_over_view_vs_crop_at_many_thread_counts() {
+    // The sharded builder is generic too: for every thread count the
+    // view build equals the crop build bit-for-bit, and all thread
+    // counts agree with each other.
+    let mut rng = Rng::new(403);
+    let sig = generate::smooth(300, 36, 3, &mut rng);
+    let window = Rect::new(10, 279, 0, 35); // 270 rows → 4 shards
+    let config = CoresetConfig::new(4, 0.3);
+    let crop = sig.crop(window);
+    let reference = SignalCoreset::build_par(&crop, config, 1);
+    for threads in [1, 2, 4, 8] {
+        let from_view = SignalCoreset::build_par(&sig.view(window), config, threads);
+        let from_crop = SignalCoreset::build_par(&crop, config, threads);
+        assert_bit_identical(&from_view, &from_crop, &format!("threads {threads}"));
+        assert_bit_identical(&from_view, &reference, &format!("threads {threads} vs 1T"));
+    }
+}
+
+#[test]
+fn shared_stats_shard_build_covers_its_region() {
+    // `build_in` against one global PrefixStats: blocks tile exactly the
+    // band, in global coordinates, with the band's exact present weight.
+    let mut rng = Rng::new(404);
+    let mut sig = generate::smooth(200, 32, 3, &mut rng);
+    sig.mask_rect(Rect::new(80, 95, 4, 20));
+    let stats = PrefixStats::new(&sig);
+    let config = CoresetConfig::new(4, 0.3);
+    let band = Rect::new(64, 159, 0, 31);
+    let part = SignalCoreset::build_in(&sig, &stats, band, config);
+    assert_eq!(part.rows(), band.height());
+    assert_eq!(part.cols(), band.width());
+    let mut present = 0.0;
+    for (r, c) in band.cells() {
+        if sig.is_present(r, c) {
+            present += 1.0;
+        }
+    }
+    assert!(
+        (part.total_weight() - present).abs() <= 1e-6 * (1.0 + present),
+        "weight {} vs present {present}",
+        part.total_weight()
+    );
+    for b in &part.blocks {
+        assert!(band.contains_rect(&b.rect), "block {:?} outside band", b.rect);
+    }
+    // Full-bounds build_in degenerates to the monolithic build exactly.
+    let whole = SignalCoreset::build_in(&sig, &stats, sig.bounds(), config);
+    let mono = SignalCoreset::build_with_stats(&sig, &stats, config);
+    assert_bit_identical(&whole, &mono, "full-bounds build_in");
+}
+
+#[test]
+fn streaming_views_equal_streaming_crops_bitwise() {
+    // push_band is generic: feeding views and feeding crops of the same
+    // bands must stream the identical coreset.
+    let mut rng = Rng::new(405);
+    let mut sig = generate::smooth(256, 24, 3, &mut rng);
+    sig.mask_rect(Rect::new(100, 140, 0, 11));
+    let config = CoresetConfig::new(3, 0.3);
+    let mut by_view = StreamingCoreset::new(24, config);
+    let mut by_crop = StreamingCoreset::new(24, config);
+    let mut r0 = 0;
+    while r0 < 256 {
+        let r1 = (r0 + 63).min(255);
+        let band = Rect::new(r0, r1, 0, 23);
+        by_view.push_band(&sig.view(band));
+        by_crop.push_band(&sig.crop(band));
+        r0 = r1 + 1;
+    }
+    let a = by_view.finish().unwrap();
+    let b = by_crop.finish().unwrap();
+    assert_bit_identical(&a, &b, "streamed views vs crops");
+}
+
+#[test]
+fn shared_stats_build_par_quality_matches_monolithic() {
+    // The zero-copy shard path must keep the coreset contract: exact
+    // weight, and fitting losses within tolerance of the exact oracle.
+    let mut rng = Rng::new(406);
+    let sig = generate::smooth(320, 64, 4, &mut rng);
+    let stats = PrefixStats::new(&sig);
+    let config = CoresetConfig::new(6, 0.25);
+    let cs = SignalCoreset::build_par(&sig, config, 0);
+    let cells = (320 * 64) as f64;
+    assert!((cs.total_weight() - cells).abs() <= 1e-6 * cells);
+    for _ in 0..15 {
+        let mut s = random_segmentation(sig.bounds(), 6, &mut rng);
+        s.refit_values(&stats);
+        let exact = s.loss(&stats);
+        let approx = cs.fitting_loss(&s);
+        assert!(
+            (approx - exact).abs() <= 0.35 * exact + 1e-6,
+            "{approx} vs {exact}"
+        );
+    }
+}
+
+#[test]
+fn nested_views_build_like_their_flat_equivalent() {
+    // view(view(rect)) composes offsets against the root signal, so a
+    // nested window builds the same coreset as the flat window.
+    let mut rng = Rng::new(407);
+    let sig = generate::image_like(140, 30, 3, &mut rng);
+    let outer = sig.view(Rect::new(10, 129, 2, 27));
+    let inner = outer.view(Rect::new(5, 104, 1, 24));
+    let flat = sig.view(Rect::new(15, 114, 3, 26));
+    let a = SignalCoreset::build(&inner, 4, 0.3);
+    let b = SignalCoreset::build(&flat, 4, 0.3);
+    assert_bit_identical(&a, &b, "nested vs flat view");
+}

@@ -5,6 +5,10 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Style gates first: formatting and lints are cheap and fail fast.
+cargo fmt --check
+cargo clippy --all-targets -- -D warnings
+
 cargo build --release
 cargo test -q
 cargo build --examples
