@@ -7,6 +7,7 @@
 
 use sigtree::benchkit::{bench, fmt_duration, fmt_f, Table};
 use sigtree::coreset::{CoresetConfig, SignalCoreset};
+use sigtree::json::Json;
 use sigtree::rng::Rng;
 use sigtree::runtime::{pad_integral, KernelBackend, NativeBackend, RECT_BATCH, TILE};
 use sigtree::segmentation::{random_segmentation, KSegmentation};
@@ -190,6 +191,10 @@ fn main() {
     ];
     let mut par_table = Table::new(&["op", "threads", "median", "speedup vs 1T"]);
     let mut bases = [0.0f64; 3];
+    // Machine-readable rows for BENCH_runtime.json (same writer as the
+    // audit's evidence trail), so the repo's perf trajectory is diffable
+    // run over run instead of living only in stdout tables.
+    let mut scaling_rows: Vec<Json> = Vec::new();
     for &t in &[1usize, 2, 4, 8] {
         let medians = [
             bench(1, 4, Duration::from_secs(6), || {
@@ -213,6 +218,12 @@ fn main() {
                 fmt_duration(medians[i]),
                 format!("x{:.2}", bases[i] / med.max(1e-12)),
             ]);
+            scaling_rows.push(Json::obj(vec![
+                ("op", Json::str(ops[i])),
+                ("threads", Json::int(t)),
+                ("median_s", Json::num(med)),
+                ("speedup_vs_1t", Json::num(bases[i] / med.max(1e-12))),
+            ]));
         }
     }
     par_table.print("sigtree::par thread scaling (512x512 acceptance case)");
@@ -240,6 +251,7 @@ fn main() {
         "allocs/shard",
         "KiB/shard",
     ]);
+    let mut alloc_rows: Vec<Json> = Vec::new();
     for &t in &[1usize, 2, 4, 8] {
         let (c0, b0) = alloc_snapshot();
         let stats_probe = PrefixStats::new_par(&sig512, t);
@@ -259,10 +271,46 @@ fn main() {
             fmt_f(shard_allocs / shards),
             fmt_f(shard_kib / shards),
         ]);
+        alloc_rows.push(Json::obj(vec![
+            ("threads", Json::int(t)),
+            ("blocks", Json::int(cs.blocks.len())),
+            ("allocs_total", Json::num((c2 - c1) as f64)),
+            ("stats_allocs", Json::num(stats_allocs)),
+            ("allocs_per_shard", Json::num(shard_allocs / shards)),
+            ("kib_per_shard", Json::num(shard_kib / shards)),
+        ]));
     }
     alloc_table.print(
         "allocation counts on the build path (8 shards; shared-stats cost subtracted)",
     );
+
+    // ---- machine-readable evidence trail ---------------------------------
+    let doc = Json::obj(vec![
+        ("bench", Json::str("bench_runtime")),
+        (
+            "acceptance_case",
+            Json::obj(vec![
+                ("rows", Json::int(512)),
+                ("cols", Json::int(512)),
+                ("k", Json::int(64)),
+                ("eps", Json::num(0.2)),
+            ]),
+        ),
+        (
+            "available_threads",
+            Json::int(sigtree::par::available_threads()),
+        ),
+        (
+            "backends",
+            Json::Arr(names.iter().map(|n| Json::str(n.as_str())).collect()),
+        ),
+        ("thread_scaling", Json::Arr(scaling_rows)),
+        ("alloc_profile", Json::Arr(alloc_rows)),
+    ]);
+    match std::fs::write("BENCH_runtime.json", doc.render()) {
+        Ok(()) => println!("\nwrote BENCH_runtime.json"),
+        Err(e) => println!("\ncould not write BENCH_runtime.json: {e}"),
+    }
 
     if names.iter().any(|n| n.starts_with("pjrt")) {
         println!(

@@ -1,0 +1,1060 @@
+//! Empirical ε-guarantee audit engine.
+//!
+//! The paper's headline claim (Theorem 8) is universal: the coreset C
+//! approximates the loss of **every** k-segmentation of the signal D
+//! within 1 ± ε, and therefore the optimal tree of C transfers to D at
+//! (1 + ε)-cost. This module turns that claim from prose into an
+//! executable, machine-readable gate: an [`AuditConfig`]-driven engine
+//! that sweeps structured families of k-segmentations against
+//! freshly built coresets, measures the empirical relative error of
+//! FITTING-LOSS per family, runs the optimal-tree-transfer check on
+//! DP-feasible instances, and emits an [`AuditReport`] with a hand-rolled
+//! JSON evidence trail ([`json`]) plus a pass/fail verdict.
+//!
+//! Query families (Bachem–Lucic–Krause's point that coreset
+//! implementations must be validated by empirical relative-error sweeps,
+//! not spot checks):
+//!
+//! * **block-aligned** — one piece per coreset partition block. Every
+//!   piece is Case (i) of Algorithm 5, so the evaluation must be *exact*
+//!   (the accurate-coreset criterion of Jubran–Maalouf–Feldman: ε ≈ 0
+//!   for within-block queries) — gated at 1e-6, not at ε.
+//! * **random** — random guillotine k-trees
+//!   ([`crate::segmentation::random_segmentation`]), mean-refit.
+//! * **ground-truth** — the planted segmentation of
+//!   [`generate::piecewise_constant`] signals, raw and refit.
+//! * **degenerate** — k = 1, row strips, column strips
+//!   ([`crate::segmentation::strip_segmentation`]).
+//! * **boundary-adversarial** — guillotine trees whose cuts snap onto the
+//!   coreset's partition-block edges and are then jittered ±1
+//!   ([`crate::segmentation::boundary_adversarial_segmentation`]): thin
+//!   slivers straddling block boundaries, the worst Case (ii) regime.
+//! * **dp-optimal** — exact optimal trees from
+//!   [`crate::segmentation::dp2d::TreeDP`] on small instances, for both D
+//!   and C, plus the transfer check
+//!   `loss_D(opt_C) ≤ (1+ε)/(1−ε) · loss_D(opt_D)`.
+//! * **noise-informational** — the same sweeps on pure-noise signals,
+//!   *measured but not gated*: the practical γ = ε/2 calibration is
+//!   certified for the smooth/image/piecewise families only
+//!   (EXPERIMENTS.md §Calibration); noise is the paper's own worst-case
+//!   regime.
+//!
+//! True loss is computed from [`PrefixStats`] regions
+//! (`KSegmentation::loss`), coreset loss through the batch FITTING-LOSS
+//! API; cases and transfer instances fan out on the [`crate::par`] worker
+//! pool, each case deriving its own seed so any thread count produces the
+//! bit-identical report. A violated gate is handed to
+//! [`crate::proptest::run_sized`], which greedily shrinks the failing
+//! case to a minimal reproducible (signal, tree, seed) triple recorded in
+//! the report.
+
+pub use crate::json;
+
+use crate::coreset::fitting_loss::relative_error;
+use crate::coreset::SignalCoreset;
+use crate::proptest;
+use crate::rng::Rng;
+use crate::segmentation::dp2d::{RectOracle, TreeDP};
+use crate::segmentation::{
+    boundary_adversarial_segmentation, random_segmentation, strip_segmentation, KSegmentation,
+};
+use crate::signal::stats::{self, Moments};
+use crate::signal::{generate, PrefixStats, Rect, Signal};
+
+use crate::json::Json;
+
+/// Generator size range of the audited signals (rows; columns are ≈ ⅔):
+/// small enough that a 25-case sweep stays CI-cheap, large enough that
+/// partitions have non-trivial block structure.
+const MIN_SIZE: usize = 12;
+const MAX_SIZE: usize = 72;
+
+/// Audit parameters. `seed` doubles as the base of the
+/// [`proptest::sized_case_seed`] space, so a CLI sweep, a shrunk repro,
+/// and a test-suite replay all address the same deterministic cases.
+#[derive(Clone, Copy, Debug)]
+pub struct AuditConfig {
+    pub k: usize,
+    pub eps: f64,
+    /// Number of audited (signal, coreset) cases.
+    pub cases: usize,
+    pub seed: u64,
+    /// Worker threads for the case/transfer fan-out (0 = all cores).
+    pub threads: usize,
+    /// DP-feasible optimal-tree-transfer instances (min 3).
+    pub transfer_instances: usize,
+}
+
+impl AuditConfig {
+    pub fn new(k: usize, eps: f64) -> Self {
+        assert!(k >= 1);
+        assert!(eps > 0.0 && eps < 1.0, "eps must be in (0,1)");
+        Self { k, eps, cases: 25, seed: 7, threads: 1, transfer_instances: 4 }
+    }
+
+    pub fn with_cases(mut self, cases: usize) -> Self {
+        self.cases = cases.max(1);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_transfer_instances(mut self, instances: usize) -> Self {
+        self.transfer_instances = instances.max(3);
+        self
+    }
+}
+
+/// The audited query families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    BlockAligned,
+    Random,
+    GroundTruth,
+    Degenerate,
+    Boundary,
+    DpOptimal,
+    NoiseInformational,
+}
+
+impl Family {
+    pub const ALL: [Family; 7] = [
+        Family::BlockAligned,
+        Family::Random,
+        Family::GroundTruth,
+        Family::Degenerate,
+        Family::Boundary,
+        Family::DpOptimal,
+        Family::NoiseInformational,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::BlockAligned => "block-aligned",
+            Family::Random => "random",
+            Family::GroundTruth => "ground-truth",
+            Family::Degenerate => "degenerate",
+            Family::Boundary => "boundary-adversarial",
+            Family::DpOptimal => "dp-optimal",
+            Family::NoiseInformational => "noise-informational",
+        }
+    }
+
+    /// Maximum tolerated empirical relative error; `None` = measured but
+    /// not gated. Block-aligned queries are Case (i) everywhere, so they
+    /// gate at the accurate-coreset bar (ε ≈ 0), not at the configured ε.
+    pub fn threshold(self, eps: f64) -> Option<f64> {
+        match self {
+            Family::BlockAligned => Some(1e-6),
+            Family::NoiseInformational => None,
+            _ => Some(eps),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coreset density oracle: the DP's view of the coreset.
+// ---------------------------------------------------------------------------
+
+/// Prefix statistics of the *smoothed coreset density*: every cell of a
+/// partition block carries `count/area` weight at the block's label mean
+/// μ with per-unit variance `opt₁/count`. Under this density the loss of
+/// fitting a constant v to any rectangle R is exactly Algorithm 5's
+/// pro-rata evaluation — Σ_B z_B(R)·[(v − μ_B)² + var_B] — so running
+/// [`TreeDP`] on this oracle finds the **exact minimizer of
+/// FITTING-LOSS over guillotine k-trees**: the paper's "run the
+/// expensive solver on the coreset", and the `opt_C` of the audit's
+/// optimal-tree-transfer check.
+#[derive(Clone, Debug)]
+pub struct CoresetOracle {
+    n: usize,
+    m: usize,
+    /// (m+1)-stride padded prefix arrays, like [`PrefixStats`].
+    w: Vec<f64>,
+    wy: Vec<f64>,
+    wy2: Vec<f64>,
+    /// Per-cell irreducible loss w·var — the saturated (one leaf per
+    /// cell) floor the smoothing can never go below.
+    irr: Vec<f64>,
+}
+
+impl CoresetOracle {
+    pub fn new(cs: &SignalCoreset) -> Self {
+        let (n, m) = (cs.rows(), cs.cols());
+        let mut w_cell = vec![0.0f64; n * m];
+        let mut wy_cell = vec![0.0f64; n * m];
+        let mut wy2_cell = vec![0.0f64; n * m];
+        let mut irr_cell = vec![0.0f64; n * m];
+        for b in &cs.blocks {
+            let mom = b.moments();
+            if mom.count <= 0.0 {
+                continue;
+            }
+            let per_cell = mom.count / b.rect.area() as f64;
+            let mu = mom.mean();
+            let var = mom.opt1() / mom.count;
+            for (r, c) in b.rect.cells() {
+                let i = r * m + c;
+                w_cell[i] += per_cell;
+                wy_cell[i] += per_cell * mu;
+                wy2_cell[i] += per_cell * (mu * mu + var);
+                irr_cell[i] += per_cell * var;
+            }
+        }
+        Self {
+            n,
+            m,
+            w: stats::padded_prefix_from_cells(n, m, &w_cell),
+            wy: stats::padded_prefix_from_cells(n, m, &wy_cell),
+            wy2: stats::padded_prefix_from_cells(n, m, &wy2_cell),
+            irr: stats::padded_prefix_from_cells(n, m, &irr_cell),
+        }
+    }
+
+    #[inline]
+    fn query(&self, arr: &[f64], rect: &Rect) -> f64 {
+        stats::padded_prefix_query(arr, self.m, rect)
+    }
+
+    /// The density's (mass, Σwy, Σwy²) over `rect` — what FITTING-LOSS's
+    /// pro-rata Case (ii) charges a piece covering `rect`.
+    pub fn moments(&self, rect: &Rect) -> Moments {
+        debug_assert!(rect.r1 < self.n && rect.c1 < self.m, "rect out of bounds");
+        Moments {
+            count: self.query(&self.w, rect),
+            sum: self.query(&self.wy, rect),
+            sum_sq: self.query(&self.wy2, rect),
+        }
+    }
+}
+
+impl RectOracle for CoresetOracle {
+    fn opt1(&self, rect: &Rect) -> f64 {
+        self.moments(rect).opt1()
+    }
+
+    fn mean(&self, rect: &Rect) -> f64 {
+        self.moments(rect).mean()
+    }
+
+    fn saturated(&self, rect: &Rect) -> f64 {
+        self.query(&self.irr, rect).max(0.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Audited case: one signal + coreset + its query sweep.
+// ---------------------------------------------------------------------------
+
+/// One audited case: a generated signal, its coreset, and the structured
+/// query sweep. Generated entirely from an `(rng, size)` pair so the
+/// engine's sweep and [`proptest`]'s shrinking address identical cases.
+#[derive(Debug)]
+pub struct AuditCase {
+    pub config: AuditConfig,
+    pub kind: &'static str,
+    pub signal: Signal,
+    pub stats: PrefixStats,
+    pub coreset: SignalCoreset,
+    pub families: Vec<Family>,
+    pub queries: Vec<KSegmentation>,
+}
+
+impl AuditCase {
+    /// Generate the case for `(rng, size)`: the signal kind rotates with
+    /// `size % 4` (piecewise / smooth / image / noise), the query sweep
+    /// is drawn from `rng`. On noise signals every approximate family is
+    /// tagged [`Family::NoiseInformational`] (measured, not gated); the
+    /// block-aligned exactness invariant is signal-independent and stays
+    /// gated.
+    pub fn generate(rng: &mut Rng, size: usize, config: &AuditConfig) -> AuditCase {
+        let n = size.clamp(MIN_SIZE, 4 * MAX_SIZE);
+        let m = (n * 2 / 3).max(MIN_SIZE);
+        let k = config.k;
+        let (kind, signal, planted) = match size % 4 {
+            0 => {
+                let (sig, pieces) =
+                    generate::piecewise_constant(n, m, k.min(n * m / 4).max(1), 0.1, rng);
+                ("piecewise", sig, Some(pieces))
+            }
+            1 => ("smooth", generate::smooth(n, m, 3, rng), None),
+            2 => ("image", generate::image_like(n, m, 2, rng), None),
+            _ => ("noise", generate::noise(n, m, 1.0, rng), None),
+        };
+        let stats = PrefixStats::new(&signal);
+        let coreset = SignalCoreset::build(&signal, k, config.eps);
+        let (families, queries) = build_queries(
+            signal.bounds(),
+            &stats,
+            &coreset,
+            planted.as_deref(),
+            k,
+            kind == "noise",
+            rng,
+        );
+        AuditCase { config: *config, kind, signal, stats, coreset, families, queries }
+    }
+
+    /// Evaluate the sweep: (family, empirical relative error) per query.
+    /// True loss from [`PrefixStats`] regions, coreset loss through the
+    /// batch FITTING-LOSS API (`threads` workers on the par pool).
+    pub fn samples(&self, threads: usize) -> Vec<(Family, f64)> {
+        let approx = self.coreset.fitting_loss_batch(&self.queries, threads);
+        self.families
+            .iter()
+            .zip(self.queries.iter().zip(approx))
+            .map(|(&family, (q, a))| (family, relative_error(a, q.loss(&self.stats))))
+            .collect()
+    }
+
+    /// The property the shrink hook minimizes: every gated family within
+    /// its threshold.
+    pub fn check(&self) -> Result<(), String> {
+        for (family, err) in self.samples(1) {
+            if let Some(threshold) = family.threshold(self.config.eps) {
+                if err > threshold {
+                    return Err(format!(
+                        "family {} rel err {err:.4} > {threshold} on {} {}x{} (k={}, eps={})",
+                        family.name(),
+                        self.kind,
+                        self.signal.rows(),
+                        self.signal.cols(),
+                        self.config.k,
+                        self.config.eps,
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The structured query sweep for one (signal, coreset) pair. Takes the
+/// signal's bounding rectangle rather than the signal itself so the
+/// masked-signal and zero-copy view suites can audit any
+/// [`crate::signal::SignalSource`] they built stats/coresets from.
+pub fn build_queries(
+    bounds: Rect,
+    stats: &PrefixStats,
+    coreset: &SignalCoreset,
+    planted: Option<&[(Rect, f64)]>,
+    k: usize,
+    noise_signal: bool,
+    rng: &mut Rng,
+) -> (Vec<Family>, Vec<KSegmentation>) {
+    let mut families = Vec::new();
+    let mut queries = Vec::new();
+    let approx_family = |f: Family| if noise_signal { Family::NoiseInformational } else { f };
+    let refit = |mut s: KSegmentation| {
+        s.refit_values(stats);
+        s
+    };
+
+    // Block-aligned: one piece per partition block, mean-valued — Case (i)
+    // everywhere, must be exact regardless of the signal.
+    families.push(Family::BlockAligned);
+    queries.push(KSegmentation::new(
+        coreset
+            .blocks
+            .iter()
+            .map(|b| (b.rect, stats.mean(&b.rect)))
+            .collect(),
+    ));
+
+    // Random guillotine k-trees, mean-refit (the tree-learner class).
+    for _ in 0..3 {
+        families.push(approx_family(Family::Random));
+        queries.push(refit(random_segmentation(bounds, k, rng)));
+    }
+
+    // Ground-truth-aligned trees (piecewise signals only): the planted
+    // segmentation raw and refit.
+    if let Some(pieces) = planted {
+        families.push(approx_family(Family::GroundTruth));
+        queries.push(KSegmentation::new(pieces.to_vec()));
+        families.push(approx_family(Family::GroundTruth));
+        queries.push(refit(KSegmentation::new(pieces.to_vec())));
+    }
+
+    // Degenerate trees: k = 1, row strips, column strips.
+    families.push(approx_family(Family::Degenerate));
+    queries.push(KSegmentation::constant(bounds, stats.mean(&bounds)));
+    families.push(approx_family(Family::Degenerate));
+    queries.push(refit(strip_segmentation(bounds, k, true)));
+    families.push(approx_family(Family::Degenerate));
+    queries.push(refit(strip_segmentation(bounds, k, false)));
+
+    // Boundary-adversarial trees: cuts snapped to the coreset's block
+    // edges, jittered ±1.
+    let (row_edges, col_edges) = coreset.block_edges();
+    for _ in 0..2 {
+        families.push(approx_family(Family::Boundary));
+        queries.push(refit(boundary_adversarial_segmentation(
+            bounds, k, &row_edges, &col_edges, rng,
+        )));
+    }
+
+    (families, queries)
+}
+
+// ---------------------------------------------------------------------------
+// Transfer check: the optimal tree of C transfers to D.
+// ---------------------------------------------------------------------------
+
+/// One DP-feasible optimal-tree-transfer instance:
+/// `loss_D(opt_C) ≤ (1+ε)/(1−ε) · loss_D(opt_D)` (Theorem 8's
+/// consequence, the reason a coreset is useful at all).
+#[derive(Clone, Debug)]
+pub struct TransferCheck {
+    pub rows: usize,
+    pub cols: usize,
+    pub k: usize,
+    pub kind: &'static str,
+    pub seed: u64,
+    /// loss_D(opt_D): the exact optimum of the signal.
+    pub opt_d: f64,
+    /// FITTING-LOSS_C(opt_C): the DP optimum over the coreset density.
+    pub opt_c_fitting: f64,
+    /// loss_D(opt_C): the coreset's optimal tree, evaluated on the signal.
+    pub loss_d_of_opt_c: f64,
+    /// (1+ε)/(1−ε) · opt_D (plus numeric slack) — the transfer bound.
+    pub bound: f64,
+    pub pass: bool,
+    /// Empirical rel. errors of FITTING-LOSS on opt_D and opt_C — the
+    /// dp-optimal query family's samples from this instance.
+    pub rel_err_opt_d: f64,
+    pub rel_err_opt_c: f64,
+}
+
+/// Fixed DP-feasible shapes (all ≤ 32×32 — the "run the solver on the
+/// coreset" regime the DP module documents). The default 4 instances use
+/// the smallest shapes so the exact DP stays cheap even in debug test
+/// runs; `--transfer-instances 5+` reaches the larger ones.
+const TRANSFER_SHAPES: [(usize, usize); 6] =
+    [(12, 12), (14, 12), (12, 14), (14, 14), (20, 16), (24, 24)];
+
+fn transfer_check(config: &AuditConfig, instance: usize) -> TransferCheck {
+    // Distinct seed stream from the case sweep (same base seed).
+    let seed = proptest::sized_case_seed(config.seed ^ 0x0D07_AB1E, instance);
+    let mut rng = Rng::new(seed);
+    let (n, m) = TRANSFER_SHAPES[instance % TRANSFER_SHAPES.len()];
+    // DP feasibility clamp: the exact solver is exponential-ish in k on
+    // these shapes. The per-instance `k` field records the value actually
+    // certified, and `summary()` flags the substitution when it differs
+    // from the configured k.
+    let k = config.k.clamp(2, 6);
+    let (kind, signal) = match instance % 3 {
+        0 => ("piecewise", generate::piecewise_constant(n, m, k, 0.1, &mut rng).0),
+        1 => ("smooth", generate::smooth(n, m, 3, &mut rng)),
+        _ => ("image", generate::image_like(n, m, 2, &mut rng)),
+    };
+    let stats = PrefixStats::new(&signal);
+    let coreset = SignalCoreset::build(&signal, k, config.eps);
+    let bounds = signal.bounds();
+
+    let mut dp_d = TreeDP::new(&stats);
+    let opt_d = dp_d.opt(bounds, k);
+    let s_d = dp_d.solve(bounds, k);
+
+    let oracle = CoresetOracle::new(&coreset);
+    let mut dp_c = TreeDP::new(&oracle);
+    let opt_c_fitting = dp_c.opt(bounds, k);
+    let s_c = dp_c.solve(bounds, k);
+
+    let loss_d_of_opt_c = s_c.loss(&stats);
+    let slack = 1e-9 * (1.0 + stats.sum_sq(&bounds).abs());
+    let bound = (1.0 + config.eps) / (1.0 - config.eps) * opt_d + slack;
+
+    // The dp-optimal family's ε samples: FITTING-LOSS vs true loss on
+    // both optimal trees — measured against each reconstructed tree's
+    // own exact loss, so a numerically ambiguous reconstruction cannot
+    // skew the measurement.
+    let exact_d = s_d.loss(&stats);
+    let fits = coreset.fitting_loss_batch(&[s_d, s_c], 1);
+
+    TransferCheck {
+        rows: n,
+        cols: m,
+        k,
+        kind,
+        seed,
+        opt_d,
+        opt_c_fitting,
+        loss_d_of_opt_c,
+        bound,
+        pass: loss_d_of_opt_c <= bound,
+        rel_err_opt_d: relative_error(fits[0], exact_d),
+        rel_err_opt_c: relative_error(fits[1], loss_d_of_opt_c),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report.
+// ---------------------------------------------------------------------------
+
+/// Aggregated per-family empirical error.
+#[derive(Clone, Debug)]
+pub struct FamilyReport {
+    pub family: Family,
+    pub queries: usize,
+    pub max_rel_err: f64,
+    pub mean_rel_err: f64,
+    pub threshold: Option<f64>,
+    /// (index, seed) of the worst query — the replay handle. For every
+    /// case-sweep family this is an audit case index + its
+    /// [`proptest::sized_case_seed`]; for [`Family::DpOptimal`] (whose
+    /// samples come only from the transfer instances) it is a transfer
+    /// instance index + its transfer-stream seed. The JSON trail labels
+    /// the provenance in `worst_source`.
+    pub worst_case: Option<(usize, u64)>,
+}
+
+impl FamilyReport {
+    /// A gated family passes when every observed error is within its
+    /// threshold; an unpopulated family is vacuously green (it gates
+    /// nothing) and informational families always pass.
+    pub fn pass(&self) -> bool {
+        match self.threshold {
+            None => true,
+            Some(t) => self.queries == 0 || self.max_rel_err <= t,
+        }
+    }
+}
+
+/// The audit's evidence: per-family aggregates, transfer instances, the
+/// shrunk minimal repro of the first violation (if any), and the verdict.
+#[derive(Clone, Debug)]
+pub struct AuditReport {
+    pub config: AuditConfig,
+    pub families: Vec<FamilyReport>,
+    pub transfers: Vec<TransferCheck>,
+    pub shrunk_failure: Option<String>,
+    pub pass: bool,
+}
+
+impl AuditReport {
+    /// Render the machine-readable evidence trail.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "audit",
+                // `threads` is deliberately absent: it is a pure
+                // performance knob and the evidence trail is identical
+                // for every thread count (asserted by the tests).
+                Json::obj(vec![
+                    ("k", Json::int(self.config.k)),
+                    ("eps", Json::num(self.config.eps)),
+                    ("cases", Json::int(self.config.cases)),
+                    // Hex string like every other seed in the trail: a
+                    // u64 does not survive a round-trip through a JSON
+                    // double above 2⁵³.
+                    ("seed", Json::str(format!("{:#x}", self.config.seed))),
+                    ("transfer_instances", Json::int(self.config.transfer_instances)),
+                ]),
+            ),
+            (
+                "families",
+                Json::Arr(
+                    self.families
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("name", Json::str(f.family.name())),
+                                ("queries", Json::int(f.queries)),
+                                ("max_rel_err", Json::num(f.max_rel_err)),
+                                ("mean_rel_err", Json::num(f.mean_rel_err)),
+                                (
+                                    "threshold",
+                                    f.threshold.map_or(Json::Null, Json::num),
+                                ),
+                                ("gated", Json::Bool(f.threshold.is_some())),
+                                (
+                                    "vacuous",
+                                    Json::Bool(f.queries == 0 && f.threshold.is_some()),
+                                ),
+                                (
+                                    "worst_case",
+                                    f.worst_case.map_or(Json::Null, |(c, _)| Json::int(c)),
+                                ),
+                                (
+                                    "worst_seed",
+                                    f.worst_case
+                                        .map_or(Json::Null, |(_, s)| Json::str(format!("{s:#x}"))),
+                                ),
+                                (
+                                    "worst_source",
+                                    if f.worst_case.is_none() {
+                                        Json::Null
+                                    } else if f.family == Family::DpOptimal {
+                                        Json::str("transfer-instance")
+                                    } else {
+                                        Json::str("case")
+                                    },
+                                ),
+                                ("pass", Json::Bool(f.pass())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "transfer",
+                Json::Arr(
+                    self.transfers
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("rows", Json::int(t.rows)),
+                                ("cols", Json::int(t.cols)),
+                                ("k", Json::int(t.k)),
+                                ("kind", Json::str(t.kind)),
+                                ("seed", Json::str(format!("{:#x}", t.seed))),
+                                ("opt_d", Json::num(t.opt_d)),
+                                ("opt_c_fitting", Json::num(t.opt_c_fitting)),
+                                ("loss_d_of_opt_c", Json::num(t.loss_d_of_opt_c)),
+                                ("bound", Json::num(t.bound)),
+                                ("rel_err_opt_d", Json::num(t.rel_err_opt_d)),
+                                ("rel_err_opt_c", Json::num(t.rel_err_opt_c)),
+                                ("pass", Json::Bool(t.pass)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "shrunk_failure",
+                self.shrunk_failure
+                    .as_deref()
+                    .map_or(Json::Null, Json::str),
+            ),
+            ("pass", Json::Bool(self.pass)),
+        ])
+    }
+
+    /// Human-readable summary (the CLI's stdout).
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "audit k={} eps={} cases={} seed={} transfer_instances={}\n",
+            self.config.k,
+            self.config.eps,
+            self.config.cases,
+            self.config.seed,
+            self.config.transfer_instances
+        ));
+        out.push_str(&format!(
+            "  {:<22} {:>7} {:>12} {:>12} {:>10}  verdict\n",
+            "family", "queries", "max_rel_err", "mean_rel_err", "threshold"
+        ));
+        for f in &self.families {
+            let verdict = if !f.pass() {
+                "FAIL"
+            } else if f.queries == 0 && f.threshold.is_some() {
+                // Gated but never exercised this sweep — visibly vacuous,
+                // not a silent green.
+                "PASS (vacuous)"
+            } else {
+                "PASS"
+            };
+            out.push_str(&format!(
+                "  {:<22} {:>7} {:>12.4e} {:>12.4e} {:>10}  {verdict}\n",
+                f.family.name(),
+                f.queries,
+                f.max_rel_err,
+                f.mean_rel_err,
+                f.threshold
+                    .map_or("-".to_string(), |t| format!("{t}")),
+            ));
+        }
+        for t in &self.transfers {
+            out.push_str(&format!(
+                "  transfer {}x{} {} k={}: loss_D(opt_C) {:.4e} <= bound {:.4e} (opt_D {:.4e})  {}\n",
+                t.rows,
+                t.cols,
+                t.kind,
+                t.k,
+                t.loss_d_of_opt_c,
+                t.bound,
+                t.opt_d,
+                if t.pass { "PASS" } else { "FAIL" }
+            ));
+        }
+        if self.transfers.iter().any(|t| t.k != self.config.k) {
+            out.push_str(&format!(
+                "  note: transfer instances certify k={} (configured k={} clamped to 2..=6 for DP feasibility)\n",
+                self.transfers.first().map_or(0, |t| t.k),
+                self.config.k
+            ));
+        }
+        if let Some(s) = &self.shrunk_failure {
+            out.push_str(&format!("  shrunk minimal repro: {s}\n"));
+        }
+        out.push_str(&format!(
+            "audit: {}",
+            if self.pass { "PASS" } else { "FAIL" }
+        ));
+        out
+    }
+}
+
+/// Run the full audit: the per-case family sweep plus the DP transfer
+/// instances, both fanned out on the [`crate::par`] pool. Deterministic
+/// for any thread count (cases are self-seeded, results order-preserved).
+pub fn run_audit(config: &AuditConfig) -> AuditReport {
+    struct CaseOutcome {
+        case: usize,
+        seed: u64,
+        samples: Vec<(Family, f64)>,
+    }
+
+    let case_ids: Vec<usize> = (0..config.cases).collect();
+    let outcomes: Vec<CaseOutcome> =
+        crate::par::parallel_map(&case_ids, config.threads, |_, &case| {
+            let seed = proptest::sized_case_seed(config.seed, case);
+            let mut rng = Rng::new(seed);
+            let size = MIN_SIZE + rng.usize(MAX_SIZE - MIN_SIZE + 1);
+            let audit_case = AuditCase::generate(&mut rng, size, config);
+            // Inner evaluation is sequential: the fan-out is at case level.
+            CaseOutcome { case, seed, samples: audit_case.samples(1) }
+        });
+
+    let transfer_ids: Vec<usize> = (0..config.transfer_instances.max(3)).collect();
+    let transfers: Vec<TransferCheck> =
+        crate::par::parallel_map(&transfer_ids, config.threads, |_, &i| {
+            transfer_check(config, i)
+        });
+
+    // Aggregate per family; transfer instances contribute the dp-optimal
+    // samples.
+    let mut families = Vec::new();
+    for family in Family::ALL {
+        let mut queries = 0usize;
+        let mut max_rel_err = 0.0f64;
+        let mut sum = 0.0f64;
+        let mut worst_case: Option<(usize, u64)> = None;
+        for o in &outcomes {
+            for &(f, err) in &o.samples {
+                if f == family {
+                    queries += 1;
+                    sum += err;
+                    if err >= max_rel_err {
+                        max_rel_err = err;
+                        worst_case = Some((o.case, o.seed));
+                    }
+                }
+            }
+        }
+        if family == Family::DpOptimal {
+            for (i, t) in transfers.iter().enumerate() {
+                for err in [t.rel_err_opt_d, t.rel_err_opt_c] {
+                    queries += 1;
+                    sum += err;
+                    if err >= max_rel_err {
+                        max_rel_err = err;
+                        worst_case = Some((i, t.seed));
+                    }
+                }
+            }
+        }
+        families.push(FamilyReport {
+            family,
+            queries,
+            max_rel_err,
+            mean_rel_err: if queries == 0 { 0.0 } else { sum / queries as f64 },
+            threshold: family.threshold(config.eps),
+            worst_case,
+        });
+    }
+
+    let families_pass = families.iter().all(FamilyReport::pass);
+    let transfers_pass = transfers.iter().all(|t| t.pass);
+    // A violated gate is handed to the proptest harness: re-sweep the
+    // same seed space and greedily shrink the first failing case to a
+    // minimal reproducible (signal, tree, seed) triple. Only families
+    // populated by the case sweep can reproduce under `AuditCase::check`
+    // — a dp-optimal violation is replayed from its transfer seed
+    // instead, so don't burn a full re-sweep on it. (The re-sweep
+    // restarts from case 0 and redoes up to `cases` builds sequentially;
+    // that is deliberate — it is paid only on a red gate, and reusing
+    // the proptest runner verbatim keeps the CLI repro and the test
+    // suite's shrink semantics identical.)
+    let case_family_failed = families
+        .iter()
+        .any(|f| !f.pass() && f.family != Family::DpOptimal);
+    let shrunk_failure = if !case_family_failed {
+        None
+    } else {
+        proptest::run_sized(
+            "audit-eps-guarantee",
+            config.seed,
+            config.cases,
+            MIN_SIZE,
+            MAX_SIZE,
+            |rng, size| AuditCase::generate(rng, size, config),
+            AuditCase::check,
+        )
+        .err()
+        .map(|f| f.to_string())
+    };
+
+    AuditReport {
+        config: *config,
+        families,
+        transfers,
+        shrunk_failure,
+        pass: families_pass && transfers_pass,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::Coreset;
+
+    #[test]
+    fn oracle_constant_query_matches_fitting_loss() {
+        // opt₁ under the density = the minimal FITTING-LOSS of a constant:
+        // evaluating the constant at the oracle mean through Algorithm 5
+        // must agree exactly.
+        let mut rng = Rng::new(50);
+        let sig = generate::smooth(30, 24, 3, &mut rng);
+        let cs = SignalCoreset::build(&sig, 4, 0.4);
+        let oracle = CoresetOracle::new(&cs);
+        let bounds = sig.bounds();
+        let v = oracle.mean(&bounds);
+        let via_fitting = cs.fitting_loss(&KSegmentation::constant(bounds, v));
+        let via_oracle = oracle.opt1(&bounds);
+        assert!(
+            (via_fitting - via_oracle).abs() <= 1e-7 * (1.0 + via_fitting),
+            "{via_oracle} vs {via_fitting}"
+        );
+    }
+
+    #[test]
+    fn oracle_dp_value_equals_fitting_loss_of_its_tree() {
+        // The DP on the density oracle minimizes FITTING-LOSS itself: the
+        // value it reports for its own reconstructed tree must equal
+        // Algorithm 5's evaluation of that tree.
+        let mut rng = Rng::new(51);
+        let (sig, _) = generate::piecewise_constant(14, 12, 3, 0.1, &mut rng);
+        let cs = SignalCoreset::build(&sig, 3, 0.4);
+        let oracle = CoresetOracle::new(&cs);
+        let mut dp = TreeDP::new(&oracle);
+        let value = dp.opt(sig.bounds(), 3);
+        let tree = dp.solve(sig.bounds(), 3);
+        let fit = cs.fitting_loss(&tree);
+        assert!(
+            (fit - value).abs() <= 1e-6 * (1.0 + fit),
+            "dp {value} vs fitting {fit}"
+        );
+        // And it never beats trees it could have chosen: random k-trees
+        // evaluate no better under FITTING-LOSS.
+        for _ in 0..10 {
+            let mut s = random_segmentation(sig.bounds(), 3, &mut rng);
+            s.refit_values(&PrefixStats::new(&sig));
+            assert!(value <= cs.fitting_loss(&s) + 1e-9 * (1.0 + value));
+        }
+    }
+
+    #[test]
+    fn oracle_saturated_floor_is_consistent() {
+        // saturated = the sum of per-cell opt₁ under the density; a
+        // single cell's opt₁ must equal its saturated value.
+        let mut rng = Rng::new(52);
+        let sig = generate::image_like(16, 16, 2, &mut rng);
+        let cs = SignalCoreset::build(&sig, 3, 0.5);
+        let oracle = CoresetOracle::new(&cs);
+        let mut total = 0.0;
+        for r in 0..16 {
+            for c in 0..16 {
+                let cell = Rect::new(r, r, c, c);
+                let o = oracle.opt1(&cell);
+                let s = oracle.saturated(&cell);
+                assert!((o - s).abs() <= 1e-9 * (1.0 + s), "cell {r},{c}");
+                total += s;
+            }
+        }
+        let whole = oracle.saturated(&sig.bounds());
+        assert!((total - whole).abs() <= 1e-7 * (1.0 + whole));
+        // The DP floor: opt with k = area reaches exactly the saturated
+        // loss on a small rect.
+        let rect = Rect::new(0, 2, 0, 1);
+        let mut dp = TreeDP::new(&oracle);
+        let sat = oracle.saturated(&rect);
+        assert!((dp.opt(rect, 6) - sat).abs() <= 1e-9 * (1.0 + sat));
+    }
+
+    #[test]
+    fn masked_cells_contribute_zero_to_both_losses() {
+        // Two signals identical except under the mask ⇒ identical
+        // statistics, identical coreset, identical true and coreset loss
+        // for every query — masked cells contribute exactly zero.
+        let mut rng = Rng::new(53);
+        let mut a = generate::smooth(32, 24, 3, &mut rng);
+        generate::random_mask(&mut a, 0.2, &mut rng);
+        let mut b = a.clone();
+        for r in 0..b.rows() {
+            for c in 0..b.cols() {
+                if !b.is_present(r, c) {
+                    b.set(r, c, 1e6); // garbage under the mask
+                }
+            }
+        }
+        let (sa, sb) = (PrefixStats::new(&a), PrefixStats::new(&b));
+        let (ca, cb) = (SignalCoreset::build(&a, 4, 0.4), SignalCoreset::build(&b, 4, 0.4));
+        assert_eq!(ca.blocks.len(), cb.blocks.len());
+        for (x, y) in ca.blocks.iter().zip(&cb.blocks) {
+            assert_eq!(x.rect, y.rect);
+            assert_eq!(x.labels, y.labels);
+            assert_eq!(x.weights, y.weights);
+        }
+        for _ in 0..5 {
+            let mut s = random_segmentation(a.bounds(), 4, &mut rng);
+            s.refit_values(&sa);
+            assert_eq!(s.loss(&sa), s.loss(&sb));
+            assert_eq!(ca.fitting_loss(&s), cb.fitting_loss(&s));
+        }
+    }
+
+    /// Independent oracle for a one-piece query: Case (i) moments for
+    /// fully-covered blocks, the pro-rata Case (ii) closed form for
+    /// straddlers — re-derived from stored block moments, no shared code
+    /// with `block_loss`.
+    fn one_piece_loss_oracle(cs: &SignalCoreset, piece: Rect, v: f64) -> f64 {
+        let mut total = 0.0;
+        for b in &cs.blocks {
+            if let Some(inter) = b.rect.intersection(&piece) {
+                let m = b.moments();
+                if m.count <= 0.0 {
+                    continue;
+                }
+                if piece.contains_rect(&b.rect) {
+                    total += m.sse_to(v);
+                } else {
+                    let z = inter.area() as f64 * m.count / b.rect.area() as f64;
+                    let d = v - m.mean();
+                    total += z * (d * d + m.opt1() / m.count);
+                }
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn masked_region_carries_zero_weight_and_zero_true_loss() {
+        let mut rng = Rng::new(54);
+        let mut sig = generate::smooth(24, 24, 2, &mut rng);
+        let dead = Rect::new(4, 11, 6, 13);
+        sig.mask_rect(dead);
+        let stats = PrefixStats::new(&sig);
+        let cs = SignalCoreset::build(&sig, 3, 0.4);
+        // True loss of a query supported only on the masked region is
+        // zero up to prefix cancellation residue: masked cells contribute
+        // nothing (count is integer-exact zero; sum/sum_sq corners cancel
+        // to ~1e-13 of the surrounding magnitudes, amplified by the query
+        // value in sse_to — hence a tolerance, not an exact compare).
+        let s = KSegmentation::constant(dead, 123.0);
+        assert_eq!(stats.count(&dead), 0.0);
+        assert!(s.loss(&stats).abs() < 1e-6, "residue {}", s.loss(&stats));
+        // No stored block lies inside the dead region (dropped at build),
+        // so the region holds zero coreset weight.
+        for b in &cs.blocks {
+            assert!(!dead.contains_rect(&b.rect), "dead block stored: {:?}", b.rect);
+        }
+        // The coreset charges the dead query only through blocks that
+        // straddle its boundary — exactly the documented area-proxy
+        // smoothing (DESIGN.md §Masks), nothing else: Algorithm 5 agrees
+        // with the independently derived closed form.
+        let expected = one_piece_loss_oracle(&cs, dead, 123.0);
+        let got = cs.fitting_loss(&s);
+        assert!(
+            (got - expected).abs() <= 1e-9 * (1.0 + expected),
+            "{got} vs oracle {expected}"
+        );
+    }
+
+    #[test]
+    fn masked_audit_sweep_stays_within_eps() {
+        // The audit's query builder over a masked signal: exactness of the
+        // block-aligned family survives masking, and the approximate
+        // families stay within the configured ε.
+        let mut rng = Rng::new(55);
+        let mut sig = generate::smooth(40, 30, 3, &mut rng);
+        sig.mask_rect(Rect::new(8, 15, 4, 12));
+        let eps = 0.5;
+        let stats = PrefixStats::new(&sig);
+        let cs = SignalCoreset::build(&sig, 4, eps);
+        let (families, queries) =
+            build_queries(sig.bounds(), &stats, &cs, None, 4, false, &mut rng);
+        let approx = cs.fitting_loss_batch(&queries, 1);
+        for ((family, q), a) in families.iter().zip(&queries).zip(approx) {
+            let err = relative_error(a, q.loss(&stats));
+            let threshold = family.threshold(eps).unwrap();
+            assert!(
+                err <= threshold,
+                "family {} err {err} > {threshold} on masked signal",
+                family.name()
+            );
+        }
+    }
+
+    #[test]
+    fn audit_case_generation_is_deterministic() {
+        let config = AuditConfig::new(4, 0.5);
+        for size in [16, 17, 18, 19] {
+            let a = AuditCase::generate(&mut Rng::new(9), size, &config);
+            let b = AuditCase::generate(&mut Rng::new(9), size, &config);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.signal.values(), b.signal.values());
+            assert_eq!(a.samples(1), b.samples(1));
+            assert_eq!(a.queries.len(), b.queries.len());
+        }
+    }
+
+    #[test]
+    fn noise_cases_do_not_gate_approximate_families() {
+        let config = AuditConfig::new(3, 0.3);
+        // size ≡ 3 (mod 4) → pure-noise signal.
+        let case = AuditCase::generate(&mut Rng::new(4), 23, &config);
+        assert_eq!(case.kind, "noise");
+        assert!(case.families.contains(&Family::NoiseInformational));
+        assert!(case.families.contains(&Family::BlockAligned));
+        for &f in &case.families {
+            assert!(
+                matches!(f, Family::BlockAligned | Family::NoiseInformational),
+                "gated family {f:?} on a noise case"
+            );
+        }
+        // check() ignores the informational samples entirely.
+        assert!(case.check().is_ok());
+    }
+
+    #[test]
+    fn run_audit_small_sweep_passes_and_serializes() {
+        let config = AuditConfig::new(3, 0.5).with_cases(6).with_seed(11).with_threads(2);
+        let report = run_audit(&config);
+        assert!(report.pass, "\n{}", report.summary());
+        assert!(report.shrunk_failure.is_none());
+        assert!(report.transfers.len() >= 3);
+        for t in &report.transfers {
+            assert!(t.pass, "transfer {:?}", t);
+            assert!(t.rows <= 32 && t.cols <= 32, "DP-feasible sizes only");
+        }
+        let rendered = report.to_json().render();
+        for key in ["\"audit\"", "\"families\"", "\"transfer\"", "\"pass\": true"] {
+            assert!(rendered.contains(key), "missing {key} in\n{rendered}");
+        }
+        // Thread count is a pure performance knob: identical evidence.
+        let report1 = run_audit(&config.with_threads(1));
+        assert_eq!(rendered, report1.to_json().render());
+    }
+}
+

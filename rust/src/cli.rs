@@ -76,6 +76,25 @@ impl Args {
         }
     }
 
+    /// 64-bit seed getter (`--seed` may exceed usize on 32-bit targets,
+    /// and seeds are semantically u64 throughout `sigtree::rng`).
+    /// Accepts both decimal and `0x`-prefixed hex — the audit report's
+    /// replay seeds (`worst_seed`, transfer seeds) and the proptest
+    /// harness print seeds as `{:#x}`, and those must paste straight
+    /// back into the CLI to replay a failing case.
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => {
+                let parsed = match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+                    Some(hex) => u64::from_str_radix(hex, 16),
+                    None => v.parse(),
+                };
+                parsed.map_err(|_| CliError::Invalid(name.into(), v.into()))
+            }
+        }
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
         match self.get(name) {
             None => Ok(default),
@@ -140,6 +159,20 @@ mod tests {
         assert_eq!(a.get_usize("missing", 3).unwrap(), 3);
         assert!((a.get_f64("eps", 0.0).unwrap() - 0.5).abs() < 1e-12);
         assert!(a.get_usize("eps", 1).is_err());
+    }
+
+    #[test]
+    fn u64_getter_handles_large_seeds() {
+        let a = Args::parse(argv("audit --seed 18446744073709551615"));
+        assert_eq!(a.get_u64("seed", 7).unwrap(), u64::MAX);
+        assert_eq!(a.get_u64("missing", 7).unwrap(), 7);
+        assert!(Args::parse(argv("audit --seed x")).get_u64("seed", 7).is_err());
+        // Reported seeds are printed as {:#x} and must round-trip.
+        let hex = Args::parse(argv("audit --seed 0x9e3779b97f4a7c15"));
+        assert_eq!(hex.get_u64("seed", 7).unwrap(), 0x9e37_79b9_7f4a_7c15);
+        let upper = Args::parse(argv("audit --seed 0XFF"));
+        assert_eq!(upper.get_u64("seed", 7).unwrap(), 255);
+        assert!(Args::parse(argv("audit --seed 0xzz")).get_u64("seed", 7).is_err());
     }
 
     #[test]

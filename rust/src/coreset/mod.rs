@@ -377,6 +377,30 @@ impl SignalCoreset {
         self.blocks.iter().map(|b| b.total_weight()).sum()
     }
 
+    /// The partition-block boundary positions in signal coordinates:
+    /// sorted, deduplicated "first row/col of a block below/right of a
+    /// cut" values (`r0` and `r1 + 1` of every block, and likewise for
+    /// columns). These are the positions where FITTING-LOSS switches
+    /// between the exact Case (i) and the smoothed Case (ii), which makes
+    /// them the natural targets for the audit engine's
+    /// boundary-adversarial query family
+    /// ([`crate::segmentation::boundary_adversarial_segmentation`]).
+    pub fn block_edges(&self) -> (Vec<usize>, Vec<usize>) {
+        let mut rows = Vec::with_capacity(self.blocks.len() * 2);
+        let mut cols = Vec::with_capacity(self.blocks.len() * 2);
+        for b in &self.blocks {
+            rows.push(b.rect.r0);
+            rows.push(b.rect.r1 + 1);
+            cols.push(b.rect.c0);
+            cols.push(b.rect.c1 + 1);
+        }
+        rows.sort_unstable();
+        rows.dedup();
+        cols.sort_unstable();
+        cols.dedup();
+        (rows, cols)
+    }
+
     /// The loss the coreset reports for the *optimal constant* model —
     /// exact, handy for sanity checks.
     pub fn opt1(&self) -> f64 {
@@ -564,6 +588,29 @@ mod tests {
                 assert_eq!(a.labels, b.labels, "threads {threads}");
                 assert_eq!(a.weights, b.weights, "threads {threads}");
             }
+        }
+    }
+
+    #[test]
+    fn block_edges_are_sorted_interior_and_bounds() {
+        let mut rng = Rng::new(14);
+        let sig = generate::smooth(40, 32, 3, &mut rng);
+        let cs = SignalCoreset::build(&sig, 4, 0.3);
+        let (rows, cols) = cs.block_edges();
+        // Blocks tile the signal, so 0 and n/m are always edges.
+        assert_eq!(*rows.first().unwrap(), 0);
+        assert_eq!(*rows.last().unwrap(), 40);
+        assert_eq!(*cols.first().unwrap(), 0);
+        assert_eq!(*cols.last().unwrap(), 32);
+        for w in rows.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // Every block boundary is present.
+        for b in &cs.blocks {
+            assert!(rows.binary_search(&b.rect.r0).is_ok());
+            assert!(rows.binary_search(&(b.rect.r1 + 1)).is_ok());
+            assert!(cols.binary_search(&b.rect.c0).is_ok());
+            assert!(cols.binary_search(&(b.rect.c1 + 1)).is_ok());
         }
     }
 

@@ -1,0 +1,186 @@
+//! Hand-rolled JSON writer (serde is unavailable offline — DESIGN.md
+//! §Substitutions). Write-only: the audit engine and the benchmarks emit
+//! machine-readable evidence trails (`AuditReport`, `BENCH_runtime.json`)
+//! and CI archives them; nothing in the repo needs to parse JSON back.
+//! Crate-level on purpose — it carries no audit-specific logic, so any
+//! future emitter (pipeline metrics, experiment results) depends on
+//! `sigtree::json`, not on the audit subsystem (which re-exports it as
+//! `audit::json` for the evidence-trail docs).
+//!
+//! Numbers are emitted as valid JSON: exact integers (|x| < 2⁵³) print
+//! without a fractional part, everything else uses Rust's shortest
+//! round-trip `f64` formatting, and non-finite values degrade to `null`
+//! (JSON has no NaN/∞).
+
+use std::fmt::Write as _;
+
+/// A JSON value tree. Objects keep insertion order (`Vec` of pairs, not a
+/// map) so the rendered evidence trail is stable and diffable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Numeric helper for integer-valued counts.
+    pub fn int(x: usize) -> Json {
+        Json::Num(x as f64)
+    }
+
+    /// Numeric helper (non-finite values render as `null`).
+    pub fn num(x: f64) -> Json {
+        Json::Num(x)
+    }
+
+    /// String helper.
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Object helper taking `(key, value)` pairs in display order.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Render as pretty-printed JSON (2-space indent, trailing newline) —
+    /// the on-disk format of every evidence trail the repo writes.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn render_into(&self, out: &mut String, depth: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => write_number(out, *x),
+            Json::Str(s) => write_string(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, depth + 1);
+                    item.render_into(out, depth + 1);
+                }
+                newline_indent(out, depth);
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                if pairs.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    newline_indent(out, depth + 1);
+                    write_string(out, k);
+                    out.push_str(": ");
+                    v.render_into(out, depth + 1);
+                }
+                newline_indent(out, depth);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn newline_indent(out: &mut String, depth: usize) {
+    out.push('\n');
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+}
+
+/// 2⁵³ — the largest magnitude below which every integer is exact in f64.
+const EXACT_INT: f64 = 9_007_199_254_740_992.0;
+
+fn write_number(out: &mut String, x: f64) {
+    if !x.is_finite() {
+        out.push_str("null");
+    } else if x == x.trunc() && x.abs() < EXACT_INT {
+        let _ = write!(out, "{}", x as i64);
+    } else {
+        // Rust's shortest-roundtrip Debug form ("0.1", "1.5e-9") is valid
+        // JSON for every finite non-integer f64.
+        let _ = write!(out, "{x:?}");
+    }
+}
+
+fn write_string(out: &mut String, s: &str) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_render() {
+        assert_eq!(Json::Null.render(), "null\n");
+        assert_eq!(Json::Bool(true).render(), "true\n");
+        assert_eq!(Json::int(25).render(), "25\n");
+        assert_eq!(Json::num(0.5).render(), "0.5\n");
+        assert_eq!(Json::num(-3.0).render(), "-3\n");
+        assert_eq!(Json::num(f64::NAN).render(), "null\n");
+        assert_eq!(Json::num(f64::INFINITY).render(), "null\n");
+    }
+
+    #[test]
+    fn strings_escape() {
+        let s = Json::str("a\"b\\c\nd\te\u{1}");
+        assert_eq!(s.render(), "\"a\\\"b\\\\c\\nd\\te\\u0001\"\n");
+    }
+
+    #[test]
+    fn object_preserves_order_and_nests() {
+        let j = Json::obj(vec![
+            ("z", Json::int(1)),
+            ("a", Json::Arr(vec![Json::int(2), Json::Null])),
+            ("empty", Json::Obj(Vec::new())),
+        ]);
+        let rendered = j.render();
+        // z must come before a (insertion order, not sorted).
+        assert!(rendered.find("\"z\"").unwrap() < rendered.find("\"a\"").unwrap());
+        assert!(rendered.contains("\"empty\": {}"));
+        assert!(rendered.contains("[\n    2,\n    null\n  ]"));
+    }
+
+    #[test]
+    fn exact_integers_have_no_fraction() {
+        assert_eq!(Json::num(1200.0).render(), "1200\n");
+        // Large non-exact magnitudes fall back to float formatting.
+        let big = Json::num(1e300).render();
+        assert!(big.starts_with('1'), "{big}");
+        assert!(!big.contains("null"));
+    }
+}

@@ -27,13 +27,21 @@
 //! * [`par`] — the std-only parallel construction engine (scoped-thread
 //!   worker pool) behind [`coreset::SignalCoreset::build_par`],
 //!   [`signal::PrefixStats::new_par`], and the batch fitting-loss API.
+//! * [`audit`] — the empirical ε-guarantee audit engine: adversarial
+//!   query-family sweeps, the optimal-tree-transfer check on DP-feasible
+//!   instances, and a machine-readable JSON evidence trail — the gate
+//!   every perf PR must keep green.
 //! * [`runtime`] — pluggable kernel backends behind one artifact
 //!   contract: the pure-Rust [`runtime::NativeBackend`] (default) and,
 //!   behind the off-by-default `pjrt` cargo feature, PJRT execution of
 //!   the AOT-compiled JAX/Pallas artifacts from `artifacts/*.hlo.txt`.
 //! * [`error`] — the crate-wide error/result types (std-only `anyhow`
 //!   substitute).
+//! * [`json`] — write-only hand-rolled JSON (the machine-readable
+//!   evidence-trail format of `audit` and the benches; std-only serde
+//!   substitute).
 
+pub mod audit;
 pub mod benchkit;
 pub mod bicriteria;
 pub mod cli;
@@ -41,6 +49,7 @@ pub mod coreset;
 pub mod datasets;
 pub mod error;
 pub mod experiments;
+pub mod json;
 pub mod par;
 pub mod partition;
 pub mod pipeline;
@@ -84,6 +93,7 @@ pub mod proptest;
 /// assert!((sum_native - sum_kernel).abs() < 1e-3 * (1.0 + sum_native.abs()));
 /// ```
 pub mod prelude {
+    pub use crate::audit::{run_audit, AuditConfig, AuditReport};
     pub use crate::coreset::{Coreset, SignalCoreset, WeightedPoint};
     pub use crate::rng::Rng;
     pub use crate::segmentation::KSegmentation;

@@ -5,6 +5,8 @@
 //! * `coreset`    — build a coreset of a synthetic signal, print stats.
 //! * `pipeline`   — run the streaming pipeline (bands/workers/backpressure).
 //! * `evaluate`   — coreset-vs-exact loss validation on random queries.
+//! * `audit`      — the empirical ε-guarantee audit: adversarial query
+//!   families + optimal-tree-transfer checks, JSON evidence trail.
 //! * `experiment` — the paper's §5 missing-values experiment.
 //! * `tune`       — hyperparameter sweep on full data vs coreset.
 //! * `runtime`    — run kernel-backend parity checks (`--backend native|pjrt`).
@@ -29,6 +31,7 @@ fn main() -> ExitCode {
         "coreset" => cmd_coreset(&args),
         "pipeline" => cmd_pipeline(&args),
         "evaluate" => cmd_evaluate(&args),
+        "audit" => cmd_audit(&args),
         "experiment" => cmd_experiment(&args),
         "tune" => cmd_tune(&args),
         "runtime" => cmd_runtime(&args),
@@ -60,6 +63,7 @@ fn print_help() {
            coreset     --n 512 --m 512 --k 64 --eps 0.2 --seed 7 [--signal smooth|image|noise|piecewise] [--threads N]\n\
            pipeline    --n 2048 --m 512 --k 64 --eps 0.2 --band-rows 128 --workers 2 [--threads N]\n\
            evaluate    --n 256 --m 256 --k 16 --eps 0.2 --queries 100 [--threads N]\n\
+           audit       --k 5 --eps 0.5 --cases 25 --seed 7 [--threads N] [--transfer-instances 4] [--json audit.json]\n\
            experiment  --dataset air|gesture --scale 0.1 --k 200 --eps 0.3 [--solver forest|gbdt]\n\
            tune        --dataset air|gesture --scale 0.1 --grid 8 --eps 0.3\n\
            runtime     [--backend native|pjrt] [--dir artifacts] [--threads N]\n\
@@ -194,6 +198,36 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
         mean,
         worst
     );
+    Ok(())
+}
+
+/// The empirical ε-guarantee audit (`sigtree::audit`): sweep adversarial
+/// query families against freshly built coresets, run the optimal-tree-
+/// transfer check on DP-feasible instances, optionally write the JSON
+/// evidence trail, and exit non-zero on any violated gate.
+fn cmd_audit(args: &Args) -> Result<()> {
+    let config = sigtree::audit::AuditConfig::new(
+        args.get_usize("k", 5)?,
+        args.get_f64("eps", 0.5)?,
+    )
+    .with_cases(args.get_usize("cases", 25)?)
+    .with_seed(args.get_u64("seed", 7)?)
+    .with_threads(args.get_threads(0)?)
+    .with_transfer_instances(args.get_usize("transfer-instances", 4)?);
+    let t0 = std::time::Instant::now();
+    let report = sigtree::audit::run_audit(&config);
+    println!("{}", report.summary());
+    println!("audit completed in {:?}", t0.elapsed());
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().render())
+            .map_err(|e| Error::msg(format!("writing {path}: {e}")))?;
+        println!("evidence trail written to {path}");
+    }
+    if !report.pass {
+        return Err(Error::msg(
+            "audit FAILED: empirical guarantee violated (see report above)",
+        ));
+    }
     Ok(())
 }
 

@@ -5,16 +5,69 @@
 //! `rust/tests/`.
 //!
 //! Shipped as a normal module so both unit tests and the integration
-//! tests under `rust/tests/` can use it.
+//! tests under `rust/tests/` can use it. Two entry styles:
+//!
+//! * `check*` — panic on violation with the replayable (case, seed[, size])
+//!   triple in the message (the test-suite path);
+//! * [`run_sized`] — return the violation as a structured [`Failure`]
+//!   instead of panicking, so non-test callers (the `sigtree::audit`
+//!   engine's shrink hook) can embed the minimal reproducible triple in
+//!   a machine-readable report.
 
 use crate::rng::Rng;
+
+/// Per-case seed derivation for [`check`]-style (unsized) properties.
+/// `base` defaults to `0xC0FFEE` for the legacy [`check`] entry point.
+pub fn case_seed(base: u64, case: usize) -> u64 {
+    base ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Per-case seed derivation for [`check_sized`]-style properties.
+/// `base` defaults to `0xFACADE` for the legacy [`check_sized`] entry
+/// point; the audit engine passes its own `--seed` here so CLI sweeps and
+/// shrunk repros share one seed space.
+pub fn sized_case_seed(base: u64, case: usize) -> u64 {
+    base ^ (case as u64).wrapping_mul(0x2545_F491_4F6C_DD1D)
+}
+
+/// A reproducible property violation: everything needed to replay it.
+#[derive(Clone, Debug)]
+pub struct Failure {
+    pub name: String,
+    pub case: usize,
+    pub seed: u64,
+    /// Smallest failing generator size found by greedy shrinking.
+    pub size: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for Failure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property '{}' failed on case {} (seed {:#x}, size {}): {}",
+            self.name, self.case, self.seed, self.size, self.message
+        )
+    }
+}
 
 /// Run `cases` random trials of `prop`, which receives a per-case RNG and
 /// returns `Err(description)` on violation. On failure, panics with the
 /// seed so the case can be replayed exactly.
-pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+pub fn check(name: &str, cases: usize, prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    check_seeded(name, 0xC0FFEE, cases, prop);
+}
+
+/// [`check`] with an explicit base seed, so independent test sites draw
+/// from distinct deterministic streams instead of all sharing `0xC0FFEE`.
+pub fn check_seeded(
+    name: &str,
+    base: u64,
+    cases: usize,
+    mut prop: impl FnMut(&mut Rng) -> Result<(), String>,
+) {
     for case in 0..cases {
-        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let seed = case_seed(base, case);
         let mut rng = Rng::new(seed);
         if let Err(msg) = prop(&mut rng) {
             panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
@@ -24,7 +77,8 @@ pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<
 
 /// Property over a generated value with greedy shrinking: `gen` produces
 /// a value from (rng, size); on failure, `size` is shrunk toward
-/// `min_size` and the smallest failing size is reported.
+/// `min_size` and the smallest failing size is reported. Panics with the
+/// replayable triple; use [`run_sized`] for the non-panicking form.
 pub fn check_sized<T: std::fmt::Debug>(
     name: &str,
     cases: usize,
@@ -33,19 +87,59 @@ pub fn check_sized<T: std::fmt::Debug>(
     gen: impl Fn(&mut Rng, usize) -> T,
     prop: impl Fn(&T) -> Result<(), String>,
 ) {
+    if let Err(f) = run_sized(name, 0xFACADE, cases, min_size, max_size, gen, prop) {
+        panic!("{f}");
+    }
+}
+
+/// [`check_sized`] with an explicit base seed (panicking form).
+pub fn check_sized_seeded<T: std::fmt::Debug>(
+    name: &str,
+    base: u64,
+    cases: usize,
+    min_size: usize,
+    max_size: usize,
+    gen: impl Fn(&mut Rng, usize) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    if let Err(f) = run_sized(name, base, cases, min_size, max_size, gen, prop) {
+        panic!("{f}");
+    }
+}
+
+/// Core sized runner: sweep `cases` seeded cases, greedily shrink the
+/// first violation toward `min_size`, and return it as a [`Failure`]
+/// instead of panicking. This is the hook the audit engine uses to turn
+/// an empirical ε violation into a minimal reproducible (signal, tree,
+/// seed) triple inside its JSON report.
+pub fn run_sized<T: std::fmt::Debug>(
+    name: &str,
+    base: u64,
+    cases: usize,
+    min_size: usize,
+    max_size: usize,
+    gen: impl Fn(&mut Rng, usize) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> Result<(), Failure> {
     for case in 0..cases {
-        let seed = 0xFACADE ^ (case as u64).wrapping_mul(0x2545_F491_4F6C_DD1D);
+        let seed = sized_case_seed(base, case);
         let mut rng = Rng::new(seed);
         let size = min_size + rng.usize(max_size - min_size + 1);
         let value = gen(&mut rng, size);
         if let Err(msg) = prop(&value) {
-            // Greedy shrink: halve size toward min_size while still failing.
+            // Greedy shrink: halve size toward min_size while still
+            // failing. Each attempt discards the size draw first so its
+            // stream matches the original generation — at `s == size` it
+            // regenerates the original value bit-exactly, and the
+            // reported (seed, size) triple replays via the same recipe
+            // (seed the RNG, discard one size draw, generate at `size`).
             let mut best_size = size;
             let mut best_msg = msg;
             let mut s = size;
             while s > min_size {
                 s = (s / 2).max(min_size);
                 let mut srng = Rng::new(seed);
+                let _ = srng.usize(max_size - min_size + 1);
                 let v = gen(&mut srng, s);
                 match prop(&v) {
                     Err(m) => {
@@ -58,11 +152,16 @@ pub fn check_sized<T: std::fmt::Debug>(
                     Ok(()) => break,
                 }
             }
-            panic!(
-                "property '{name}' failed on case {case} (seed {seed:#x}, size {best_size}): {best_msg}"
-            );
+            return Err(Failure {
+                name: name.to_string(),
+                case,
+                seed,
+                size: best_size,
+                message: best_msg,
+            });
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -107,5 +206,47 @@ mod tests {
             Ok(())
         });
         assert_eq!(first, second);
+    }
+
+    #[test]
+    fn seeded_bases_draw_distinct_streams() {
+        let mut a = Vec::new();
+        check_seeded("a", 1, 3, |rng| {
+            a.push(rng.next_u64());
+            Ok(())
+        });
+        let mut b = Vec::new();
+        check_seeded("b", 2, 3, |rng| {
+            b.push(rng.next_u64());
+            Ok(())
+        });
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn run_sized_returns_structured_failure() {
+        let f = run_sized(
+            "structured",
+            0xFACADE,
+            4,
+            2,
+            32,
+            |rng, size| (0..size).map(|_| rng.f64()).collect::<Vec<f64>>(),
+            |v| {
+                if v.len() >= 2 {
+                    Err(format!("len {}", v.len()))
+                } else {
+                    Ok(())
+                }
+            },
+        )
+        .unwrap_err();
+        assert_eq!(f.case, 0);
+        assert_eq!(f.size, 2, "shrinks to the minimal failing size");
+        assert_eq!(f.seed, sized_case_seed(0xFACADE, 0));
+        // The panicking wrapper and the runner agree on the message shape.
+        assert!(f.to_string().contains("size 2"));
+        // And a passing property returns Ok.
+        assert!(run_sized("ok", 7, 3, 1, 8, |_, s| s, |_| Ok(())).is_ok()); // usize is Debug
     }
 }

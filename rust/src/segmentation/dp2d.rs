@@ -18,14 +18,50 @@ use crate::signal::{PrefixStats, Rect};
 
 use super::KSegmentation;
 
-/// Exact k-tree DP solver with memoization.
-pub struct TreeDP<'a> {
-    stats: &'a PrefixStats,
+/// The rectangle-statistics oracle the k-tree DP runs on. The DP itself
+/// only ever asks three questions about a rectangle, so abstracting them
+/// lets the *same exact solver* run both on a signal's [`PrefixStats`]
+/// (ground truth) and on a coreset's smoothed density
+/// ([`crate::audit::CoresetOracle`]) — the paper's actual pipeline,
+/// "run the expensive solver on the coreset", and the optimal-tree-
+/// transfer check the audit engine performs.
+pub trait RectOracle {
+    /// opt₁(rect): minimal loss of fitting one constant to the rect.
+    fn opt1(&self, rect: &Rect) -> f64;
+
+    /// The optimal constant for the rect (its mass-weighted mean label).
+    fn mean(&self, rect: &Rect) -> f64;
+
+    /// Loss when every cell of `rect` is its own leaf — the `k ≥ area`
+    /// saturation floor. Zero for per-cell-exact signal statistics; the
+    /// coreset density oracle overrides it with the irreducible per-cell
+    /// variance its smoothing spreads across each block.
+    fn saturated(&self, _rect: &Rect) -> f64 {
+        0.0
+    }
+}
+
+impl RectOracle for PrefixStats {
+    #[inline]
+    fn opt1(&self, rect: &Rect) -> f64 {
+        PrefixStats::opt1(self, rect)
+    }
+
+    #[inline]
+    fn mean(&self, rect: &Rect) -> f64 {
+        PrefixStats::mean(self, rect)
+    }
+}
+
+/// Exact k-tree DP solver with memoization, generic over the statistics
+/// oracle (defaults to [`PrefixStats`] — the ground-truth solver).
+pub struct TreeDP<'a, O: RectOracle = PrefixStats> {
+    stats: &'a O,
     memo: HashMap<(Rect, usize), f64>,
 }
 
-impl<'a> TreeDP<'a> {
-    pub fn new(stats: &'a PrefixStats) -> Self {
+impl<'a, O: RectOracle> TreeDP<'a, O> {
+    pub fn new(stats: &'a O) -> Self {
         Self { stats, memo: HashMap::new() }
     }
 
@@ -38,11 +74,13 @@ impl<'a> TreeDP<'a> {
         if let Some(&v) = self.memo.get(&(rect, k)) {
             return v;
         }
-        // A rect of `a` cells never needs more than `a` leaves.
+        // A rect of `a` cells never needs more than `a` leaves; the floor
+        // is the oracle's saturated (one-leaf-per-cell) loss.
         let area = rect.area();
         if k >= area {
-            self.memo.insert((rect, k), 0.0);
-            return 0.0;
+            let v = self.stats.saturated(&rect);
+            self.memo.insert((rect, k), v);
+            return v;
         }
         let mut best = self.stats.opt1(&rect);
         // Horizontal cuts (split rows).

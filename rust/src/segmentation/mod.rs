@@ -157,6 +157,90 @@ pub fn random_segmentation(bounds: Rect, k: usize, rng: &mut Rng) -> KSegmentati
     KSegmentation::new(pieces)
 }
 
+/// Axis-aligned strip k-segmentation: `k` near-equal horizontal bands
+/// (`horizontal == true`) or vertical bands of `bounds`, zero-valued
+/// (callers refit). The degenerate query family of the guarantee audit:
+/// strips are the worst case for row-slab-shaped partitions because a
+/// single strip boundary crosses every block of a slab it splits.
+pub fn strip_segmentation(bounds: Rect, k: usize, horizontal: bool) -> KSegmentation {
+    let n = if horizontal { bounds.height() } else { bounds.width() };
+    let k = k.clamp(1, n);
+    let mut pieces = Vec::with_capacity(k);
+    let mut prev = 0;
+    for i in 1..=k {
+        let next = i * n / k; // strictly increasing because k ≤ n
+        let piece = if horizontal {
+            Rect::new(bounds.r0 + prev, bounds.r0 + next - 1, bounds.c0, bounds.c1)
+        } else {
+            Rect::new(bounds.r0, bounds.r1, bounds.c0 + prev, bounds.c0 + next - 1)
+        };
+        pieces.push((piece, 0.0));
+        prev = next;
+    }
+    KSegmentation::new(pieces)
+}
+
+/// A boundary-adversarial k-segmentation: recursive guillotine cuts like
+/// [`random_segmentation`], except every cut snaps to one of the supplied
+/// edge positions (a coreset's partition-block boundaries) when any falls
+/// inside the rectangle being split — and is then jittered ±1 with
+/// probability ½. On-edge cuts maximize the exactly-covered (Case (i))
+/// blocks; the ±1 jitter instead produces 1-cell-wide slivers straddling
+/// a block boundary, the smoothing regime (Case (ii)) a coreset handles
+/// worst. `row_edges`/`col_edges` hold "first row/col of the next block"
+/// positions in signal coordinates (interior edges only are used).
+pub fn boundary_adversarial_segmentation(
+    bounds: Rect,
+    k: usize,
+    row_edges: &[usize],
+    col_edges: &[usize],
+    rng: &mut Rng,
+) -> KSegmentation {
+    // Pick a split-after position in [lo, hi): snapped to an interior
+    // edge when possible, jittered, else uniform.
+    fn pick_cut(lo: usize, hi: usize, edges: &[usize], rng: &mut Rng) -> usize {
+        let candidates: Vec<usize> = edges
+            .iter()
+            .filter(|&&e| e > lo && e <= hi)
+            .map(|&e| e - 1) // edge e ⇒ split after row/col e − 1
+            .collect();
+        let mut cut = if candidates.is_empty() {
+            rng.range(lo, hi)
+        } else {
+            candidates[rng.usize(candidates.len())]
+        };
+        if rng.bool(0.5) {
+            cut = if rng.bool(0.5) { cut + 1 } else { cut.saturating_sub(1) };
+        }
+        cut.clamp(lo, hi - 1)
+    }
+    let mut rects = vec![bounds];
+    while rects.len() < k {
+        let candidates: Vec<usize> = rects
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.height() > 1 || r.width() > 1)
+            .map(|(i, _)| i)
+            .collect();
+        if candidates.is_empty() {
+            break;
+        }
+        let idx = candidates[rng.usize(candidates.len())];
+        let rect = rects.swap_remove(idx);
+        let split_rows = rect.height() > 1 && (rect.width() <= 1 || rng.bool(0.5));
+        if split_rows {
+            let cut = pick_cut(rect.r0, rect.r1, row_edges, rng);
+            rects.push(Rect::new(rect.r0, cut, rect.c0, rect.c1));
+            rects.push(Rect::new(cut + 1, rect.r1, rect.c0, rect.c1));
+        } else {
+            let cut = pick_cut(rect.c0, rect.c1, col_edges, rng);
+            rects.push(Rect::new(rect.r0, rect.r1, rect.c0, cut));
+            rects.push(Rect::new(rect.r0, rect.r1, cut + 1, rect.c1));
+        }
+    }
+    KSegmentation::new(rects.into_iter().map(|r| (r, 0.0)).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,6 +310,44 @@ mod tests {
             .collect();
         worse = KSegmentation::new(pieces);
         assert!(worse.loss(&stats) >= after);
+    }
+
+    #[test]
+    fn strip_segmentation_partitions_both_axes() {
+        let bounds = Rect::new(2, 11, 3, 9);
+        for k in [1, 3, 7, 10] {
+            let rows = strip_segmentation(bounds, k, true);
+            assert_eq!(rows.k(), k.min(bounds.height()));
+            assert!(rows.is_partition_of(bounds), "rows k={k}");
+            let cols = strip_segmentation(bounds, k, false);
+            assert_eq!(cols.k(), k.min(bounds.width()));
+            assert!(cols.is_partition_of(bounds), "cols k={k}");
+        }
+        // k beyond the axis length clamps to one strip per row/col.
+        assert_eq!(strip_segmentation(bounds, 99, true).k(), 10);
+    }
+
+    #[test]
+    fn boundary_adversarial_is_partition_and_deterministic() {
+        let bounds = grid();
+        let row_edges = [3, 7];
+        let col_edges = [5];
+        for k in [1, 2, 5, 9] {
+            let mut rng = Rng::new(11);
+            let s = boundary_adversarial_segmentation(bounds, k, &row_edges, &col_edges, &mut rng);
+            assert_eq!(s.k(), k);
+            assert!(s.is_partition_of(bounds), "k={k}");
+            let mut rng2 = Rng::new(11);
+            let s2 =
+                boundary_adversarial_segmentation(bounds, k, &row_edges, &col_edges, &mut rng2);
+            for (a, b) in s.pieces().iter().zip(s2.pieces()) {
+                assert_eq!(a.0, b.0);
+            }
+        }
+        // No interior edges at all → falls back to random cuts, still valid.
+        let mut rng = Rng::new(5);
+        let s = boundary_adversarial_segmentation(bounds, 4, &[], &[], &mut rng);
+        assert!(s.is_partition_of(bounds));
     }
 
     #[test]

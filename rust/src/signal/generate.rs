@@ -136,6 +136,25 @@ pub fn znormalize_columns(sig: &mut Signal) {
     }
 }
 
+/// Mask out random rectangular patches until roughly `frac` of the cells
+/// are missing (the §5 missing-values regime, generator form). Patches
+/// may overlap; the loop is bounded so pathological `frac` values cannot
+/// spin. Used by the guarantee audit's masked query families: masked
+/// cells must contribute zero to both the true and the coreset loss.
+pub fn random_mask(sig: &mut Signal, frac: f64, rng: &mut Rng) {
+    let (n, m) = (sig.rows(), sig.cols());
+    let target = ((n * m) as f64 * frac.clamp(0.0, 0.9)) as usize;
+    let mut attempts = 0;
+    while sig.len() - sig.present() < target && attempts < 16 * (target + 1) {
+        let h = rng.range(1, (n / 4).max(2));
+        let w = rng.range(1, (m / 4).max(2));
+        let r0 = rng.usize(n - h + 1);
+        let c0 = rng.usize(m - w + 1);
+        sig.mask_rect(Rect::new(r0, r0 + h - 1, c0, c0 + w - 1));
+        attempts += 1;
+    }
+}
+
 /// Pure gaussian noise — the adversarial regime where no small coreset is
 /// information-theoretically possible for *point sets*, but the signal
 /// assumption still yields a valid (large-ish) coreset.
@@ -220,6 +239,20 @@ mod tests {
         for &v in sig.values() {
             assert!(v.abs() < 11.0); // ≤ sum of amplitudes
         }
+    }
+
+    #[test]
+    fn random_mask_hits_target_fraction() {
+        let mut rng = Rng::new(13);
+        let mut sig = smooth(40, 30, 3, &mut rng);
+        random_mask(&mut sig, 0.2, &mut rng);
+        let missing = sig.len() - sig.present();
+        assert!(missing >= (1200.0 * 0.2) as usize, "missing {missing}");
+        assert!(missing < 1200, "some cells must survive");
+        // frac = 0 is a no-op.
+        let mut full = smooth(10, 10, 2, &mut rng);
+        random_mask(&mut full, 0.0, &mut rng);
+        assert_eq!(full.present(), 100);
     }
 
     #[test]

@@ -75,6 +75,36 @@ impl Moments {
     }
 }
 
+/// Build a zero-padded `(m+1)`-stride integral image over a dense
+/// row-major `n × m` cell grid: entry `[(r+1)*(m+1) + (c+1)]` holds the
+/// prefix over rows `0..=r`, cols `0..=c`. The shared construction
+/// primitive behind both [`PrefixStats`]' per-signal arrays (which use
+/// the mask-aware band filler below on signal sources) and arbitrary
+/// per-cell density grids (the audit's coreset-density oracle).
+pub fn padded_prefix_from_cells(n: usize, m: usize, cells: &[f64]) -> Vec<f64> {
+    assert_eq!(cells.len(), n * m, "cell grid must be n*m");
+    let stride = m + 1;
+    let mut out = vec![0.0f64; (n + 1) * stride];
+    for r in 0..n {
+        let mut row_acc = 0.0;
+        for c in 0..m {
+            row_acc += cells[r * m + c];
+            out[(r + 1) * stride + c + 1] = out[r * stride + c + 1] + row_acc;
+        }
+    }
+    out
+}
+
+/// O(1) inclusion–exclusion rectangle query over a zero-padded
+/// `(m+1)`-stride integral image — the one canonical copy of the
+/// 4-corner arithmetic every prefix consumer shares.
+#[inline]
+pub fn padded_prefix_query(arr: &[f64], m: usize, rect: &Rect) -> f64 {
+    let stride = m + 1;
+    let (r0, r1, c0, c1) = (rect.r0, rect.r1 + 1, rect.c0, rect.c1 + 1);
+    arr[r1 * stride + c1] - arr[r0 * stride + c1] - arr[r1 * stride + c0] + arr[r0 * stride + c0]
+}
+
 /// Fill band-local prefix rows for signal rows `r0..r1` into
 /// `(r1 - r0) × (m + 1)` slices: local row `lr` (at offset
 /// `lr * (m + 1)`) holds the prefix over signal rows `r0..=r0+lr`, and
@@ -284,10 +314,7 @@ impl PrefixStats {
 
     #[inline]
     fn query(&self, arr: &[f64], rect: &Rect) -> f64 {
-        let stride = self.m + 1;
-        let (r0, r1, c0, c1) = (rect.r0, rect.r1 + 1, rect.c0, rect.c1 + 1);
-        arr[r1 * stride + c1] - arr[r0 * stride + c1] - arr[r1 * stride + c0]
-            + arr[r0 * stride + c0]
+        padded_prefix_query(arr, self.m, rect)
     }
 
     /// All three moments of a rectangle in O(1).
@@ -372,6 +399,23 @@ mod tests {
             }
         }
         loss
+    }
+
+    #[test]
+    fn cell_grid_prefix_matches_prefix_stats() {
+        // The generic cell-grid construction and the band-filled signal
+        // path answer identical queries on an unmasked signal.
+        let sig = Signal::from_fn(9, 7, |r, c| ((r * 5 + c * 3) % 13) as f64 - 6.0);
+        let stats = PrefixStats::new(&sig);
+        let from_cells = padded_prefix_from_cells(9, 7, sig.values());
+        for r0 in 0..9 {
+            for c0 in 0..7 {
+                let rect = Rect::new(r0, 8, c0, 6);
+                let a = stats.sum(&rect);
+                let b = padded_prefix_query(&from_cells, 7, &rect);
+                assert!((a - b).abs() <= 1e-9 * (1.0 + a.abs()), "{rect:?}");
+            }
+        }
     }
 
     #[test]

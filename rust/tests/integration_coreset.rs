@@ -132,6 +132,40 @@ fn prop_uniform_sample_same_interface() {
 }
 
 #[test]
+fn prop_thin_stripe_isolated_for_any_position() {
+    // Property form of the adversarial-stripe scenario below, migrated
+    // onto the proptest harness: for ANY hot-row position (edge rows
+    // included) the balanced partition must isolate the stripe well
+    // enough that the stripe-separating query stays accurate — and a
+    // violation now reports a replayable (case, seed) pair instead of
+    // panicking mid-loop.
+    sigtree::proptest::check_seeded("thin-stripe-isolated", 99, 4, |rng| {
+        let n = 96;
+        let mut sig = generate::smooth(n, n, 2, rng);
+        let hot = rng.usize(n);
+        for c in 0..n {
+            sig.set(hot, c, 40.0);
+        }
+        let stats = PrefixStats::new(&sig);
+        let cs = SignalCoreset::build(&sig, 8, 0.2);
+        let mut pieces = vec![(sigtree::signal::Rect::new(hot, hot, 0, n - 1), 40.0)];
+        if hot > 0 {
+            pieces.push((sigtree::signal::Rect::new(0, hot - 1, 0, n - 1), 0.0));
+        }
+        if hot + 1 < n {
+            pieces.push((sigtree::signal::Rect::new(hot + 1, n - 1, 0, n - 1), 0.0));
+        }
+        let s = sigtree::segmentation::KSegmentation::new(pieces);
+        let exact = s.loss(&stats);
+        let err = relative_error(cs.fitting_loss(&s), exact);
+        if err > 0.3 {
+            return Err(format!("hot row {hot}: rel err {err} > 0.3"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn coreset_beats_uniform_on_adversarial_thin_stripe() {
     // The regime where uniform sampling provably fails: a thin stripe of
     // outlier labels that a uniform sample of modest size misses, but the

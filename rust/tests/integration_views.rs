@@ -156,6 +156,69 @@ fn shared_stats_build_par_quality_matches_monolithic() {
 }
 
 #[test]
+fn masked_audit_case_family_over_views() {
+    // The guarantee audit's masked case family, run through the zero-copy
+    // path: stats and coreset built over a *view* of a masked signal must
+    // produce the exact same audit sweep (per-query losses and empirical
+    // errors) as the owned crop, masked cells must contribute zero to
+    // both sides, and every gated family stays within ε.
+    use sigtree::audit::build_queries;
+    use sigtree::coreset::fitting_loss::relative_error;
+
+    let mut rng = Rng::new(408);
+    let mut sig = generate::smooth(80, 42, 3, &mut rng);
+    generate::random_mask(&mut sig, 0.15, &mut rng);
+    sig.mask_rect(Rect::new(30, 37, 0, 41)); // a fully-masked band
+    let window = Rect::new(4, 71, 2, 39);
+    let eps = 0.5;
+    let k = 4;
+
+    let view = sig.view(window);
+    let crop = sig.crop(window);
+    let stats_view = PrefixStats::new(&view);
+    let stats_crop = PrefixStats::new(&crop);
+    let cs_view = SignalCoreset::build(&view, k, eps);
+    let cs_crop = SignalCoreset::build(&crop, k, eps);
+    assert_bit_identical(&cs_view, &cs_crop, "masked audit coreset");
+
+    // One query sweep, evaluated against both builds: identical losses
+    // (bit-identical inputs) and every gated family within its threshold.
+    let mut qrng = Rng::new(409);
+    let (families, queries) =
+        build_queries(crop.bounds(), &stats_view, &cs_view, None, k, false, &mut qrng);
+    let via_view = cs_view.fitting_loss_batch(&queries, 1);
+    let via_crop = cs_crop.fitting_loss_batch(&queries, 2);
+    assert_eq!(via_view, via_crop, "view and crop evaluations must agree");
+    for ((family, q), approx) in families.iter().zip(&queries).zip(via_view) {
+        let exact_view = q.loss(&stats_view);
+        let exact_crop = q.loss(&stats_crop);
+        assert_eq!(exact_view, exact_crop);
+        let err = relative_error(approx, exact_view);
+        let threshold = family.threshold(eps).expect("masked sweep families are gated");
+        assert!(
+            err <= threshold,
+            "family {} err {err} > {threshold} on masked view",
+            family.name()
+        );
+    }
+
+    // The fully-masked band contributes nothing: its true loss is exactly
+    // zero for any query value, and the coreset stores no block (hence no
+    // weight) inside it — only the documented boundary-straddle smoothing
+    // can charge a query there (DESIGN.md §Masks).
+    let dead_local = Rect::new(30 - window.r0, 37 - window.r0, 0, crop.cols() - 1);
+    let dead_query = sigtree::segmentation::KSegmentation::constant(dead_local, 42.0);
+    assert_eq!(dead_query.loss(&stats_view), 0.0);
+    for b in &cs_view.blocks {
+        assert!(
+            !dead_local.contains_rect(&b.rect),
+            "zero-weight block stored inside the masked band: {:?}",
+            b.rect
+        );
+    }
+}
+
+#[test]
 fn nested_views_build_like_their_flat_equivalent() {
     // view(view(rect)) composes offsets against the root signal, so a
     // nested window builds the same coreset as the flat window.

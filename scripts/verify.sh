@@ -20,4 +20,10 @@ cargo check --features pjrt
 # build, parallel prefix stats) plus the kernel parity checks.
 cargo run --release -- runtime --backend native --threads 2
 
+# Empirical ε-guarantee audit (fixed seed): adversarial query families +
+# optimal-tree-transfer checks; exits non-zero on any violated gate and
+# leaves the machine-readable evidence trail in audit.json (archived as
+# a CI artifact by ci.yml).
+cargo run --release -- audit --k 5 --eps 0.5 --cases 25 --seed 7 --json audit.json
+
 echo "verify.sh: OK"
