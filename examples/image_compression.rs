@@ -34,7 +34,7 @@ fn main() {
 
     // Coreset route: evaluate candidate codecs via the coreset only.
     let k = 256;
-    let coreset = SignalCoreset::build(&image, k, 0.2);
+    let coreset = SignalCoreset::construct(&image, k, 0.2);
     println!(
         "\ncoreset: {:.2}% of present image cells",
         100.0 * coreset.compression_ratio()

@@ -1,27 +1,34 @@
-//! Quickstart: build a (k, ε)-coreset of a signal, query it with
-//! decision-tree models, and verify the 1±ε approximation empirically.
+//! Quickstart: bring up the one front door (`sigtree::engine`), build a
+//! (k, ε)-coreset, query it with decision-tree models, and verify the
+//! 1±ε approximation empirically.
 //!
 //!     cargo run --release --example quickstart
 
 use sigtree::coreset::fitting_loss::relative_error;
-use sigtree::coreset::{Coreset, SignalCoreset};
-use sigtree::rng::Rng;
+use sigtree::prelude::*;
 use sigtree::segmentation::{greedy::greedy_tree, random_segmentation};
-use sigtree::signal::{generate, PrefixStats};
+use sigtree::signal::generate;
 
 fn main() {
     let mut rng = Rng::new(7);
 
-    // 1. A 512×512 signal (think: image / sensor grid / dataset matrix).
+    // 1. One validated config, one long-lived engine. The engine owns
+    //    the worker pool (reused by every call below) and the kernel
+    //    backend; k bounds the leaf count of the trees we want the
+    //    guarantee for, ε is the target error.
+    let (k, eps) = (32, 0.2);
+    let engine = Engine::new(EngineConfig::new(k, eps).with_threads(0)).expect("valid config");
+
+    // 2. A 512×512 signal (think: image / sensor grid / dataset matrix),
+    //    attached as a session: the shared prefix statistics are built
+    //    once and reused by every exact-loss query below.
     let signal = generate::image_like(512, 512, 4, &mut rng);
-    let stats = PrefixStats::new(&signal);
+    let session = engine.session(&signal);
     println!("signal: {}x{} = {} cells", signal.rows(), signal.cols(), signal.len());
 
-    // 2. Build the coreset (Algorithm 3). k bounds the leaf count of the
-    //    trees we want the guarantee for; ε is the target error.
-    let (k, eps) = (32, 0.2);
+    // 3. Build the coreset (Algorithm 3, sharded on the engine pool).
     let t0 = std::time::Instant::now();
-    let coreset = SignalCoreset::build(&signal, k, eps);
+    let coreset = session.coreset();
     println!(
         "coreset: {} points = {:.2}% of the present cells, built in {:?}",
         coreset.stored_points(),
@@ -29,24 +36,31 @@ fn main() {
         t0.elapsed()
     );
 
-    // 3. Query ANY k-segmentation / k-leaf decision tree against the
-    //    coreset (Algorithm 5) — no access to the original signal.
+    // 4. Query ANY k-segmentation / k-leaf decision tree against the
+    //    coreset (Algorithm 5) — no access to the original signal. The
+    //    whole batch runs on the engine's pool in one call.
+    let queries: Vec<KSegmentation> = (0..200)
+        .map(|_| {
+            let mut s = random_segmentation(signal.bounds(), k, &mut rng);
+            session.refit(&mut s);
+            s
+        })
+        .collect();
+    let approx = engine.fitting_loss(&coreset, &queries);
     let mut worst = 0.0f64;
-    let queries = 200;
-    for _ in 0..queries {
-        let mut s = random_segmentation(signal.bounds(), k, &mut rng);
-        s.refit_values(&stats);
-        let exact = s.loss(&stats); // ground truth (needs the full signal)
-        let approx = coreset.fitting_loss(&s); // coreset only
-        worst = worst.max(relative_error(approx, exact));
+    for (s, a) in queries.iter().zip(approx) {
+        worst = worst.max(relative_error(a, session.exact_loss(s)));
     }
-    println!("worst relative loss error over {queries} random {k}-trees: {worst:.4} (ε = {eps})");
+    println!(
+        "worst relative loss error over {} random {k}-trees: {worst:.4} (ε = {eps})",
+        queries.len()
+    );
 
-    // 4. The headline use: run an expensive solver on the coreset instead
+    // 5. The headline use: run an expensive solver on the coreset instead
     //    of the data. Greedy k-tree on full data vs. evaluated via coreset.
-    let tree = greedy_tree(&stats, k);
-    let exact = tree.loss(&stats);
-    let approx = coreset.fitting_loss(&tree);
+    let tree = greedy_tree(session.stats(), k);
+    let exact = session.exact_loss(&tree);
+    let approx = engine.fitting_loss(&coreset, std::slice::from_ref(&tree))[0];
     println!(
         "greedy {k}-tree loss: exact {exact:.1}, coreset estimate {approx:.1} ({:+.2}%)",
         100.0 * (approx - exact) / exact

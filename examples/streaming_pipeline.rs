@@ -1,30 +1,30 @@
 //! Streaming pipeline demo — the L3 coordinator on a signal too "large"
 //! to process monolithically: bands stream through bounded queues into
 //! worker threads, partial coresets merge-and-reduce, and backpressure
-//! keeps memory flat.
+//! keeps memory flat. Everything runs through one `sigtree::engine`
+//! session (shared statistics, one worker pool).
 //!
 //!     cargo run --release --example streaming_pipeline
 
-use sigtree::coreset::{Coreset, CoresetConfig, SignalCoreset};
-use sigtree::pipeline::{run, run_streaming, PipelineConfig};
-use sigtree::rng::Rng;
+use sigtree::coreset::Coreset;
+use sigtree::pipeline::{run_streaming, PipelineConfig};
+use sigtree::prelude::*;
 use sigtree::segmentation::random_segmentation;
-use sigtree::signal::{generate, PrefixStats, Signal};
+use sigtree::signal::generate;
 
 fn main() {
     let mut rng = Rng::new(33);
     let (n, m) = (4096, 256);
     let signal = generate::smooth(n, m, 5, &mut rng);
-    let stats = PrefixStats::new(&signal);
     println!("streaming a {n}x{m} signal ({} cells)", n * m);
 
-    let config = PipelineConfig::new(CoresetConfig::new(16, 0.25))
-        .with_band_rows(256)
-        .with_workers(2);
+    let engine = Engine::new(EngineConfig::new(16, 0.25).with_band_rows(256).with_threads(2))
+        .expect("valid config");
 
-    // In-memory convenience wrapper…
+    // In-memory banded pipeline through the engine (shared stats built
+    // on the engine pool; band geometry from the config)…
     let t0 = std::time::Instant::now();
-    let (coreset, metrics) = run(&signal, config);
+    let (coreset, metrics) = engine.pipeline(&signal);
     println!(
         "pipeline: {} blocks ({:.2}%) in {:?}",
         coreset.blocks.len(),
@@ -33,14 +33,30 @@ fn main() {
     );
     println!("metrics: {}", metrics.summary());
 
-    // …and the true streaming entry point: bands materialized lazily by a
-    // generator (here: re-synthesized per band — e.g. a sensor feed).
+    // …the band-push handle for sources that feed bands as they arrive…
+    let mut stream = engine.stream(m);
+    for r0 in (0..n).step_by(512) {
+        stream.push_band(&signal.view(Rect::new(r0, r0 + 511, 0, m - 1)));
+    }
+    let pushed = stream.finish().expect("bands were pushed");
+    println!(
+        "band-push stream: {} blocks, weight {:.0} (= {} cells)",
+        pushed.blocks.len(),
+        pushed.total_weight(),
+        n * m
+    );
+
+    // …and the true streaming entry point: bands materialized lazily by
+    // a generator that never holds the full signal (e.g. a sensor feed).
     let band_rows = 512;
     let bands = (0..n / band_rows).map(move |i| {
         let mut band_rng = Rng::new(1000 + i as u64);
         let band: Signal = generate::smooth(band_rows, m, 4, &mut band_rng);
         (i * band_rows, band)
     });
+    let config = PipelineConfig::new(engine.config().coreset_config())
+        .with_band_rows(engine.config().band_rows)
+        .with_workers(engine.threads());
     let (streamed, metrics2) = run_streaming(m, bands, config);
     println!(
         "generator-fed stream: {} blocks, weight {:.0} (= {} cells)",
@@ -50,24 +66,27 @@ fn main() {
     );
     println!("metrics: {}", metrics2.summary());
 
-    // Validate the pipeline coreset against exact losses.
+    // Validate the pipeline coreset against exact losses (shared stats
+    // from the engine session).
+    let session = engine.session(&signal);
     let mut worst = 0.0f64;
     for _ in 0..50 {
         let mut s = random_segmentation(signal.bounds(), 16, &mut rng);
-        s.refit_values(&stats);
-        let exact = s.loss(&stats);
+        session.refit(&mut s);
+        let exact = session.exact_loss(&s);
         let approx = coreset.fitting_loss(&s);
         worst = worst.max((approx - exact).abs() / exact.max(1e-9));
     }
     println!("worst relative error vs exact over 50 queries: {worst:.4}");
 
     // Batch-vs-pipeline sanity: same weight budget.
-    let batch = SignalCoreset::build(&signal, 16, 0.25);
+    let batch = engine.coreset(&signal);
     println!(
         "batch coreset: {} blocks (pipeline produced {})",
         batch.blocks.len(),
         coreset.blocks.len()
     );
     assert!((coreset.total_weight() - (n * m) as f64).abs() < 1e-6 * (n * m) as f64);
+    assert!((pushed.total_weight() - (n * m) as f64).abs() < 1e-6 * (n * m) as f64);
     println!("streaming pipeline OK");
 }

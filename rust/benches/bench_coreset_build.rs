@@ -25,9 +25,9 @@ fn main() {
     let k = 1000;
     let eps = 0.2;
     let t = bench(0, 3, Duration::from_secs(10), || {
-        SignalCoreset::build(&sig, k, eps)
+        SignalCoreset::construct(&sig, k, eps)
     });
-    let cs = SignalCoreset::build(&sig, k, eps);
+    let cs = SignalCoreset::construct(&sig, k, eps);
     let mut table = Table::new(&["N", "k", "eps", "coreset pts", "% of N", "build time"]);
     table.row(&[
         sig.len().to_string(),
@@ -45,7 +45,7 @@ fn main() {
         let mut rng = Rng::new(7);
         let sig = generate::image_like(side, side, 4, &mut rng);
         let t = bench(1, 5, Duration::from_secs(6), || {
-            SignalCoreset::build(&sig, 64, 0.2)
+            SignalCoreset::construct(&sig, 64, 0.2)
         });
         table.row(&[
             (side * side).to_string(),
@@ -61,7 +61,7 @@ fn main() {
     let mut table = Table::new(&["k", "build (median)"]);
     for k in [8usize, 64, 512, 2000] {
         let t = bench(1, 5, Duration::from_secs(6), || {
-            SignalCoreset::build(&sig, k, 0.2)
+            SignalCoreset::construct(&sig, k, 0.2)
         });
         table.row(&[k.to_string(), fmt_duration(t.median)]);
     }

@@ -38,7 +38,7 @@ fn main() {
         let grid = 128usize;
         let sig = datasets::rasterize(&points, grid, grid);
         let stats = PrefixStats::new(&sig);
-        let cs = SignalCoreset::build(&sig, 2000.min(sig.present() / 8).max(8), 0.2);
+        let cs = SignalCoreset::construct(&sig, 2000.min(sig.present() / 8).max(8), 0.2);
         let full_samples = datasets::signal_to_samples(&sig);
         let cs_samples: Vec<Sample> = cs
             .weighted_points()

@@ -27,7 +27,7 @@ fn main() {
         "worst err (uniform)",
     ]);
     for eps in [0.4, 0.2, 0.1] {
-        let cs = SignalCoreset::build(&sig, k, eps);
+        let cs = SignalCoreset::construct(&sig, k, eps);
         let us = UniformSample::build(&sig, cs.size(), &mut rng);
         let mut worst = 0.0f64;
         let mut mean = 0.0f64;
@@ -57,7 +57,7 @@ fn main() {
     table.print("E9: empirical approximation error (Definition 3 validation)");
 
     // --- Evaluation throughput: coreset vs exact-on-full-data. ---
-    let cs = SignalCoreset::build(&sig, k, 0.2);
+    let cs = SignalCoreset::construct(&sig, k, 0.2);
     let queries: Vec<_> = (0..50)
         .map(|_| {
             let mut s = random_segmentation(sig.bounds(), k, &mut rng);

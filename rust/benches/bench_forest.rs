@@ -15,7 +15,7 @@ fn main() {
     let sig = datasets::air_quality_like(0.25, &mut rng);
     let (masked, held) = datasets::holdout_patches(&sig, 0.3, 5, &mut rng);
     let full: Vec<Sample> = datasets::signal_to_samples(&masked);
-    let cs = SignalCoreset::build(&masked, 500, 0.3);
+    let cs = SignalCoreset::construct(&masked, 500, 0.3);
     let core: Vec<Sample> = cs.weighted_points().iter().map(Sample::from_point).collect();
     println!(
         "train set {} cells, coreset {} pts ({:.2}%)",

@@ -51,7 +51,7 @@ fn main() {
 
     // Batch (monolithic) baseline for reference.
     let t = bench(0, 3, Duration::from_secs(10), || {
-        sigtree::coreset::SignalCoreset::build(&sig, 32, 0.25)
+        sigtree::coreset::SignalCoreset::construct(&sig, 32, 0.25)
     });
     println!(
         "\nbatch (no pipeline) baseline: {} ({:.2e} cells/s)",

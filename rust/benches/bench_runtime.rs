@@ -7,6 +7,7 @@
 
 use sigtree::benchkit::{bench, fmt_duration, fmt_f, Table};
 use sigtree::coreset::{CoresetConfig, SignalCoreset};
+use sigtree::engine::{Engine, EngineConfig};
 use sigtree::json::Json;
 use sigtree::rng::Rng;
 use sigtree::runtime::{pad_integral, KernelBackend, NativeBackend, RECT_BATCH, TILE};
@@ -182,7 +183,7 @@ fn main() {
             s
         })
         .collect();
-    let cs512 = SignalCoreset::build_par(&sig512, config, 0);
+    let cs512 = SignalCoreset::construct_sharded(&sig512, config, 0);
 
     let ops = [
         "build_par (512x512 smooth, k=64)",
@@ -198,7 +199,7 @@ fn main() {
     for &t in &[1usize, 2, 4, 8] {
         let medians = [
             bench(1, 4, Duration::from_secs(6), || {
-                SignalCoreset::build_par(&sig512, config, t)
+                SignalCoreset::construct_sharded(&sig512, config, t)
             })
             .median,
             bench(1, 6, Duration::from_secs(2), || PrefixStats::new_par(&sig512, t)).median,
@@ -234,6 +235,51 @@ fn main() {
         sigtree::par::available_threads()
     );
 
+    // ---- engine reuse vs per-call spinup ---------------------------------
+    // The serving scenario: 100 repeated fitting-loss batches. One
+    // long-lived Engine keeps its workers parked between batches; the
+    // legacy path spawns (and joins) scoped threads on every call. Same
+    // results bit-for-bit — this row measures pure dispatch overhead.
+    const REUSE_BATCHES: usize = 100;
+    let reuse_threads = 4usize;
+    let engine = Engine::new(EngineConfig::new(64, 0.2).with_threads(reuse_threads))
+        .expect("valid engine config");
+    assert_eq!(
+        engine.fitting_loss(&cs512, &queries),
+        cs512.fitting_loss_batch(&queries, reuse_threads),
+        "engine pool and spawn-per-call must agree exactly"
+    );
+    let mut reuse_table = Table::new(&["op", "mode", "median", "batches/s"]);
+    let mut reuse_rows: Vec<Json> = Vec::new();
+    let engine_timing = bench(1, 4, Duration::from_secs(6), || {
+        for _ in 0..REUSE_BATCHES {
+            engine.fitting_loss(&cs512, &queries);
+        }
+    });
+    let spawn_timing = bench(1, 4, Duration::from_secs(6), || {
+        for _ in 0..REUSE_BATCHES {
+            cs512.fitting_loss_batch(&queries, reuse_threads);
+        }
+    });
+    for (mode, t) in [("engine-pool", engine_timing), ("spawn-per-call", spawn_timing)] {
+        let med = t.median.as_secs_f64();
+        reuse_table.row(&[
+            format!("fitting_loss x{REUSE_BATCHES} (64 queries, k=64)"),
+            mode.into(),
+            fmt_duration(t.median),
+            fmt_f(REUSE_BATCHES as f64 / med.max(1e-12)),
+        ]);
+        reuse_rows.push(Json::obj(vec![
+            ("op", Json::str(format!("fitting_loss x{REUSE_BATCHES}"))),
+            ("mode", Json::str(mode)),
+            ("threads", Json::int(reuse_threads)),
+            ("batches", Json::int(REUSE_BATCHES)),
+            ("median_s", Json::num(med)),
+            ("batches_per_s", Json::num(REUSE_BATCHES as f64 / med.max(1e-12))),
+        ]));
+    }
+    reuse_table.print("engine reuse: one WorkerPool across batches vs scoped threads per call");
+
     // ---- zero-copy allocation profile -----------------------------------
     // One uninstrumented run per thread count (outside `bench` so warmup
     // repetitions don't inflate the counters). The one-time shared
@@ -257,7 +303,7 @@ fn main() {
         let stats_probe = PrefixStats::new_par(&sig512, t);
         let (c1, b1) = alloc_snapshot();
         drop(stats_probe);
-        let cs = SignalCoreset::build_par(&sig512, config, t);
+        let cs = SignalCoreset::construct_sharded(&sig512, config, t);
         let (c2, b2) = alloc_snapshot();
         let stats_allocs = (c1 - c0) as f64;
         let stats_bytes = (b1 - b0) as f64;
@@ -305,6 +351,7 @@ fn main() {
             Json::Arr(names.iter().map(|n| Json::str(n.as_str())).collect()),
         ),
         ("thread_scaling", Json::Arr(scaling_rows)),
+        ("engine_reuse", Json::Arr(reuse_rows)),
         ("alloc_profile", Json::Arr(alloc_rows)),
     ]);
     match std::fs::write("BENCH_runtime.json", doc.render()) {

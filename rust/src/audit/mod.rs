@@ -290,7 +290,7 @@ impl AuditCase {
             _ => ("noise", generate::noise(n, m, 1.0, rng), None),
         };
         let stats = PrefixStats::new(&signal);
-        let coreset = SignalCoreset::build(&signal, k, config.eps);
+        let coreset = SignalCoreset::construct(&signal, k, config.eps);
         let (families, queries) = build_queries(
             signal.bounds(),
             &stats,
@@ -457,7 +457,7 @@ fn transfer_check(config: &AuditConfig, instance: usize) -> TransferCheck {
         _ => ("image", generate::image_like(n, m, 2, &mut rng)),
     };
     let stats = PrefixStats::new(&signal);
-    let coreset = SignalCoreset::build(&signal, k, config.eps);
+    let coreset = SignalCoreset::construct(&signal, k, config.eps);
     let bounds = signal.bounds();
 
     let mut dp_d = TreeDP::new(&stats);
@@ -709,6 +709,16 @@ impl AuditReport {
 /// instances, both fanned out on the [`crate::par`] pool. Deterministic
 /// for any thread count (cases are self-seeded, results order-preserved).
 pub fn run_audit(config: &AuditConfig) -> AuditReport {
+    run_audit_exec(config, crate::par::Exec::Spawn(config.threads))
+}
+
+/// [`run_audit`] on an explicit executor ([`crate::par::Exec`]) — the
+/// [`crate::engine::Engine::audit`] path, where the case and transfer
+/// fan-outs run on the engine's long-lived pool instead of spawning
+/// scoped threads. The evidence trail is bit-identical for every
+/// executor and thread count (`config.threads` is ignored here; the
+/// executor's concurrency is used).
+pub fn run_audit_exec(config: &AuditConfig, exec: crate::par::Exec<'_>) -> AuditReport {
     struct CaseOutcome {
         case: usize,
         seed: u64,
@@ -716,21 +726,18 @@ pub fn run_audit(config: &AuditConfig) -> AuditReport {
     }
 
     let case_ids: Vec<usize> = (0..config.cases).collect();
-    let outcomes: Vec<CaseOutcome> =
-        crate::par::parallel_map(&case_ids, config.threads, |_, &case| {
-            let seed = proptest::sized_case_seed(config.seed, case);
-            let mut rng = Rng::new(seed);
-            let size = MIN_SIZE + rng.usize(MAX_SIZE - MIN_SIZE + 1);
-            let audit_case = AuditCase::generate(&mut rng, size, config);
-            // Inner evaluation is sequential: the fan-out is at case level.
-            CaseOutcome { case, seed, samples: audit_case.samples(1) }
-        });
+    let outcomes: Vec<CaseOutcome> = exec.map(&case_ids, |_, &case| {
+        let seed = proptest::sized_case_seed(config.seed, case);
+        let mut rng = Rng::new(seed);
+        let size = MIN_SIZE + rng.usize(MAX_SIZE - MIN_SIZE + 1);
+        let audit_case = AuditCase::generate(&mut rng, size, config);
+        // Inner evaluation is sequential: the fan-out is at case level.
+        CaseOutcome { case, seed, samples: audit_case.samples(1) }
+    });
 
     let transfer_ids: Vec<usize> = (0..config.transfer_instances.max(3)).collect();
     let transfers: Vec<TransferCheck> =
-        crate::par::parallel_map(&transfer_ids, config.threads, |_, &i| {
-            transfer_check(config, i)
-        });
+        exec.map(&transfer_ids, |_, &i| transfer_check(config, i));
 
     // Aggregate per family; transfer instances contribute the dp-optimal
     // samples.
@@ -826,7 +833,7 @@ mod tests {
         // must agree exactly.
         let mut rng = Rng::new(50);
         let sig = generate::smooth(30, 24, 3, &mut rng);
-        let cs = SignalCoreset::build(&sig, 4, 0.4);
+        let cs = SignalCoreset::construct(&sig, 4, 0.4);
         let oracle = CoresetOracle::new(&cs);
         let bounds = sig.bounds();
         let v = oracle.mean(&bounds);
@@ -845,7 +852,7 @@ mod tests {
         // Algorithm 5's evaluation of that tree.
         let mut rng = Rng::new(51);
         let (sig, _) = generate::piecewise_constant(14, 12, 3, 0.1, &mut rng);
-        let cs = SignalCoreset::build(&sig, 3, 0.4);
+        let cs = SignalCoreset::construct(&sig, 3, 0.4);
         let oracle = CoresetOracle::new(&cs);
         let mut dp = TreeDP::new(&oracle);
         let value = dp.opt(sig.bounds(), 3);
@@ -870,7 +877,7 @@ mod tests {
         // single cell's opt₁ must equal its saturated value.
         let mut rng = Rng::new(52);
         let sig = generate::image_like(16, 16, 2, &mut rng);
-        let cs = SignalCoreset::build(&sig, 3, 0.5);
+        let cs = SignalCoreset::construct(&sig, 3, 0.5);
         let oracle = CoresetOracle::new(&cs);
         let mut total = 0.0;
         for r in 0..16 {
@@ -909,7 +916,7 @@ mod tests {
             }
         }
         let (sa, sb) = (PrefixStats::new(&a), PrefixStats::new(&b));
-        let (ca, cb) = (SignalCoreset::build(&a, 4, 0.4), SignalCoreset::build(&b, 4, 0.4));
+        let (ca, cb) = (SignalCoreset::construct(&a, 4, 0.4), SignalCoreset::construct(&b, 4, 0.4));
         assert_eq!(ca.blocks.len(), cb.blocks.len());
         for (x, y) in ca.blocks.iter().zip(&cb.blocks) {
             assert_eq!(x.rect, y.rect);
@@ -955,7 +962,7 @@ mod tests {
         let dead = Rect::new(4, 11, 6, 13);
         sig.mask_rect(dead);
         let stats = PrefixStats::new(&sig);
-        let cs = SignalCoreset::build(&sig, 3, 0.4);
+        let cs = SignalCoreset::construct(&sig, 3, 0.4);
         // True loss of a query supported only on the masked region is
         // zero up to prefix cancellation residue: masked cells contribute
         // nothing (count is integer-exact zero; sum/sum_sq corners cancel
@@ -991,7 +998,7 @@ mod tests {
         sig.mask_rect(Rect::new(8, 15, 4, 12));
         let eps = 0.5;
         let stats = PrefixStats::new(&sig);
-        let cs = SignalCoreset::build(&sig, 4, eps);
+        let cs = SignalCoreset::construct(&sig, 4, eps);
         let (families, queries) =
             build_queries(sig.bounds(), &stats, &cs, None, 4, false, &mut rng);
         let approx = cs.fitting_loss_batch(&queries, 1);

@@ -10,6 +10,10 @@ pub enum CliError {
     Missing(String),
     Invalid(String, String),
     UnknownCommand(String),
+    /// Unrecognized `--flags` for a subcommand: (flags, command, valid
+    /// options). A typo'd flag must fail loudly — `--theads 4` silently
+    /// running single-threaded is worse than an error.
+    UnknownFlags(String, String, String),
 }
 
 impl std::fmt::Display for CliError {
@@ -18,6 +22,10 @@ impl std::fmt::Display for CliError {
             CliError::Missing(n) => write!(f, "missing required argument --{n}"),
             CliError::Invalid(n, v) => write!(f, "invalid value for --{n}: {v}"),
             CliError::UnknownCommand(c) => write!(f, "unknown subcommand '{c}'; try 'help'"),
+            CliError::UnknownFlags(flags, cmd, valid) => write!(
+                f,
+                "unknown flag(s) {flags} for '{cmd}'; valid flags: {valid}"
+            ),
         }
     }
 }
@@ -78,20 +86,14 @@ impl Args {
 
     /// 64-bit seed getter (`--seed` may exceed usize on 32-bit targets,
     /// and seeds are semantically u64 throughout `sigtree::rng`).
-    /// Accepts both decimal and `0x`-prefixed hex — the audit report's
-    /// replay seeds (`worst_seed`, transfer seeds) and the proptest
-    /// harness print seeds as `{:#x}`, and those must paste straight
-    /// back into the CLI to replay a failing case.
+    /// Accepts both decimal and `0x`-prefixed hex ([`parse_u64`]) — the
+    /// audit report's replay seeds (`worst_seed`, transfer seeds) and
+    /// the proptest harness print seeds as `{:#x}`, and those must
+    /// paste straight back into the CLI to replay a failing case.
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => {
-                let parsed = match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
-                    Some(hex) => u64::from_str_radix(hex, 16),
-                    None => v.parse(),
-                };
-                parsed.map_err(|_| CliError::Invalid(name.into(), v.into()))
-            }
+            Some(v) => parse_u64(v).ok_or_else(|| CliError::Invalid(name.into(), v.into())),
         }
     }
 
@@ -128,6 +130,49 @@ impl Args {
 
     pub fn require(&self, name: &str) -> Result<&str, CliError> {
         self.get(name).ok_or_else(|| CliError::Missing(name.into()))
+    }
+
+    /// Reject any parsed `--flag` outside `allowed`, listing the valid
+    /// options for this subcommand. Every subcommand calls this before
+    /// reading a single knob, so typos (`--theads`) error out instead
+    /// of silently falling back to defaults. Unknown flags are reported
+    /// sorted (all of them, not just the first).
+    pub fn expect_only(&self, allowed: &[&str]) -> Result<(), CliError> {
+        let mut unknown: Vec<&str> = self
+            .options
+            .keys()
+            .map(String::as_str)
+            .filter(|flag| !allowed.contains(flag))
+            .collect();
+        if unknown.is_empty() {
+            return Ok(());
+        }
+        unknown.sort_unstable();
+        let mut valid: Vec<&str> = allowed.to_vec();
+        valid.sort_unstable();
+        Err(CliError::UnknownFlags(
+            unknown
+                .iter()
+                .map(|f| format!("--{f}"))
+                .collect::<Vec<_>>()
+                .join(", "),
+            self.command.clone(),
+            valid
+                .iter()
+                .map(|f| format!("--{f}"))
+                .collect::<Vec<_>>()
+                .join(", "),
+        ))
+    }
+}
+
+/// The repo-wide u64/seed spelling: decimal or `0x`/`0X`-prefixed hex.
+/// Shared by [`Args::get_u64`] and the engine's JSON config reader so
+/// the two surfaces can never diverge on what a seed looks like.
+pub fn parse_u64(v: &str) -> Option<u64> {
+    match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => v.parse().ok(),
     }
 }
 
@@ -199,5 +244,32 @@ mod tests {
     fn empty_argv_is_help() {
         let a = Args::parse(Vec::<String>::new());
         assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn expect_only_accepts_known_flags() {
+        let a = Args::parse(argv("coreset --k 5 --eps 0.4 --threads 2"));
+        a.expect_only(&["k", "eps", "threads", "seed"]).unwrap();
+    }
+
+    #[test]
+    fn expect_only_rejects_typos_listing_valid_flags() {
+        // The historical failure mode: `--theads 4` was silently
+        // accepted and the run fell back to single-threaded defaults.
+        let a = Args::parse(argv("coreset --k 5 --theads 4"));
+        let err = a.expect_only(&["k", "eps", "threads"]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--theads"), "{msg}");
+        assert!(msg.contains("'coreset'"), "{msg}");
+        assert!(msg.contains("--threads"), "must list valid flags: {msg}");
+        assert!(msg.contains("--eps"), "{msg}");
+    }
+
+    #[test]
+    fn expect_only_reports_all_unknown_flags_sorted() {
+        let a = Args::parse(argv("audit --zz 1 --aa 2 --k 3"));
+        let msg = a.expect_only(&["k"]).unwrap_err().to_string();
+        let (aa, zz) = (msg.find("--aa").unwrap(), msg.find("--zz").unwrap());
+        assert!(aa < zz, "sorted: {msg}");
     }
 }

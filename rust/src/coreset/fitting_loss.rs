@@ -131,7 +131,7 @@ mod tests {
         let mut rng = Rng::new(8);
         let sig = generate::smooth(40, 40, 3, &mut rng);
         let stats = PrefixStats::new(&sig);
-        let cs = SignalCoreset::build(&sig, 5, 0.3);
+        let cs = SignalCoreset::construct(&sig, 5, 0.3);
         for v in [-2.0, 0.0, 1.5] {
             let s = KSegmentation::constant(sig.bounds(), v);
             let exact = s.loss(&stats);
@@ -150,7 +150,7 @@ mod tests {
         let stats = PrefixStats::new(&sig);
         let k = 8;
         let eps = 0.2;
-        let cs = SignalCoreset::build(&sig, k, eps);
+        let cs = SignalCoreset::construct(&sig, k, eps);
         let mut worst = 0.0f64;
         for _ in 0..50 {
             let mut s = random_segmentation(sig.bounds(), k, &mut rng);
@@ -169,7 +169,7 @@ mod tests {
         let mut rng = Rng::new(10);
         let sig = generate::noise(32, 32, 1.0, &mut rng);
         let stats = PrefixStats::new(&sig);
-        let cs = SignalCoreset::build(&sig, 4, 0.4);
+        let cs = SignalCoreset::construct(&sig, 4, 0.4);
         let s = random_segmentation(sig.bounds(), 24, &mut rng);
         let approx = cs.fitting_loss(&s);
         let exact = s.loss(&stats);
@@ -182,7 +182,7 @@ mod tests {
     fn partial_cover_contributes_partially() {
         let mut rng = Rng::new(11);
         let sig = generate::smooth(20, 20, 2, &mut rng);
-        let cs = SignalCoreset::build(&sig, 3, 0.3);
+        let cs = SignalCoreset::construct(&sig, 3, 0.3);
         // s covers only the left half.
         let s = KSegmentation::new(vec![(Rect::new(0, 19, 0, 9), 0.0)]);
         let full = KSegmentation::constant(sig.bounds(), 0.0);
@@ -200,7 +200,7 @@ mod tests {
         // allocation order).
         let mut rng = Rng::new(12);
         let sig = generate::smooth(24, 24, 3, &mut rng);
-        let cs = SignalCoreset::build(&sig, 4, 0.25);
+        let cs = SignalCoreset::construct(&sig, 4, 0.25);
         let slicer = random_segmentation(sig.bounds(), 9, &mut rng);
         let zeroed = KSegmentation::new(
             slicer.pieces().iter().map(|&(r, _)| (r, 0.0)).collect(),

@@ -116,7 +116,11 @@ pub fn reduce(coreset: SignalCoreset, tol: f64) -> SignalCoreset {
 /// Streaming builder: feed row-bands as they arrive; coresets are built
 /// per band, merged, and periodically reduced — memory stays proportional
 /// to the reduced coreset, not the stream.
-pub struct StreamingCoreset {
+///
+/// The lifetime parameter only matters for the pool-backed executor
+/// ([`Self::with_exec`], the [`crate::engine::Engine::stream`] path);
+/// plain `new`/`with_threads` streams leave it unconstrained.
+pub struct StreamingCoreset<'p> {
     config: CoresetConfig,
     m: usize,
     rows_seen: usize,
@@ -126,16 +130,21 @@ pub struct StreamingCoreset {
     reduce_factor: f64,
     last_reduced_len: usize,
     /// Per-band construction engine: `None` = the sequential
-    /// [`SignalCoreset::build_with`] (the default); `Some(t)` = the
-    /// sharded [`SignalCoreset::build_par`] with `t` workers. Kept as an
-    /// opt-in rather than a count so that the streamed coreset's
-    /// *content* never depends on a worker count — `build_par` is
-    /// thread-count-invariant, so every `Some(_)` produces the identical
-    /// stream.
-    threads: Option<usize>,
+    /// [`SignalCoreset::construct_with`] (the default); `Some(exec)` =
+    /// the sharded [`SignalCoreset::construct_sharded_exec`] on that
+    /// executor. Kept as an opt-in so that the streamed coreset's
+    /// *content* never depends on a worker count or executor — the
+    /// sharded builder is thread- and executor-invariant, so every
+    /// `Some(_)` produces the identical stream.
+    exec: Option<crate::par::Exec<'p>>,
+    /// Row-shard geometry of the `Some(_)` sharded path (default
+    /// [`SignalCoreset::SHARD_ROWS`]); part of the streamed *content*,
+    /// unlike the executor — [`crate::engine::Engine::stream`] forwards
+    /// its config's geometry here so build and stream paths agree.
+    shard_rows: usize,
 }
 
-impl StreamingCoreset {
+impl<'p> StreamingCoreset<'p> {
     pub fn new(m: usize, config: CoresetConfig) -> Self {
         Self {
             config,
@@ -144,18 +153,37 @@ impl StreamingCoreset {
             acc: None,
             reduce_factor: 2.0,
             last_reduced_len: 64,
-            threads: None,
+            exec: None,
+            shard_rows: SignalCoreset::SHARD_ROWS,
         }
     }
 
     /// Build every incoming band through the parallel sharded builder
-    /// ([`SignalCoreset::build_par`]) with this many workers (`0` = all
-    /// available cores). A pure performance knob: the streamed coreset
-    /// is bit-identical for every `threads` value, though it may differ
-    /// from the default sequential path (sharded vs monolithic per-band
-    /// partitions).
+    /// ([`SignalCoreset::construct_sharded`]) with this many workers (`0` = all
+    /// available cores), spawned per band. A pure performance knob: the
+    /// streamed coreset is bit-identical for every `threads` value,
+    /// though it may differ from the default sequential path (sharded
+    /// vs monolithic per-band partitions).
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.threads = Some(threads);
+        self.exec = Some(crate::par::Exec::Spawn(threads));
+        self
+    }
+
+    /// Like [`Self::with_threads`], but on an explicit executor — pass
+    /// `Exec::Pool` (as [`crate::engine::Engine::stream`] does) to
+    /// reuse long-lived workers across every pushed band instead of
+    /// spawning threads per band. Streamed content is identical to any
+    /// `with_threads` stream.
+    pub fn with_exec(mut self, exec: crate::par::Exec<'p>) -> Self {
+        self.exec = Some(exec);
+        self
+    }
+
+    /// Row-shard geometry for the sharded per-band path (clamped ≥ 1).
+    /// Changes the streamed content for bands taller than one shard,
+    /// exactly as it does on the batch build path.
+    pub fn with_shard_rows(mut self, shard_rows: usize) -> Self {
+        self.shard_rows = shard_rows.max(1);
         self
     }
 
@@ -166,9 +194,14 @@ impl StreamingCoreset {
     /// bands. Either way the band coreset is identical.
     pub fn push_band<S: SignalSource>(&mut self, band: &S) {
         assert_eq!(band.cols(), self.m);
-        let part = match self.threads {
-            None => SignalCoreset::build_with(band, self.config),
-            Some(t) => SignalCoreset::build_par(band, self.config, t),
+        let part = match self.exec {
+            None => SignalCoreset::construct_with(band, self.config),
+            Some(exec) => SignalCoreset::construct_sharded_exec(
+                band,
+                self.config,
+                self.shard_rows,
+                exec,
+            ),
         };
         let part = offset_rows(part, self.rows_seen);
         self.rows_seen += band.rows();
@@ -225,7 +258,7 @@ mod tests {
             .iter()
             .enumerate()
             .map(|(i, band)| {
-                offset_rows(SignalCoreset::build(band, 4, 0.3), i * 12)
+                offset_rows(SignalCoreset::construct(band, 4, 0.3), i * 12)
             })
             .collect();
         let merged = merge(parts);
@@ -241,7 +274,7 @@ mod tests {
         let parts: Vec<SignalCoreset> = band_split(&sig, 3)
             .iter()
             .enumerate()
-            .map(|(i, band)| offset_rows(SignalCoreset::build(band, 5, 0.25), i * 20))
+            .map(|(i, band)| offset_rows(SignalCoreset::construct(band, 5, 0.25), i * 20))
             .collect();
         let merged = merge(parts);
         for _ in 0..20 {
@@ -277,7 +310,7 @@ mod tests {
         let parts: Vec<SignalCoreset> = band_split(&sig, 8)
             .iter()
             .enumerate()
-            .map(|(i, band)| offset_rows(SignalCoreset::build(band, 4, 0.3), i * 8))
+            .map(|(i, band)| offset_rows(SignalCoreset::construct(band, 4, 0.3), i * 8))
             .collect();
         let merged = merge(parts);
         let before = merged.blocks.len();

@@ -15,9 +15,20 @@
 //!    the coreset in O(k·|blocks|).
 //!
 //! The construction is band-shardable with no loss of correctness (the
-//! merge-and-reduce property): [`SignalCoreset::build_par`] runs the
-//! pipeline per row-shard on the [`crate::par`] worker pool and composes
-//! via [`merge_reduce`] — see DESIGN.md §Parallelism.
+//! merge-and-reduce property): [`SignalCoreset::construct_sharded`] runs
+//! the pipeline per row-shard on the [`crate::par`] worker pool and
+//! composes via [`merge_reduce`] — see DESIGN.md §Parallelism.
+//!
+//! ## API layering
+//!
+//! The `construct*` family below is the **low-level kernel layer**: it
+//! takes explicit statistics, regions, and executors, and is what the
+//! engine, the pipeline, and the streaming composition drive. Most
+//! callers should go through the one front door instead —
+//! [`crate::engine::Engine`], which owns the shared statistics, a
+//! long-lived worker pool, and the kernel backend (DESIGN.md §Engine &
+//! API layering). The historical `SignalCoreset::build*` names survive
+//! as `#[deprecated]` shims for one release.
 //!
 //! ## Theory vs. practice (γ)
 //!
@@ -190,29 +201,30 @@ pub struct SignalCoreset {
 }
 
 impl SignalCoreset {
-    /// Algorithm 3 with the practical default calibration. Generic over
+    /// Algorithm 3 with the practical default calibration — the
+    /// monolithic (single-shard) construction. Generic over
     /// [`SignalSource`]: building over a zero-copy [`crate::signal::SignalView`]
     /// is bit-identical to building over the equivalent [`crate::signal::Signal::crop`]
     /// (same data, same iteration order — the view/crop differential
     /// suite in `tests/integration_views.rs` pins this down).
-    pub fn build<S: SignalSource>(signal: &S, k: usize, eps: f64) -> Self {
-        Self::build_with(signal, CoresetConfig::new(k, eps))
+    pub fn construct<S: SignalSource>(signal: &S, k: usize, eps: f64) -> Self {
+        Self::construct_with(signal, CoresetConfig::new(k, eps))
     }
 
     /// Algorithm 3 with explicit configuration.
-    pub fn build_with<S: SignalSource>(signal: &S, config: CoresetConfig) -> Self {
+    pub fn construct_with<S: SignalSource>(signal: &S, config: CoresetConfig) -> Self {
         let stats = PrefixStats::new(signal);
-        Self::build_with_stats(signal, &stats, config)
+        Self::construct_with_stats(signal, &stats, config)
     }
 
     /// Variant reusing precomputed prefix statistics (the pipeline path).
     /// `stats` must cover `signal`'s coordinate frame.
-    pub fn build_with_stats<S: SignalSource>(
+    pub fn construct_with_stats<S: SignalSource>(
         signal: &S,
         stats: &PrefixStats,
         config: CoresetConfig,
     ) -> Self {
-        Self::build_in(signal, stats, signal.bounds(), config)
+        Self::construct_in(signal, stats, signal.bounds(), config)
     }
 
     /// Region-scoped Algorithm 3 — the zero-copy shard primitive: run
@@ -222,7 +234,7 @@ impl SignalCoreset {
     /// signal). Blocks come out directly in `signal`'s coordinates, so
     /// band shards need no cropped copies, no per-shard integral images,
     /// and no row-offset fixups. For `region == signal.bounds()` this is
-    /// exactly the monolithic [`Self::build_with_stats`].
+    /// exactly the monolithic [`Self::construct_with_stats`].
     ///
     /// **Coordinate contract.** Blocks stay in `signal`'s frame while
     /// the returned coreset's `rows()`/`cols()` are the *region's*
@@ -233,7 +245,7 @@ impl SignalCoreset {
     /// the merged result), not in a region-local 0-based frame — if you
     /// want a self-contained region-local coreset instead, build over
     /// `signal.view(region)`.
-    pub fn build_in<S: SignalSource>(
+    pub fn construct_in<S: SignalSource>(
         signal: &S,
         stats: &PrefixStats,
         region: Rect,
@@ -271,53 +283,177 @@ impl SignalCoreset {
 
     /// Parallel Algorithm 3 on the [`crate::par`] worker pool: build one
     /// shared [`PrefixStats`] for the whole signal (via the thread-
-    /// invariant [`PrefixStats::new_par`]), row-shard into ⌊n/64⌋
-    /// near-equal bands (64–127 rows each, via
-    /// [`bicriteria::band_edges`]), run the full bicriteria → partition →
-    /// per-block Caratheodory pipeline per shard through
-    /// [`Self::build_in`] — each shard an O(1) `(&PrefixStats, Rect)`
-    /// window, **zero per-shard copies or integral-image rebuilds** —
-    /// then compose through the existing merge-and-reduce path.
-    /// Every per-block guarantee is local to its band (the merge-and-
-    /// reduce property, §1.1 Challenge (iv)), so sharding never weakens
-    /// the coreset — see DESIGN.md §Parallelism and §Views & Memory.
+    /// invariant [`PrefixStats::new_par`]), row-shard into
+    /// ⌊n/shard_rows⌋ near-equal bands (via
+    /// [`bicriteria::band_edges`]; the default geometry is
+    /// [`Self::SHARD_ROWS`] = 64, i.e. 64–127 rows per shard), run the
+    /// full bicriteria → partition → per-block Caratheodory pipeline per
+    /// shard through [`Self::construct_in`] — each shard an O(1)
+    /// `(&PrefixStats, Rect)` window, **zero per-shard copies or
+    /// integral-image rebuilds** — then compose through the existing
+    /// merge-and-reduce path. Every per-block guarantee is local to its
+    /// band (the merge-and-reduce property, §1.1 Challenge (iv)), so
+    /// sharding never weakens the coreset — see DESIGN.md §Parallelism
+    /// and §Views & Memory.
     ///
     /// The shard plan and the shared statistics depend only on the
     /// signal shape, never on `threads`, so any thread count produces
     /// the bit-identical coreset; `threads == 0` means "all available
-    /// cores". Signals shorter than 128 rows (fewer than two shards)
-    /// fall back to the sequential [`Self::build_with`].
-    pub fn build_par<S: SignalSource>(
+    /// cores". Signals with fewer than two shards fall back to the
+    /// sequential [`Self::construct_with`].
+    pub fn construct_sharded<S: SignalSource>(
         signal: &S,
         config: CoresetConfig,
         threads: usize,
     ) -> Self {
-        const SHARD_ROWS: usize = 64;
-        let n = signal.rows();
-        let shards = n / SHARD_ROWS;
-        if shards <= 1 {
-            return Self::build_with(signal, config);
+        Self::construct_sharded_exec(
+            signal,
+            config,
+            Self::SHARD_ROWS,
+            crate::par::Exec::Spawn(threads),
+        )
+    }
+
+    /// Default row-shard geometry of [`Self::construct_sharded`] (the
+    /// band plan [`bicriteria::band_edges`] equalizes around it).
+    pub const SHARD_ROWS: usize = 64;
+
+    /// [`Self::construct_sharded`] with explicit shard geometry and
+    /// executor ([`crate::par::Exec`]) — the engine path: shards fan out
+    /// on a long-lived [`crate::par::WorkerPool`] instead of spawning
+    /// scoped threads per call. The shard plan depends only on
+    /// `(signal shape, shard_rows)`, so for the default geometry every
+    /// executor and thread count is bit-identical to
+    /// [`Self::construct_sharded`].
+    pub fn construct_sharded_exec<S: SignalSource>(
+        signal: &S,
+        config: CoresetConfig,
+        shard_rows: usize,
+        exec: crate::par::Exec<'_>,
+    ) -> Self {
+        let shard_rows = shard_rows.max(1);
+        if signal.rows() / shard_rows <= 1 {
+            return Self::construct_with(signal, config);
         }
-        let stats = PrefixStats::new_par(signal, threads);
+        let stats = PrefixStats::new_par_exec(signal, exec);
+        Self::construct_sharded_with_stats(signal, &stats, config, shard_rows, exec)
+    }
+
+    /// The sharded construction against a caller-owned shared
+    /// [`PrefixStats`] (an engine session reusing one statistics object
+    /// across builds). `stats` must cover `signal`'s coordinate frame
+    /// and, for bit-identity with [`Self::construct_sharded`], must come
+    /// from the thread-invariant [`PrefixStats::new_par`] family.
+    /// Signals with fewer than two shards fall back to the sequential
+    /// [`Self::construct_with`] (fresh sequential statistics — the same
+    /// fallback every sharded entry point takes, so all of them agree
+    /// bitwise on short signals).
+    pub fn construct_sharded_with_stats<S: SignalSource>(
+        signal: &S,
+        stats: &PrefixStats,
+        config: CoresetConfig,
+        shard_rows: usize,
+        exec: crate::par::Exec<'_>,
+    ) -> Self {
+        let shard_rows = shard_rows.max(1);
+        let n = signal.rows();
+        let shards = n / shard_rows;
+        if shards <= 1 {
+            return Self::construct_with(signal, config);
+        }
         let edges = bicriteria::band_edges(n, shards);
         let regions: Vec<Rect> = edges
             .windows(2)
             .map(|w| Rect::new(w[0], w[1] - 1, 0, signal.cols() - 1))
             .collect();
-        let parts = crate::par::parallel_map(&regions, threads, |_, &region| {
-            Self::build_in(signal, &stats, region, config)
+        let parts = exec.map(&regions, |_, &region| {
+            Self::construct_in(signal, stats, region, config)
         });
         let merged = merge_reduce::merge(parts);
         let tol = merged.gamma * merged.gamma * merged.sigma;
         merge_reduce::reduce(merged, tol)
     }
 
+    // ------------------------------------------------------------------
+    // Deprecated `build*` shims — the pre-engine public surface, kept
+    // compiling for one release. Each delegates to its `construct*`
+    // replacement, so behaviour (and every produced bit) is unchanged.
+    // ------------------------------------------------------------------
+
+    /// Former name of [`Self::construct`].
+    #[deprecated(
+        since = "0.2.0",
+        note = "go through the front door — `sigtree::engine::Engine::coreset` — \
+                or use the low-level `SignalCoreset::construct`"
+    )]
+    pub fn build<S: SignalSource>(signal: &S, k: usize, eps: f64) -> Self {
+        Self::construct(signal, k, eps)
+    }
+
+    /// Former name of [`Self::construct_with`].
+    #[deprecated(
+        since = "0.2.0",
+        note = "go through the front door — `sigtree::engine::Engine::coreset` — \
+                or use the low-level `SignalCoreset::construct_with`"
+    )]
+    pub fn build_with<S: SignalSource>(signal: &S, config: CoresetConfig) -> Self {
+        Self::construct_with(signal, config)
+    }
+
+    /// Former name of [`Self::construct_with_stats`].
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `sigtree::engine::Engine::session` (which owns the shared stats) \
+                or the low-level `SignalCoreset::construct_with_stats`"
+    )]
+    pub fn build_with_stats<S: SignalSource>(
+        signal: &S,
+        stats: &PrefixStats,
+        config: CoresetConfig,
+    ) -> Self {
+        Self::construct_with_stats(signal, stats, config)
+    }
+
+    /// Former name of [`Self::construct_in`].
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `sigtree::engine::Engine::coreset_region` \
+                or the low-level `SignalCoreset::construct_in`"
+    )]
+    pub fn build_in<S: SignalSource>(
+        signal: &S,
+        stats: &PrefixStats,
+        region: Rect,
+        config: CoresetConfig,
+    ) -> Self {
+        Self::construct_in(signal, stats, region, config)
+    }
+
+    /// Former name of [`Self::construct_sharded`].
+    #[deprecated(
+        since = "0.2.0",
+        note = "go through the front door — `sigtree::engine::Engine::coreset`, which \
+                reuses one worker pool across builds — or use the low-level \
+                `SignalCoreset::construct_sharded`"
+    )]
+    pub fn build_par<S: SignalSource>(
+        signal: &S,
+        config: CoresetConfig,
+        threads: usize,
+    ) -> Self {
+        Self::construct_sharded(signal, config, threads)
+    }
+
     /// Approximate ℓ(D, s) for many k-segmentations concurrently on the
     /// [`crate::par`] worker pool — the forest/tuning workload, where a
     /// sweep evaluates hundreds of candidate segmentations against one
     /// coreset. Results are in query order and identical to calling
-    /// [`Coreset::fitting_loss`] per query; `threads == 0` uses all
-    /// available cores.
+    /// [`Coreset::fitting_loss`] per query; `threads == 0` means "all
+    /// available cores" on the library path exactly as it does on the
+    /// CLI (both normalize through [`crate::par::resolve_threads`]).
+    /// Serving workloads issuing many batches should prefer
+    /// [`crate::engine::Engine::fitting_loss`], which reuses one
+    /// long-lived pool instead of spawning threads per call.
     pub fn fitting_loss_batch(&self, queries: &[KSegmentation], threads: usize) -> Vec<f64> {
         fitting_loss::fitting_loss_batch(self, queries, threads)
     }
@@ -452,7 +588,7 @@ mod tests {
     fn coreset_total_weight_is_cell_count() {
         let mut rng = Rng::new(3);
         let sig = generate::image_like(40, 30, 2, &mut rng);
-        let cs = SignalCoreset::build(&sig, 5, 0.3);
+        let cs = SignalCoreset::construct(&sig, 5, 0.3);
         assert!((cs.total_weight() - 1200.0).abs() < 1e-6 * 1200.0);
     }
 
@@ -461,7 +597,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let sig = generate::smooth(30, 30, 3, &mut rng);
         let stats = PrefixStats::new(&sig);
-        let cs = SignalCoreset::build(&sig, 4, 0.3);
+        let cs = SignalCoreset::construct(&sig, 4, 0.3);
         let exact = stats.opt1(&sig.bounds());
         let approx = cs.opt1();
         assert!(
@@ -474,7 +610,7 @@ mod tests {
     fn piecewise_constant_gives_tiny_coreset() {
         let mut rng = Rng::new(5);
         let (sig, _) = generate::piecewise_constant(64, 64, 6, 0.0, &mut rng);
-        let cs = SignalCoreset::build(&sig, 6, 0.2);
+        let cs = SignalCoreset::construct(&sig, 6, 0.2);
         // Noiseless piecewise constant → σ ≈ 0 → blocks = constant regions;
         // far fewer than N/16 blocks.
         assert!(
@@ -499,8 +635,8 @@ mod tests {
     fn eps_controls_size() {
         let mut rng = Rng::new(6);
         let sig = generate::smooth(50, 50, 4, &mut rng);
-        let tight = SignalCoreset::build(&sig, 4, 0.1);
-        let loose = SignalCoreset::build(&sig, 4, 0.5);
+        let tight = SignalCoreset::construct(&sig, 4, 0.1);
+        let loose = SignalCoreset::construct(&sig, 4, 0.5);
         assert!(
             tight.blocks.len() >= loose.blocks.len(),
             "tight {} loose {}",
@@ -513,7 +649,7 @@ mod tests {
     fn weighted_points_have_corner_coords() {
         let mut rng = Rng::new(7);
         let sig = generate::smooth(20, 20, 2, &mut rng);
-        let cs = SignalCoreset::build(&sig, 3, 0.3);
+        let cs = SignalCoreset::construct(&sig, 3, 0.3);
         for b in &cs.blocks {
             let corners = b.rect.corners();
             for p in b.points() {
@@ -529,7 +665,7 @@ mod tests {
         let mut sig = generate::smooth(40, 40, 3, &mut rng);
         // Mask out the left half: 800 of 1600 cells remain.
         sig.mask_rect(Rect::new(0, 39, 0, 19));
-        let cs = SignalCoreset::build(&sig, 4, 0.3);
+        let cs = SignalCoreset::construct(&sig, 4, 0.3);
         assert!((cs.total_weight() - 800.0).abs() < 1e-6 * 800.0);
         let expected = cs.stored_points() as f64 / cs.total_weight();
         assert!(
@@ -548,7 +684,7 @@ mod tests {
         // Top half fully masked → its partition blocks compress to
         // zero-weight supports and must not be stored.
         sig.mask_rect(Rect::new(0, 9, 0, 19));
-        let cs = SignalCoreset::build(&sig, 3, 0.3);
+        let cs = SignalCoreset::construct(&sig, 3, 0.3);
         assert!(!cs.blocks.is_empty());
         for b in &cs.blocks {
             assert!(!b.is_empty(), "zero-weight block stored: {:?}", b.rect);
@@ -578,10 +714,10 @@ mod tests {
         let mut rng = Rng::new(10);
         let sig = generate::smooth(192, 40, 3, &mut rng);
         let config = CoresetConfig::new(4, 0.3);
-        let reference = SignalCoreset::build_par(&sig, config, 1);
+        let reference = SignalCoreset::construct_sharded(&sig, config, 1);
         assert!((reference.total_weight() - (192 * 40) as f64).abs() < 1e-6);
         for threads in [0, 2, 3, 4] {
-            let cs = SignalCoreset::build_par(&sig, config, threads);
+            let cs = SignalCoreset::construct_sharded(&sig, config, threads);
             assert_eq!(cs.blocks.len(), reference.blocks.len(), "threads {threads}");
             for (a, b) in cs.blocks.iter().zip(&reference.blocks) {
                 assert_eq!(a.rect, b.rect, "threads {threads}");
@@ -595,7 +731,7 @@ mod tests {
     fn block_edges_are_sorted_interior_and_bounds() {
         let mut rng = Rng::new(14);
         let sig = generate::smooth(40, 32, 3, &mut rng);
-        let cs = SignalCoreset::build(&sig, 4, 0.3);
+        let cs = SignalCoreset::construct(&sig, 4, 0.3);
         let (rows, cols) = cs.block_edges();
         // Blocks tile the signal, so 0 and n/m are always edges.
         assert_eq!(*rows.first().unwrap(), 0);

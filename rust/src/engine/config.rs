@@ -1,0 +1,474 @@
+//! [`EngineConfig`] — the one serializable knob set of the crate.
+//!
+//! Every layer used to re-encode the same handful of knobs its own way
+//! (`CoresetConfig::new(k, eps).theory(beta)`, `PipelineConfig::
+//! {with_band_rows, with_workers}`, `StreamingCoreset::with_threads`,
+//! per-call `threads` arguments, hand-parsed CLI flags). `EngineConfig`
+//! unifies them behind one struct with **one validator**: the CLI
+//! (`EngineConfig::from_args`), JSON config files
+//! (`EngineConfig::from_json_str`, written by [`EngineConfig::to_json`]
+//! through [`crate::json`]), and programmatic construction all funnel
+//! through [`EngineConfig::validate`], which returns
+//! [`crate::error::Result`] instead of panicking.
+
+use crate::cli::Args;
+use crate::coreset::{CoresetConfig, SignalCoreset};
+use crate::error::{Context, Error, Result};
+use crate::json::Json;
+use crate::{bail, ensure};
+
+/// Which kernel backend an [`crate::engine::Engine`] executes on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// The pure-Rust f32 kernels (always available, the default).
+    Native,
+    /// PJRT execution of the AOT-compiled artifacts (`pjrt` feature).
+    Pjrt,
+}
+
+impl BackendChoice {
+    /// The CLI / JSON spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendChoice::Native => "native",
+            BackendChoice::Pjrt => "pjrt",
+        }
+    }
+
+    /// Parse the CLI / JSON spelling.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "native" => Ok(BackendChoice::Native),
+            "pjrt" => Ok(BackendChoice::Pjrt),
+            other => Err(Error::msg(format!(
+                "unknown backend '{other}' (expected 'native' or 'pjrt')"
+            ))),
+        }
+    }
+}
+
+/// The JSON field names `EngineConfig` understands — the JSON reader
+/// rejects anything else, the same contract each CLI subcommand's
+/// [`Args::expect_only`] allowlist enforces for flags. (The spellings
+/// differ slightly: JSON uses `_` where the CLI uses `-`, and the
+/// CLI's `--dir` is the JSON `artifacts_dir`.)
+pub const CONFIG_KEYS: [&str; 9] = [
+    "k",
+    "eps",
+    "beta",
+    "threads",
+    "band_rows",
+    "shard_rows",
+    "backend",
+    "artifacts_dir",
+    "seed",
+];
+
+/// One serializable configuration for the whole stack: coreset
+/// construction (k, ε, the β/theory calibration), execution (threads,
+/// shard/band geometry, kernel backend), and reproducibility (seed).
+/// Construct with [`EngineConfig::new`] + the `with_*` builders, from
+/// CLI flags with [`EngineConfig::from_args`], or from a JSON file with
+/// [`EngineConfig::from_json_str`]; hand the result to
+/// [`crate::engine::Engine::new`], which validates it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineConfig {
+    /// Tree/segmentation complexity the (k, ε)-guarantee covers.
+    pub k: usize,
+    /// Target relative error of FITTING-LOSS, in (0, 1).
+    pub eps: f64,
+    /// `None` → the practical calibration γ = ε/2 (EXPERIMENTS.md
+    /// §Calibration); `Some(β)` → the worst-case theory γ = ε²/(βk)
+    /// ([`CoresetConfig::theory`]).
+    pub beta: Option<f64>,
+    /// Worker threads (`0` = all available cores). A pure performance
+    /// knob: every thread count produces bit-identical coresets.
+    pub threads: usize,
+    /// Rows per streamed band ([`crate::engine::Engine::pipeline`] /
+    /// [`crate::engine::Engine::stream`]).
+    pub band_rows: usize,
+    /// Row-shard geometry of the sharded builder; the default
+    /// [`SignalCoreset::SHARD_ROWS`] keeps the engine bit-identical to
+    /// the classic `construct_sharded` plan.
+    pub shard_rows: usize,
+    /// Kernel backend for the runtime layer.
+    pub backend: BackendChoice,
+    /// Artifact directory override for the PJRT backend (`None` →
+    /// `SIGTREE_ARTIFACTS` / `./artifacts`).
+    pub artifacts_dir: Option<String>,
+    /// Base seed for signal generation / audits driven by this engine.
+    pub seed: u64,
+}
+
+impl EngineConfig {
+    /// Defaults for everything except the two mandatory knobs.
+    pub fn new(k: usize, eps: f64) -> Self {
+        Self {
+            k,
+            eps,
+            beta: None,
+            threads: 0,
+            band_rows: 128,
+            shard_rows: SignalCoreset::SHARD_ROWS,
+            backend: BackendChoice::Native,
+            artifacts_dir: None,
+            seed: 7,
+        }
+    }
+
+    pub fn with_beta(mut self, beta: f64) -> Self {
+        self.beta = Some(beta);
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_band_rows(mut self, band_rows: usize) -> Self {
+        self.band_rows = band_rows;
+        self
+    }
+
+    pub fn with_shard_rows(mut self, shard_rows: usize) -> Self {
+        self.shard_rows = shard_rows;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: BackendChoice) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.artifacts_dir = Some(dir.into());
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// The one validator every construction surface funnels through.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.k >= 1, "k must be >= 1 (got {})", self.k);
+        ensure!(
+            self.eps > 0.0 && self.eps < 1.0,
+            "eps must be in (0, 1) exclusive (got {})",
+            self.eps
+        );
+        if let Some(beta) = self.beta {
+            ensure!(
+                beta.is_finite() && beta > 0.0,
+                "beta must be a positive finite number (got {beta})"
+            );
+        }
+        ensure!(
+            self.band_rows >= 1,
+            "band_rows must be >= 1 (got {})",
+            self.band_rows
+        );
+        ensure!(
+            self.shard_rows >= 1,
+            "shard_rows must be >= 1 (got {})",
+            self.shard_rows
+        );
+        Ok(())
+    }
+
+    /// The coreset-layer view of this configuration. Call after
+    /// [`Self::validate`] ([`crate::engine::Engine::new`] does): the
+    /// field invariants this relies on are exactly the validated ones.
+    pub fn coreset_config(&self) -> CoresetConfig {
+        let base = CoresetConfig { k: self.k, eps: self.eps, gamma: None, sigma: None };
+        match self.beta {
+            None => base,
+            Some(beta) => base.theory(beta),
+        }
+    }
+
+    /// Serialize through [`crate::json`] — [`Self::from_json_str`]
+    /// parses this exact shape back (the seed rides as a hex string,
+    /// like every seed the repo writes: a u64 does not survive a JSON
+    /// double above 2⁵³).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("k", Json::int(self.k)),
+            ("eps", Json::num(self.eps)),
+            ("beta", self.beta.map_or(Json::Null, Json::num)),
+            ("threads", Json::int(self.threads)),
+            ("band_rows", Json::int(self.band_rows)),
+            ("shard_rows", Json::int(self.shard_rows)),
+            ("backend", Json::str(self.backend.name())),
+            (
+                "artifacts_dir",
+                self.artifacts_dir.as_deref().map_or(Json::Null, Json::str),
+            ),
+            ("seed", Json::str(format!("{:#x}", self.seed))),
+        ])
+    }
+
+    /// Parse a self-contained JSON config document (see
+    /// [`Self::to_json`]): `k`/`eps` are mandatory, missing optional
+    /// keys keep the `EngineConfig::new` defaults, unknown keys are
+    /// rejected with the valid set — the same contract the CLI's
+    /// unknown-flag rejection enforces. The result is validated.
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        ensure!(doc.get("k").is_some(), "engine config is missing 'k'");
+        ensure!(doc.get("eps").is_some(), "engine config is missing 'eps'");
+        // The placeholder k/eps are overwritten by the mandatory keys.
+        Self::apply_json(doc, EngineConfig::new(1, 0.5))
+    }
+
+    /// Layer a (possibly partial) JSON config onto `base`: only the
+    /// keys present in `doc` override; everything else keeps `base`'s
+    /// value. This is what keeps per-subcommand defaults intact under
+    /// `--config` — a file of just `{"k": 64, "eps": 0.2}` must not
+    /// silently reset the subcommand's thread default to all-cores.
+    /// Unknown keys are rejected; the merged result is validated.
+    pub fn apply_json(doc: &Json, base: EngineConfig) -> Result<Self> {
+        let Json::Obj(pairs) = doc else {
+            bail!("engine config must be a JSON object");
+        };
+        for (key, _) in pairs {
+            if !CONFIG_KEYS.contains(&key.as_str()) {
+                bail!(
+                    "unknown engine config key '{key}' (valid keys: {})",
+                    CONFIG_KEYS.join(", ")
+                );
+            }
+        }
+        let usize_field = |key: &str, default: usize| -> Result<usize> {
+            match doc.get(key) {
+                None => Ok(default),
+                Some(v) => v.as_usize().ok_or_else(|| {
+                    Error::msg(format!("'{key}' must be a non-negative integer"))
+                }),
+            }
+        };
+        let mut config = base;
+        config.k = usize_field("k", config.k)?;
+        if let Some(v) = doc.get("eps") {
+            config.eps = v
+                .as_f64()
+                .ok_or_else(|| Error::msg("'eps' must be a number"))?;
+        }
+        config.beta = match doc.get("beta") {
+            None => config.beta,
+            Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64()
+                    .ok_or_else(|| Error::msg("'beta' must be a number or null"))?,
+            ),
+        };
+        config.threads = usize_field("threads", config.threads)?;
+        config.band_rows = usize_field("band_rows", config.band_rows)?;
+        config.shard_rows = usize_field("shard_rows", config.shard_rows)?;
+        if let Some(v) = doc.get("backend") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| Error::msg("'backend' must be a string"))?;
+            config.backend = BackendChoice::from_name(name)?;
+        }
+        config.artifacts_dir = match doc.get("artifacts_dir") {
+            None => config.artifacts_dir,
+            Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| Error::msg("'artifacts_dir' must be a string or null"))?
+                    .to_string(),
+            ),
+        };
+        if let Some(v) = doc.get("seed") {
+            config.seed = parse_seed(v)?;
+        }
+        config.validate()?;
+        Ok(config)
+    }
+
+    /// [`Self::from_json`] on raw text.
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let doc = Json::parse(text).map_err(Error::msg).context("parsing engine config")?;
+        Self::from_json(&doc)
+    }
+
+    /// Build from parsed CLI arguments, layered as
+    /// **flags > `--config` file > `defaults`** (each subcommand passes
+    /// its historical defaults). The file overrides only the keys it
+    /// contains ([`Self::apply_json`]), so a partial file — even just
+    /// `{"threads": 4}` — layers onto the defaults instead of resetting
+    /// them. This is the single knob parser every subcommand routes
+    /// through, so the CLI and JSON configs share one validator; pair
+    /// it with [`Args::expect_only`] so unknown flags are rejected
+    /// rather than silently ignored.
+    pub fn from_args(args: &Args, defaults: EngineConfig) -> Result<Self> {
+        let mut base = defaults;
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading engine config {path}"))?;
+            let doc = Json::parse(&text)
+                .map_err(Error::msg)
+                .with_context(|| format!("parsing engine config {path}"))?;
+            base = Self::apply_json(&doc, base).with_context(|| format!("in {path}"))?;
+        }
+        let config = EngineConfig {
+            k: args.get_usize("k", base.k)?,
+            eps: args.get_f64("eps", base.eps)?,
+            beta: match args.get("beta") {
+                None => base.beta,
+                Some(_) => Some(args.get_f64("beta", 0.0)?),
+            },
+            threads: args.get_threads(base.threads)?,
+            band_rows: args.get_usize("band-rows", base.band_rows)?,
+            shard_rows: args.get_usize("shard-rows", base.shard_rows)?,
+            backend: match args.get("backend") {
+                None => base.backend,
+                Some(name) => BackendChoice::from_name(name)?,
+            },
+            artifacts_dir: args.get("dir").map(str::to_string).or(base.artifacts_dir),
+            seed: args.get_u64("seed", base.seed)?,
+        };
+        config.validate()?;
+        Ok(config)
+    }
+}
+
+/// Seeds serialize as `{:#x}` hex strings (the repo-wide convention,
+/// [`crate::cli::parse_u64`]); accept decimal strings and exact-integer
+/// numbers too, so hand-written configs stay forgiving.
+fn parse_seed(v: &Json) -> Result<u64> {
+    if let Some(s) = v.as_str() {
+        return crate::cli::parse_u64(s)
+            .ok_or_else(|| Error::msg(format!("invalid seed '{s}'")));
+    }
+    v.as_usize()
+        .map(|x| x as u64)
+        .ok_or_else(|| Error::msg("'seed' must be a hex string or non-negative integer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn defaults_are_valid_and_json_round_trips() {
+        let config = EngineConfig::new(8, 0.25)
+            .with_beta(2.0)
+            .with_threads(3)
+            .with_band_rows(96)
+            .with_seed(0x9e37_79b9_7f4a_7c15);
+        config.validate().unwrap();
+        let text = config.to_json().render();
+        let back = EngineConfig::from_json_str(&text).unwrap();
+        assert_eq!(back, config);
+    }
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        assert!(EngineConfig::new(0, 0.3).validate().is_err());
+        assert!(EngineConfig::new(4, 0.0).validate().is_err());
+        assert!(EngineConfig::new(4, 1.0).validate().is_err());
+        assert!(EngineConfig::new(4, -0.2).validate().is_err());
+        assert!(EngineConfig::new(4, 1.5).validate().is_err());
+        assert!(EngineConfig::new(4, 0.3).with_beta(0.0).validate().is_err());
+        assert!(EngineConfig::new(4, 0.3).with_band_rows(0).validate().is_err());
+        assert!(EngineConfig::new(4, 0.3).with_shard_rows(0).validate().is_err());
+        EngineConfig::new(4, 0.3).with_threads(0).validate().unwrap();
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_keys_and_missing_mandatory() {
+        let err = EngineConfig::from_json_str("{\"k\": 4, \"eps\": 0.3, \"theads\": 2}")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("theads"), "{err}");
+        assert!(err.contains("threads"), "must list valid keys: {err}");
+        assert!(EngineConfig::from_json_str("{\"eps\": 0.3}").is_err());
+        assert!(EngineConfig::from_json_str("{\"k\": 4}").is_err());
+        assert!(EngineConfig::from_json_str("[1, 2]").is_err());
+        assert!(EngineConfig::from_json_str("{\"k\": 4, \"eps\": 2.0}").is_err());
+    }
+
+    #[test]
+    fn from_args_layers_flags_over_defaults() {
+        let defaults = EngineConfig::new(64, 0.2);
+        let config = EngineConfig::from_args(&argv("coreset --k 5 --eps 0.4 --threads 2"), defaults)
+            .unwrap();
+        assert_eq!(config.k, 5);
+        assert!((config.eps - 0.4).abs() < 1e-12);
+        assert_eq!(config.threads, 2);
+        assert_eq!(config.band_rows, 128);
+        assert_eq!(config.backend, BackendChoice::Native);
+        // Bad values hit the same validator as JSON.
+        let defaults = EngineConfig::new(64, 0.2);
+        assert!(EngineConfig::from_args(&argv("coreset --eps 1.5"), defaults).is_err());
+        let defaults = EngineConfig::new(64, 0.2);
+        assert!(EngineConfig::from_args(&argv("coreset --k 0"), defaults).is_err());
+        let defaults = EngineConfig::new(64, 0.2);
+        assert!(EngineConfig::from_args(&argv("coreset --backend cuda"), defaults).is_err());
+    }
+
+    #[test]
+    fn partial_config_file_layers_onto_subcommand_defaults() {
+        // A file that omits optional keys must NOT reset them to the
+        // global defaults — cmd_pipeline's threads=2 (and coreset's
+        // threads=1) have to survive `--config {"k":…,"eps":…}`.
+        let dir = std::env::temp_dir();
+        let path = dir.join("sigtree_engine_partial_config_test.json");
+        std::fs::write(&path, "{\"k\": 9, \"eps\": 0.35}").unwrap();
+        let cli = format!("pipeline --config {}", path.display());
+        let defaults = EngineConfig::new(64, 0.2).with_threads(2).with_band_rows(96);
+        let config = EngineConfig::from_args(&argv(&cli), defaults).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(config.k, 9);
+        assert!((config.eps - 0.35).abs() < 1e-12);
+        assert_eq!(config.threads, 2, "absent file key keeps the subcommand default");
+        assert_eq!(config.band_rows, 96, "absent file key keeps the subcommand default");
+        // And a flags-only partial layering works the same way through
+        // apply_json directly.
+        let doc = crate::json::Json::parse("{\"threads\": 4}").unwrap();
+        let merged = EngineConfig::apply_json(&doc, EngineConfig::new(5, 0.4)).unwrap();
+        assert_eq!(merged.threads, 4);
+        assert_eq!(merged.k, 5);
+    }
+
+    #[test]
+    fn from_args_reads_config_file_then_overrides() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("sigtree_engine_config_test.json");
+        let on_disk = EngineConfig::new(10, 0.5).with_threads(4).with_seed(99);
+        std::fs::write(&path, on_disk.to_json().render()).unwrap();
+        let cli = format!("coreset --config {} --eps 0.25", path.display());
+        let config = EngineConfig::from_args(&argv(&cli), EngineConfig::new(64, 0.2)).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(config.k, 10, "file value survives");
+        assert!((config.eps - 0.25).abs() < 1e-12, "flag overrides file");
+        assert_eq!(config.threads, 4);
+        assert_eq!(config.seed, 99);
+    }
+
+    #[test]
+    fn backend_names_round_trip() {
+        for choice in [BackendChoice::Native, BackendChoice::Pjrt] {
+            assert_eq!(BackendChoice::from_name(choice.name()).unwrap(), choice);
+        }
+        assert!(BackendChoice::from_name("cuda").is_err());
+    }
+
+    #[test]
+    fn seed_forms_are_accepted() {
+        let hex = EngineConfig::from_json_str("{\"k\":2,\"eps\":0.3,\"seed\":\"0xff\"}").unwrap();
+        assert_eq!(hex.seed, 255);
+        let dec = EngineConfig::from_json_str("{\"k\":2,\"eps\":0.3,\"seed\":\"12\"}").unwrap();
+        assert_eq!(dec.seed, 12);
+        let num = EngineConfig::from_json_str("{\"k\":2,\"eps\":0.3,\"seed\":12}").unwrap();
+        assert_eq!(num.seed, 12);
+        assert!(EngineConfig::from_json_str("{\"k\":2,\"eps\":0.3,\"seed\":\"zz\"}").is_err());
+    }
+}

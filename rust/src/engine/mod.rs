@@ -1,0 +1,459 @@
+//! `sigtree::engine` — the one front door to the crate.
+//!
+//! The paper's value proposition is *build the (k, ε)-coreset once,
+//! then answer every tree query cheaply* (Theorem 8), and coresets only
+//! pay off in practice behind a reusable pipeline object, not one-shot
+//! helper calls (Bachem–Lucic–Krause, *Practical Coreset Constructions
+//! for Machine Learning*). [`Engine`] is that object: a long-lived
+//! session constructed from one validated, serializable
+//! [`EngineConfig`], owning
+//!
+//! * the **worker pool** ([`crate::par::WorkerPool`]) — spawned once,
+//!   reused by every build, batch-evaluation, stream, and audit this
+//!   engine runs (no per-call thread spinup on the serving hot path;
+//!   the one exception is [`Engine::pipeline`], whose banded workers
+//!   are dedicated scoped threads around a bounded backpressure queue
+//!   by design — only its statistics build runs on the pool);
+//! * the **kernel backend** ([`crate::runtime::KernelBackend`]) chosen
+//!   by the config (`native` / `pjrt`);
+//! * per attached signal, the **shared [`PrefixStats`]**
+//!   ([`Engine::session`]) every region build and exact-loss query
+//!   answers from.
+//!
+//! ```
+//! use sigtree::engine::{Engine, EngineConfig};
+//! use sigtree::prelude::*;
+//!
+//! let signal = Signal::from_fn(160, 48, |r, c| ((r + 2 * c) % 7) as f64);
+//! let engine = Engine::new(EngineConfig::new(4, 0.3).with_threads(2)).unwrap();
+//!
+//! // Build once (sharded, on the engine's pool)…
+//! let coreset = engine.coreset(&signal);
+//! let cells = signal.len() as f64;
+//! assert!((coreset.total_weight() - cells).abs() < 1e-6 * cells);
+//!
+//! // …then answer every tree query cheaply, pool reused per batch.
+//! let session = engine.session(&signal);
+//! let queries: Vec<KSegmentation> =
+//!     vec![KSegmentation::constant(signal.bounds(), 1.0)];
+//! let approx = engine.fitting_loss(&coreset, &queries);
+//! let exact = session.exact_loss(&queries[0]);
+//! assert!((approx[0] - exact).abs() <= 1e-6 * (1.0 + exact));
+//! ```
+//!
+//! Layering (DESIGN.md §Engine & API layering):
+//! `EngineConfig` → `Engine` → {[`Engine::coreset`],
+//! [`Engine::coreset_region`], [`Engine::stream`], [`Engine::pipeline`],
+//! [`Engine::fitting_loss`], [`Engine::optimal_tree`],
+//! [`Engine::audit`]} — all driving the low-level
+//! `SignalCoreset::construct*` kernels. The historical
+//! `SignalCoreset::build*` entry points are `#[deprecated]` shims.
+
+mod config;
+
+pub use config::{BackendChoice, EngineConfig, CONFIG_KEYS};
+
+use crate::audit::{self, AuditConfig, AuditReport, CoresetOracle};
+use crate::coreset::merge_reduce::StreamingCoreset;
+use crate::coreset::{fitting_loss, SignalCoreset};
+use crate::error::Result;
+use crate::par::{Exec, WorkerPool};
+use crate::pipeline::{self, PipelineConfig, PipelineMetrics};
+use crate::runtime::{backend_from_name, KernelBackend};
+use crate::segmentation::dp2d::TreeDP;
+use crate::segmentation::KSegmentation;
+use crate::signal::{PrefixStats, Rect, SignalSource};
+
+/// A long-lived build/query/audit session — see the module docs.
+///
+/// Construction ([`Engine::new`]) validates the config, spawns the
+/// worker pool, and instantiates the kernel backend, so every
+/// misconfiguration surfaces as one early [`crate::error::Error`]
+/// instead of a panic deep in a build.
+pub struct Engine {
+    config: EngineConfig,
+    /// `config.threads` resolved (`0` → all cores).
+    threads: usize,
+    pool: WorkerPool,
+    backend: Box<dyn KernelBackend>,
+}
+
+impl Engine {
+    /// Validate `config` and bring the session up (pool + backend).
+    pub fn new(config: EngineConfig) -> Result<Engine> {
+        config.validate()?;
+        let backend = backend_from_name(
+            config.backend.name(),
+            config.artifacts_dir.as_ref().map(std::path::Path::new),
+        )?;
+        let pool = WorkerPool::new(config.threads);
+        let threads = pool.threads();
+        Ok(Engine { config, threads, pool, backend })
+    }
+
+    /// The validated configuration this engine runs.
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// Resolved worker count (≥ 1; `threads: 0` resolved to all cores).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The kernel backend the runtime layer executes on.
+    pub fn backend(&self) -> &dyn KernelBackend {
+        self.backend.as_ref()
+    }
+
+    /// This engine's executor — the long-lived pool, for the low-level
+    /// `construct*` / `run_audit_exec` entry points.
+    pub fn exec(&self) -> Exec<'_> {
+        Exec::Pool(&self.pool)
+    }
+
+    /// Shared prefix statistics of `signal`, built on the engine pool
+    /// (thread-invariant: bit-identical to [`PrefixStats::new_par`] at
+    /// any thread count).
+    pub fn stats<S: SignalSource>(&self, signal: &S) -> PrefixStats {
+        PrefixStats::new_par_exec(signal, self.exec())
+    }
+
+    /// Build the (k, ε)-coreset of `signal` — the sharded construction
+    /// on the engine pool, bit-identical to the classic
+    /// `SignalCoreset::construct_sharded` (née `build_par`) at every
+    /// thread count.
+    pub fn coreset<S: SignalSource>(&self, signal: &S) -> SignalCoreset {
+        SignalCoreset::construct_sharded_exec(
+            signal,
+            self.config.coreset_config(),
+            self.config.shard_rows,
+            self.exec(),
+        )
+    }
+
+    /// Build the partial coreset of a sub-rectangle of `signal` (blocks
+    /// stay in `signal`'s frame — the merge-and-reduce shard
+    /// primitive). Builds the shared statistics for this one call; use
+    /// [`Engine::session`] to reuse them across several regions.
+    pub fn coreset_region<S: SignalSource>(&self, signal: &S, region: Rect) -> SignalCoreset {
+        self.session(signal).coreset_region(region)
+    }
+
+    /// Attach a signal: builds the shared [`PrefixStats`] once (on the
+    /// pool) and returns the session handle every per-signal operation
+    /// reuses it through. The borrow pins the signal for the session's
+    /// lifetime, so the statistics can never go stale.
+    pub fn session<'a, S: SignalSource>(&'a self, signal: &'a S) -> EngineSession<'a, S> {
+        EngineSession { engine: self, signal, stats: self.stats(signal) }
+    }
+
+    /// The band-push handle for streaming ingestion: feed row-bands of
+    /// width `cols` as they arrive ([`StreamingCoreset::push_band`]),
+    /// then `finish()`. Bands build through the sharded builder on this
+    /// engine's pool (no per-band thread spinup) with the config's
+    /// shard geometry — the streamed content is identical for every
+    /// thread count and executor, and agrees with [`Engine::coreset`]'s
+    /// geometry for the same config.
+    pub fn stream(&self, cols: usize) -> StreamingCoreset<'_> {
+        StreamingCoreset::new(cols, self.config.coreset_config())
+            .with_exec(self.exec())
+            .with_shard_rows(self.config.shard_rows)
+    }
+
+    /// Run the banded pipeline (source → bounded queue → workers →
+    /// reducer, with backpressure and metrics) over an in-memory
+    /// signal, using the engine's band geometry and worker count and a
+    /// shared statistics object built on the pool. The banded workers
+    /// themselves are per-call scoped threads (the bounded-queue
+    /// backpressure architecture), not pool workers — for repeated
+    /// low-latency builds prefer [`Engine::coreset`], which runs
+    /// entirely on the parked pool.
+    pub fn pipeline<S: SignalSource>(&self, signal: &S) -> (SignalCoreset, PipelineMetrics) {
+        let stats = self.stats(signal);
+        let config = PipelineConfig::new(self.config.coreset_config())
+            .with_band_rows(self.config.band_rows)
+            .with_workers(self.threads);
+        pipeline::run_with_stats(signal, &stats, config)
+    }
+
+    /// Batch FITTING-LOSS on the engine pool: identical results to
+    /// [`SignalCoreset::fitting_loss_batch`] (query order, every
+    /// thread count), but repeated batches reuse one set of parked
+    /// workers instead of spawning threads per call — the serving
+    /// hot path (`bench_runtime`'s engine-reuse rows measure it).
+    pub fn fitting_loss(&self, coreset: &SignalCoreset, queries: &[KSegmentation]) -> Vec<f64> {
+        self.pool.map(queries, |_, s| fitting_loss::fitting_loss(coreset, s))
+    }
+
+    /// Exact optimal k-tree of `signal` by the guillotine DP
+    /// ([`TreeDP`]) — feasible for small instances (≲ 32×32); the
+    /// serving-scale variant is [`Engine::optimal_tree_of_coreset`].
+    /// Returns the tree and its loss.
+    pub fn optimal_tree<S: SignalSource>(&self, signal: &S, k: usize) -> (KSegmentation, f64) {
+        self.session(signal).optimal_tree(k)
+    }
+
+    /// The paper's headline pipeline, "run the expensive solver on the
+    /// coreset": the exact minimizer of FITTING-LOSS over guillotine
+    /// k-trees, via the smoothed-density oracle
+    /// ([`CoresetOracle`]). Returns the tree and its FITTING-LOSS.
+    pub fn optimal_tree_of_coreset(
+        &self,
+        coreset: &SignalCoreset,
+        k: usize,
+    ) -> (KSegmentation, f64) {
+        let oracle = CoresetOracle::new(coreset);
+        let bounds = Rect::new(0, coreset.rows() - 1, 0, coreset.cols() - 1);
+        let mut dp = TreeDP::new(&oracle);
+        let loss = dp.opt(bounds, k);
+        (dp.solve(bounds, k), loss)
+    }
+
+    /// Run the empirical ε-guarantee audit for this engine's (k, ε,
+    /// seed) on the engine pool. The evidence trail is bit-identical to
+    /// [`audit::run_audit`] with the same knobs at any thread count.
+    pub fn audit(&self, cases: usize, transfer_instances: usize) -> AuditReport {
+        let config = AuditConfig::new(self.config.k, self.config.eps)
+            .with_cases(cases)
+            .with_seed(self.config.seed)
+            .with_threads(self.threads)
+            .with_transfer_instances(transfer_instances);
+        audit::run_audit_exec(&config, self.exec())
+    }
+}
+
+/// A signal attached to an [`Engine`]: owns the shared [`PrefixStats`]
+/// and reuses it (and the engine pool) across builds, region builds,
+/// exact-loss queries, and DP solves. Created by [`Engine::session`].
+pub struct EngineSession<'a, S: SignalSource> {
+    engine: &'a Engine,
+    signal: &'a S,
+    stats: PrefixStats,
+}
+
+impl<S: SignalSource> EngineSession<'_, S> {
+    /// The engine this session runs on.
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+
+    /// The attached signal.
+    pub fn signal(&self) -> &S {
+        self.signal
+    }
+
+    /// The shared statistics (one object for every query this session
+    /// answers).
+    pub fn stats(&self) -> &PrefixStats {
+        &self.stats
+    }
+
+    /// The (k, ε)-coreset of the attached signal — same bits as
+    /// [`Engine::coreset`], but reusing this session's statistics
+    /// (short signals take the same sequential fallback, so the
+    /// equality is exact).
+    pub fn coreset(&self) -> SignalCoreset {
+        SignalCoreset::construct_sharded_with_stats(
+            self.signal,
+            &self.stats,
+            self.engine.config.coreset_config(),
+            self.engine.config.shard_rows,
+            self.engine.exec(),
+        )
+    }
+
+    /// Partial coreset of `region` (signal-frame blocks; the shard
+    /// primitive), against the session's shared statistics.
+    pub fn coreset_region(&self, region: Rect) -> SignalCoreset {
+        SignalCoreset::construct_in(
+            self.signal,
+            &self.stats,
+            region,
+            self.engine.config.coreset_config(),
+        )
+    }
+
+    /// Exact loss ℓ(D, s) from the shared statistics (the ground truth
+    /// FITTING-LOSS approximates).
+    pub fn exact_loss(&self, s: &KSegmentation) -> f64 {
+        s.loss(&self.stats)
+    }
+
+    /// Refit a segmentation's piece values to the attached signal's
+    /// per-piece means.
+    pub fn refit(&self, s: &mut KSegmentation) {
+        s.refit_values(&self.stats);
+    }
+
+    /// Batch FITTING-LOSS on the engine pool ([`Engine::fitting_loss`]).
+    pub fn fitting_loss(&self, coreset: &SignalCoreset, queries: &[KSegmentation]) -> Vec<f64> {
+        self.engine.fitting_loss(coreset, queries)
+    }
+
+    /// Exact optimal k-tree of the attached signal (guillotine DP on
+    /// the shared statistics). Returns the tree and its loss.
+    pub fn optimal_tree(&self, k: usize) -> (KSegmentation, f64) {
+        let bounds = self.stats.bounds();
+        let mut dp = TreeDP::new(&self.stats);
+        let loss = dp.opt(bounds, k);
+        (dp.solve(bounds, k), loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::{Coreset, CoresetConfig};
+    use crate::rng::Rng;
+    use crate::segmentation::random_segmentation;
+    use crate::signal::{generate, Signal};
+
+    fn assert_same_coreset(a: &SignalCoreset, b: &SignalCoreset, label: &str) {
+        assert_eq!(a.blocks.len(), b.blocks.len(), "{label}: block count");
+        for (x, y) in a.blocks.iter().zip(&b.blocks) {
+            assert_eq!(x.rect, y.rect, "{label}");
+            assert_eq!(x.labels, y.labels, "{label}");
+            assert_eq!(x.weights, y.weights, "{label}");
+        }
+    }
+
+    #[test]
+    fn engine_coreset_matches_sharded_builder_bitwise() {
+        let mut rng = Rng::new(70);
+        let sig = generate::smooth(192, 40, 3, &mut rng);
+        let reference = SignalCoreset::construct_sharded(&sig, CoresetConfig::new(4, 0.3), 1);
+        for threads in [1, 2, 4] {
+            let engine = Engine::new(EngineConfig::new(4, 0.3).with_threads(threads)).unwrap();
+            assert_same_coreset(&engine.coreset(&sig), &reference, "engine vs sharded");
+            // The session path shares one stats object and still agrees.
+            assert_same_coreset(&engine.session(&sig).coreset(), &reference, "session");
+        }
+    }
+
+    #[test]
+    fn engine_short_signal_takes_sequential_fallback() {
+        let mut rng = Rng::new(71);
+        let sig = generate::image_like(90, 30, 2, &mut rng);
+        let engine = Engine::new(EngineConfig::new(3, 0.3).with_threads(2)).unwrap();
+        let reference = SignalCoreset::construct_with(&sig, CoresetConfig::new(3, 0.3));
+        assert_same_coreset(&engine.coreset(&sig), &reference, "fallback");
+        assert_same_coreset(&engine.session(&sig).coreset(), &reference, "session fallback");
+    }
+
+    #[test]
+    fn engine_fitting_loss_matches_batch_api() {
+        let mut rng = Rng::new(72);
+        let sig = generate::smooth(64, 48, 3, &mut rng);
+        let engine = Engine::new(EngineConfig::new(6, 0.3).with_threads(3)).unwrap();
+        let session = engine.session(&sig);
+        let cs = session.coreset();
+        let queries: Vec<KSegmentation> = (0..40)
+            .map(|_| {
+                let mut s = random_segmentation(sig.bounds(), 6, &mut rng);
+                session.refit(&mut s);
+                s
+            })
+            .collect();
+        let via_engine = engine.fitting_loss(&cs, &queries);
+        let via_batch = cs.fitting_loss_batch(&queries, 1);
+        assert_eq!(via_engine, via_batch);
+        // Repeated batches through the same engine stay identical.
+        assert_eq!(engine.fitting_loss(&cs, &queries), via_batch);
+    }
+
+    #[test]
+    fn session_region_and_stats_are_consistent() {
+        let mut rng = Rng::new(73);
+        let sig = generate::smooth(80, 40, 3, &mut rng);
+        let engine = Engine::new(EngineConfig::new(4, 0.3).with_threads(2)).unwrap();
+        let session = engine.session(&sig);
+        let whole = session.coreset_region(sig.bounds());
+        let direct = SignalCoreset::construct_with_stats(
+            &sig,
+            session.stats(),
+            CoresetConfig::new(4, 0.3),
+        );
+        assert_same_coreset(&whole, &direct, "region == with_stats");
+        let s = KSegmentation::constant(sig.bounds(), 0.5);
+        let exact = session.exact_loss(&s);
+        assert!((exact - s.loss(session.stats())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn engine_stream_matches_streaming_coreset() {
+        let mut rng = Rng::new(74);
+        let sig = generate::smooth(96, 30, 3, &mut rng);
+        let engine = Engine::new(EngineConfig::new(4, 0.3).with_threads(2)).unwrap();
+        let mut via_engine = engine.stream(30);
+        let mut classic = StreamingCoreset::new(30, CoresetConfig::new(4, 0.3))
+            .with_threads(engine.threads());
+        for r0 in (0..96).step_by(32) {
+            let band = sig.view(Rect::new(r0, r0 + 31, 0, 29));
+            via_engine.push_band(&band);
+            classic.push_band(&band);
+        }
+        let a = via_engine.finish().unwrap();
+        let b = classic.finish().unwrap();
+        assert_same_coreset(&a, &b, "engine stream");
+        assert_eq!(a.rows(), 96);
+    }
+
+    #[test]
+    fn engine_pipeline_covers_signal() {
+        let mut rng = Rng::new(75);
+        let sig = generate::smooth(100, 40, 3, &mut rng);
+        let engine = Engine::new(EngineConfig::new(5, 0.3).with_threads(2).with_band_rows(16))
+            .unwrap();
+        let (cs, metrics) = engine.pipeline(&sig);
+        assert!((cs.total_weight() - 4000.0).abs() < 1e-6 * 4000.0);
+        assert_eq!(cs.rows(), 100);
+        assert!(metrics.bands_built() >= 7);
+    }
+
+    #[test]
+    fn engine_optimal_tree_agrees_with_treedp() {
+        let sig = Signal::from_fn(8, 8, |r, c| match (r < 4, c < 4) {
+            (true, true) => 1.0,
+            (true, false) => 2.0,
+            (false, true) => 3.0,
+            (false, false) => 4.0,
+        });
+        let engine = Engine::new(EngineConfig::new(4, 0.3)).unwrap();
+        let (tree, loss) = engine.optimal_tree(&sig, 4);
+        assert!(loss < 1e-12);
+        assert_eq!(tree.k(), 4);
+        // The coreset-density variant reports its own fitting loss.
+        let cs = engine.coreset(&sig);
+        let (tree_c, loss_c) = engine.optimal_tree_of_coreset(&cs, 4);
+        let fit = cs.fitting_loss(&tree_c);
+        assert!((loss_c - fit).abs() <= 1e-6 * (1.0 + fit));
+    }
+
+    #[test]
+    fn engine_audit_matches_run_audit() {
+        let engine = Engine::new(EngineConfig::new(3, 0.5).with_threads(2).with_seed(11)).unwrap();
+        let report = engine.audit(4, 3);
+        assert!(report.pass, "\n{}", report.summary());
+        let classic = audit::run_audit(
+            &AuditConfig::new(3, 0.5)
+                .with_cases(4)
+                .with_seed(11)
+                .with_threads(1)
+                .with_transfer_instances(3),
+        );
+        assert_eq!(report.to_json().render(), classic.to_json().render());
+    }
+
+    #[test]
+    fn engine_new_rejects_invalid_configs() {
+        assert!(Engine::new(EngineConfig::new(0, 0.3)).is_err());
+        assert!(Engine::new(EngineConfig::new(4, 1.0)).is_err());
+        assert!(Engine::new(EngineConfig::new(4, 0.3).with_band_rows(0)).is_err());
+        #[cfg(not(feature = "pjrt"))]
+        assert!(
+            Engine::new(EngineConfig::new(4, 0.3).with_backend(BackendChoice::Pjrt)).is_err(),
+            "pjrt backend must fail fast when not compiled in"
+        );
+    }
+}

@@ -94,7 +94,7 @@ pub fn missing_values_experiment(
 
     // Coreset.
     let t0 = Instant::now();
-    let coreset = SignalCoreset::build(&masked, k_coreset, eps);
+    let coreset = SignalCoreset::construct(&masked, k_coreset, eps);
     let cs_build = t0.elapsed();
     let cs_samples: Vec<Sample> = coreset
         .weighted_points()

@@ -89,7 +89,7 @@ pub fn tune_coreset(
 ) -> TuningCurve {
     let mut rng = Rng::new(seed);
     let t0 = Instant::now();
-    let coreset = SignalCoreset::build(masked, k_coreset, eps);
+    let coreset = SignalCoreset::construct(masked, k_coreset, eps);
     let samples: Vec<Sample> = coreset
         .weighted_points()
         .iter()

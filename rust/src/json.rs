@@ -1,11 +1,13 @@
-//! Hand-rolled JSON writer (serde is unavailable offline — DESIGN.md
-//! §Substitutions). Write-only: the audit engine and the benchmarks emit
-//! machine-readable evidence trails (`AuditReport`, `BENCH_runtime.json`)
-//! and CI archives them; nothing in the repo needs to parse JSON back.
-//! Crate-level on purpose — it carries no audit-specific logic, so any
-//! future emitter (pipeline metrics, experiment results) depends on
-//! `sigtree::json`, not on the audit subsystem (which re-exports it as
-//! `audit::json` for the evidence-trail docs).
+//! Hand-rolled JSON (serde is unavailable offline — DESIGN.md
+//! §Substitutions). The writer side emits the machine-readable evidence
+//! trails (`AuditReport`, `BENCH_runtime.json`) CI archives; the reader
+//! side ([`Json::parse`]) exists for exactly one consumer — engine
+//! configuration files ([`crate::engine::EngineConfig`]), so a config
+//! written with [`Json::render`] round-trips through disk and the CLI's
+//! `--config` flag. Crate-level on purpose — it carries no
+//! audit-specific logic, so any emitter (pipeline metrics, experiment
+//! results) depends on `sigtree::json`, not on the audit subsystem
+//! (which re-exports it as `audit::json` for the evidence-trail docs).
 //!
 //! Numbers are emitted as valid JSON: exact integers (|x| < 2⁵³) print
 //! without a fractional part, everything else uses Rust's shortest
@@ -45,6 +47,67 @@ impl Json {
     /// Object helper taking `(key, value)` pairs in display order.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Object field lookup (first match; objects are ordered pairs).
+    /// `None` for non-objects and missing keys.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The numeric value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// The string value, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// The boolean value, if this is a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The value as a non-negative exact integer (counts, sizes).
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && *x == x.trunc() && *x < EXACT_INT => {
+                Some(*x as usize)
+            }
+            _ => None,
+        }
+    }
+
+    /// Parse a JSON document — the reader side of [`Json::render`].
+    /// Strict on structure (one value, balanced, valid escapes) and
+    /// returns a message with the byte offset on malformed input.
+    /// `NaN`/`Infinity` are not JSON and are rejected, mirroring the
+    /// writer's non-finite → `null` degradation. Nesting is capped at
+    /// [`MAX_PARSE_DEPTH`] so a corrupt config (`[[[[…`) errors instead
+    /// of overflowing the stack — every misparse must surface as `Err`.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
+        p.skip_ws();
+        let value = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing content at byte {}", p.pos));
+        }
+        Ok(value)
     }
 
     /// Render as pretty-printed JSON (2-space indent, trailing newline) —
@@ -140,6 +203,265 @@ fn write_string(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Maximum container nesting [`Json::parse`] accepts. Far above any
+/// config/evidence document the repo writes (≤ 4 levels), far below
+/// stack-overflow territory for the recursive descent.
+pub const MAX_PARSE_DEPTH: usize = 128;
+
+/// Recursive-descent JSON reader over raw bytes (UTF-8 handled via the
+/// escape and string paths; structural characters are all ASCII).
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    /// Current container nesting, guarded against [`MAX_PARSE_DEPTH`].
+    depth: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!(
+                "expected '{}' at byte {}",
+                b as char, self.pos
+            ))
+        }
+    }
+
+    fn literal(&mut self, lit: &str, value: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(value)
+        } else {
+            Err(format!("invalid literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            None => Err("unexpected end of input".to_string()),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(b'-') | Some(b'0'..=b'9') => self.number(),
+            Some(other) => Err(format!(
+                "unexpected '{}' at byte {}",
+                other as char, self.pos
+            )),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if matches!(b, b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| format!("invalid number at byte {start}"))?;
+        text.parse::<f64>()
+            .ok()
+            .filter(|x| x.is_finite())
+            .map(Json::Num)
+            .ok_or_else(|| format!("invalid number '{text}' at byte {start}"))
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let start = self.pos;
+        let end = start + 4;
+        let slice = self
+            .bytes
+            .get(start..end)
+            .ok_or_else(|| format!("truncated \\u escape at byte {start}"))?;
+        // Exactly four hex digits — `from_str_radix` alone would also
+        // accept a leading sign (`\u+041`), which is not JSON.
+        if !slice.iter().all(u8::is_ascii_hexdigit) {
+            return Err(format!("invalid \\u escape at byte {start}"));
+        }
+        let text = std::str::from_utf8(slice)
+            .map_err(|_| format!("invalid \\u escape at byte {start}"))?;
+        let code = u32::from_str_radix(text, 16)
+            .map_err(|_| format!("invalid \\u escape at byte {start}"))?;
+        self.pos = end;
+        Ok(code)
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        let mut chunk_start = self.pos;
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    out.push_str(self.chunk(chunk_start)?);
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    out.push_str(self.chunk(chunk_start)?);
+                    self.pos += 1;
+                    let esc = self
+                        .peek()
+                        .ok_or_else(|| "unterminated escape".to_string())?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let mut code = self.hex4()?;
+                            // Combine a UTF-16 surrogate pair.
+                            if (0xD800..0xDC00).contains(&code) {
+                                if self.bytes[self.pos..].starts_with(b"\\u") {
+                                    self.pos += 2;
+                                    let low = self.hex4()?;
+                                    if !(0xDC00..0xE000).contains(&low) {
+                                        return Err(format!(
+                                            "unpaired surrogate at byte {}",
+                                            self.pos
+                                        ));
+                                    }
+                                    code = 0x10000
+                                        + ((code - 0xD800) << 10)
+                                        + (low - 0xDC00);
+                                } else {
+                                    return Err(format!(
+                                        "unpaired surrogate at byte {}",
+                                        self.pos
+                                    ));
+                                }
+                            }
+                            out.push(
+                                char::from_u32(code).ok_or_else(|| {
+                                    format!("invalid code point at byte {}", self.pos)
+                                })?,
+                            );
+                        }
+                        other => {
+                            return Err(format!(
+                                "invalid escape '\\{}' at byte {}",
+                                other as char,
+                                self.pos - 1
+                            ))
+                        }
+                    }
+                    chunk_start = self.pos;
+                }
+                Some(b) if b < 0x20 => {
+                    return Err(format!(
+                        "unescaped control character at byte {}",
+                        self.pos
+                    ))
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+    }
+
+    /// The raw (escape-free) string bytes accumulated since
+    /// `chunk_start`, validated as UTF-8.
+    fn chunk(&self, chunk_start: usize) -> Result<&str, String> {
+        std::str::from_utf8(&self.bytes[chunk_start..self.pos])
+            .map_err(|_| format!("invalid UTF-8 near byte {chunk_start}"))
+    }
+
+    fn enter(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_PARSE_DEPTH {
+            return Err(format!(
+                "nesting deeper than {MAX_PARSE_DEPTH} at byte {}",
+                self.pos
+            ));
+        }
+        Ok(())
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        self.enter()?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            self.depth -= 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    self.depth -= 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        self.enter()?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            self.depth -= 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let value = self.value()?;
+            pairs.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    self.depth -= 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,6 +495,78 @@ mod tests {
         assert!(rendered.find("\"z\"").unwrap() < rendered.find("\"a\"").unwrap());
         assert!(rendered.contains("\"empty\": {}"));
         assert!(rendered.contains("[\n    2,\n    null\n  ]"));
+    }
+
+    #[test]
+    fn parse_round_trips_render() {
+        let doc = Json::obj(vec![
+            ("k", Json::int(64)),
+            ("eps", Json::num(0.2)),
+            ("beta", Json::Null),
+            ("name", Json::str("engine \"smoke\"\n")),
+            ("flags", Json::Arr(vec![Json::Bool(true), Json::Bool(false)])),
+            ("nested", Json::obj(vec![("empty", Json::Arr(Vec::new()))])),
+        ]);
+        let parsed = Json::parse(&doc.render()).unwrap();
+        assert_eq!(parsed, doc);
+        // And a second trip is stable.
+        assert_eq!(parsed.render(), doc.render());
+    }
+
+    #[test]
+    fn parse_accepts_compact_and_whitespace_forms() {
+        let j = Json::parse("{\"a\":[1,2.5,-3e2],\"b\":null}").unwrap();
+        assert_eq!(j.get("a").unwrap(), &Json::Arr(vec![
+            Json::num(1.0),
+            Json::num(2.5),
+            Json::num(-300.0),
+        ]));
+        assert_eq!(j.get("b"), Some(&Json::Null));
+        assert_eq!(j.get("missing"), None);
+        let j = Json::parse(" \t\n[ ]\r\n").unwrap();
+        assert_eq!(j, Json::Arr(Vec::new()));
+    }
+
+    #[test]
+    fn parse_handles_escapes() {
+        let j = Json::parse(r#""a\"b\\c\nd\u0041\u00e9\ud83d\ude00""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "a\"b\\c\ndAé😀");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "tru", "1..2", "nan", "Infinity",
+            "[1] trailing", "\"unterminated", "{\"a\" 1}", "\"\\q\"",
+            "\"\\ud800x\"", "1e999", "\"\\u+041\"", "\"\\u00g1\"",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted malformed {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_caps_nesting_depth() {
+        // Within the cap: fine both ways.
+        let deep_ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&deep_ok).is_ok());
+        // Past the cap: a clean Err, never a stack overflow — a corrupt
+        // --config file must not crash the CLI.
+        let bomb = format!("{}1{}", "[".repeat(100_000), "]".repeat(100_000));
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+        let obj_bomb = "{\"a\":".repeat(MAX_PARSE_DEPTH + 8);
+        assert!(Json::parse(&obj_bomb).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let j = Json::parse("{\"n\": 7, \"f\": 1.5, \"s\": \"x\", \"b\": true}").unwrap();
+        assert_eq!(j.get("n").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("f").unwrap().as_f64(), Some(1.5));
+        assert_eq!(j.get("f").unwrap().as_usize(), None);
+        assert_eq!(j.get("s").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("b").unwrap().as_bool(), Some(true));
+        assert_eq!(Json::num(-1.0).as_usize(), None);
     }
 
     #[test]

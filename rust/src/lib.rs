@@ -5,6 +5,12 @@
 //!
 //! The library provides:
 //!
+//! * [`engine`] — **the one front door**: a validated, serializable
+//!   [`engine::EngineConfig`] and the long-lived [`engine::Engine`]
+//!   session that owns the shared prefix statistics, the worker pool,
+//!   and the kernel backend, and exposes build / region-build /
+//!   stream / pipeline / batch-query / optimal-tree / audit in one
+//!   place. Start here; the layers below are its plumbing.
 //! * [`signal`] — 2D signals (matrices with a label in every cell),
 //!   zero-copy rectangular views behind the [`signal::SignalSource`]
 //!   seam, masks, and O(1) block statistics answerable for any
@@ -25,7 +31,7 @@
 //! * [`pipeline`] — the L3 streaming coordinator: sharding, workers,
 //!   merge-and-reduce, backpressure, metrics.
 //! * [`par`] — the std-only parallel construction engine (scoped-thread
-//!   worker pool) behind [`coreset::SignalCoreset::build_par`],
+//!   worker pool) behind [`coreset::SignalCoreset::construct_sharded`],
 //!   [`signal::PrefixStats::new_par`], and the batch fitting-loss API.
 //! * [`audit`] — the empirical ε-guarantee audit engine: adversarial
 //!   query-family sweeps, the optimal-tree-transfer check on DP-feasible
@@ -37,9 +43,9 @@
 //!   the AOT-compiled JAX/Pallas artifacts from `artifacts/*.hlo.txt`.
 //! * [`error`] — the crate-wide error/result types (std-only `anyhow`
 //!   substitute).
-//! * [`json`] — write-only hand-rolled JSON (the machine-readable
-//!   evidence-trail format of `audit` and the benches; std-only serde
-//!   substitute).
+//! * [`json`] — hand-rolled JSON (the machine-readable evidence-trail
+//!   format of `audit` and the benches, and the on-disk format of
+//!   engine config files; std-only serde substitute).
 
 pub mod audit;
 pub mod benchkit;
@@ -47,6 +53,7 @@ pub mod bicriteria;
 pub mod cli;
 pub mod coreset;
 pub mod datasets;
+pub mod engine;
 pub mod error;
 pub mod experiments;
 pub mod json;
@@ -64,30 +71,40 @@ pub mod proptest;
 /// Convenience re-exports for downstream users and the examples.
 ///
 /// Doc-tested quickstart (the minimal end-to-end path every example
-/// builds on — signal → coreset → kernel backend):
+/// builds on — one [`engine::Engine`] front door: signal → coreset →
+/// queries → kernel backend):
 ///
 /// ```
 /// use sigtree::prelude::*;
-/// use sigtree::runtime::{KernelBackend, NativeBackend, TILE};
+/// use sigtree::runtime::{KernelBackend, TILE};
 ///
-/// // A small signal and its (k, ε)-coreset.
+/// // One validated config, one long-lived engine.
+/// let engine = Engine::new(EngineConfig::new(4, 0.3).with_threads(2)).unwrap();
+///
+/// // A small signal, its (k, ε)-coreset, and a query — all through
+/// // the engine (stats shared, worker pool reused across calls).
 /// let signal = Signal::from_fn(64, 48, |r, c| ((r + 2 * c) % 7) as f64);
-/// let stats = PrefixStats::new(&signal);
-/// let coreset = SignalCoreset::build(&signal, 4, 0.3);
+/// let session = engine.session(&signal);
+/// let coreset = session.coreset();
 /// let cells = signal.len() as f64;
 /// assert!((coreset.total_weight() - cells).abs() < 1e-6 * cells);
 ///
-/// // The kernel backend answers the same block statistics in f32.
-/// let backend = NativeBackend::new();
+/// let query = KSegmentation::constant(signal.bounds(), 1.0);
+/// let approx = engine.fitting_loss(&coreset, std::slice::from_ref(&query))[0];
+/// let exact = session.exact_loss(&query);
+/// assert!((approx - exact).abs() <= 1e-6 * (1.0 + exact));
+///
+/// // The engine also owns the kernel backend ("native" by default),
+/// // which answers the same block statistics in f32.
 /// let mut tile = vec![0.0f32; TILE * TILE];
 /// for r in 0..signal.rows() {
 ///     for c in 0..signal.cols() {
 ///         tile[r * TILE + c] = signal.get(r, c) as f32;
 ///     }
 /// }
-/// let (ii_y, _ii_y2) = backend.prefix2d(&tile).unwrap();
+/// let (ii_y, _ii_y2) = engine.backend().prefix2d(&tile).unwrap();
 /// let whole = Rect::new(0, signal.rows() - 1, 0, signal.cols() - 1);
-/// let sum_native = stats.sum(&whole);
+/// let sum_native = session.stats().sum(&whole);
 /// // Bottom-right corner of the zero-padded region's integral image.
 /// let sum_kernel = ii_y[(signal.rows() - 1) * TILE + (signal.cols() - 1)] as f64;
 /// assert!((sum_native - sum_kernel).abs() < 1e-3 * (1.0 + sum_native.abs()));
@@ -95,6 +112,7 @@ pub mod proptest;
 pub mod prelude {
     pub use crate::audit::{run_audit, AuditConfig, AuditReport};
     pub use crate::coreset::{Coreset, SignalCoreset, WeightedPoint};
+    pub use crate::engine::{BackendChoice, Engine, EngineConfig, EngineSession};
     pub use crate::rng::Rng;
     pub use crate::segmentation::KSegmentation;
     pub use crate::signal::{PrefixStats, Rect, Signal, SignalSource, SignalView};

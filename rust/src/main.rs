@@ -1,5 +1,11 @@
 //! `sigtree` CLI — the L3 launcher.
 //!
+//! Every subcommand is a thin shell around **one**
+//! [`sigtree::engine::Engine`]: flags (and optional `--config <json>`
+//! files) parse into one validated [`EngineConfig`], the engine owns
+//! the worker pool / shared statistics / kernel backend, and unknown
+//! flags are rejected with the valid set (`cli::Args::expect_only`).
+//!
 //! Subcommands:
 //!
 //! * `coreset`    — build a coreset of a synthetic signal, print stats.
@@ -15,11 +21,11 @@
 use std::process::ExitCode;
 
 use sigtree::cli::Args;
-use sigtree::coreset::{CoresetConfig, SignalCoreset};
+use sigtree::coreset::SignalCoreset;
 use sigtree::datasets;
+use sigtree::engine::{Engine, EngineConfig};
 use sigtree::error::{Error, Result};
 use sigtree::experiments::{self, Solver};
-use sigtree::pipeline::{self, PipelineConfig};
 use sigtree::rng::Rng;
 use sigtree::runtime::{pad_integral, KernelBackend, TiledPrefix, TILE};
 use sigtree::segmentation::random_segmentation;
@@ -60,23 +66,38 @@ fn print_help() {
          USAGE: sigtree <command> [--flag value ...]\n\
          \n\
          COMMANDS\n\
-           coreset     --n 512 --m 512 --k 64 --eps 0.2 --seed 7 [--signal smooth|image|noise|piecewise] [--threads N]\n\
-           pipeline    --n 2048 --m 512 --k 64 --eps 0.2 --band-rows 128 --workers 2 [--threads N]\n\
-           evaluate    --n 256 --m 256 --k 16 --eps 0.2 --queries 100 [--threads N]\n\
-           audit       --k 5 --eps 0.5 --cases 25 --seed 7 [--threads N] [--transfer-instances 4] [--json audit.json]\n\
+           coreset     --n 512 --m 512 --k 64 --eps 0.2 --seed 7 [--signal smooth|image|noise|piecewise]\n\
+           pipeline    --n 2048 --m 512 --k 64 --eps 0.2 --band-rows 128 [--workers 2]\n\
+           evaluate    --n 256 --m 256 --k 16 --eps 0.2 --queries 100\n\
+           audit       --k 5 --eps 0.5 --cases 25 --seed 7 [--transfer-instances 4] [--json audit.json]\n\
            experiment  --dataset air|gesture --scale 0.1 --k 200 --eps 0.3 [--solver forest|gbdt]\n\
            tune        --dataset air|gesture --scale 0.1 --grid 8 --eps 0.3\n\
-           runtime     [--backend native|pjrt] [--dir artifacts] [--threads N]\n\
+           runtime     [--backend native|pjrt] [--dir artifacts]\n\
            help\n\
          \n\
-         --threads N routes coreset/evaluate construction through the sharded\n\
-         parallel builder (sigtree::par) with N workers — output is identical\n\
-         for every N; 0 or 'auto' = all cores. Omit the flag for the classic\n\
-         monolithic build. For pipeline, --threads is an alias for --workers\n\
-         (completion-order merge: fast, but not bitwise-reproducible)."
+         ENGINE FLAGS (each subcommand accepts exactly the subset it\n\
+         consumes — anything else, typo'd or merely inert, is rejected)\n\
+           --threads N      worker threads; 0 or 'auto' = all cores. Coresets are\n\
+                            bit-identical for every N (pipeline merge order excepted).\n\
+           --beta B         worst-case theory calibration gamma = eps^2/(B*k)\n\
+                            (default: the practical gamma = eps/2).\n\
+           --band-rows R    rows per streamed band (pipeline/stream).\n\
+           --shard-rows R   rows per build shard (default 64).\n\
+           --backend NAME   kernel backend: native (default) or pjrt.\n\
+           --dir PATH       artifacts directory for the pjrt backend.\n\
+           --seed S         base seed (decimal or 0x-hex).\n\
+           --config FILE    JSON engine config (sigtree::engine::EngineConfig);\n\
+                            explicit flags override file values.\n\
+         \n\
+         Unknown flags are rejected with the valid set for the subcommand\n\
+         (a typo like --theads no longer runs silently with defaults)."
     );
 }
 
+/// Generate the synthetic input signal, consuming draws from `rng` —
+/// callers thread ONE rng through signal generation and any subsequent
+/// query generation, so queries never replay the stream that produced
+/// the signal.
 fn make_signal(args: &Args, rng: &mut Rng) -> Result<Signal> {
     let n = args.get_usize("n", 512)?;
     let m = args.get_usize("m", 512)?;
@@ -88,44 +109,32 @@ fn make_signal(args: &Args, rng: &mut Rng) -> Result<Signal> {
     })
 }
 
-/// The `--threads` convention shared by `coreset` and `evaluate`: flag
-/// absent → the classic monolithic build; flag present (any value, even
-/// 1) → the sharded parallel builder, a pure performance knob whose
-/// output is identical for every thread count.
-fn build_coreset_from_args(
-    args: &Args,
-    signal: &Signal,
-    k: usize,
-    eps: f64,
-) -> Result<SignalCoreset> {
-    Ok(match args.get("threads") {
-        None => SignalCoreset::build(signal, k, eps),
-        Some(_) => {
-            SignalCoreset::build_par(signal, CoresetConfig::new(k, eps), args.get_threads(1)?)
-        }
-    })
-}
-
 fn cmd_coreset(args: &Args) -> Result<()> {
-    let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
+    // Per-subcommand allowlists name exactly the flags the subcommand
+    // consumes — an accepted-but-inert flag (e.g. `--band-rows` on a
+    // non-banded build) is the silent-ignore failure mode expect_only
+    // exists to prevent, so every list below is consumed-knobs-only.
+    args.expect_only(&[
+        "k", "eps", "beta", "threads", "shard-rows", "seed", "config", "n", "m", "signal",
+    ])?;
+    // Historical default: a bare `coreset` ran single-threaded; the
+    // sharded engine build is bit-identical at any thread count, so
+    // threads=1 preserves the resource footprint too.
+    let engine =
+        Engine::new(EngineConfig::from_args(args, EngineConfig::new(64, 0.2).with_threads(1))?)?;
+    let mut rng = Rng::new(engine.config().seed);
     let signal = make_signal(args, &mut rng)?;
-    let k = args.get_usize("k", 64)?;
-    let eps = args.get_f64("eps", 0.2)?;
-    let engine = match args.get("threads") {
-        None => "monolithic".to_string(),
-        Some(_) => format!(
-            "par({} threads)",
-            sigtree::par::resolve_threads(args.get_threads(1)?)
-        ),
-    };
     let t0 = std::time::Instant::now();
-    let cs = build_coreset_from_args(args, &signal, k, eps)?;
+    let cs = engine.coreset(&signal);
     let took = t0.elapsed();
     println!(
-        "signal {}x{} ({} cells)  k={k} eps={eps}  engine={engine}",
+        "signal {}x{} ({} cells)  k={} eps={}  engine=pool({} threads)",
         signal.rows(),
         signal.cols(),
-        signal.len()
+        signal.len(),
+        engine.config().k,
+        engine.config().eps,
+        engine.threads()
     );
     println!(
         "coreset: {} blocks, {} stored points ({:.2}% of present cells), sigma={:.4e}, built in {:?} ({:.2e} cells/s)",
@@ -140,21 +149,23 @@ fn cmd_coreset(args: &Args) -> Result<()> {
 }
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
-    let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
+    args.expect_only(&[
+        "k", "eps", "beta", "threads", "band-rows", "seed", "config", "n", "m", "signal", "workers",
+    ])?;
+    // Historical default: 2 workers when neither --workers nor
+    // --threads is given (a bare `pipeline` must not saturate the host).
+    let mut config = EngineConfig::from_args(args, EngineConfig::new(64, 0.2).with_threads(2))?;
+    // `--workers` is the historical spelling of the pipeline's worker
+    // count, taken literally (clamped to ≥ 1, like `with_workers`); it
+    // wins over `--threads` when both are given.
+    if args.get("workers").is_some() {
+        config.threads = args.get_usize("workers", 2)?.max(1);
+    }
+    let engine = Engine::new(config)?;
+    let mut rng = Rng::new(engine.config().seed);
     let signal = make_signal(args, &mut rng)?;
-    let k = args.get_usize("k", 64)?;
-    let eps = args.get_f64("eps", 0.2)?;
-    let cfg = PipelineConfig::new(CoresetConfig::new(k, eps))
-        .with_band_rows(args.get_usize("band-rows", 128)?);
-    // `--workers` is the historical spelling, taken literally (clamped to
-    // ≥ 1) as before; `--threads` follows the crate-wide convention
-    // (0/auto = all cores). `--workers` wins when both are given.
-    let cfg = match args.get("workers") {
-        Some(_) => cfg.with_workers(args.get_usize("workers", 2)?),
-        None => cfg.with_threads(args.get_threads(2)?),
-    };
     let t0 = std::time::Instant::now();
-    let (cs, metrics) = pipeline::run(&signal, cfg);
+    let (cs, metrics) = engine.pipeline(&signal);
     println!(
         "pipeline done in {:?}: {} blocks, {:.2}% of present cells",
         t0.elapsed(),
@@ -166,56 +177,64 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
 }
 
 fn cmd_evaluate(args: &Args) -> Result<()> {
-    let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
+    args.expect_only(&[
+        "k", "eps", "beta", "threads", "shard-rows", "seed", "config", "n", "m", "signal",
+        "queries",
+    ])?;
+    // Historical default: single-threaded (see cmd_coreset).
+    let engine =
+        Engine::new(EngineConfig::from_args(args, EngineConfig::new(16, 0.2).with_threads(1))?)?;
+    // One rng thread through signal AND queries (seed-reuse would
+    // correlate the measured queries with the data).
+    let mut rng = Rng::new(engine.config().seed);
     let signal = make_signal(args, &mut rng)?;
-    let k = args.get_usize("k", 16)?;
-    let eps = args.get_f64("eps", 0.2)?;
     let queries = args.get_usize("queries", 100)?;
-    let threads = args.get_threads(1)?;
-    let stats = PrefixStats::new(&signal);
-    let cs = build_coreset_from_args(args, &signal, k, eps)?;
+    let session = engine.session(&signal);
+    let cs = session.coreset();
     let qs: Vec<_> = (0..queries)
         .map(|_| {
-            let mut s = random_segmentation(signal.bounds(), k, &mut rng);
-            s.refit_values(&stats);
+            let mut s = random_segmentation(signal.bounds(), engine.config().k, &mut rng);
+            session.refit(&mut s);
             s
         })
         .collect();
-    // Batch evaluation runs the queries concurrently on the par pool.
-    let approxs = cs.fitting_loss_batch(&qs, threads);
+    // Batch evaluation runs the queries concurrently on the engine pool.
+    let approxs = engine.fitting_loss(&cs, &qs);
     let mut worst = 0.0f64;
     let mut mean = 0.0f64;
     for (s, approx) in qs.iter().zip(approxs) {
-        let exact = s.loss(&stats);
+        let exact = session.exact_loss(s);
         let err = sigtree::coreset::fitting_loss::relative_error(approx, exact);
         worst = worst.max(err);
         mean += err;
     }
     mean /= queries.max(1) as f64;
     println!(
-        "coreset size {:.2}%  queries={queries}  mean rel err {:.4}  worst {:.4}  (target eps {eps})",
+        "coreset size {:.2}%  queries={queries}  mean rel err {:.4}  worst {:.4}  (target eps {})",
         100.0 * cs.compression_ratio(),
         mean,
-        worst
+        worst,
+        engine.config().eps
     );
     Ok(())
 }
 
-/// The empirical ε-guarantee audit (`sigtree::audit`): sweep adversarial
-/// query families against freshly built coresets, run the optimal-tree-
-/// transfer check on DP-feasible instances, optionally write the JSON
-/// evidence trail, and exit non-zero on any violated gate.
+/// The empirical ε-guarantee audit (`sigtree::audit`) through the
+/// engine: sweep adversarial query families against freshly built
+/// coresets, run the optimal-tree-transfer check on DP-feasible
+/// instances, optionally write the JSON evidence trail, and exit
+/// non-zero on any violated gate.
 fn cmd_audit(args: &Args) -> Result<()> {
-    let config = sigtree::audit::AuditConfig::new(
-        args.get_usize("k", 5)?,
-        args.get_f64("eps", 0.5)?,
-    )
-    .with_cases(args.get_usize("cases", 25)?)
-    .with_seed(args.get_u64("seed", 7)?)
-    .with_threads(args.get_threads(0)?)
-    .with_transfer_instances(args.get_usize("transfer-instances", 4)?);
+    // The audit builds practically-calibrated coresets internally, so
+    // --beta/--shard-rows/--band-rows would be inert here — rejected.
+    args.expect_only(&[
+        "k", "eps", "threads", "seed", "config", "cases", "transfer-instances", "json",
+    ])?;
+    let engine = Engine::new(EngineConfig::from_args(args, EngineConfig::new(5, 0.5))?)?;
+    let cases = args.get_usize("cases", 25)?;
+    let transfer_instances = args.get_usize("transfer-instances", 4)?;
     let t0 = std::time::Instant::now();
-    let report = sigtree::audit::run_audit(&config);
+    let report = engine.audit(cases, transfer_instances);
     println!("{}", report.summary());
     println!("audit completed in {:?}", t0.elapsed());
     if let Some(path) = args.get("json") {
@@ -232,20 +251,27 @@ fn cmd_audit(args: &Args) -> Result<()> {
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
-    let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
+    // Only the knobs this harness actually consumes are accepted —
+    // engine flags like --threads/--backend would be silently ignored
+    // here, which is exactly what expect_only exists to prevent.
+    args.expect_only(&["k", "eps", "seed", "dataset", "scale", "k-train", "solver"])?;
+    // Engine-validated knobs (k, eps, seed) — the harness itself drives
+    // the experiments module directly.
+    let config = EngineConfig::from_args(args, EngineConfig::new(200, 0.3))?;
+    let mut rng = Rng::new(config.seed);
     let scale = args.get_f64("scale", 0.1)?;
     let signal = match args.get_str("dataset", "air").as_str() {
         "gesture" => datasets::gesture_phase_like(scale, &mut rng),
         _ => datasets::air_quality_like(scale, &mut rng),
     };
-    let k = args.get_usize("k", 200)?;
-    let eps = args.get_f64("eps", 0.3)?;
     let k_train = args.get_usize("k-train", 64)?;
     let solver = match args.get_str("solver", "forest").as_str() {
         "gbdt" => Solver::Gbdt,
         _ => Solver::RandomForest,
     };
-    let (cs, us) = experiments::missing_values_experiment(&signal, k, eps, k_train, solver, 11);
+    let (cs, us) = experiments::missing_values_experiment(
+        &signal, config.k, config.eps, k_train, solver, 11,
+    );
     let full = experiments::full_data_baseline(&signal, k_train, solver, 11);
     for o in [&full, &cs, &us] {
         println!(
@@ -263,7 +289,10 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
 fn cmd_tune(args: &Args) -> Result<()> {
     use sigtree::experiments::tuning;
-    let mut rng = Rng::new(args.get_usize("seed", 7)? as u64);
+    // Same contract as cmd_experiment: accept only consumed knobs.
+    args.expect_only(&["k", "eps", "seed", "dataset", "scale", "grid"])?;
+    let config = EngineConfig::from_args(args, EngineConfig::new(200, 0.3))?;
+    let mut rng = Rng::new(config.seed);
     let scale = args.get_f64("scale", 0.1)?;
     let signal = match args.get_str("dataset", "air").as_str() {
         "gesture" => datasets::gesture_phase_like(scale, &mut rng),
@@ -271,9 +300,16 @@ fn cmd_tune(args: &Args) -> Result<()> {
     };
     let (masked, held) = datasets::holdout_patches(&signal, 0.3, 5, &mut rng);
     let grid = tuning::log_grid(4, 256, args.get_usize("grid", 8)?);
-    let eps = args.get_f64("eps", 0.3)?;
     let full = tuning::tune_full(&masked, &held, &grid, Solver::RandomForest, 3);
-    let core = tuning::tune_coreset(&masked, &held, &grid, 200, eps, Solver::RandomForest, 3);
+    let core = tuning::tune_coreset(
+        &masked,
+        &held,
+        &grid,
+        config.k,
+        config.eps,
+        Solver::RandomForest,
+        3,
+    );
     let uni = tuning::tune_uniform(
         &masked,
         &held,
@@ -302,9 +338,14 @@ fn cmd_tune(args: &Args) -> Result<()> {
 }
 
 fn cmd_runtime(args: &Args) -> Result<()> {
-    let name = args.get_str("backend", "native");
-    let dir = std::path::PathBuf::from(args.get_str("dir", "artifacts"));
-    let backend = sigtree::runtime::backend_from_name(&name, Some(&dir))?;
+    args.expect_only(&[
+        "k", "eps", "beta", "threads", "shard-rows", "backend", "dir", "seed", "config",
+    ])?;
+    // Historical default: threads=1 runs the kernel parity checks only;
+    // any other value adds the engine-vs-sequential parity section.
+    let engine =
+        Engine::new(EngineConfig::from_args(args, EngineConfig::new(8, 0.3).with_threads(1))?)?;
+    let backend = engine.backend();
     println!("backend: {}", backend.name());
 
     // Parity smoke: prefix2d + block_sse against the exact f64 prefix
@@ -332,7 +373,7 @@ fn cmd_runtime(args: &Args) -> Result<()> {
 
     // Tiled path over a non-TILE-aligned signal.
     let signal = generate::smooth(300, 280, 3, &mut rng);
-    let tp = TiledPrefix::build(backend.as_ref(), &signal)?;
+    let tp = TiledPrefix::build(backend, &signal)?;
     let probe = Rect::new(0, 299, 0, 279);
     let (s, q) = tp.moments(&probe);
     let exact = PrefixStats::new(&signal).moments(&probe);
@@ -341,33 +382,32 @@ fn cmd_runtime(args: &Args) -> Result<()> {
         exact.sum, exact.sum_sq
     );
 
-    // Parallel-engine parity (--threads N, 0/auto = all cores): the
-    // sharded builders must agree with their sequential counterparts.
-    let threads = args.get_threads(1)?;
-    if threads != 1 {
-        let resolved = sigtree::par::resolve_threads(threads);
+    // Engine parity (--threads N, 0/auto = all cores): the engine's
+    // pool-built statistics and sharded coreset must agree with their
+    // sequential baselines.
+    if engine.threads() != 1 {
         let sig = generate::smooth(320, 200, 3, &mut rng);
         let seq = PrefixStats::new(&sig);
-        let par = PrefixStats::new_par(&sig, threads);
+        let par = engine.stats(&sig);
         let probe = Rect::new(3, 311, 11, 189);
         let (a, b) = (seq.moments(&probe), par.moments(&probe));
         let scale = 1.0 + a.sum_sq.abs();
         if (a.sum - b.sum).abs() > 1e-9 * scale || (a.sum_sq - b.sum_sq).abs() > 1e-9 * scale {
             return Err(Error::msg(format!(
-                "parallel PrefixStats parity failure: {a:?} vs {b:?}"
+                "engine PrefixStats parity failure: {a:?} vs {b:?}"
             )));
         }
-        println!("parallel PrefixStats parity OK ({resolved} threads)");
-        let cs_seq = SignalCoreset::build(&sig, 8, 0.3);
-        let cs_par = SignalCoreset::build_par(&sig, CoresetConfig::new(8, 0.3), threads);
+        println!("engine PrefixStats parity OK ({} threads)", engine.threads());
+        let cs_seq = SignalCoreset::construct(&sig, engine.config().k, engine.config().eps);
+        let cs_par = engine.coreset(&sig);
         let (w_seq, w_par) = (cs_seq.total_weight(), cs_par.total_weight());
         if (w_seq - w_par).abs() > 1e-6 * (1.0 + w_seq) {
             return Err(Error::msg(format!(
-                "build_par weight parity failure: {w_par} vs {w_seq}"
+                "engine coreset weight parity failure: {w_par} vs {w_seq}"
             )));
         }
         println!(
-            "build_par parity OK ({} blocks par vs {} seq, weight {w_par:.1})",
+            "engine coreset parity OK ({} blocks engine vs {} seq, weight {w_par:.1})",
             cs_par.blocks.len(),
             cs_seq.blocks.len()
         );

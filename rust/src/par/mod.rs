@@ -12,21 +12,35 @@
 //! * [`parallel_map`] — order-preserving map over a slice on a scoped
 //!   worker pool with atomic work-stealing (an idle worker always takes
 //!   the next unclaimed item, so ragged per-item costs balance out).
+//! * [`WorkerPool`] — the same map semantics on **long-lived** worker
+//!   threads: spawned once (by [`crate::engine::Engine`]) and reused for
+//!   every map, so repeated small batches — the serving workload — pay
+//!   no per-call thread spinup.
+//! * [`Exec`] — the executor seam the sharded builders are generic over:
+//!   `Exec::Spawn(threads)` (scoped threads per call, the classic
+//!   [`parallel_map`]) or `Exec::Pool(&pool)` (the engine path). Both
+//!   produce bit-identical results for the same input.
 //! * [`resolve_threads`] / [`available_threads`] — the `--threads`
 //!   convention: `0` means "all available cores".
 //!
-//! Everything is `std::thread::scope`-based — no external crates (the
-//! default build is std-only, see DESIGN.md §Substitutions) and no
-//! `'static` bounds, so workers borrow the signal directly instead of
-//! cloning it.
+//! Everything is `std::thread`-based — no external crates (the default
+//! build is std-only, see DESIGN.md §Substitutions); the scoped variant
+//! has no `'static` bounds, so workers borrow the signal directly
+//! instead of cloning it, and the pool variant erases the borrow behind
+//! a completion latch that is always waited on before `map` returns.
 //!
-//! **Determinism.** `parallel_map` returns results in input order, and
-//! the higher-level users ([`crate::coreset::SignalCoreset::build_par`],
-//! [`crate::signal::PrefixStats::new_par`]) derive their shard plans from
-//! the input alone — never from `threads` — so any thread count produces
-//! bit-identical output for the same input.
+//! **Determinism.** `parallel_map` and [`WorkerPool::map`] return
+//! results in input order, and the higher-level users
+//! ([`crate::coreset::SignalCoreset::construct_sharded`],
+//! [`crate::signal::PrefixStats::new_par`]) derive their shard plans
+//! from the input alone — never from `threads` or the executor — so any
+//! thread count and either executor produce bit-identical output for
+//! the same input.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Number of hardware threads available to this process (≥ 1).
 pub fn available_threads() -> usize {
@@ -96,6 +110,262 @@ where
     tagged.into_iter().map(|(_, r)| r).collect()
 }
 
+/// A type-erased unit of work queued on the pool. Tasks are `'static`
+/// from the queue's point of view; [`WorkerPool::map`] erases the
+/// caller's borrow and re-establishes safety by blocking on a
+/// completion latch before returning (see the safety note there).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// What a panicking worker leaves behind for the caller to re-throw.
+type PanicPayload = Box<dyn std::any::Any + Send>;
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Task>>,
+    task_ready: Condvar,
+    shutdown: AtomicBool,
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let task = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                if let Some(task) = queue.pop_front() {
+                    break Some(task);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                queue = shared.task_ready.wait(queue).unwrap();
+            }
+        };
+        match task {
+            Some(task) => task(),
+            None => return,
+        }
+    }
+}
+
+/// Long-lived worker pool with [`parallel_map`] semantics: results in
+/// input order, atomic work-stealing cursor, worker panics propagated.
+/// Unlike the scoped `parallel_map`, threads are spawned **once** (at
+/// [`WorkerPool::new`]) and parked between calls, so repeated small
+/// batches — one [`crate::engine::Engine`] serving many
+/// `fitting_loss` / build requests — pay no per-call thread spinup.
+///
+/// The calling thread always participates in the map (it drains the
+/// same work cursor the workers do), so `new(t)` spawns `t − 1` helper
+/// threads for a total concurrency of `t`, and a map never deadlocks
+/// even when every helper is busy with another caller's work.
+pub struct WorkerPool {
+    threads: usize,
+    shared: Option<Arc<PoolShared>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads` total workers (`0` = all available
+    /// cores). `threads <= 1` spawns nothing: every map degenerates to
+    /// a plain sequential loop on the caller's thread.
+    pub fn new(threads: usize) -> Self {
+        let threads = resolve_threads(threads);
+        if threads <= 1 {
+            return Self { threads, shared: None, workers: Vec::new() };
+        }
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            task_ready: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..threads - 1)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        Self { threads, shared: Some(shared), workers }
+    }
+
+    /// Total concurrency of this pool (caller + helpers; ≥ 1).
+    #[inline]
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Map `f` over `items`, returning results in input order —
+    /// bit-identical to [`parallel_map`] with any thread count (both
+    /// run the same `f` per item; only scheduling differs).
+    ///
+    /// Worker panics are re-thrown on the calling thread after every
+    /// outstanding task has finished.
+    ///
+    /// `f` must not call `map` on the **same** pool (shards/queries
+    /// never do — fan-out is single-level by construction): a nested
+    /// map's queued helpers could wait behind the very tasks waiting
+    /// on them. Distinct pools, or the scoped [`parallel_map`], nest
+    /// freely.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        struct MapState<'a, T, R, F> {
+            items: &'a [T],
+            f: &'a F,
+            cursor: AtomicUsize,
+            out: Mutex<Vec<(usize, R)>>,
+            /// Helper tasks not yet finished; the caller blocks until 0.
+            pending: AtomicUsize,
+            done_lock: Mutex<bool>,
+            done_cv: Condvar,
+            panic: Mutex<Option<PanicPayload>>,
+        }
+
+        fn drain<T, R, F: Fn(usize, &T) -> R>(state: &MapState<'_, T, R, F>) {
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = state.cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= state.items.len() {
+                        break;
+                    }
+                    local.push((i, (state.f)(i, &state.items[i])));
+                }
+                if !local.is_empty() {
+                    state.out.lock().unwrap().extend(local);
+                }
+            }));
+            if let Err(payload) = result {
+                *state.panic.lock().unwrap() = Some(payload);
+            }
+        }
+
+        let n = items.len();
+        let workers = self.threads.min(n.max(1));
+        let Some(shared) = self.shared.as_ref() else {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        };
+        if workers <= 1 || n <= 1 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+
+        let helpers = workers - 1;
+        let state = MapState {
+            items,
+            f: &f,
+            cursor: AtomicUsize::new(0),
+            out: Mutex::new(Vec::with_capacity(n)),
+            pending: AtomicUsize::new(helpers),
+            done_lock: Mutex::new(false),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        };
+
+        {
+            let state_ref = &state;
+            let mut queue = shared.queue.lock().unwrap();
+            for _ in 0..helpers {
+                let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    drain(state_ref);
+                    if state_ref.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        let mut done = state_ref.done_lock.lock().unwrap();
+                        *done = true;
+                        state_ref.done_cv.notify_all();
+                    }
+                });
+                // SAFETY: the task borrows `state` (and through it
+                // `items` / `f`), which live on this stack frame. The
+                // borrow is erased to `'static` so the task can sit on
+                // the long-lived queue, and re-established by the latch
+                // below: `map` does not return until `pending` hits 0,
+                // i.e. until every enqueued task has *finished running*
+                // (tasks that start after the cursor is exhausted finish
+                // immediately). The pool cannot shut down mid-map —
+                // `Drop` needs `&mut self` while `map` holds `&self` —
+                // and workers always drain the queue before exiting.
+                let task: Task = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Task>(task)
+                };
+                queue.push_back(task);
+            }
+            drop(queue);
+            shared.task_ready.notify_all();
+        }
+
+        // The caller works the same cursor, then waits for the helpers.
+        drain(&state);
+        let mut done = state.done_lock.lock().unwrap();
+        while !*done {
+            done = state.done_cv.wait(done).unwrap();
+        }
+        drop(done);
+
+        if let Some(payload) = state.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+        let mut tagged = state.out.into_inner().unwrap();
+        tagged.sort_unstable_by_key(|&(i, _)| i);
+        tagged.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if let Some(shared) = &self.shared {
+            // The store + notify must happen under the queue lock:
+            // otherwise they can interleave inside a worker's
+            // checked-empty-queue → not-yet-waiting window (the worker
+            // loaded `shutdown == false` while holding the lock, the
+            // notify lands before it enters `wait`, and the join below
+            // hangs forever on a worker nobody will ever wake again).
+            let guard = shared.queue.lock().unwrap();
+            shared.shutdown.store(true, Ordering::Release);
+            shared.task_ready.notify_all();
+            drop(guard);
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// The executor seam: how a sharded builder should fan its shards out.
+/// Both variants run the identical per-item function in input order, so
+/// the produced values are bit-identical; only thread lifecycle differs.
+#[derive(Clone, Copy)]
+pub enum Exec<'p> {
+    /// Spawn scoped threads for this call (the classic [`parallel_map`];
+    /// `0` = all available cores).
+    Spawn(usize),
+    /// Reuse a long-lived [`WorkerPool`] (the
+    /// [`crate::engine::Engine`] path — no per-call spinup).
+    Pool(&'p WorkerPool),
+}
+
+impl Exec<'_> {
+    /// The resolved concurrency this executor maps with (≥ 1).
+    pub fn threads(&self) -> usize {
+        match self {
+            Exec::Spawn(t) => resolve_threads(*t),
+            Exec::Pool(pool) => pool.threads(),
+        }
+    }
+
+    /// Order-preserving map with this executor's threads.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        match self {
+            Exec::Spawn(t) => parallel_map(items, *t, f),
+            Exec::Pool(pool) => pool.map(items, f),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +399,57 @@ mod tests {
         let empty: Vec<u32> = Vec::new();
         assert!(parallel_map(&empty, 4, |_, &x| x).is_empty());
         assert_eq!(parallel_map(&[7u32], 4, |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn worker_pool_matches_parallel_map() {
+        let items: Vec<usize> = (0..257).collect();
+        let expect: Vec<usize> = items.iter().map(|&x| x * x + 1).collect();
+        for threads in [0, 1, 2, 3, 4, 8] {
+            let pool = WorkerPool::new(threads);
+            assert!(pool.threads() >= 1);
+            // Reuse across calls is the whole point: map repeatedly.
+            for _ in 0..3 {
+                let got = pool.map(&items, |_, &x| x * x + 1);
+                assert_eq!(got, expect, "threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_pool_handles_small_inputs() {
+        let pool = WorkerPool::new(4);
+        let empty: Vec<u32> = Vec::new();
+        assert!(pool.map(&empty, |_, &x| x).is_empty());
+        assert_eq!(pool.map(&[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn worker_pool_propagates_panics_and_survives_them() {
+        let pool = WorkerPool::new(4);
+        let items: Vec<usize> = (0..64).collect();
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map(&items, |_, &x| {
+                assert!(x != 40, "boom at {x}");
+                x
+            })
+        }));
+        assert!(result.is_err());
+        // The pool is still usable after a panicking map.
+        let got = pool.map(&items, |_, &x| x + 1);
+        assert_eq!(got, (1..=64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn exec_variants_agree() {
+        let items: Vec<usize> = (0..100).collect();
+        let pool = WorkerPool::new(3);
+        let spawned = Exec::Spawn(3).map(&items, |i, &x| i * 1000 + x);
+        let pooled = Exec::Pool(&pool).map(&items, |i, &x| i * 1000 + x);
+        assert_eq!(spawned, pooled);
+        assert_eq!(Exec::Spawn(3).threads(), 3);
+        assert_eq!(Exec::Pool(&pool).threads(), 3);
+        assert!(Exec::Spawn(0).threads() >= 1);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //!
 //! * [`run`] — the in-memory path: the signal already exists, so one
 //!   shared [`PrefixStats`] is built up front and each window job is just
-//!   a `Rect`; workers run [`SignalCoreset::build_in`] against the shared
+//!   a `Rect`; workers run [`SignalCoreset::construct_in`] against the shared
 //!   statistics — **zero per-window copies or integral-image rebuilds**.
 //! * [`run_streaming`] — true streaming: bands arrive as owned
 //!   [`Signal`]s from a source that may never hold the full signal, so
@@ -108,8 +108,21 @@ pub fn run<S: SignalSource>(
     signal: &S,
     config: PipelineConfig,
 ) -> (SignalCoreset, PipelineMetrics) {
-    let m = signal.cols();
     let stats = PrefixStats::new_par(signal, config.workers);
+    run_with_stats(signal, &stats, config)
+}
+
+/// [`run`] against a caller-owned shared [`PrefixStats`] — the
+/// [`crate::engine::Engine::pipeline`] path, where the engine builds
+/// the statistics on its long-lived pool and the banded workers here
+/// only answer queries from it. `stats` must cover `signal`'s
+/// coordinate frame.
+pub fn run_with_stats<S: SignalSource>(
+    signal: &S,
+    stats: &PrefixStats,
+    config: PipelineConfig,
+) -> (SignalCoreset, PipelineMetrics) {
+    let m = signal.cols();
     let bands = band_rects(signal.rows(), m, config.band_rows);
     let metrics = Arc::new(PipelineMetrics::default());
     let (job_tx, job_rx) = sync_channel::<(usize, Rect)>(config.queue_capacity);
@@ -133,7 +146,7 @@ pub fn run<S: SignalSource>(
                 };
                 let Ok((seq, rect)) = job else { break };
                 let t0 = Instant::now();
-                let cs = SignalCoreset::build_in(signal, stats, rect, ccfg);
+                let cs = SignalCoreset::construct_in(signal, stats, rect, ccfg);
                 met.record_build(t0.elapsed(), rect.area());
                 if tx.send(BandResult { seq, coreset: cs }).is_err() {
                     break;
@@ -206,7 +219,7 @@ pub fn run_streaming(
                 };
                 let Ok(job) = job else { break };
                 let t0 = Instant::now();
-                let cs = SignalCoreset::build_with(&job.band, ccfg);
+                let cs = SignalCoreset::construct_with(&job.band, ccfg);
                 let cs = offset_rows(cs, job.row_offset);
                 met.record_build(t0.elapsed(), job.band.len());
                 if tx.send(BandResult { seq: job.seq, coreset: cs }).is_err() {
@@ -349,7 +362,7 @@ mod tests {
             .with_band_rows(1000)
             .with_workers(1);
         let (cs, _) = run(&sig, cfg);
-        let batch = SignalCoreset::build(&sig, 4, 0.3);
+        let batch = SignalCoreset::construct(&sig, 4, 0.3);
         assert_eq!(cs.blocks.len(), batch.blocks.len());
         assert!((cs.total_weight() - batch.total_weight()).abs() < 1e-9);
     }

@@ -207,8 +207,19 @@ impl PrefixStats {
     /// cores; single-band signals fall back to the sequential path
     /// (a shape-only decision, so still thread-invariant).
     pub fn new_par<S: SignalSource>(signal: &S, threads: usize) -> Self {
+        Self::new_par_exec(signal, crate::par::Exec::Spawn(threads))
+    }
+
+    /// [`Self::new_par`] on an explicit executor
+    /// ([`crate::par::Exec`]): `Exec::Spawn(t)` reproduces `new_par`'s
+    /// scoped-thread path, `Exec::Pool(&pool)` runs the band fills on a
+    /// long-lived [`crate::par::WorkerPool`] — the
+    /// [`crate::engine::Engine`] path, no per-call thread spinup. The
+    /// band plan and every per-band float are executor-independent, so
+    /// all variants are bit-identical.
+    pub fn new_par_exec<S: SignalSource>(signal: &S, exec: crate::par::Exec<'_>) -> Self {
         const BAND_ROWS: usize = 64;
-        let threads = crate::par::resolve_threads(threads);
+        let threads = exec.threads();
         let n = signal.rows();
         let m = signal.cols();
         let bands = n.div_ceil(BAND_ROWS);
@@ -247,6 +258,19 @@ impl PrefixStats {
                 for ((r0, r1), (c, s, q)) in jobs {
                     fill_band_local(signal, r0, r1, c, s, q);
                 }
+            } else if let crate::par::Exec::Pool(pool) = exec {
+                // Long-lived pool path: each band job is claimed exactly
+                // once through a `Mutex<Option<_>>` slot (the order-
+                // preserving map wants `Fn`, the job owns `&mut`
+                // slices). Bands write disjoint rows, so scheduling
+                // cannot change a single float.
+                let slots: Vec<std::sync::Mutex<Option<BandJob<'_>>>> =
+                    jobs.into_iter().map(|j| std::sync::Mutex::new(Some(j))).collect();
+                pool.map(&slots, |_, slot| {
+                    let ((r0, r1), (c, s, q)) =
+                        slot.lock().unwrap().take().expect("band claimed once");
+                    fill_band_local(signal, r0, r1, c, s, q);
+                });
             } else {
                 // Static round-robin assignment: bands have near-equal
                 // cost by construction, and &mut slices cannot go through
@@ -551,6 +575,22 @@ mod tests {
             assert_eq!(par.count, reference.count, "threads {threads}");
             assert_eq!(par.sum, reference.sum, "threads {threads}");
             assert_eq!(par.sum_sq, reference.sum_sq, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn pool_executor_is_bit_identical_to_spawn() {
+        // The engine's long-lived pool runs the same band fills as the
+        // scoped-thread path; the integral arrays must match bitwise.
+        let mut sig = Signal::from_fn(200, 23, |r, c| ((r * 31 + c * 7) % 13) as f64 - 6.0);
+        sig.mask_rect(Rect::new(70, 80, 2, 9));
+        let reference = PrefixStats::new_par(&sig, 1);
+        for threads in [1, 2, 3, 4] {
+            let pool = crate::par::WorkerPool::new(threads);
+            let pooled = PrefixStats::new_par_exec(&sig, crate::par::Exec::Pool(&pool));
+            assert_eq!(pooled.count, reference.count, "pool threads {threads}");
+            assert_eq!(pooled.sum, reference.sum, "pool threads {threads}");
+            assert_eq!(pooled.sum_sq, reference.sum_sq, "pool threads {threads}");
         }
     }
 

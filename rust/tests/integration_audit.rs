@@ -217,7 +217,7 @@ fn dp_optimal_trees_are_within_eps_of_exact() {
         let eps = 0.5;
         let (sig, _) = generate::piecewise_constant(14, 14, k, 0.1, rng);
         let stats = PrefixStats::new(&sig);
-        let cs = sigtree::coreset::SignalCoreset::build(&sig, k, eps);
+        let cs = sigtree::coreset::SignalCoreset::construct(&sig, k, eps);
         let mut dp = TreeDP::new(&stats);
         let s_d = dp.solve(sig.bounds(), k);
         let exact = s_d.loss(&stats);

@@ -183,7 +183,7 @@ fn prelude_surface_smoke() {
     let mut rng = Rng::new(208);
     let signal = Signal::from_fn(40, 30, |r, c| ((r * 3 + c) % 5) as f64);
     let stats = PrefixStats::new(&signal);
-    let coreset = SignalCoreset::build(&signal, 4, 0.3);
+    let coreset = SignalCoreset::construct(&signal, 4, 0.3);
     assert!(coreset.stored_points() > 0);
     let forest = RandomForest::fit(
         &coreset

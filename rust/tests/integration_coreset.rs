@@ -29,7 +29,7 @@ fn prop_coreset_blocks_tile_signal() {
         96,
         |rng, size| random_signal(rng, size),
         |sig| {
-            let cs = SignalCoreset::build(sig, 8, 0.3);
+            let cs = SignalCoreset::construct(sig, 8, 0.3);
             let rects: Vec<_> = cs.blocks.iter().map(|b| b.rect).collect();
             if !is_exact_tiling(&rects, sig.bounds()) {
                 return Err(format!("{} blocks do not tile the signal", rects.len()));
@@ -59,7 +59,7 @@ fn prop_total_weight_equals_present_cells() {
             sig
         },
         |sig| {
-            let cs = SignalCoreset::build(sig, 6, 0.3);
+            let cs = SignalCoreset::construct(sig, 6, 0.3);
             let w = cs.total_weight();
             let p = sig.present() as f64;
             if (w - p).abs() > 1e-6 * (1.0 + p) {
@@ -76,7 +76,7 @@ fn prop_constant_queries_are_exact() {
         let size = 8 + rng.usize(60);
         let sig = random_signal(rng, size);
         let stats = PrefixStats::new(&sig);
-        let cs = SignalCoreset::build(&sig, 4, 0.3);
+        let cs = SignalCoreset::construct(&sig, 4, 0.3);
         let v = rng.uniform(-5.0, 5.0);
         let s = sigtree::segmentation::KSegmentation::constant(sig.bounds(), v);
         let exact = s.loss(&stats);
@@ -97,7 +97,7 @@ fn prop_eps_bound_on_fitted_queries() {
         let stats = PrefixStats::new(&sig);
         let k = 4 + rng.usize(12);
         let eps = 0.25;
-        let cs = SignalCoreset::build(&sig, k, eps);
+        let cs = SignalCoreset::construct(&sig, k, eps);
         for _ in 0..10 {
             let mut s = random_segmentation(sig.bounds(), k, rng);
             s.refit_values(&stats);
@@ -116,7 +116,7 @@ fn prop_eps_bound_on_fitted_queries() {
 fn prop_uniform_sample_same_interface() {
     sigtree::proptest::check("uniform-interface", 6, |rng| {
         let sig = random_signal(rng, 40);
-        let cs = SignalCoreset::build(&sig, 4, 0.4);
+        let cs = SignalCoreset::construct(&sig, 4, 0.4);
         let us = sigtree::coreset::uniform::UniformSample::build(&sig, cs.size(), rng);
         let s = random_segmentation(sig.bounds(), 4, rng);
         let a = cs.fitting_loss(&s);
@@ -147,7 +147,7 @@ fn prop_thin_stripe_isolated_for_any_position() {
             sig.set(hot, c, 40.0);
         }
         let stats = PrefixStats::new(&sig);
-        let cs = SignalCoreset::build(&sig, 8, 0.2);
+        let cs = SignalCoreset::construct(&sig, 8, 0.2);
         let mut pieces = vec![(sigtree::signal::Rect::new(hot, hot, 0, n - 1), 40.0)];
         if hot > 0 {
             pieces.push((sigtree::signal::Rect::new(0, hot - 1, 0, n - 1), 0.0));
@@ -177,7 +177,7 @@ fn coreset_beats_uniform_on_adversarial_thin_stripe() {
         sig.set(60, c, 40.0); // one hot row
     }
     let stats = PrefixStats::new(&sig);
-    let cs = SignalCoreset::build(&sig, 8, 0.2);
+    let cs = SignalCoreset::construct(&sig, 8, 0.2);
     let us = sigtree::coreset::uniform::UniformSample::build(&sig, cs.size(), &mut rng);
     // Query that isolates the stripe.
     let s = sigtree::segmentation::KSegmentation::new(vec![
@@ -198,8 +198,8 @@ fn coreset_beats_uniform_on_adversarial_thin_stripe() {
 fn theory_config_is_finer_than_practical() {
     let mut rng = Rng::new(17);
     let sig = generate::smooth(48, 48, 3, &mut rng);
-    let practical = SignalCoreset::build(&sig, 4, 0.3);
-    let theory = SignalCoreset::build_with(
+    let practical = SignalCoreset::construct(&sig, 4, 0.3);
+    let theory = SignalCoreset::construct_with(
         &sig,
         sigtree::coreset::CoresetConfig::new(4, 0.3).theory(2.0),
     );

@@ -1,0 +1,197 @@
+//! Integration suite for `sigtree::engine` — the one front door.
+//!
+//! Pins the three contracts the API redesign rests on:
+//!
+//! 1. **Engine ≡ legacy, bitwise.** `Engine::coreset` (long-lived pool)
+//!    and the deprecated `SignalCoreset::build_par` shim (scoped
+//!    threads) produce the identical coreset on aligned / ragged /
+//!    masked signals at every thread count — so migrating to the engine
+//!    can never change a result.
+//! 2. **Config round-trips.** `EngineConfig → JSON → EngineConfig` is
+//!    lossless, and an engine built from the round-tripped config
+//!    produces the identical coreset.
+//! 3. **One validator.** Invalid knobs (ε ∉ (0,1), k = 0,
+//!    band_rows = 0, …) are rejected by `Engine::new` with an error,
+//!    never a panic — from struct, JSON, and CLI alike.
+
+use sigtree::coreset::{Coreset, CoresetConfig, SignalCoreset};
+use sigtree::engine::{BackendChoice, Engine, EngineConfig};
+use sigtree::prelude::*;
+use sigtree::segmentation::random_segmentation;
+use sigtree::signal::generate;
+
+fn assert_same_coreset(a: &SignalCoreset, b: &SignalCoreset, label: &str) {
+    assert_eq!(a.blocks.len(), b.blocks.len(), "{label}: block count");
+    for (x, y) in a.blocks.iter().zip(&b.blocks) {
+        assert_eq!(x.rect, y.rect, "{label}: rect");
+        assert_eq!(x.labels, y.labels, "{label}: labels");
+        assert_eq!(x.weights, y.weights, "{label}: weights");
+    }
+    assert_eq!(a.rows(), b.rows(), "{label}: rows");
+    assert_eq!(a.cols(), b.cols(), "{label}: cols");
+}
+
+/// The differential corpus: shard-aligned height, ragged height (not a
+/// multiple of 64), and a masked signal.
+fn corpus() -> Vec<(&'static str, Signal)> {
+    let mut rng = Rng::new(90);
+    let aligned = generate::smooth(192, 40, 3, &mut rng);
+    let ragged = generate::image_like(200, 33, 2, &mut rng);
+    let mut masked = generate::smooth(256, 48, 3, &mut rng);
+    masked.mask_rect(Rect::new(30, 170, 5, 30));
+    masked.mask_rect(Rect::new(200, 255, 0, 10));
+    vec![("aligned", aligned), ("ragged", ragged), ("masked", masked)]
+}
+
+#[test]
+fn engine_matches_legacy_build_par_bitwise_at_every_thread_count() {
+    for (label, sig) in corpus() {
+        #[allow(deprecated)]
+        let legacy = SignalCoreset::build_par(&sig, CoresetConfig::new(4, 0.3), 1);
+        for threads in [1, 2, 4, 8] {
+            let engine = Engine::new(EngineConfig::new(4, 0.3).with_threads(threads)).unwrap();
+            let via_engine = engine.coreset(&sig);
+            assert_same_coreset(&via_engine, &legacy, &format!("{label} (threads {threads})"));
+            // The legacy shim itself stays thread-invariant too.
+            #[allow(deprecated)]
+            let legacy_t = SignalCoreset::build_par(&sig, CoresetConfig::new(4, 0.3), threads);
+            assert_same_coreset(&legacy_t, &legacy, &format!("{label} legacy t{threads}"));
+        }
+    }
+}
+
+#[test]
+fn all_five_deprecated_shims_delegate_identically() {
+    let mut rng = Rng::new(91);
+    let sig = generate::smooth(150, 36, 3, &mut rng);
+    let config = CoresetConfig::new(5, 0.3);
+    let stats = PrefixStats::new(&sig);
+
+    #[allow(deprecated)]
+    let shims = [
+        SignalCoreset::build(&sig, 5, 0.3),
+        SignalCoreset::build_with(&sig, config),
+        SignalCoreset::build_with_stats(&sig, &stats, config),
+        SignalCoreset::build_in(&sig, &stats, sig.bounds(), config),
+        SignalCoreset::build_par(&sig, config, 2),
+    ];
+    let replacements = [
+        SignalCoreset::construct(&sig, 5, 0.3),
+        SignalCoreset::construct_with(&sig, config),
+        SignalCoreset::construct_with_stats(&sig, &stats, config),
+        SignalCoreset::construct_in(&sig, &stats, sig.bounds(), config),
+        SignalCoreset::construct_sharded(&sig, config, 2),
+    ];
+    for (i, (shim, new)) in shims.iter().zip(&replacements).enumerate() {
+        assert_same_coreset(shim, new, &format!("shim #{i}"));
+    }
+}
+
+#[test]
+fn config_json_round_trip_builds_identical_coreset() {
+    let mut rng = Rng::new(92);
+    let sig = generate::smooth(192, 40, 3, &mut rng);
+    let config = EngineConfig::new(4, 0.3).with_threads(2).with_seed(0xdead_beef);
+    let rendered = config.to_json().render();
+    let parsed = EngineConfig::from_json_str(&rendered).unwrap();
+    assert_eq!(parsed, config, "EngineConfig -> JSON -> EngineConfig is lossless");
+
+    let a = Engine::new(config).unwrap().coreset(&sig);
+    let b = Engine::new(parsed).unwrap().coreset(&sig);
+    assert_same_coreset(&a, &b, "round-tripped config");
+}
+
+#[test]
+fn invalid_configs_are_rejected_not_panicked() {
+    let bad = [
+        EngineConfig::new(0, 0.4),                    // k = 0
+        EngineConfig::new(5, 0.0),                    // eps = 0
+        EngineConfig::new(5, 1.0),                    // eps = 1
+        EngineConfig::new(5, -0.1),                   // eps < 0
+        EngineConfig::new(5, 1.7),                    // eps > 1
+        EngineConfig::new(5, 0.4).with_band_rows(0),  // band_rows = 0
+        EngineConfig::new(5, 0.4).with_shard_rows(0), // shard_rows = 0
+        EngineConfig::new(5, 0.4).with_beta(-1.0),    // beta <= 0
+    ];
+    for config in bad {
+        let label = format!("{config:?}");
+        assert!(Engine::new(config).is_err(), "accepted invalid {label}");
+    }
+    // The same validator guards the JSON path.
+    assert!(EngineConfig::from_json_str("{\"k\": 0, \"eps\": 0.4}").is_err());
+    assert!(EngineConfig::from_json_str("{\"k\": 4, \"eps\": 1.5}").is_err());
+    assert!(EngineConfig::from_json_str("{\"k\": 4, \"eps\": 0.4, \"band_rows\": 0}").is_err());
+    // Backend validation fails fast at Engine::new (not deep in a run).
+    #[cfg(not(feature = "pjrt"))]
+    assert!(Engine::new(EngineConfig::new(4, 0.4).with_backend(BackendChoice::Pjrt)).is_err());
+    #[cfg(feature = "pjrt")]
+    let _ = BackendChoice::Pjrt; // keeps the import used under --features pjrt
+}
+
+/// Regression for the threads-default inconsistency: `0` now means
+/// "auto" on every path — the raw batch API, the engine, and per-query
+/// sequential evaluation all agree exactly.
+#[test]
+fn fitting_loss_threads_zero_means_auto_everywhere() {
+    let mut rng = Rng::new(93);
+    let sig = generate::smooth(96, 48, 3, &mut rng);
+    let stats = PrefixStats::new(&sig);
+    let cs = SignalCoreset::construct(&sig, 6, 0.3);
+    let queries: Vec<KSegmentation> = (0..30)
+        .map(|_| {
+            let mut s = random_segmentation(sig.bounds(), 6, &mut rng);
+            s.refit_values(&stats);
+            s
+        })
+        .collect();
+    let sequential: Vec<f64> = queries.iter().map(|s| cs.fitting_loss(s)).collect();
+    for threads in [0, 1, 2, 4, 8] {
+        assert_eq!(
+            cs.fitting_loss_batch(&queries, threads),
+            sequential,
+            "batch API, threads {threads}"
+        );
+        let engine = Engine::new(EngineConfig::new(6, 0.3).with_threads(threads)).unwrap();
+        assert!(engine.threads() >= 1, "0 resolves to >= 1");
+        assert_eq!(
+            engine.fitting_loss(&cs, &queries),
+            sequential,
+            "engine pool, threads {threads}"
+        );
+    }
+}
+
+#[test]
+fn engine_audit_report_is_thread_invariant() {
+    let report1 = Engine::new(EngineConfig::new(3, 0.5).with_threads(1).with_seed(11))
+        .unwrap()
+        .audit(4, 3);
+    let report3 = Engine::new(EngineConfig::new(3, 0.5).with_threads(3).with_seed(11))
+        .unwrap()
+        .audit(4, 3);
+    assert!(report1.pass, "\n{}", report1.summary());
+    assert_eq!(report1.to_json().render(), report3.to_json().render());
+}
+
+#[test]
+fn engine_region_build_matches_low_level_construct_in() {
+    let mut rng = Rng::new(94);
+    let sig = generate::smooth(128, 40, 3, &mut rng);
+    let engine = Engine::new(EngineConfig::new(4, 0.3).with_threads(2)).unwrap();
+    let session = engine.session(&sig);
+    let region = Rect::new(32, 95, 0, 39);
+    let via_session = session.coreset_region(region);
+    let direct = SignalCoreset::construct_in(
+        &sig,
+        session.stats(),
+        region,
+        CoresetConfig::new(4, 0.3),
+    );
+    assert_same_coreset(&via_session, &direct, "region");
+    // Blocks stay in the signal's coordinate frame.
+    for b in &via_session.blocks {
+        assert!(b.rect.r0 >= 32 && b.rect.r1 <= 95);
+    }
+    // And engine.coreset_region (one-shot) agrees with the session path.
+    assert_same_coreset(&engine.coreset_region(&sig, region), &via_session, "one-shot region");
+}

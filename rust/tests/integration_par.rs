@@ -30,13 +30,13 @@ fn aggregate_moments(cs: &SignalCoreset) -> (f64, f64, f64) {
 fn assert_par_matches_sequential(sig: &Signal, k: usize, eps: f64, loss_tol: f64, seed: u64) {
     let config = CoresetConfig::new(k, eps);
     let stats = PrefixStats::new(sig);
-    let seq = SignalCoreset::build_with(sig, config);
-    let reference = SignalCoreset::build_par(sig, config, 1);
+    let seq = SignalCoreset::construct_with(sig, config);
+    let reference = SignalCoreset::construct_sharded(sig, config, 1);
 
     // Thread-count invariance: bit-identical blocks for every count
     // (the shared PrefixStats and the shard plan are shape-only).
     for threads in [2, 3, 4, 8] {
-        let par = SignalCoreset::build_par(sig, config, threads);
+        let par = SignalCoreset::construct_sharded(sig, config, threads);
         assert_eq!(
             par.blocks.len(),
             reference.blocks.len(),
@@ -111,9 +111,9 @@ fn build_par_masked_signal() {
     sig.mask_rect(Rect::new(10, 20, 5, 15));
     let present = sig.present() as f64;
     let config = CoresetConfig::new(4, 0.3);
-    let reference = SignalCoreset::build_par(&sig, config, 1);
+    let reference = SignalCoreset::construct_sharded(&sig, config, 1);
     for threads in 2..=4 {
-        let par = SignalCoreset::build_par(&sig, config, threads);
+        let par = SignalCoreset::construct_sharded(&sig, config, threads);
         assert_eq!(par.blocks.len(), reference.blocks.len());
         for (a, b) in par.blocks.iter().zip(&reference.blocks) {
             assert_eq!(a.rect, b.rect);
@@ -138,7 +138,7 @@ fn batch_fitting_loss_matches_sequential_for_any_thread_count() {
     let mut rng = Rng::new(303);
     let sig = generate::smooth(128, 64, 3, &mut rng);
     let stats = PrefixStats::new(&sig);
-    let cs = SignalCoreset::build(&sig, 6, 0.25);
+    let cs = SignalCoreset::construct(&sig, 6, 0.25);
     let queries: Vec<_> = (0..17)
         .map(|_| {
             let mut s = random_segmentation(sig.bounds(), 6, &mut rng);
@@ -216,8 +216,8 @@ fn parallel_prefix_stats_agree_on_coreset_path() {
     let config = CoresetConfig::new(4, 0.3);
     let seq_stats = PrefixStats::new(&sig);
     let par_stats = PrefixStats::new_par(&sig, 4);
-    let a = SignalCoreset::build_with_stats(&sig, &seq_stats, config);
-    let b = SignalCoreset::build_with_stats(&sig, &par_stats, config);
+    let a = SignalCoreset::construct_with_stats(&sig, &seq_stats, config);
+    let b = SignalCoreset::construct_with_stats(&sig, &par_stats, config);
     let scale = 1.0 + a.total_weight();
     assert!((a.total_weight() - b.total_weight()).abs() < 1e-9 * scale);
     assert!((a.opt1() - b.opt1()).abs() <= 1e-6 * (1.0 + a.opt1()));

@@ -38,7 +38,7 @@ fn pipeline_and_batch_agree_on_losses() {
     let stats = PrefixStats::new(&sig);
     let cfg = PipelineConfig::new(CoresetConfig::new(8, 0.25)).with_band_rows(64);
     let (pipe, _) = run(&sig, cfg);
-    let batch = SignalCoreset::build(&sig, 8, 0.25);
+    let batch = SignalCoreset::construct(&sig, 8, 0.25);
     for _ in 0..20 {
         let mut s = random_segmentation(sig.bounds(), 8, &mut rng);
         s.refit_values(&stats);

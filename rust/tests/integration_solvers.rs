@@ -19,7 +19,7 @@ fn tree_on_coreset_close_to_tree_on_full() {
     let mut rng = Rng::new(31);
     let (sig, _) = generate::piecewise_constant(96, 96, 8, 0.2, &mut rng);
     let full_samples = datasets::signal_to_samples(&sig);
-    let cs = SignalCoreset::build(&sig, 16, 0.25);
+    let cs = SignalCoreset::construct(&sig, 16, 0.25);
     let cs_samples: Vec<Sample> = cs.weighted_points().iter().map(Sample::from_point).collect();
     assert!(
         cs_samples.len() * 3 < full_samples.len(),
@@ -52,7 +52,7 @@ fn exact_dp_on_coreset_approximates_optimum() {
     let opt = TreeDP::new(&stats).opt(sig.bounds(), k);
     // Coreset route: evaluate the greedy candidates through the coreset
     // and pick the best (a solver that never touches the full data).
-    let cs = SignalCoreset::build(&sig, k, 0.2);
+    let cs = SignalCoreset::construct(&sig, k, 0.2);
     let candidates: Vec<_> = (2..=8)
         .map(|kk| greedy_tree(&stats, kk))
         .collect();
@@ -78,7 +78,7 @@ fn forest_and_gbdt_on_coreset_generalize() {
     let sig = datasets::air_quality_like(0.05, &mut rng);
     let (masked, held) = datasets::holdout_patches(&sig, 0.3, 5, &mut rng);
     let full_samples = datasets::signal_to_samples(&masked);
-    let cs = SignalCoreset::build(&masked, 300, 0.3);
+    let cs = SignalCoreset::construct(&masked, 300, 0.3);
     let cs_samples: Vec<Sample> = cs.weighted_points().iter().map(Sample::from_point).collect();
 
     let fp = ForestParams::default().with_trees(8).with_max_leaves(64);
@@ -117,7 +117,7 @@ fn rasterized_blobs_coreset_and_tree() {
     let mut rng = Rng::new(43);
     let pts = datasets::blobs(0.1, &mut rng);
     let sig = datasets::rasterize(&pts, 64, 64);
-    let cs = SignalCoreset::build(&sig, 32, 0.3);
+    let cs = SignalCoreset::construct(&sig, 32, 0.3);
     assert!(cs.stored_points() > 0);
     assert!((cs.total_weight() - sig.present() as f64).abs() < 1e-6 * sig.present() as f64);
     let samples: Vec<Sample> = cs.weighted_points().iter().map(Sample::from_point).collect();

@@ -26,8 +26,8 @@ fn assert_bit_identical(a: &SignalCoreset, b: &SignalCoreset, ctx: &str) {
 
 /// Build over a view vs over the equivalent crop: bit-identical.
 fn assert_view_crop_identical(sig: &Signal, window: Rect, k: usize, eps: f64, ctx: &str) {
-    let from_view = SignalCoreset::build(&sig.view(window), k, eps);
-    let from_crop = SignalCoreset::build(&sig.crop(window), k, eps);
+    let from_view = SignalCoreset::construct(&sig.view(window), k, eps);
+    let from_crop = SignalCoreset::construct(&sig.crop(window), k, eps);
     assert_bit_identical(&from_view, &from_crop, ctx);
     assert_eq!(from_view.rows(), window.height(), "{ctx}");
     assert_eq!(from_view.cols(), window.width(), "{ctx}");
@@ -67,10 +67,10 @@ fn build_par_over_view_vs_crop_at_many_thread_counts() {
     let window = Rect::new(10, 279, 0, 35); // 270 rows → 4 shards
     let config = CoresetConfig::new(4, 0.3);
     let crop = sig.crop(window);
-    let reference = SignalCoreset::build_par(&crop, config, 1);
+    let reference = SignalCoreset::construct_sharded(&crop, config, 1);
     for threads in [1, 2, 4, 8] {
-        let from_view = SignalCoreset::build_par(&sig.view(window), config, threads);
-        let from_crop = SignalCoreset::build_par(&crop, config, threads);
+        let from_view = SignalCoreset::construct_sharded(&sig.view(window), config, threads);
+        let from_crop = SignalCoreset::construct_sharded(&crop, config, threads);
         assert_bit_identical(&from_view, &from_crop, &format!("threads {threads}"));
         assert_bit_identical(&from_view, &reference, &format!("threads {threads} vs 1T"));
     }
@@ -86,7 +86,7 @@ fn shared_stats_shard_build_covers_its_region() {
     let stats = PrefixStats::new(&sig);
     let config = CoresetConfig::new(4, 0.3);
     let band = Rect::new(64, 159, 0, 31);
-    let part = SignalCoreset::build_in(&sig, &stats, band, config);
+    let part = SignalCoreset::construct_in(&sig, &stats, band, config);
     assert_eq!(part.rows(), band.height());
     assert_eq!(part.cols(), band.width());
     let mut present = 0.0;
@@ -104,8 +104,8 @@ fn shared_stats_shard_build_covers_its_region() {
         assert!(band.contains_rect(&b.rect), "block {:?} outside band", b.rect);
     }
     // Full-bounds build_in degenerates to the monolithic build exactly.
-    let whole = SignalCoreset::build_in(&sig, &stats, sig.bounds(), config);
-    let mono = SignalCoreset::build_with_stats(&sig, &stats, config);
+    let whole = SignalCoreset::construct_in(&sig, &stats, sig.bounds(), config);
+    let mono = SignalCoreset::construct_with_stats(&sig, &stats, config);
     assert_bit_identical(&whole, &mono, "full-bounds build_in");
 }
 
@@ -140,7 +140,7 @@ fn shared_stats_build_par_quality_matches_monolithic() {
     let sig = generate::smooth(320, 64, 4, &mut rng);
     let stats = PrefixStats::new(&sig);
     let config = CoresetConfig::new(6, 0.25);
-    let cs = SignalCoreset::build_par(&sig, config, 0);
+    let cs = SignalCoreset::construct_sharded(&sig, config, 0);
     let cells = (320 * 64) as f64;
     assert!((cs.total_weight() - cells).abs() <= 1e-6 * cells);
     for _ in 0..15 {
@@ -177,8 +177,8 @@ fn masked_audit_case_family_over_views() {
     let crop = sig.crop(window);
     let stats_view = PrefixStats::new(&view);
     let stats_crop = PrefixStats::new(&crop);
-    let cs_view = SignalCoreset::build(&view, k, eps);
-    let cs_crop = SignalCoreset::build(&crop, k, eps);
+    let cs_view = SignalCoreset::construct(&view, k, eps);
+    let cs_crop = SignalCoreset::construct(&crop, k, eps);
     assert_bit_identical(&cs_view, &cs_crop, "masked audit coreset");
 
     // One query sweep, evaluated against both builds: identical losses
@@ -227,7 +227,7 @@ fn nested_views_build_like_their_flat_equivalent() {
     let outer = sig.view(Rect::new(10, 129, 2, 27));
     let inner = outer.view(Rect::new(5, 104, 1, 24));
     let flat = sig.view(Rect::new(15, 114, 3, 26));
-    let a = SignalCoreset::build(&inner, 4, 0.3);
-    let b = SignalCoreset::build(&flat, 4, 0.3);
+    let a = SignalCoreset::construct(&inner, 4, 0.3);
+    let b = SignalCoreset::construct(&flat, 4, 0.3);
     assert_bit_identical(&a, &b, "nested vs flat view");
 }

@@ -13,11 +13,19 @@ cargo build --release
 cargo test -q
 cargo build --examples
 
+# Docs gate: deprecation notes and intra-doc links (the engine migration
+# leans on both) must stay valid.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
 # The PJRT path must stay compile-clean against the bundled stub.
 cargo check --features pjrt
 
-# Multi-thread smoke: exercises the sigtree::par code paths (sharded
-# build, parallel prefix stats) plus the kernel parity checks.
+# Engine-path smoke: the rewired CLI front door (one Engine per
+# subcommand, unknown flags rejected, sharded build on the pool).
+cargo run --release -- coreset --k 5 --eps 0.4 --threads 2
+
+# Multi-thread smoke: exercises the engine pool paths (sharded build,
+# pool-built prefix stats) plus the kernel parity checks.
 cargo run --release -- runtime --backend native --threads 2
 
 # Empirical ε-guarantee audit (fixed seed): adversarial query families +
