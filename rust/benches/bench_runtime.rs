@@ -330,6 +330,50 @@ fn main() {
         "allocation counts on the build path (8 shards; shared-stats cost subtracted)",
     );
 
+    // ---- incremental update vs full rebuild ------------------------------
+    // The merge-tree payoff: one 64×64-tile edit on the 512×512
+    // acceptance case through a long-lived EditSession (dirty leaf
+    // rebuilt + O(log S) ancestor re-merge + stats refresh) vs a full
+    // from-scratch sharded build of the same signal.
+    let full_timing = bench(1, 4, Duration::from_secs(6), || {
+        SignalCoreset::construct_sharded(&sig512, config, reuse_threads)
+    });
+    let mut session = engine.edit_session(sig512.clone());
+    let tile = Rect::new(192, 255, 192, 255); // one shard-interior 64×64 tile
+    let update_timing = bench(1, 8, Duration::from_secs(6), || {
+        session.edit(tile, |_, _, v| v + 1e-3);
+        session.coreset()
+    });
+    let (full_s, upd_s) = (full_timing.median.as_secs_f64(), update_timing.median.as_secs_f64());
+    let mut inc_table = Table::new(&["op", "median", "speedup vs full"]);
+    inc_table.row(&[
+        "full rebuild (512x512, k=64)".into(),
+        fmt_duration(full_timing.median),
+        "x1.00".into(),
+    ]);
+    inc_table.row(&[
+        "incremental_update (64x64 tile)".into(),
+        fmt_duration(update_timing.median),
+        format!("x{:.2}", full_s / upd_s.max(1e-12)),
+    ]);
+    inc_table.print("incremental update vs full rebuild (EditSession, 4 threads)");
+    let inc_rows = vec![
+        Json::obj(vec![
+            ("op", Json::str("full_rebuild")),
+            ("threads", Json::int(reuse_threads)),
+            ("median_s", Json::num(full_s)),
+            ("speedup_vs_full", Json::num(1.0)),
+        ]),
+        Json::obj(vec![
+            ("op", Json::str("incremental_update")),
+            ("tile_rows", Json::int(64)),
+            ("tile_cols", Json::int(64)),
+            ("threads", Json::int(reuse_threads)),
+            ("median_s", Json::num(upd_s)),
+            ("speedup_vs_full", Json::num(full_s / upd_s.max(1e-12))),
+        ]),
+    ];
+
     // ---- machine-readable evidence trail ---------------------------------
     let doc = Json::obj(vec![
         ("bench", Json::str("bench_runtime")),
@@ -353,6 +397,7 @@ fn main() {
         ("thread_scaling", Json::Arr(scaling_rows)),
         ("engine_reuse", Json::Arr(reuse_rows)),
         ("alloc_profile", Json::Arr(alloc_rows)),
+        ("incremental_update", Json::Arr(inc_rows)),
     ]);
     match std::fs::write("BENCH_runtime.json", doc.render()) {
         Ok(()) => println!("\nwrote BENCH_runtime.json"),

@@ -38,6 +38,12 @@
 //!   certified for the smooth/image/piecewise families only
 //!   (EXPERIMENTS.md §Calibration); noise is the paper's own worst-case
 //!   regime.
+//! * **incremental-update** — coresets produced by a seeded sequence of
+//!   rect edits applied through [`crate::coreset::merge_tree::MergeTree::update`]
+//!   (dirty leaves rebuilt, ancestor path re-merged) must satisfy the
+//!   same ε guarantee against the *mutated* signal's true losses as a
+//!   from-scratch rebuild — the merge-and-reduce property under
+//!   mutation, gated at ε like the main sweep.
 //!
 //! True loss is computed from [`PrefixStats`] regions
 //! (`KSegmentation::loss`), coreset loss through the batch FITTING-LOSS
@@ -123,10 +129,11 @@ pub enum Family {
     Boundary,
     DpOptimal,
     NoiseInformational,
+    Incremental,
 }
 
 impl Family {
-    pub const ALL: [Family; 7] = [
+    pub const ALL: [Family; 8] = [
         Family::BlockAligned,
         Family::Random,
         Family::GroundTruth,
@@ -134,6 +141,7 @@ impl Family {
         Family::Boundary,
         Family::DpOptimal,
         Family::NoiseInformational,
+        Family::Incremental,
     ];
 
     pub fn name(self) -> &'static str {
@@ -145,6 +153,7 @@ impl Family {
             Family::Boundary => "boundary-adversarial",
             Family::DpOptimal => "dp-optimal",
             Family::NoiseInformational => "noise-informational",
+            Family::Incremental => "incremental-update",
         }
     }
 
@@ -497,6 +506,131 @@ fn transfer_check(config: &AuditConfig, instance: usize) -> TransferCheck {
 }
 
 // ---------------------------------------------------------------------------
+// Incremental-update check: the guarantee survives tree mutation.
+// ---------------------------------------------------------------------------
+
+/// One incremental-update instance: a seeded sequence of rect edits is
+/// applied to the signal, the merge tree is updated *incrementally*
+/// (dirty leaves only, ancestor path re-merged), and the resulting root
+/// coreset is swept against the **mutated** signal's true losses. Every
+/// sample gates at ε — the same bar a from-scratch rebuild of the
+/// mutated signal must clear — and the instance additionally checks
+/// weight parity with that from-scratch rebuild (block moments are
+/// exact, so the updated tree must carry the identical present mass).
+#[derive(Clone, Debug)]
+pub struct IncrementalCheck {
+    pub instance: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub kind: &'static str,
+    pub seed: u64,
+    /// Number of rect edits applied (each followed by one incremental
+    /// `update`).
+    pub edits: usize,
+    /// Leaves rebuilt across the whole edit sequence (the work the
+    /// incremental path actually did — strictly less than
+    /// `edits × leaf_count` on local edits).
+    pub leaf_rebuilds: usize,
+    pub max_rel_err: f64,
+    /// |w_incremental − w_scratch| / (1 + w_scratch).
+    pub weight_rel_gap: f64,
+    /// ε samples contributed to [`Family::Incremental`].
+    pub samples: Vec<f64>,
+    pub pass: bool,
+}
+
+/// Instances of the incremental-update check (fixed — the audit's
+/// evidence trail must be bit-identical for every thread count, so the
+/// count cannot depend on the pool).
+const INCREMENTAL_INSTANCES: usize = 3;
+/// Seeded rect edits per instance.
+const INCREMENTAL_EDITS: usize = 8;
+/// Shard rows for the audited merge trees: small enough that every
+/// instance has several leaves (so the ancestor re-merge path is
+/// genuinely exercised), matching no production default on purpose.
+const INCREMENTAL_SHARD_ROWS: usize = 12;
+
+fn incremental_check(config: &AuditConfig, instance: usize) -> IncrementalCheck {
+    use crate::coreset::merge_tree::MergeTree;
+    use crate::coreset::CoresetConfig;
+    use crate::par::Exec;
+
+    // Distinct seed stream from both the case sweep and the transfer
+    // instances (same base seed).
+    let seed = proptest::sized_case_seed(config.seed ^ 0x1C2E_D175, instance);
+    let mut rng = Rng::new(seed);
+    let n = 48 + rng.usize(25); // 48..=72 rows → 4..6 leaves at 12 shard rows
+    let m = 16 + rng.usize(17); // 16..=32 cols
+    let (kind, mut signal) = match instance % 3 {
+        0 => ("piecewise", generate::piecewise_constant(n, m, config.k.max(2), 0.1, &mut rng).0),
+        1 => ("smooth", generate::smooth(n, m, 3, &mut rng)),
+        _ => ("image", generate::image_like(n, m, 2, &mut rng)),
+    };
+
+    let cfg = CoresetConfig::new(config.k, config.eps);
+    let mut stats = PrefixStats::new(&signal);
+    let mut tree = MergeTree::build(&signal, &stats, cfg, INCREMENTAL_SHARD_ROWS, Exec::Spawn(1));
+    let before = tree.leaf_builds();
+
+    // The seeded mutation sequence: bump a random small rect by a
+    // Gaussian offset, rebuild the stats (prefix sums are global), and
+    // update the tree incrementally. The inner executor is sequential —
+    // the fan-out is at instance level, like the case sweep.
+    for _ in 0..INCREMENTAL_EDITS {
+        let h = 1 + rng.usize(8);
+        let w = 1 + rng.usize(8);
+        let r0 = rng.usize(n - h + 1);
+        let c0 = rng.usize(m - w + 1);
+        let rect = Rect::new(r0, r0 + h - 1, c0, c0 + w - 1);
+        let delta = rng.normal();
+        for (r, c) in rect.cells() {
+            if signal.is_present(r, c) {
+                signal.set(r, c, signal.get(r, c) + delta);
+            }
+        }
+        stats = PrefixStats::new(&signal);
+        tree.update(rect, &signal, &stats, Exec::Spawn(1));
+    }
+    let leaf_rebuilds = tree.leaf_builds() - before;
+    let updated = tree.full();
+
+    // Weight parity with a from-scratch rebuild of the mutated signal
+    // (same shard plan — the compatibility reference).
+    let scratch =
+        SignalCoreset::construct_sharded_exec(&signal, cfg, INCREMENTAL_SHARD_ROWS, Exec::Spawn(1));
+    let (w_inc, w_scr) = (updated.total_weight(), scratch.total_weight());
+    let weight_rel_gap = (w_inc - w_scr).abs() / (1.0 + w_scr.abs());
+
+    // The ε sweep: the structured query families of the main audit, all
+    // evaluated on the *updated* coreset against the mutated signal's
+    // exact losses, every sample attributed to Family::Incremental.
+    let (_, queries) =
+        build_queries(signal.bounds(), &stats, &updated, None, config.k, false, &mut rng);
+    let approx = updated.fitting_loss_batch(&queries, 1);
+    let samples: Vec<f64> = queries
+        .iter()
+        .zip(approx)
+        .map(|(q, a)| relative_error(a, q.loss(&stats)))
+        .collect();
+    let max_rel_err = samples.iter().fold(0.0f64, |acc, &e| acc.max(e));
+    let pass = max_rel_err <= config.eps && weight_rel_gap <= 1e-6;
+
+    IncrementalCheck {
+        instance,
+        rows: n,
+        cols: m,
+        kind,
+        seed,
+        edits: INCREMENTAL_EDITS,
+        leaf_rebuilds,
+        max_rel_err,
+        weight_rel_gap,
+        samples,
+        pass,
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Report.
 // ---------------------------------------------------------------------------
 
@@ -536,6 +670,7 @@ pub struct AuditReport {
     pub config: AuditConfig,
     pub families: Vec<FamilyReport>,
     pub transfers: Vec<TransferCheck>,
+    pub incrementals: Vec<IncrementalCheck>,
     pub shrunk_failure: Option<String>,
     pub pass: bool,
 }
@@ -595,6 +730,8 @@ impl AuditReport {
                                         Json::Null
                                     } else if f.family == Family::DpOptimal {
                                         Json::str("transfer-instance")
+                                    } else if f.family == Family::Incremental {
+                                        Json::str("incremental-instance")
                                     } else {
                                         Json::str("case")
                                     },
@@ -623,6 +760,27 @@ impl AuditReport {
                                 ("bound", Json::num(t.bound)),
                                 ("rel_err_opt_d", Json::num(t.rel_err_opt_d)),
                                 ("rel_err_opt_c", Json::num(t.rel_err_opt_c)),
+                                ("pass", Json::Bool(t.pass)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "incremental",
+                Json::Arr(
+                    self.incrementals
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("rows", Json::int(t.rows)),
+                                ("cols", Json::int(t.cols)),
+                                ("kind", Json::str(t.kind)),
+                                ("seed", Json::str(format!("{:#x}", t.seed))),
+                                ("edits", Json::int(t.edits)),
+                                ("leaf_rebuilds", Json::int(t.leaf_rebuilds)),
+                                ("max_rel_err", Json::num(t.max_rel_err)),
+                                ("weight_rel_gap", Json::num(t.weight_rel_gap)),
                                 ("pass", Json::Bool(t.pass)),
                             ])
                         })
@@ -687,6 +845,19 @@ impl AuditReport {
                 if t.pass { "PASS" } else { "FAIL" }
             ));
         }
+        for t in &self.incrementals {
+            out.push_str(&format!(
+                "  incremental {}x{} {} edits={}: {} leaf rebuilds, max rel err {:.4e}, weight gap {:.2e}  {}\n",
+                t.rows,
+                t.cols,
+                t.kind,
+                t.edits,
+                t.leaf_rebuilds,
+                t.max_rel_err,
+                t.weight_rel_gap,
+                if t.pass { "PASS" } else { "FAIL" }
+            ));
+        }
         if self.transfers.iter().any(|t| t.k != self.config.k) {
             out.push_str(&format!(
                 "  note: transfer instances certify k={} (configured k={} clamped to 2..=6 for DP feasibility)\n",
@@ -739,8 +910,12 @@ pub fn run_audit_exec(config: &AuditConfig, exec: crate::par::Exec<'_>) -> Audit
     let transfers: Vec<TransferCheck> =
         exec.map(&transfer_ids, |_, &i| transfer_check(config, i));
 
+    let incremental_ids: Vec<usize> = (0..INCREMENTAL_INSTANCES).collect();
+    let incrementals: Vec<IncrementalCheck> =
+        exec.map(&incremental_ids, |_, &i| incremental_check(config, i));
+
     // Aggregate per family; transfer instances contribute the dp-optimal
-    // samples.
+    // samples, incremental instances the incremental-update samples.
     let mut families = Vec::new();
     for family in Family::ALL {
         let mut queries = 0usize;
@@ -771,6 +946,18 @@ pub fn run_audit_exec(config: &AuditConfig, exec: crate::par::Exec<'_>) -> Audit
                 }
             }
         }
+        if family == Family::Incremental {
+            for t in &incrementals {
+                for &err in &t.samples {
+                    queries += 1;
+                    sum += err;
+                    if err >= max_rel_err {
+                        max_rel_err = err;
+                        worst_case = Some((t.instance, t.seed));
+                    }
+                }
+            }
+        }
         families.push(FamilyReport {
             family,
             queries,
@@ -783,6 +970,7 @@ pub fn run_audit_exec(config: &AuditConfig, exec: crate::par::Exec<'_>) -> Audit
 
     let families_pass = families.iter().all(FamilyReport::pass);
     let transfers_pass = transfers.iter().all(|t| t.pass);
+    let incrementals_pass = incrementals.iter().all(|t| t.pass);
     // A violated gate is handed to the proptest harness: re-sweep the
     // same seed space and greedily shrink the first failing case to a
     // minimal reproducible (signal, tree, seed) triple. Only families
@@ -793,9 +981,11 @@ pub fn run_audit_exec(config: &AuditConfig, exec: crate::par::Exec<'_>) -> Audit
     // that is deliberate — it is paid only on a red gate, and reusing
     // the proptest runner verbatim keeps the CLI repro and the test
     // suite's shrink semantics identical.)
+    // Incremental violations replay from their instance seed, like
+    // dp-optimal — the case-sweep shrinker cannot reproduce them.
     let case_family_failed = families
         .iter()
-        .any(|f| !f.pass() && f.family != Family::DpOptimal);
+        .any(|f| !f.pass() && f.family != Family::DpOptimal && f.family != Family::Incremental);
     let shrunk_failure = if !case_family_failed {
         None
     } else {
@@ -816,8 +1006,9 @@ pub fn run_audit_exec(config: &AuditConfig, exec: crate::par::Exec<'_>) -> Audit
         config: *config,
         families,
         transfers,
+        incrementals,
         shrunk_failure,
-        pass: families_pass && transfers_pass,
+        pass: families_pass && transfers_pass && incrementals_pass,
     }
 }
 

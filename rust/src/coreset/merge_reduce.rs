@@ -44,20 +44,6 @@ pub fn merge(parts: Vec<SignalCoreset>) -> SignalCoreset {
     SignalCoreset::from_blocks(n, m, config, sigma, gamma, blocks)
 }
 
-/// Translate a band-local coreset to global row coordinates (band starts
-/// at `row_offset`).
-pub fn offset_rows(mut coreset: SignalCoreset, row_offset: usize) -> SignalCoreset {
-    for b in &mut coreset.blocks {
-        b.rect = Rect::new(
-            b.rect.r0 + row_offset,
-            b.rect.r1 + row_offset,
-            b.rect.c0,
-            b.rect.c1,
-        );
-    }
-    coreset
-}
-
 /// Re-compact a merged coreset: repeatedly merge vertically adjacent
 /// blocks with matching column extents while the merged opt₁ (from
 /// moments) stays ≤ `tol`. Returns the compacted coreset.
@@ -117,45 +103,24 @@ pub fn reduce(coreset: SignalCoreset, tol: f64) -> SignalCoreset {
 /// per band, merged, and periodically reduced — memory stays proportional
 /// to the reduced coreset, not the stream.
 ///
+/// Since the merge-tree refactor this is a thin facade over
+/// [`super::merge_tree::MergeTree`] (one structure, not a parallel
+/// implementation): the tree maintains the exact historical
+/// incremental-compaction schedule for [`Self::finish`], while the
+/// pushed bands stay alive as leaves with logarithmic merge height —
+/// call [`Self::into_tree`] to keep them for incremental updates or a
+/// root re-composition.
+///
 /// The lifetime parameter only matters for the pool-backed executor
 /// ([`Self::with_exec`], the [`crate::engine::Engine::stream`] path);
 /// plain `new`/`with_threads` streams leave it unconstrained.
 pub struct StreamingCoreset<'p> {
-    config: CoresetConfig,
-    m: usize,
-    rows_seen: usize,
-    acc: Option<SignalCoreset>,
-    /// Reduce whenever the accumulated block count exceeds this multiple
-    /// of the last reduced size.
-    reduce_factor: f64,
-    last_reduced_len: usize,
-    /// Per-band construction engine: `None` = the sequential
-    /// [`SignalCoreset::construct_with`] (the default); `Some(exec)` =
-    /// the sharded [`SignalCoreset::construct_sharded_exec`] on that
-    /// executor. Kept as an opt-in so that the streamed coreset's
-    /// *content* never depends on a worker count or executor — the
-    /// sharded builder is thread- and executor-invariant, so every
-    /// `Some(_)` produces the identical stream.
-    exec: Option<crate::par::Exec<'p>>,
-    /// Row-shard geometry of the `Some(_)` sharded path (default
-    /// [`SignalCoreset::SHARD_ROWS`]); part of the streamed *content*,
-    /// unlike the executor — [`crate::engine::Engine::stream`] forwards
-    /// its config's geometry here so build and stream paths agree.
-    shard_rows: usize,
+    tree: super::merge_tree::MergeTree<'p>,
 }
 
 impl<'p> StreamingCoreset<'p> {
     pub fn new(m: usize, config: CoresetConfig) -> Self {
-        Self {
-            config,
-            m,
-            rows_seen: 0,
-            acc: None,
-            reduce_factor: 2.0,
-            last_reduced_len: 64,
-            exec: None,
-            shard_rows: SignalCoreset::SHARD_ROWS,
-        }
+        Self { tree: super::merge_tree::MergeTree::for_stream(m, config) }
     }
 
     /// Build every incoming band through the parallel sharded builder
@@ -165,7 +130,7 @@ impl<'p> StreamingCoreset<'p> {
     /// though it may differ from the default sequential path (sharded
     /// vs monolithic per-band partitions).
     pub fn with_threads(mut self, threads: usize) -> Self {
-        self.exec = Some(crate::par::Exec::Spawn(threads));
+        self.tree = self.tree.with_band_exec(crate::par::Exec::Spawn(threads));
         self
     }
 
@@ -175,7 +140,7 @@ impl<'p> StreamingCoreset<'p> {
     /// spawning threads per band. Streamed content is identical to any
     /// `with_threads` stream.
     pub fn with_exec(mut self, exec: crate::par::Exec<'p>) -> Self {
-        self.exec = Some(exec);
+        self.tree = self.tree.with_band_exec(exec);
         self
     }
 
@@ -183,7 +148,7 @@ impl<'p> StreamingCoreset<'p> {
     /// Changes the streamed content for bands taller than one shard,
     /// exactly as it does on the batch build path.
     pub fn with_shard_rows(mut self, shard_rows: usize) -> Self {
-        self.shard_rows = shard_rows.max(1);
+        self.tree = self.tree.with_shard_rows(shard_rows);
         self
     }
 
@@ -193,48 +158,32 @@ impl<'p> StreamingCoreset<'p> {
     /// streaming sources keep handing in owned [`crate::signal::Signal`]
     /// bands. Either way the band coreset is identical.
     pub fn push_band<S: SignalSource>(&mut self, band: &S) {
-        assert_eq!(band.cols(), self.m);
-        let part = match self.exec {
-            None => SignalCoreset::construct_with(band, self.config),
-            Some(exec) => SignalCoreset::construct_sharded_exec(
-                band,
-                self.config,
-                self.shard_rows,
-                exec,
-            ),
-        };
-        let part = offset_rows(part, self.rows_seen);
-        self.rows_seen += band.rows();
-        let merged = match self.acc.take() {
-            None => part,
-            Some(acc) => merge(vec![acc, part]),
-        };
-        let merged = if merged.blocks.len() as f64
-            > self.reduce_factor * self.last_reduced_len as f64
-        {
-            let tol = merged.gamma * merged.gamma * merged.sigma;
-            let reduced = reduce(merged, tol);
-            self.last_reduced_len = reduced.blocks.len().max(64);
-            reduced
-        } else {
-            merged
-        };
-        self.acc = Some(merged);
+        self.tree.push_band(band);
     }
 
     pub fn rows_seen(&self) -> usize {
-        self.rows_seen
+        self.tree.rows_seen()
     }
 
-    /// Final coreset over everything ingested so far.
-    pub fn finish(self) -> Option<SignalCoreset> {
-        self.acc
+    /// Final coreset over everything ingested so far. The empty stream
+    /// (no bands pushed) is a typed [`crate::error::Error`] — the old
+    /// `Option` return leaked the case to every call site as `unwrap()`.
+    pub fn finish(self) -> crate::error::Result<SignalCoreset> {
+        self.tree.into_streamed()
+    }
+
+    /// Surrender the underlying merge tree — the pushed bands stay
+    /// alive as leaves, ready for [`super::merge_tree::MergeTree::full`]
+    /// / [`super::merge_tree::MergeTree::update`].
+    pub fn into_tree(self) -> super::merge_tree::MergeTree<'p> {
+        self.tree
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coreset::merge_tree::translate_rows;
     use crate::coreset::Coreset;
     use crate::rng::Rng;
     use crate::segmentation::random_segmentation;
@@ -258,7 +207,7 @@ mod tests {
             .iter()
             .enumerate()
             .map(|(i, band)| {
-                offset_rows(SignalCoreset::construct(band, 4, 0.3), i * 12)
+                translate_rows(SignalCoreset::construct(band, 4, 0.3), i * 12)
             })
             .collect();
         let merged = merge(parts);
@@ -274,7 +223,7 @@ mod tests {
         let parts: Vec<SignalCoreset> = band_split(&sig, 3)
             .iter()
             .enumerate()
-            .map(|(i, band)| offset_rows(SignalCoreset::construct(band, 5, 0.25), i * 20))
+            .map(|(i, band)| translate_rows(SignalCoreset::construct(band, 5, 0.25), i * 20))
             .collect();
         let merged = merge(parts);
         for _ in 0..20 {
@@ -310,7 +259,7 @@ mod tests {
         let parts: Vec<SignalCoreset> = band_split(&sig, 8)
             .iter()
             .enumerate()
-            .map(|(i, band)| offset_rows(SignalCoreset::construct(band, 4, 0.3), i * 8))
+            .map(|(i, band)| translate_rows(SignalCoreset::construct(band, 4, 0.3), i * 8))
             .collect();
         let merged = merge(parts);
         let before = merged.blocks.len();

@@ -1,0 +1,713 @@
+//! First-class merge-tree coresets — the persistent form of the
+//! merge-and-reduce property (§1.1, Challenge (iv)).
+//!
+//! [`super::merge_reduce`] composes per-shard coresets and immediately
+//! folds them away; every one-tile change to the signal then costs a
+//! full O(N·k) rebuild. A [`MergeTree`] keeps the per-shard **leaf**
+//! coresets alive (keyed by their shard [`Rect`] in signal coordinates)
+//! and memoizes their composition in a balanced tree of configurable
+//! fanout, which buys three operations the fold-away path cannot offer:
+//!
+//! * [`MergeTree::full`] — the root coreset. **Compatibility
+//!   invariant:** for the shard plan of
+//!   [`SignalCoreset::construct_sharded_exec`] this is bit-identical to
+//!   that builder's output at every thread count and fanout. The tree
+//!   memoizes only block-list *concatenation* at internal nodes; the
+//!   root σ/γ/row totals are folded flat over the leaves in shard order
+//!   (exactly what [`merge_reduce::merge`] computes — f64 addition is
+//!   not associative, so a pairwise tree fold would change the reduce
+//!   tolerance bits), and a single [`merge_reduce::reduce`] runs at the
+//!   root.
+//! * [`MergeTree::update`] — after the signal mutated inside a dirty
+//!   rectangle, rebuild **only the leaves intersecting it** (fanned out
+//!   on the caller's executor) and re-mark the O(log S) ancestor path;
+//!   clean leaves are reused as-is. The per-block guarantees are local
+//!   (Theorem 8's merge-and-reduce argument), so the updated root is a
+//!   valid (k, ε)-coreset of the mutated signal — gated empirically by
+//!   the `incremental-update` family of [`crate::audit`].
+//! * [`MergeTree::push_band`] — streaming-bucket appends.
+//!   [`super::merge_reduce::StreamingCoreset`] is a thin facade over
+//!   this: the tree maintains the classic incrementally-compacted
+//!   accumulator ([`MergeTree::streamed`]) with the exact legacy
+//!   schedule, while the appended leaves keep logarithmic merge height
+//!   ([`MergeTree::height`]) for later [`MergeTree::full`] /
+//!   [`MergeTree::update`] calls.
+//!
+//! Memory: leaves hold the per-shard coresets (what the fold-away path
+//! materializes transiently anyway); memoized internal nodes add
+//! O(S·log S) block references in the worst case, freed on
+//! invalidation. See DESIGN.md §Merge tree for the structure diagram
+//! and the O(dirty·k + log S·reduce) update cost model.
+
+use crate::error::{Error, Result};
+use crate::par::Exec;
+use crate::signal::{PrefixStats, Rect, SignalSource};
+
+use super::merge_reduce;
+use super::{BlockCoreset, CoresetConfig, SignalCoreset};
+
+/// Translate a band-local coreset to global row coordinates (band
+/// starts at `row_offset`). Crate-internal: shard builds emit global
+/// coordinates since the zero-copy refactor, so only true-streaming
+/// paths (owned bands that never saw the full frame) need it.
+pub(crate) fn translate_rows(mut coreset: SignalCoreset, row_offset: usize) -> SignalCoreset {
+    for b in &mut coreset.blocks {
+        b.rect = Rect::new(
+            b.rect.r0 + row_offset,
+            b.rect.r1 + row_offset,
+            b.rect.c0,
+            b.rect.c1,
+        );
+    }
+    coreset
+}
+
+/// One leaf: the shard rectangle (signal coordinates) and its coreset.
+struct Leaf {
+    rect: Rect,
+    part: SignalCoreset,
+}
+
+/// One memoized internal node: the concatenation of its children's
+/// block lists (`None` = stale), plus the child count it was computed
+/// for (append can grow the last node's child set without changing the
+/// node count).
+struct Node {
+    blocks: Option<Vec<BlockCoreset>>,
+    children: usize,
+}
+
+/// The persistent merge tree — see the module docs. The lifetime
+/// parameter only matters for a stored band-build executor
+/// ([`Self::with_band_exec`], the streaming facade's pool path); batch
+/// trees leave it unconstrained.
+pub struct MergeTree<'p> {
+    m: usize,
+    config: CoresetConfig,
+    /// Children per internal node (≥ 2). A pure memoization-shape knob:
+    /// [`Self::full`] is bit-identical for every fanout.
+    fanout: usize,
+    /// Root reduce tolerance override; `None` → the standard γ²σ of the
+    /// flat-merged parts (the [`SignalCoreset::construct_sharded_exec`]
+    /// tolerance — required for the compatibility invariant).
+    reduce_tol: Option<f64>,
+    leaves: Vec<Leaf>,
+    /// `levels[0]` composes leaves, `levels[l]` composes `levels[l-1]`;
+    /// the last level has exactly one node (the root) whenever there
+    /// are ≥ 2 leaves.
+    levels: Vec<Vec<Node>>,
+    /// Memoized [`Self::full`] result.
+    root: Option<SignalCoreset>,
+    /// Leaf coresets built by this tree (initial build + updates +
+    /// pushed bands) — the build-counter the incremental tests assert.
+    leaf_builds: usize,
+    /// True when the tree holds the single-leaf sequential fallback of
+    /// the sharded plan (`shards <= 1` → `construct_with`); updates
+    /// then rebuild through the same sequential path so short signals
+    /// stay bit-identical to every sharded entry point.
+    fallback: bool,
+    /// Sharded-build geometry, used by [`Self::update`] re-builds and
+    /// the streaming facade's per-band builds.
+    shard_rows: usize,
+    // --- streaming state (the legacy StreamingCoreset schedule) ---
+    rows_seen: usize,
+    stream_acc: Option<SignalCoreset>,
+    reduce_factor: f64,
+    last_reduced_len: usize,
+    parts_pushed: usize,
+    /// Skip compaction until ≥ 2 parts are absorbed — the pipeline
+    /// reducer's degenerate-equivalence invariant (a single band's
+    /// coreset is already the batch answer and passes through
+    /// unchanged). The legacy streaming schedule compacts from the
+    /// first band, so the facade leaves this off.
+    first_part_passthrough: bool,
+    /// Per-band construction engine of [`Self::push_band`]: `None` =
+    /// sequential [`SignalCoreset::construct_with`]; `Some(exec)` = the
+    /// sharded builder on that executor (thread/executor-invariant).
+    band_exec: Option<Exec<'p>>,
+}
+
+impl<'p> MergeTree<'p> {
+    /// An empty tree for streaming ingestion ([`Self::push_band`] /
+    /// [`Self::push_part`]) over bands of width `m`.
+    pub fn for_stream(m: usize, config: CoresetConfig) -> MergeTree<'p> {
+        MergeTree {
+            m,
+            config,
+            fanout: 2,
+            reduce_tol: None,
+            leaves: Vec::new(),
+            levels: Vec::new(),
+            root: None,
+            leaf_builds: 0,
+            fallback: false,
+            shard_rows: SignalCoreset::SHARD_ROWS,
+            rows_seen: 0,
+            stream_acc: None,
+            reduce_factor: 2.0,
+            last_reduced_len: 64,
+            parts_pushed: 0,
+            first_part_passthrough: false,
+            band_exec: None,
+        }
+    }
+
+    /// Build the tree over `signal` with the exact shard plan of
+    /// [`SignalCoreset::construct_sharded_with_stats`]: shards of
+    /// `shard_rows` geometry via [`crate::bicriteria::band_edges`],
+    /// leaf coresets fanned out on `exec` against the one shared
+    /// `stats`. Signals with fewer than two shards take the same
+    /// sequential single-leaf fallback as every sharded entry point.
+    pub fn build<S: SignalSource>(
+        signal: &S,
+        stats: &PrefixStats,
+        config: CoresetConfig,
+        shard_rows: usize,
+        exec: Exec<'_>,
+    ) -> MergeTree<'p> {
+        let shard_rows = shard_rows.max(1);
+        let mut tree = Self::for_stream(signal.cols(), config);
+        tree.shard_rows = shard_rows;
+        tree.rows_seen = signal.rows();
+        let n = signal.rows();
+        let shards = n / shard_rows;
+        if shards <= 1 {
+            tree.fallback = true;
+            tree.leaves.push(Leaf {
+                rect: signal.bounds(),
+                part: SignalCoreset::construct_with(signal, config),
+            });
+        } else {
+            let edges = crate::bicriteria::band_edges(n, shards);
+            let regions: Vec<Rect> = edges
+                .windows(2)
+                .map(|w| Rect::new(w[0], w[1] - 1, 0, signal.cols() - 1))
+                .collect();
+            let parts = exec.map(&regions, |_, &region| {
+                SignalCoreset::construct_in(signal, stats, region, config)
+            });
+            tree.leaves = regions
+                .into_iter()
+                .zip(parts)
+                .map(|(rect, part)| Leaf { rect, part })
+                .collect();
+        }
+        tree.leaf_builds = tree.leaves.len();
+        tree.sync_shape();
+        tree
+    }
+
+    /// Set the internal-node fanout (clamped ≥ 2). Memoization shape
+    /// only: [`Self::full`] is bit-identical for every value.
+    pub fn with_fanout(mut self, fanout: usize) -> Self {
+        self.fanout = fanout.max(2);
+        self.levels.clear();
+        self.root = None;
+        self.sync_shape();
+        self
+    }
+
+    /// Override the root reduce tolerance (`None` = the standard γ²σ).
+    /// A real content knob: changing it changes the compacted root.
+    pub fn with_reduce_tol(mut self, tol: Option<f64>) -> Self {
+        self.reduce_tol = tol;
+        self.root = None;
+        self
+    }
+
+    /// Streaming compaction factor (the legacy `reduce_factor`).
+    pub fn with_reduce_factor(mut self, factor: f64) -> Self {
+        self.reduce_factor = factor;
+        self
+    }
+
+    /// See [`Self::first_part_passthrough`]'s field docs: the pipeline
+    /// reducer's "reduce only once composition has happened" guard.
+    pub fn with_first_part_passthrough(mut self) -> Self {
+        self.first_part_passthrough = true;
+        self
+    }
+
+    /// Per-band executor for [`Self::push_band`] (the streaming
+    /// facade's `with_threads`/`with_exec`).
+    pub fn with_band_exec(mut self, exec: Exec<'p>) -> Self {
+        self.band_exec = Some(exec);
+        self
+    }
+
+    /// Row-shard geometry for the sharded per-band path and for
+    /// [`Self::update`] re-builds (clamped ≥ 1).
+    pub fn with_shard_rows(mut self, shard_rows: usize) -> Self {
+        self.shard_rows = shard_rows.max(1);
+        self
+    }
+
+    pub fn config(&self) -> CoresetConfig {
+        self.config
+    }
+
+    pub fn cols(&self) -> usize {
+        self.m
+    }
+
+    /// Rows covered (batch: the signal height; streaming: rows pushed).
+    pub fn rows_seen(&self) -> usize {
+        self.rows_seen
+    }
+
+    pub fn leaf_count(&self) -> usize {
+        self.leaves.len()
+    }
+
+    /// Shard rectangles of the leaves, in composition order.
+    pub fn leaf_rects(&self) -> Vec<Rect> {
+        self.leaves.iter().map(|l| l.rect).collect()
+    }
+
+    /// Leaf coresets built by this tree so far (initial build + update
+    /// re-builds + pushed bands) — the incremental suite's counter.
+    pub fn leaf_builds(&self) -> usize {
+        self.leaf_builds
+    }
+
+    /// Internal levels above the leaves: 0 for ≤ 1 leaf, and at most
+    /// ⌈log_fanout S⌉ for S leaves — the logarithmic merge height the
+    /// streaming buckets guarantee.
+    pub fn height(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// The root coreset — memoized; see the module docs for the
+    /// bit-identity argument. Panics on an empty tree (mirrors
+    /// [`merge_reduce::merge`]'s non-empty contract); streaming callers
+    /// go through [`Self::into_streamed`], which types the empty case.
+    pub fn full(&mut self) -> SignalCoreset {
+        if let Some(root) = &self.root {
+            return root.clone();
+        }
+        assert!(!self.leaves.is_empty(), "MergeTree::full on an empty tree");
+        let cs = if self.leaves.len() == 1 {
+            // The single-shard plan returns the leaf untouched — both
+            // the sequential fallback and a lone pushed band (no
+            // composition happened, so no reduce may run: the
+            // degenerate-equivalence invariant).
+            self.leaves[0].part.clone()
+        } else {
+            let blocks = self.root_blocks();
+            // Flat in-order folds over the leaves — exactly what
+            // merge() computes on the part list. Folding pairwise up
+            // the tree instead would re-associate the f64 σ sum and
+            // shift the reduce tolerance by ULPs.
+            let n: usize = self.leaves.iter().map(|l| l.part.rows()).sum();
+            let sigma: f64 = self.leaves.iter().map(|l| l.part.sigma).sum();
+            let gamma = self
+                .leaves
+                .iter()
+                .map(|l| l.part.gamma)
+                .fold(f64::INFINITY, f64::min);
+            let config = self.leaves[0].part.config;
+            let merged = SignalCoreset::from_blocks(n, self.m, config, sigma, gamma, blocks);
+            let tol = self
+                .reduce_tol
+                .unwrap_or(merged.gamma * merged.gamma * merged.sigma);
+            merge_reduce::reduce(merged, tol)
+        };
+        self.root = Some(cs.clone());
+        cs
+    }
+
+    /// Rebuild exactly the leaves intersecting `dirty` against the
+    /// *post-edit* `signal`/`stats` (the caller must refresh the shared
+    /// statistics first — they are O(N) prefix sums of the mutated
+    /// frame), fanned out on `exec`, then invalidate the O(log S)
+    /// ancestor path. Returns the number of leaves rebuilt.
+    pub fn update<S: SignalSource>(
+        &mut self,
+        dirty: Rect,
+        signal: &S,
+        stats: &PrefixStats,
+        exec: Exec<'_>,
+    ) -> usize {
+        self.update_dirty(&[dirty], signal, stats, exec)
+    }
+
+    /// [`Self::update`] over a batch of dirty rectangles: each affected
+    /// leaf is rebuilt once even when several rectangles hit it.
+    pub fn update_dirty<S: SignalSource>(
+        &mut self,
+        dirty: &[Rect],
+        signal: &S,
+        stats: &PrefixStats,
+        exec: Exec<'_>,
+    ) -> usize {
+        let hit: Vec<usize> = self
+            .leaves
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| dirty.iter().any(|d| l.rect.intersects(d)))
+            .map(|(i, _)| i)
+            .collect();
+        if hit.is_empty() {
+            return 0;
+        }
+        if self.fallback {
+            // Sequential single-leaf plan: rebuild through the same
+            // fresh-sequential-stats path construct_sharded_* falls
+            // back to, so the updated tree still agrees bitwise with a
+            // from-scratch short-signal build.
+            self.leaves[0].part = SignalCoreset::construct_with(signal, self.config);
+        } else {
+            let regions: Vec<Rect> = hit.iter().map(|&i| self.leaves[i].rect).collect();
+            let parts = exec.map(&regions, |_, &region| {
+                SignalCoreset::construct_in(signal, stats, region, self.config)
+            });
+            for (&i, part) in hit.iter().zip(parts) {
+                self.leaves[i].part = part;
+            }
+        }
+        self.leaf_builds += hit.len();
+        // The incrementally-compacted streaming accumulator no longer
+        // reflects the leaves; drop it ([`Self::into_streamed`] falls
+        // back to the root view).
+        self.stream_acc = None;
+        self.invalidate_paths(&hit);
+        hit.len()
+    }
+
+    /// Streaming append: build the band's coreset (sequentially, or
+    /// sharded on [`Self::with_band_exec`]'s executor), translate it to
+    /// global rows, append it as a leaf, and run the legacy
+    /// incremental-compaction schedule on the streamed accumulator.
+    pub fn push_band<S: SignalSource>(&mut self, band: &S) {
+        assert_eq!(band.cols(), self.m, "band width must match the stream");
+        let part = match self.band_exec {
+            None => SignalCoreset::construct_with(band, self.config),
+            Some(exec) => {
+                SignalCoreset::construct_sharded_exec(band, self.config, self.shard_rows, exec)
+            }
+        };
+        let part = translate_rows(part, self.rows_seen);
+        let rect = Rect::new(
+            self.rows_seen,
+            self.rows_seen + band.rows() - 1,
+            0,
+            self.m - 1,
+        );
+        self.rows_seen += band.rows();
+        self.leaf_builds += 1;
+        self.absorb(rect, part);
+    }
+
+    /// Append an externally built part covering `rect` (global
+    /// coordinates, width `m`) — the pipeline reducer's entry point.
+    /// Returns true when the streamed accumulator was compacted by this
+    /// push (the reducer's `record_reduce` metric).
+    pub fn push_part(&mut self, rect: Rect, part: SignalCoreset) -> bool {
+        self.rows_seen += part.rows();
+        self.absorb(rect, part)
+    }
+
+    /// The incrementally-compacted streaming view (the legacy
+    /// `StreamingCoreset` accumulator): present after pushes, dropped
+    /// by [`Self::update_dirty`].
+    pub fn streamed(&self) -> Option<&SignalCoreset> {
+        self.stream_acc.as_ref()
+    }
+
+    /// Finish a stream: the compacted accumulator when it is current,
+    /// the root view after updates, and a typed error for the empty
+    /// stream (the case the old `Option` return leaked to callers).
+    pub fn into_streamed(mut self) -> Result<SignalCoreset> {
+        if let Some(acc) = self.stream_acc.take() {
+            return Ok(acc);
+        }
+        if self.leaves.is_empty() {
+            return Err(Error::msg("empty stream: no bands were pushed"));
+        }
+        Ok(self.full())
+    }
+
+    /// The shared absorb step of [`Self::push_band`] /
+    /// [`Self::push_part`]: legacy accumulator schedule + leaf append.
+    fn absorb(&mut self, rect: Rect, part: SignalCoreset) -> bool {
+        self.parts_pushed += 1;
+        let merged = match self.stream_acc.take() {
+            None => part.clone(),
+            Some(acc) => merge_reduce::merge(vec![acc, part.clone()]),
+        };
+        let gate = !self.first_part_passthrough || self.parts_pushed > 1;
+        let mut compacted = false;
+        let merged = if gate
+            && merged.blocks.len() as f64 > self.reduce_factor * self.last_reduced_len as f64
+        {
+            let tol = merged.gamma * merged.gamma * merged.sigma;
+            let reduced = merge_reduce::reduce(merged, tol);
+            self.last_reduced_len = reduced.blocks.len().max(64);
+            compacted = true;
+            reduced
+        } else {
+            merged
+        };
+        self.stream_acc = Some(merged);
+        self.leaves.push(Leaf { rect, part });
+        let appended = self.leaves.len() - 1;
+        self.invalidate_paths(&[appended]);
+        compacted
+    }
+
+    /// Reconcile the level structure with the current leaf count:
+    /// resize every level, and mark any node whose expected child count
+    /// changed (appends grow the last node of each level) as stale.
+    fn sync_shape(&mut self) {
+        let mut sizes = Vec::new();
+        let mut len = self.leaves.len();
+        while len > 1 {
+            len = len.div_ceil(self.fanout);
+            sizes.push(len);
+        }
+        self.levels.truncate(sizes.len());
+        for (lvl, &size) in sizes.iter().enumerate() {
+            let prev_len = if lvl == 0 { self.leaves.len() } else { sizes[lvl - 1] };
+            if self.levels.len() <= lvl {
+                self.levels.push(Vec::new());
+            }
+            let fanout = self.fanout;
+            let nodes = &mut self.levels[lvl];
+            nodes.resize_with(size, || Node { blocks: None, children: 0 });
+            for (i, node) in nodes.iter_mut().enumerate() {
+                let kids = (prev_len - i * fanout).min(fanout);
+                if node.children != kids {
+                    node.children = kids;
+                    node.blocks = None;
+                }
+            }
+        }
+    }
+
+    /// Invalidate the memoized root and the ancestor path of every
+    /// given leaf index — O(dirty · height) node marks.
+    fn invalidate_paths(&mut self, leaf_indices: &[usize]) {
+        self.root = None;
+        self.sync_shape();
+        for &leaf in leaf_indices {
+            let mut idx = leaf;
+            for lvl in 0..self.levels.len() {
+                idx /= self.fanout;
+                self.levels[lvl][idx].blocks = None;
+            }
+        }
+    }
+
+    /// Recompute every stale node bottom-up and return the root
+    /// concatenation (leaf order preserved at every level).
+    fn root_blocks(&mut self) -> Vec<BlockCoreset> {
+        self.sync_shape();
+        if self.levels.is_empty() {
+            return self
+                .leaves
+                .first()
+                .map(|l| l.part.blocks.clone())
+                .unwrap_or_default();
+        }
+        let fanout = self.fanout;
+        for lvl in 0..self.levels.len() {
+            let (lower, upper) = self.levels.split_at_mut(lvl);
+            let prev: &[Node] = lower.last().map(|v| v.as_slice()).unwrap_or(&[]);
+            for (i, node) in upper[0].iter_mut().enumerate() {
+                if node.blocks.is_some() {
+                    continue;
+                }
+                let lo = i * fanout;
+                let mut blocks = Vec::new();
+                for j in lo..lo + node.children {
+                    if lvl == 0 {
+                        blocks.extend_from_slice(&self.leaves[j].part.blocks);
+                    } else {
+                        blocks.extend_from_slice(prev[j].blocks.as_deref().unwrap());
+                    }
+                }
+                node.blocks = Some(blocks);
+            }
+        }
+        self.levels
+            .last()
+            .and_then(|lvl| lvl.first())
+            .and_then(|n| n.blocks.clone())
+            .expect("root node refreshed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::Coreset;
+    use crate::rng::Rng;
+    use crate::signal::{generate, Signal, SignalView};
+
+    fn assert_bitwise(a: &SignalCoreset, b: &SignalCoreset, ctx: &str) {
+        assert_eq!(a.blocks.len(), b.blocks.len(), "{ctx}: block count");
+        for (x, y) in a.blocks.iter().zip(&b.blocks) {
+            assert_eq!(x.rect, y.rect, "{ctx}");
+            assert_eq!(x.labels, y.labels, "{ctx}");
+            assert_eq!(x.weights, y.weights, "{ctx}");
+        }
+    }
+
+    fn band_split(sig: &Signal, bands: usize) -> Vec<SignalView<'_>> {
+        let edges = crate::bicriteria::band_edges(sig.rows(), bands);
+        edges
+            .windows(2)
+            .map(|w| sig.view(Rect::new(w[0], w[1] - 1, 0, sig.cols() - 1)))
+            .collect()
+    }
+
+    /// Folded in from the old `offset_rows` unit coverage: translation
+    /// shifts every block rect by the row offset and nothing else.
+    #[test]
+    fn translate_rows_shifts_blocks_only() {
+        let mut rng = Rng::new(60);
+        let sig = generate::smooth(24, 16, 3, &mut rng);
+        let cs = SignalCoreset::construct(&sig, 3, 0.3);
+        let shifted = translate_rows(cs.clone(), 100);
+        assert_eq!(shifted.blocks.len(), cs.blocks.len());
+        for (a, b) in shifted.blocks.iter().zip(&cs.blocks) {
+            assert_eq!(a.rect.r0, b.rect.r0 + 100);
+            assert_eq!(a.rect.r1, b.rect.r1 + 100);
+            assert_eq!(a.rect.c0, b.rect.c0);
+            assert_eq!(a.rect.c1, b.rect.c1);
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.weights, b.weights);
+        }
+        assert_eq!(shifted.rows(), cs.rows());
+        assert!((shifted.total_weight() - cs.total_weight()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn full_matches_construct_sharded_bitwise() {
+        let mut rng = Rng::new(61);
+        let sig = generate::smooth(256, 40, 3, &mut rng);
+        let config = CoresetConfig::new(4, 0.3);
+        let reference = SignalCoreset::construct_sharded(&sig, config, 1);
+        let stats = PrefixStats::new(&sig);
+        for fanout in [2, 3, 5] {
+            let mut tree = MergeTree::build(&sig, &stats, config, 64, Exec::Spawn(1))
+                .with_fanout(fanout);
+            assert_bitwise(&tree.full(), &reference, &format!("fanout {fanout}"));
+            // Memoized second call is identical.
+            assert_bitwise(&tree.full(), &reference, "memoized root");
+        }
+    }
+
+    #[test]
+    fn single_shard_fallback_matches_sequential_build() {
+        let mut rng = Rng::new(62);
+        let sig = generate::image_like(90, 24, 2, &mut rng);
+        let config = CoresetConfig::new(3, 0.3);
+        let stats = PrefixStats::new(&sig);
+        let mut tree = MergeTree::build(&sig, &stats, config, 64, Exec::Spawn(1));
+        assert_eq!(tree.leaf_count(), 1);
+        assert_eq!(tree.height(), 0);
+        let reference = SignalCoreset::construct_with(&sig, config);
+        assert_bitwise(&tree.full(), &reference, "fallback");
+    }
+
+    #[test]
+    fn update_rebuilds_only_intersecting_leaves() {
+        let mut rng = Rng::new(63);
+        let mut sig = generate::smooth(256, 32, 3, &mut rng);
+        let config = CoresetConfig::new(4, 0.3);
+        let stats = PrefixStats::new(&sig);
+        let mut tree = MergeTree::build(&sig, &stats, config, 64, Exec::Spawn(1));
+        let leaves = tree.leaf_count();
+        assert!(leaves >= 4, "{leaves} leaves");
+        assert_eq!(tree.leaf_builds(), leaves);
+        // Edit one tile inside the first shard only.
+        let dirty = Rect::new(2, 9, 3, 12);
+        for (r, c) in dirty.cells() {
+            sig.set(r, c, 42.0);
+        }
+        let stats = PrefixStats::new(&sig);
+        let rebuilt = tree.update(dirty, &sig, &stats, Exec::Spawn(1));
+        assert_eq!(rebuilt, 1, "one leaf intersects the dirty tile");
+        assert_eq!(tree.leaf_builds(), leaves + 1);
+        // The updated root still covers the mutated signal exactly.
+        let cs = tree.full();
+        let cells = (256 * 32) as f64;
+        assert!((cs.total_weight() - cells).abs() < 1e-6 * cells);
+        // A clean update is free.
+        assert_eq!(tree.update(dirty, &sig, &stats, Exec::Spawn(1)), 1);
+        let far = Rect::new(0, 0, 0, 0);
+        let hit = tree.update(far, &sig, &stats, Exec::Spawn(2));
+        assert_eq!(hit, 1, "corner cell lives in the first shard");
+    }
+
+    #[test]
+    fn streamed_accumulator_matches_legacy_schedule() {
+        // The tree's push_band accumulator replays the historical
+        // StreamingCoreset fold bit-for-bit.
+        let mut rng = Rng::new(64);
+        let sig = generate::smooth(96, 20, 3, &mut rng);
+        let config = CoresetConfig::new(3, 0.3);
+        let mut tree = MergeTree::for_stream(20, config);
+        let mut acc: Option<SignalCoreset> = None;
+        let mut last_reduced = 64usize;
+        let mut rows = 0usize;
+        for band in band_split(&sig, 6) {
+            tree.push_band(&band);
+            // Inline legacy schedule.
+            let part = translate_rows(SignalCoreset::construct_with(&band, config), rows);
+            rows += band.rows();
+            let merged = match acc.take() {
+                None => part,
+                Some(a) => merge_reduce::merge(vec![a, part]),
+            };
+            let merged = if merged.blocks.len() as f64 > 2.0 * last_reduced as f64 {
+                let tol = merged.gamma * merged.gamma * merged.sigma;
+                let reduced = merge_reduce::reduce(merged, tol);
+                last_reduced = reduced.blocks.len().max(64);
+                reduced
+            } else {
+                merged
+            };
+            acc = Some(merged);
+        }
+        assert_eq!(tree.rows_seen(), 96);
+        assert_eq!(tree.leaf_count(), 6);
+        let got = tree.into_streamed().unwrap();
+        assert_bitwise(&got, &acc.unwrap(), "streamed vs legacy fold");
+    }
+
+    #[test]
+    fn height_stays_logarithmic_under_pushes() {
+        let mut rng = Rng::new(65);
+        let sig = generate::smooth(132, 12, 2, &mut rng);
+        let config = CoresetConfig::new(2, 0.4);
+        let mut tree = MergeTree::for_stream(12, config);
+        let mut r0 = 0;
+        let mut pushes = 0usize;
+        while r0 < 132 {
+            let band = sig.view(Rect::new(r0, (r0 + 3).min(131), 0, 11));
+            tree.push_band(&band);
+            r0 += 4;
+            pushes += 1;
+            let bound = (0usize..)
+                .find(|h| 2usize.pow(*h as u32) >= pushes)
+                .unwrap();
+            assert!(
+                tree.height() <= bound,
+                "height {} > ceil(log2 {pushes}) = {bound}",
+                tree.height()
+            );
+        }
+        assert_eq!(pushes, 33);
+        assert_eq!(tree.leaf_count(), 33);
+        assert_eq!(tree.height(), 6);
+    }
+
+    #[test]
+    fn empty_stream_is_a_typed_error() {
+        let tree: MergeTree<'_> = MergeTree::for_stream(8, CoresetConfig::new(2, 0.3));
+        let err = tree.into_streamed().unwrap_err();
+        assert!(err.to_string().contains("empty stream"), "{err}");
+    }
+}

@@ -43,6 +43,7 @@
 pub mod caratheodory;
 pub mod fitting_loss;
 pub mod merge_reduce;
+pub mod merge_tree;
 pub mod uniform;
 
 use crate::bicriteria;
@@ -348,6 +349,15 @@ impl SignalCoreset {
     /// [`Self::construct_with`] (fresh sequential statistics — the same
     /// fallback every sharded entry point takes, so all of them agree
     /// bitwise on short signals).
+    ///
+    /// Since the merge-tree refactor this builds through a transient
+    /// [`merge_tree::MergeTree`] — the same shard plan, flat merge
+    /// fold, and single root reduce, so the output is bit-identical to
+    /// the historical fold-away composition (the tree's compatibility
+    /// invariant). Callers who want to keep the per-shard leaves alive
+    /// for incremental updates hold the tree itself (via
+    /// [`crate::engine::Engine::edit_session`] or
+    /// [`merge_tree::MergeTree::build`]).
     pub fn construct_sharded_with_stats<S: SignalSource>(
         signal: &S,
         stats: &PrefixStats,
@@ -356,22 +366,10 @@ impl SignalCoreset {
         exec: crate::par::Exec<'_>,
     ) -> Self {
         let shard_rows = shard_rows.max(1);
-        let n = signal.rows();
-        let shards = n / shard_rows;
-        if shards <= 1 {
+        if signal.rows() / shard_rows <= 1 {
             return Self::construct_with(signal, config);
         }
-        let edges = bicriteria::band_edges(n, shards);
-        let regions: Vec<Rect> = edges
-            .windows(2)
-            .map(|w| Rect::new(w[0], w[1] - 1, 0, signal.cols() - 1))
-            .collect();
-        let parts = exec.map(&regions, |_, &region| {
-            Self::construct_in(signal, stats, region, config)
-        });
-        let merged = merge_reduce::merge(parts);
-        let tol = merged.gamma * merged.gamma * merged.sigma;
-        merge_reduce::reduce(merged, tol)
+        merge_tree::MergeTree::build(signal, stats, config, shard_rows, exec).full()
     }
 
     // ------------------------------------------------------------------
@@ -494,17 +492,38 @@ impl SignalCoreset {
             .sum()
     }
 
-    /// |C| / (number of present input cells). The denominator is
-    /// [`Self::total_weight`], which equals the present-cell count
-    /// exactly by the Caratheodory guarantee — dividing by n·m would
-    /// overstate compression on masked signals, where absent cells were
-    /// never part of the input. Returns 0 for an empty coreset.
+    /// Number of **distinct** grid cells carrying positive weight — the
+    /// coreset's true support. Thin blocks (1×1, 1×c, r×1) pin several
+    /// Caratheodory slots to coincident corners, so `stored_points()`
+    /// (4 × blocks, counting padding) overstates the support; merged
+    /// coresets concatenate many thin shard-boundary blocks and inflate
+    /// it further.
+    pub fn support_cells(&self) -> usize {
+        let mut cells = std::collections::HashSet::with_capacity(self.blocks.len() * 4);
+        for b in &self.blocks {
+            for p in b.points() {
+                cells.insert((p.row, p.col));
+            }
+        }
+        cells.len()
+    }
+
+    /// |C| / (number of present input cells). The numerator is
+    /// [`Self::support_cells`] — the deduplicated positive-weight
+    /// support, not the 4-slot storage footprint, which double-counts
+    /// coincident corners of thin blocks (the accounting bug the merge
+    /// tree's memoized nodes surfaced on merged coresets). The
+    /// denominator is [`Self::total_weight`], which equals the
+    /// present-cell count exactly by the Caratheodory guarantee —
+    /// dividing by n·m would overstate compression on masked signals,
+    /// where absent cells were never part of the input. Returns 0 for
+    /// an empty coreset.
     pub fn compression_ratio(&self) -> f64 {
         let present = self.total_weight();
         if present <= 0.0 {
             return 0.0;
         }
-        self.stored_points() as f64 / present
+        self.support_cells() as f64 / present
     }
 
     /// Σ weights — equals the number of present cells (exactly, by the
@@ -667,14 +686,44 @@ mod tests {
         sig.mask_rect(Rect::new(0, 39, 0, 19));
         let cs = SignalCoreset::construct(&sig, 4, 0.3);
         assert!((cs.total_weight() - 800.0).abs() < 1e-6 * 800.0);
-        let expected = cs.stored_points() as f64 / cs.total_weight();
+        let expected = cs.support_cells() as f64 / cs.total_weight();
         assert!(
             (cs.compression_ratio() - expected).abs() < 1e-12,
-            "ratio must divide by present cells, not n*m"
+            "ratio must divide deduplicated support by present cells"
         );
         // Dividing by n*m would halve the reported ratio here.
-        let overstated = cs.stored_points() as f64 / 1600.0;
+        let overstated = cs.support_cells() as f64 / 1600.0;
         assert!(cs.compression_ratio() > 1.5 * overstated);
+    }
+
+    #[test]
+    fn compression_ratio_deduplicates_thin_block_corners() {
+        // A 1-row signal forces every partition block to be 1×c or 1×1:
+        // all 4 corner slots collapse onto ≤ 2 distinct cells, so the
+        // old `stored_points()`-based numerator overstated the support.
+        let mut rng = Rng::new(9);
+        let sig = generate::smooth(1, 96, 2, &mut rng);
+        let cs = SignalCoreset::construct(&sig, 3, 0.3);
+        let support = cs.support_cells();
+        assert!(
+            support < cs.stored_points(),
+            "thin blocks must dedup coincident corners ({support} vs {})",
+            cs.stored_points()
+        );
+        // Every support cell is a real grid cell, and the ratio uses
+        // the deduplicated count.
+        assert!(support <= sig.len());
+        let expected = support as f64 / cs.total_weight();
+        assert!((cs.compression_ratio() - expected).abs() < 1e-12);
+
+        // Merged composition: concatenating shard parts (what the merge
+        // tree memoizes) must report the union's deduplicated support,
+        // which can never exceed the number of present cells.
+        let mut rng = Rng::new(10);
+        let tall = generate::smooth(256, 8, 2, &mut rng);
+        let merged = SignalCoreset::construct_sharded(&tall, CoresetConfig::new(3, 0.3), 2);
+        assert!(merged.support_cells() <= tall.len());
+        assert!(merged.compression_ratio() <= 1.0 + 1e-12);
     }
 
     #[test]

@@ -52,13 +52,15 @@ impl BackendChoice {
 /// [`Args::expect_only`] allowlist enforces for flags. (The spellings
 /// differ slightly: JSON uses `_` where the CLI uses `-`, and the
 /// CLI's `--dir` is the JSON `artifacts_dir`.)
-pub const CONFIG_KEYS: [&str; 9] = [
+pub const CONFIG_KEYS: [&str; 11] = [
     "k",
     "eps",
     "beta",
     "threads",
     "band_rows",
     "shard_rows",
+    "merge_fanout",
+    "reduce_tol",
     "backend",
     "artifacts_dir",
     "seed",
@@ -91,6 +93,17 @@ pub struct EngineConfig {
     /// [`SignalCoreset::SHARD_ROWS`] keeps the engine bit-identical to
     /// the classic `construct_sharded` plan.
     pub shard_rows: usize,
+    /// Internal-node fanout of the engine's
+    /// [`crate::coreset::merge_tree::MergeTree`] (≥ 2). A pure
+    /// memoization-shape knob: the composed coreset is bit-identical
+    /// for every value; larger fanouts trade shallower trees for wider
+    /// re-merge paths on incremental updates.
+    pub merge_fanout: usize,
+    /// Root reduce tolerance override for the merge tree; `None` → the
+    /// standard γ²σ of the merged parts (required for bit-identity with
+    /// the classic sharded build). A real content knob: smaller values
+    /// compact less, larger values compact more aggressively.
+    pub reduce_tol: Option<f64>,
     /// Kernel backend for the runtime layer.
     pub backend: BackendChoice,
     /// Artifact directory override for the PJRT backend (`None` →
@@ -110,6 +123,8 @@ impl EngineConfig {
             threads: 0,
             band_rows: 128,
             shard_rows: SignalCoreset::SHARD_ROWS,
+            merge_fanout: 2,
+            reduce_tol: None,
             backend: BackendChoice::Native,
             artifacts_dir: None,
             seed: 7,
@@ -133,6 +148,16 @@ impl EngineConfig {
 
     pub fn with_shard_rows(mut self, shard_rows: usize) -> Self {
         self.shard_rows = shard_rows;
+        self
+    }
+
+    pub fn with_merge_fanout(mut self, fanout: usize) -> Self {
+        self.merge_fanout = fanout;
+        self
+    }
+
+    pub fn with_reduce_tol(mut self, tol: f64) -> Self {
+        self.reduce_tol = Some(tol);
         self
     }
 
@@ -175,6 +200,17 @@ impl EngineConfig {
             "shard_rows must be >= 1 (got {})",
             self.shard_rows
         );
+        ensure!(
+            self.merge_fanout >= 2,
+            "merge_fanout must be >= 2 (got {})",
+            self.merge_fanout
+        );
+        if let Some(tol) = self.reduce_tol {
+            ensure!(
+                tol.is_finite() && tol >= 0.0,
+                "reduce_tol must be a non-negative finite number (got {tol})"
+            );
+        }
         Ok(())
     }
 
@@ -201,6 +237,8 @@ impl EngineConfig {
             ("threads", Json::int(self.threads)),
             ("band_rows", Json::int(self.band_rows)),
             ("shard_rows", Json::int(self.shard_rows)),
+            ("merge_fanout", Json::int(self.merge_fanout)),
+            ("reduce_tol", self.reduce_tol.map_or(Json::Null, Json::num)),
             ("backend", Json::str(self.backend.name())),
             (
                 "artifacts_dir",
@@ -266,6 +304,15 @@ impl EngineConfig {
         config.threads = usize_field("threads", config.threads)?;
         config.band_rows = usize_field("band_rows", config.band_rows)?;
         config.shard_rows = usize_field("shard_rows", config.shard_rows)?;
+        config.merge_fanout = usize_field("merge_fanout", config.merge_fanout)?;
+        config.reduce_tol = match doc.get("reduce_tol") {
+            None => config.reduce_tol,
+            Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_f64()
+                    .ok_or_else(|| Error::msg("'reduce_tol' must be a number or null"))?,
+            ),
+        };
         if let Some(v) = doc.get("backend") {
             let name = v
                 .as_str()
@@ -323,6 +370,11 @@ impl EngineConfig {
             threads: args.get_threads(base.threads)?,
             band_rows: args.get_usize("band-rows", base.band_rows)?,
             shard_rows: args.get_usize("shard-rows", base.shard_rows)?,
+            merge_fanout: args.get_usize("merge-fanout", base.merge_fanout)?,
+            reduce_tol: match args.get("reduce-tol") {
+                None => base.reduce_tol,
+                Some(_) => Some(args.get_f64("reduce-tol", 0.0)?),
+            },
             backend: match args.get("backend") {
                 None => base.backend,
                 Some(name) => BackendChoice::from_name(name)?,
@@ -362,6 +414,8 @@ mod tests {
             .with_beta(2.0)
             .with_threads(3)
             .with_band_rows(96)
+            .with_merge_fanout(4)
+            .with_reduce_tol(0.125)
             .with_seed(0x9e37_79b9_7f4a_7c15);
         config.validate().unwrap();
         let text = config.to_json().render();
@@ -379,6 +433,11 @@ mod tests {
         assert!(EngineConfig::new(4, 0.3).with_beta(0.0).validate().is_err());
         assert!(EngineConfig::new(4, 0.3).with_band_rows(0).validate().is_err());
         assert!(EngineConfig::new(4, 0.3).with_shard_rows(0).validate().is_err());
+        assert!(EngineConfig::new(4, 0.3).with_merge_fanout(1).validate().is_err());
+        assert!(EngineConfig::new(4, 0.3).with_reduce_tol(f64::NAN).validate().is_err());
+        assert!(EngineConfig::new(4, 0.3).with_reduce_tol(-1.0).validate().is_err());
+        EngineConfig::new(4, 0.3).with_merge_fanout(2).validate().unwrap();
+        EngineConfig::new(4, 0.3).with_reduce_tol(0.0).validate().unwrap();
         EngineConfig::new(4, 0.3).with_threads(0).validate().unwrap();
     }
 
@@ -404,7 +463,20 @@ mod tests {
         assert!((config.eps - 0.4).abs() < 1e-12);
         assert_eq!(config.threads, 2);
         assert_eq!(config.band_rows, 128);
+        assert_eq!(config.merge_fanout, 2);
+        assert_eq!(config.reduce_tol, None);
         assert_eq!(config.backend, BackendChoice::Native);
+        // The tree knobs parse from flags through the same layering.
+        let defaults = EngineConfig::new(64, 0.2);
+        let config = EngineConfig::from_args(
+            &argv("coreset --merge-fanout 4 --reduce-tol 0.5"),
+            defaults,
+        )
+        .unwrap();
+        assert_eq!(config.merge_fanout, 4);
+        assert_eq!(config.reduce_tol, Some(0.5));
+        let defaults = EngineConfig::new(64, 0.2);
+        assert!(EngineConfig::from_args(&argv("coreset --merge-fanout 1"), defaults).is_err());
         // Bad values hit the same validator as JSON.
         let defaults = EngineConfig::new(64, 0.2);
         assert!(EngineConfig::from_args(&argv("coreset --eps 1.5"), defaults).is_err());

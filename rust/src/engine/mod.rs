@@ -55,6 +55,7 @@ pub use config::{BackendChoice, EngineConfig, CONFIG_KEYS};
 
 use crate::audit::{self, AuditConfig, AuditReport, CoresetOracle};
 use crate::coreset::merge_reduce::StreamingCoreset;
+use crate::coreset::merge_tree::MergeTree;
 use crate::coreset::{fitting_loss, SignalCoreset};
 use crate::error::Result;
 use crate::par::{Exec, WorkerPool};
@@ -62,7 +63,7 @@ use crate::pipeline::{self, PipelineConfig, PipelineMetrics};
 use crate::runtime::{backend_from_name, KernelBackend};
 use crate::segmentation::dp2d::TreeDP;
 use crate::segmentation::KSegmentation;
-use crate::signal::{PrefixStats, Rect, SignalSource};
+use crate::signal::{PrefixStats, Rect, Signal, SignalSource};
 
 /// A long-lived build/query/audit session — see the module docs.
 ///
@@ -120,16 +121,37 @@ impl Engine {
     }
 
     /// Build the (k, ε)-coreset of `signal` — the sharded construction
-    /// on the engine pool, bit-identical to the classic
-    /// `SignalCoreset::construct_sharded` (née `build_par`) at every
-    /// thread count.
+    /// on the engine pool, routed through the engine-configured
+    /// [`MergeTree`] ([`EngineConfig::merge_fanout`] /
+    /// [`EngineConfig::reduce_tol`]). With the default knobs this is
+    /// bit-identical to the classic `SignalCoreset::construct_sharded`
+    /// (née `build_par`) at every thread count — `merge_fanout` never
+    /// changes the output (memoization shape only); a `Some` reduce
+    /// tolerance does.
     pub fn coreset<S: SignalSource>(&self, signal: &S) -> SignalCoreset {
-        SignalCoreset::construct_sharded_exec(
+        let shard_rows = self.config.shard_rows.max(1);
+        if signal.rows() / shard_rows <= 1 {
+            return SignalCoreset::construct_with(signal, self.config.coreset_config());
+        }
+        let stats = PrefixStats::new_par_exec(signal, self.exec());
+        self.tree_of(signal, &stats).full()
+    }
+
+    /// The engine-configured merge tree of `signal` against shared
+    /// statistics: the persistent composition object behind
+    /// [`Engine::coreset`] and the sessions' incremental updates. The
+    /// caller keeps it alive to amortize rebuilds; [`Engine::edit_session`]
+    /// packages the common "own the signal, edit, refresh" loop.
+    pub fn tree_of<S: SignalSource>(&self, signal: &S, stats: &PrefixStats) -> MergeTree<'static> {
+        MergeTree::build(
             signal,
+            stats,
             self.config.coreset_config(),
             self.config.shard_rows,
             self.exec(),
         )
+        .with_fanout(self.config.merge_fanout)
+        .with_reduce_tol(self.config.reduce_tol)
     }
 
     /// Build the partial coreset of a sub-rectangle of `signal` (blocks
@@ -145,7 +167,27 @@ impl Engine {
     /// reuses it through. The borrow pins the signal for the session's
     /// lifetime, so the statistics can never go stale.
     pub fn session<'a, S: SignalSource>(&'a self, signal: &'a S) -> EngineSession<'a, S> {
-        EngineSession { engine: self, signal, stats: self.stats(signal) }
+        EngineSession {
+            engine: self,
+            signal,
+            stats: self.stats(signal),
+            tree: None,
+            dirty: Vec::new(),
+        }
+    }
+
+    /// Attach an **owned** signal for an edit loop: the session owns the
+    /// signal, its statistics, and the engine-configured [`MergeTree`],
+    /// so in-place edits ([`EditSession::set`] / [`EditSession::edit`])
+    /// can be folded into the standing coreset incrementally — only the
+    /// leaves intersecting the dirty regions are rebuilt
+    /// ([`MergeTree::update_dirty`] on the engine pool), everything else
+    /// is reused. This is the session form the `update` CLI subcommand
+    /// and mutating-signal workloads drive.
+    pub fn edit_session(&self, signal: Signal) -> EditSession<'_> {
+        let stats = self.stats(&signal);
+        let tree = self.tree_of(&signal, &stats);
+        EditSession { engine: self, signal, stats, tree, dirty: Vec::new() }
     }
 
     /// The band-push handle for streaming ingestion: feed row-bands of
@@ -230,6 +272,14 @@ pub struct EngineSession<'a, S: SignalSource> {
     engine: &'a Engine,
     signal: &'a S,
     stats: PrefixStats,
+    /// Lazily built engine-configured merge tree (see
+    /// [`EngineSession::coreset_tree`]); kept across queries so update
+    /// calls only rebuild dirty leaves.
+    tree: Option<MergeTree<'static>>,
+    /// Regions reported changed ([`EngineSession::invalidate`]) and not
+    /// yet folded into `stats`/`tree`. Per-signal dirty tracking lives
+    /// here in the session, not in the engine.
+    dirty: Vec<Rect>,
 }
 
 impl<S: SignalSource> EngineSession<'_, S> {
@@ -250,17 +300,68 @@ impl<S: SignalSource> EngineSession<'_, S> {
     }
 
     /// The (k, ε)-coreset of the attached signal — same bits as
-    /// [`Engine::coreset`], but reusing this session's statistics
-    /// (short signals take the same sequential fallback, so the
-    /// equality is exact).
+    /// [`Engine::coreset`] (including the engine's merge-tree knobs),
+    /// but reusing this session's statistics (short signals take the
+    /// same sequential fallback, so the equality is exact).
     pub fn coreset(&self) -> SignalCoreset {
-        SignalCoreset::construct_sharded_with_stats(
-            self.signal,
-            &self.stats,
-            self.engine.config.coreset_config(),
-            self.engine.config.shard_rows,
-            self.engine.exec(),
-        )
+        let shard_rows = self.engine.config.shard_rows.max(1);
+        if self.signal.rows() / shard_rows <= 1 {
+            return SignalCoreset::construct_with(
+                self.signal,
+                self.engine.config.coreset_config(),
+            );
+        }
+        self.engine.tree_of(self.signal, &self.stats).full()
+    }
+
+    /// The session's standing merge tree (built lazily, engine knobs
+    /// applied), with any pending [`EngineSession::invalidate`] regions
+    /// folded in first. Call `.full()` on it for the current coreset;
+    /// it stays cached until the next invalidation.
+    pub fn coreset_tree(&mut self) -> &mut MergeTree<'static> {
+        self.refresh();
+        if self.tree.is_none() {
+            self.tree = Some(self.engine.tree_of(self.signal, &self.stats));
+        }
+        self.tree.as_mut().expect("tree just built")
+    }
+
+    /// Report that the attached signal's cells inside `rect` changed
+    /// out-of-band (the session only holds `&S`, so the mutation
+    /// happened through interior mutability or an external writer). The
+    /// refresh is deferred: statistics and tree are reconciled on the
+    /// next [`EngineSession::update_region`] / [`EngineSession::coreset_tree`].
+    pub fn invalidate(&mut self, rect: Rect) {
+        self.dirty.push(rect);
+    }
+
+    /// [`EngineSession::invalidate`] + immediate reconciliation:
+    /// re-reads the attached signal (full statistics rebuild — prefix
+    /// sums are global), rebuilds exactly the tree leaves intersecting
+    /// the accumulated dirty regions on the engine pool, and re-merges
+    /// their ancestor paths. Returns the number of leaves rebuilt (0
+    /// when no tree has been materialized yet — the next
+    /// [`EngineSession::coreset_tree`] builds from the fresh statistics).
+    pub fn update_region(&mut self, rect: Rect) -> usize {
+        self.invalidate(rect);
+        self.refresh()
+    }
+
+    /// Fold pending dirty regions into the session state; see
+    /// [`EngineSession::update_region`].
+    fn refresh(&mut self) -> usize {
+        if self.dirty.is_empty() {
+            return 0;
+        }
+        self.stats = self.engine.stats(self.signal);
+        let rebuilt = match self.tree.as_mut() {
+            None => 0,
+            Some(tree) => {
+                tree.update_dirty(&self.dirty, self.signal, &self.stats, self.engine.exec())
+            }
+        };
+        self.dirty.clear();
+        rebuilt
     }
 
     /// Partial coreset of `region` (signal-frame blocks; the shard
@@ -301,6 +402,118 @@ impl<S: SignalSource> EngineSession<'_, S> {
     }
 }
 
+/// An **owned-signal** session for mutating workloads: edit cells in
+/// place, then refresh the standing coreset incrementally — only the
+/// merge-tree leaves intersecting the dirty regions are rebuilt (on the
+/// engine pool); clean leaves and their memoized compositions are
+/// reused. Created by [`Engine::edit_session`].
+///
+/// The statistics are rebuilt in full on every refresh (prefix sums are
+/// global — O(N) but cheap); the savings come from skipping the
+/// O(N·k) bicriteria → partition → Caratheodory pipeline on every
+/// clean leaf. See DESIGN.md §Merge tree for the cost model.
+pub struct EditSession<'e> {
+    engine: &'e Engine,
+    signal: Signal,
+    stats: PrefixStats,
+    tree: MergeTree<'static>,
+    dirty: Vec<Rect>,
+}
+
+impl EditSession<'_> {
+    /// The engine this session runs on.
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+
+    /// The owned signal in its current (possibly edited) state.
+    pub fn signal(&self) -> &Signal {
+        &self.signal
+    }
+
+    /// The shared statistics of the last refreshed state. Stale while
+    /// edits are pending; [`EditSession::refresh`] reconciles.
+    pub fn stats(&self) -> &PrefixStats {
+        &self.stats
+    }
+
+    /// Leaf coresets built by the standing tree so far (initial build +
+    /// every incremental rebuild) — the counter incremental tests and
+    /// the `update` CLI report.
+    pub fn leaf_builds(&self) -> usize {
+        self.tree.leaf_builds()
+    }
+
+    /// Set one cell and mark it dirty.
+    pub fn set(&mut self, r: usize, c: usize, value: f64) {
+        self.signal.set(r, c, value);
+        self.dirty.push(Rect::new(r, r, c, c));
+    }
+
+    /// Apply `f(r, c, old) -> new` over every **present** cell of
+    /// `rect` and mark the rectangle dirty.
+    pub fn edit(&mut self, rect: Rect, mut f: impl FnMut(usize, usize, f64) -> f64) {
+        for (r, c) in rect.cells() {
+            if self.signal.is_present(r, c) {
+                let old = self.signal.get(r, c);
+                self.signal.set(r, c, f(r, c, old));
+            }
+        }
+        self.dirty.push(rect);
+    }
+
+    /// Mark `rect` dirty without editing through the session (the cells
+    /// were changed by other means before the signal was handed over,
+    /// or the caller wants a forced leaf rebuild).
+    pub fn invalidate(&mut self, rect: Rect) {
+        self.dirty.push(rect);
+    }
+
+    /// [`EditSession::invalidate`] + immediate [`EditSession::refresh`];
+    /// returns the number of tree leaves rebuilt.
+    pub fn update_region(&mut self, rect: Rect) -> usize {
+        self.invalidate(rect);
+        self.refresh()
+    }
+
+    /// Fold all pending edits into the session state: one full
+    /// statistics rebuild on the engine pool, then rebuild exactly the
+    /// tree leaves intersecting the dirty regions. Returns the number
+    /// of leaves rebuilt (0 when nothing was pending).
+    pub fn refresh(&mut self) -> usize {
+        if self.dirty.is_empty() {
+            return 0;
+        }
+        self.stats = self.engine.stats(&self.signal);
+        let rebuilt =
+            self.tree
+                .update_dirty(&self.dirty, &self.signal, &self.stats, self.engine.exec());
+        self.dirty.clear();
+        rebuilt
+    }
+
+    /// The standing merge tree (pending edits folded in first).
+    pub fn coreset_tree(&mut self) -> &mut MergeTree<'static> {
+        self.refresh();
+        &mut self.tree
+    }
+
+    /// The (k, ε)-coreset of the signal's current state — incremental:
+    /// pending edits are folded in ([`EditSession::refresh`]) and the
+    /// memoized root recomposed; clean leaves are never rebuilt.
+    pub fn coreset(&mut self) -> SignalCoreset {
+        self.refresh();
+        self.tree.full()
+    }
+
+    /// Exact loss ℓ(D, s) of the signal's current state (pending edits
+    /// folded in first).
+    pub fn exact_loss(&mut self, s: &KSegmentation) -> f64 {
+        self.refresh();
+        s.loss(&self.stats)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -329,6 +542,77 @@ mod tests {
             // The session path shares one stats object and still agrees.
             assert_same_coreset(&engine.session(&sig).coreset(), &reference, "session");
         }
+        // merge_fanout is memoization shape only: any value, same bits.
+        for fanout in [3, 8] {
+            let engine = Engine::new(
+                EngineConfig::new(4, 0.3).with_threads(2).with_merge_fanout(fanout),
+            )
+            .unwrap();
+            assert_same_coreset(&engine.coreset(&sig), &reference, "fanout");
+            let mut session = engine.session(&sig);
+            assert_same_coreset(&session.coreset_tree().full(), &reference, "fanout tree");
+        }
+    }
+
+    #[test]
+    fn edit_session_rebuilds_only_dirty_leaves() {
+        let mut rng = Rng::new(76);
+        let sig = generate::smooth(256, 32, 3, &mut rng);
+        let engine = Engine::new(EngineConfig::new(4, 0.3).with_threads(2)).unwrap();
+        let mut session = engine.edit_session(sig.clone());
+        let leaves = session.coreset_tree().leaf_count();
+        assert!(leaves >= 4);
+        assert_eq!(session.leaf_builds(), leaves);
+        assert_same_coreset(&session.coreset(), &engine.coreset(&sig), "pre-edit");
+
+        // Edit one tile inside the first shard; only that leaf rebuilds.
+        let tile = Rect::new(4, 11, 2, 9);
+        session.edit(tile, |_, _, v| v + 5.0);
+        let cs = session.coreset();
+        assert_eq!(session.leaf_builds(), leaves + 1, "one dirty leaf");
+
+        // The incremental coreset matches a from-scratch build of the
+        // mutated signal at tolerance level (stats ULPs can flip
+        // partition decisions, so bit-equality is not guaranteed).
+        let mut mutated = sig.clone();
+        for (r, c) in tile.cells() {
+            let v = mutated.get(r, c);
+            mutated.set(r, c, v + 5.0);
+        }
+        let scratch = engine.coreset(&mutated);
+        let cells = mutated.present() as f64;
+        assert!((cs.total_weight() - cells).abs() < 1e-6 * cells);
+        assert!((cs.total_weight() - scratch.total_weight()).abs() < 1e-6 * cells);
+        let stats = PrefixStats::new(&mutated);
+        let mut s = random_segmentation(mutated.bounds(), 4, &mut rng);
+        s.refit_values(&stats);
+        let exact = s.loss(&stats);
+        assert!((cs.fitting_loss(&s) - exact).abs() <= 0.35 * exact + 1e-6);
+        assert!((scratch.fitting_loss(&s) - exact).abs() <= 0.35 * exact + 1e-6);
+
+        // A clean refresh is free; update_region forces a leaf rebuild.
+        assert_eq!(session.refresh(), 0);
+        assert_eq!(session.update_region(Rect::new(0, 0, 0, 0)), 1);
+        assert_eq!(session.leaf_builds(), leaves + 2);
+    }
+
+    #[test]
+    fn session_invalidate_defers_and_coreset_tree_reconciles() {
+        let mut rng = Rng::new(77);
+        let sig = generate::smooth(192, 24, 3, &mut rng);
+        let engine = Engine::new(EngineConfig::new(3, 0.3).with_threads(2)).unwrap();
+        let mut session = engine.session(&sig);
+        let reference = engine.coreset(&sig);
+        assert_same_coreset(&session.coreset_tree().full(), &reference, "tree");
+        // No tree materialized yet → update_region reports 0 rebuilds…
+        let mut fresh = engine.session(&sig);
+        assert_eq!(fresh.update_region(Rect::new(0, 10, 0, 10)), 0);
+        // …but once standing, an (unchanged-signal) invalidation rebuilds
+        // the intersecting leaves and the root still agrees.
+        session.invalidate(Rect::new(0, 10, 0, 10));
+        let rebuilt = session.update_region(Rect::new(64, 70, 0, 5));
+        assert!(rebuilt >= 2, "two dirty rects hit >= 2 leaves ({rebuilt})");
+        assert_same_coreset(&session.coreset_tree().full(), &reference, "post-update");
     }
 
     #[test]

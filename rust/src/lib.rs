@@ -22,7 +22,9 @@
 //!   (Algorithms 1–2).
 //! * [`coreset`] — the headline (k, ε)-coreset construction (Algorithm 3),
 //!   the FITTING-LOSS evaluator (Algorithm 5), Caratheodory compression,
-//!   uniform-sampling baseline, and streaming merge-and-reduce.
+//!   uniform-sampling baseline, and the persistent merge-and-reduce
+//!   tree ([`coreset::merge_tree::MergeTree`]) behind the sharded
+//!   build, streaming ingestion, and dirty-region incremental updates.
 //! * [`tree`] — weighted CART regression trees, random forests and
 //!   gradient-boosted trees (the sklearn / LightGBM substitutes that
 //!   consume the coreset).
@@ -112,7 +114,7 @@ pub mod proptest;
 pub mod prelude {
     pub use crate::audit::{run_audit, AuditConfig, AuditReport};
     pub use crate::coreset::{Coreset, SignalCoreset, WeightedPoint};
-    pub use crate::engine::{BackendChoice, Engine, EngineConfig, EngineSession};
+    pub use crate::engine::{BackendChoice, EditSession, Engine, EngineConfig, EngineSession};
     pub use crate::rng::Rng;
     pub use crate::segmentation::KSegmentation;
     pub use crate::signal::{PrefixStats, Rect, Signal, SignalSource, SignalView};

@@ -15,6 +15,8 @@
 //!   families + optimal-tree-transfer checks, JSON evidence trail.
 //! * `experiment` — the paper's §5 missing-values experiment.
 //! * `tune`       — hyperparameter sweep on full data vs coreset.
+//! * `update`     — incremental-rebuild demo: seeded tile edits through an
+//!   [`sigtree::engine::EditSession`], incremental vs from-scratch timings.
 //! * `runtime`    — run kernel-backend parity checks (`--backend native|pjrt`).
 //! * `help`       — this text.
 
@@ -40,6 +42,7 @@ fn main() -> ExitCode {
         "audit" => cmd_audit(&args),
         "experiment" => cmd_experiment(&args),
         "tune" => cmd_tune(&args),
+        "update" => cmd_update(&args),
         "runtime" => cmd_runtime(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -72,6 +75,7 @@ fn print_help() {
            audit       --k 5 --eps 0.5 --cases 25 --seed 7 [--transfer-instances 4] [--json audit.json]\n\
            experiment  --dataset air|gesture --scale 0.1 --k 200 --eps 0.3 [--solver forest|gbdt]\n\
            tune        --dataset air|gesture --scale 0.1 --grid 8 --eps 0.3\n\
+           update      --n 512 --m 512 --k 64 --eps 0.2 --edits 8 --tile 64\n\
            runtime     [--backend native|pjrt] [--dir artifacts]\n\
            help\n\
          \n\
@@ -83,6 +87,10 @@ fn print_help() {
                             (default: the practical gamma = eps/2).\n\
            --band-rows R    rows per streamed band (pipeline/stream).\n\
            --shard-rows R   rows per build shard (default 64).\n\
+           --merge-fanout F merge-tree fanout (>= 2; memoization shape only,\n\
+                            never changes the composed coreset's bits).\n\
+           --reduce-tol T   override the root reduce tolerance (default:\n\
+                            the guarantee-preserving gamma^2*sigma).\n\
            --backend NAME   kernel backend: native (default) or pjrt.\n\
            --dir PATH       artifacts directory for the pjrt backend.\n\
            --seed S         base seed (decimal or 0x-hex).\n\
@@ -115,7 +123,18 @@ fn cmd_coreset(args: &Args) -> Result<()> {
     // non-banded build) is the silent-ignore failure mode expect_only
     // exists to prevent, so every list below is consumed-knobs-only.
     args.expect_only(&[
-        "k", "eps", "beta", "threads", "shard-rows", "seed", "config", "n", "m", "signal",
+        "k",
+        "eps",
+        "beta",
+        "threads",
+        "shard-rows",
+        "merge-fanout",
+        "reduce-tol",
+        "seed",
+        "config",
+        "n",
+        "m",
+        "signal",
     ])?;
     // Historical default: a bare `coreset` ran single-threaded; the
     // sharded engine build is bit-identical at any thread count, so
@@ -333,6 +352,100 @@ fn cmd_tune(args: &Args) -> Result<()> {
     println!(
         "speedup (full/coreset tuning time): x{:.1}",
         full.total_time.as_secs_f64() / core.total_time.as_secs_f64().max(1e-9)
+    );
+    Ok(())
+}
+
+/// Incremental-rebuild demo: drive a seeded sequence of tile edits
+/// through an [`sigtree::engine::EditSession`] and report the
+/// amortized incremental cost (dirty-leaf rebuild + O(log S) re-merge)
+/// against a from-scratch rebuild of the mutated signal.
+fn cmd_update(args: &Args) -> Result<()> {
+    args.expect_only(&[
+        "k",
+        "eps",
+        "beta",
+        "threads",
+        "shard-rows",
+        "merge-fanout",
+        "reduce-tol",
+        "seed",
+        "config",
+        "n",
+        "m",
+        "signal",
+        "edits",
+        "tile",
+    ])?;
+    let engine =
+        Engine::new(EngineConfig::from_args(args, EngineConfig::new(64, 0.2).with_threads(1))?)?;
+    let mut rng = Rng::new(engine.config().seed);
+    let signal = make_signal(args, &mut rng)?;
+    let edits = args.get_usize("edits", 8)?;
+    let tile = args.get_usize("tile", 64)?.max(1);
+    let th = tile.min(signal.rows());
+    let tw = tile.min(signal.cols());
+
+    let t0 = std::time::Instant::now();
+    let mut session = engine.edit_session(signal);
+    let built = t0.elapsed();
+    let initial_builds = session.leaf_builds();
+    println!(
+        "session: {} leaves over {}x{}, tree height {}, initial build {:?}",
+        session.coreset_tree().leaf_count(),
+        session.signal().rows(),
+        session.signal().cols(),
+        session.coreset_tree().height(),
+        built
+    );
+
+    // Seeded edit loop: each iteration bumps one random tile by a
+    // Gaussian offset, then re-derives the root coreset incrementally
+    // (only leaves intersecting the tile are rebuilt).
+    let mut incremental = std::time::Duration::ZERO;
+    for edit in 0..edits {
+        let r0 = rng.usize(session.signal().rows() - th + 1);
+        let c0 = rng.usize(session.signal().cols() - tw + 1);
+        let rect = Rect::new(r0, r0 + th - 1, c0, c0 + tw - 1);
+        let delta = rng.normal();
+        let before = session.leaf_builds();
+        session.edit(rect, |_, _, v| v + delta);
+        let t = std::time::Instant::now();
+        let cs = session.coreset();
+        let took = t.elapsed();
+        incremental += took;
+        println!(
+            "edit {edit}: tile {rect:?} delta {delta:+.3} -> {} leaf rebuilds, {} blocks, {took:?}",
+            session.leaf_builds() - before,
+            cs.blocks.len()
+        );
+    }
+    let rebuilt_leaves = session.leaf_builds() - initial_builds;
+
+    // From-scratch rebuild of the *mutated* signal for comparison: the
+    // incremental coreset matches it at the reduce-tolerance level and
+    // carries the identical total weight (block moments are exact).
+    let t1 = std::time::Instant::now();
+    let scratch = engine.coreset(session.signal());
+    let scratch_time = t1.elapsed();
+    let cs = session.coreset();
+    let (w_inc, w_scr) = (cs.total_weight(), scratch.total_weight());
+    if (w_inc - w_scr).abs() > 1e-6 * (1.0 + w_scr) {
+        return Err(Error::msg(format!(
+            "incremental/from-scratch weight mismatch: {w_inc} vs {w_scr}"
+        )));
+    }
+    let per_edit = incremental.as_secs_f64() / edits.max(1) as f64;
+    println!(
+        "{edits} edits: {rebuilt_leaves} leaf rebuilds total, incremental {:.3} ms/edit vs from-scratch {:.3} ms (speedup x{:.1})",
+        1e3 * per_edit,
+        1e3 * scratch_time.as_secs_f64(),
+        scratch_time.as_secs_f64() / per_edit.max(1e-9)
+    );
+    println!(
+        "weights agree: incremental {w_inc:.1} vs from-scratch {w_scr:.1} ({} vs {} blocks)",
+        cs.blocks.len(),
+        scratch.blocks.len()
     );
     Ok(())
 }

@@ -8,8 +8,10 @@
 //!   source blocks when workers lag),
 //! * **workers** (std::thread; tokio is unavailable offline) pull bands
 //!   work-stealing-style and build partial coresets,
-//! * a **reducer** merges partial coresets in stream order and
-//!   periodically re-compacts via [`crate::coreset::merge_reduce::reduce`],
+//! * a **reducer** folds partial coresets in completion order through a
+//!   [`crate::coreset::merge_tree::MergeTree`] (the same structure behind
+//!   [`crate::coreset::merge_reduce::StreamingCoreset`]), periodically
+//!   re-compacting via [`crate::coreset::merge_reduce::reduce`],
 //! * **metrics** track queue depths, per-stage latency, and throughput.
 //!
 //! Two entry points with different ownership models (DESIGN.md §Views &
@@ -30,7 +32,7 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Instant;
 
-use crate::coreset::merge_reduce::{self, offset_rows};
+use crate::coreset::merge_tree::MergeTree;
 use crate::coreset::{CoresetConfig, SignalCoreset};
 use crate::signal::{PrefixStats, Rect, Signal, SignalSource};
 
@@ -86,10 +88,12 @@ struct BandJob {
     band: Signal,
 }
 
-/// A worker result: sequence number + the band's (offset) coreset.
+/// A worker result: sequence number, the band's rectangle in global
+/// coordinates, and its coreset.
 #[allow(dead_code)] // seq kept for debugging / ordered-merge variants
 struct BandResult {
     seq: usize,
+    rect: Rect,
     coreset: SignalCoreset,
 }
 
@@ -148,7 +152,7 @@ pub fn run_with_stats<S: SignalSource>(
                 let t0 = Instant::now();
                 let cs = SignalCoreset::construct_in(signal, stats, rect, ccfg);
                 met.record_build(t0.elapsed(), rect.area());
-                if tx.send(BandResult { seq, coreset: cs }).is_err() {
+                if tx.send(BandResult { seq, rect, coreset: cs }).is_err() {
                     break;
                 }
             });
@@ -220,9 +224,18 @@ pub fn run_streaming(
                 let Ok(job) = job else { break };
                 let t0 = Instant::now();
                 let cs = SignalCoreset::construct_with(&job.band, ccfg);
-                let cs = offset_rows(cs, job.row_offset);
+                let cs = crate::coreset::merge_tree::translate_rows(cs, job.row_offset);
+                let rect = Rect::new(
+                    job.row_offset,
+                    job.row_offset + job.band.rows() - 1,
+                    0,
+                    job.band.cols() - 1,
+                );
                 met.record_build(t0.elapsed(), job.band.len());
-                if tx.send(BandResult { seq: job.seq, coreset: cs }).is_err() {
+                if tx
+                    .send(BandResult { seq: job.seq, rect, coreset: cs })
+                    .is_err()
+                {
                     break;
                 }
             });
@@ -267,50 +280,37 @@ impl Reducer {
     }
 
     fn drain(self, rx: Receiver<BandResult>) -> SignalCoreset {
-        let mut acc: Option<SignalCoreset> = None;
+        // The completion-order fold lives in the merge tree — the same
+        // structure behind StreamingCoreset — configured with the
+        // pipeline's reduce factor and its first-band passthrough guard
+        // (a single band's coreset is already the batch answer and must
+        // pass through unchanged: the degenerate-equivalence invariant).
+        let mut tree = MergeTree::for_stream(self.m, self.config.coreset)
+            .with_reduce_factor(self.config.reduce_factor)
+            .with_first_part_passthrough();
         let mut rows_total = 0usize;
-        let mut last_reduced = 64usize;
-        let mut bands_merged = 0usize;
         for res in rx {
             let t0 = Instant::now();
             rows_total += res.coreset.rows();
-            bands_merged += 1;
-            let merged = match acc.take() {
-                None => res.coreset,
-                Some(a) => merge_reduce::merge(vec![a, res.coreset]),
-            };
-            // Reduce only once composition has actually happened — a
-            // single band's coreset is already the batch answer and must
-            // pass through unchanged (degenerate-equivalence invariant).
-            let merged = if bands_merged > 1
-                && merged.blocks.len() as f64
-                    > self.config.reduce_factor * last_reduced as f64
-            {
-                let tol = merged.gamma * merged.gamma * merged.sigma;
-                let reduced = merge_reduce::reduce(merged, tol);
-                last_reduced = reduced.blocks.len().max(64);
+            if tree.push_part(res.rect, res.coreset) {
                 self.metrics.record_reduce();
-                reduced
-            } else {
-                merged
-            };
+            }
             self.metrics.record_merge(t0.elapsed());
-            acc = Some(merged);
         }
-        let mut cs = acc.unwrap_or_else(|| {
+        let cs = tree.into_streamed().unwrap_or_else(|_| {
+            // Empty stream: the documented empty coreset.
             SignalCoreset::from_blocks(0, self.m, self.config.coreset, 0.0, 1.0, Vec::new())
         });
         // Fix the row count (merge() sums band heights; completion order
         // may interleave, the sum is invariant).
-        cs = SignalCoreset::from_blocks(
+        SignalCoreset::from_blocks(
             rows_total,
             self.m,
             cs.config,
             cs.sigma,
             cs.gamma,
             cs.blocks,
-        );
-        cs
+        )
     }
 }
 

@@ -1,0 +1,269 @@
+//! Merge-tree acceptance suite — the tentpole's contract, end to end.
+//!
+//! Four properties, each pinned at several thread counts:
+//!
+//! 1. **Compatibility**: `MergeTree::full()` is bit-identical to
+//!    `construct_sharded_exec` for the same shard plan, for every
+//!    fanout and thread count (the fanout is memoization shape only).
+//! 2. **Incrementality**: `update(dirty)` rebuilds exactly the leaves
+//!    intersecting the dirty region (build-counter assertion), and the
+//!    updated coreset is equivalent to a from-scratch rebuild of the
+//!    mutated signal at the `reduce`-tolerance level — identical
+//!    present mass, both within the fitting-loss tolerance of the
+//!    exact oracle.
+//! 3. **Guarantee under mutation**: after a 20-edit seeded mutation
+//!    sequence applied incrementally, the root coreset still passes
+//!    the ε-audit query sweep against the mutated signal.
+//! 4. **Streaming**: the `StreamingCoreset` facade is bit-identical to
+//!    driving the tree's `push_band` directly and to its own
+//!    multi-threaded configuration, and the tree's height stays
+//!    logarithmic in the number of pushed bands.
+
+use sigtree::audit::build_queries;
+use sigtree::coreset::fitting_loss::relative_error;
+use sigtree::coreset::merge_reduce::StreamingCoreset;
+use sigtree::coreset::merge_tree::MergeTree;
+use sigtree::coreset::{Coreset, CoresetConfig, SignalCoreset};
+use sigtree::par::Exec;
+use sigtree::rng::Rng;
+use sigtree::segmentation::random_segmentation;
+use sigtree::signal::{generate, PrefixStats, Rect, Signal};
+
+/// Assert two coresets are bitwise equal (blocks, labels, weights).
+fn assert_bit_identical(a: &SignalCoreset, b: &SignalCoreset, ctx: &str) {
+    assert_eq!(a.blocks.len(), b.blocks.len(), "{ctx}: block count");
+    for (x, y) in a.blocks.iter().zip(&b.blocks) {
+        assert_eq!(x.rect, y.rect, "{ctx}");
+        assert_eq!(x.labels, y.labels, "{ctx}");
+        assert_eq!(x.weights, y.weights, "{ctx}");
+    }
+}
+
+/// The three signal regimes the incremental contract must hold on:
+/// shard-aligned rows, ragged rows, and masked cells.
+fn regimes() -> Vec<(&'static str, Signal)> {
+    let mut rng = Rng::new(600);
+    let aligned = generate::smooth(256, 32, 3, &mut rng); // 256 = 4 × 64-row shards
+    let ragged = generate::image_like(210, 28, 3, &mut rng); // 210 → ragged last shard
+    let mut masked = generate::smooth(192, 24, 3, &mut rng);
+    masked.mask_rect(Rect::new(40, 80, 3, 15));
+    masked.mask_rect(Rect::new(130, 191, 0, 5));
+    vec![("aligned", aligned), ("ragged", ragged), ("masked", masked)]
+}
+
+#[test]
+fn full_is_bit_identical_to_construct_sharded_at_every_thread_count() {
+    let config = CoresetConfig::new(4, 0.3);
+    for (name, sig) in regimes() {
+        let reference = SignalCoreset::construct_sharded_exec(&sig, config, 64, Exec::Spawn(1));
+        for threads in [1, 2, 4, 8] {
+            let exec = Exec::Spawn(threads);
+            let sharded = SignalCoreset::construct_sharded_exec(&sig, config, 64, exec);
+            assert_bit_identical(&sharded, &reference, &format!("{name} sharded {threads}T"));
+            for fanout in [2, 3, 7] {
+                let stats = PrefixStats::new(&sig);
+                let mut tree =
+                    MergeTree::build(&sig, &stats, config, 64, exec).with_fanout(fanout);
+                assert_bit_identical(
+                    &tree.full(),
+                    &reference,
+                    &format!("{name} tree {threads}T fanout {fanout}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn update_rebuilds_only_leaves_intersecting_dirty() {
+    // The build-counter acceptance test: a one-tile edit rebuilds
+    // exactly the leaves whose shard rect intersects the tile.
+    let mut rng = Rng::new(601);
+    let mut sig = generate::smooth(256, 32, 3, &mut rng);
+    let config = CoresetConfig::new(4, 0.3);
+    let stats = PrefixStats::new(&sig);
+    let mut tree = MergeTree::build(&sig, &stats, config, 64, Exec::Spawn(2));
+    let leaves = tree.leaf_count();
+    assert!(leaves >= 4, "plan must produce several shards");
+    assert_eq!(tree.leaf_builds(), leaves);
+
+    // A tile inside the second shard (rows 64..128) only.
+    let dirty = Rect::new(70, 90, 4, 20);
+    let expected: usize =
+        tree.leaf_rects().iter().filter(|r| r.intersects(&dirty)).count();
+    assert_eq!(expected, 1, "tile chosen to hit exactly one shard");
+    for (r, c) in dirty.cells() {
+        sig.set(r, c, sig.get(r, c) + 3.0);
+    }
+    let stats = PrefixStats::new(&sig);
+    let rebuilt = tree.update(dirty, &sig, &stats, Exec::Spawn(2));
+    assert_eq!(rebuilt, 1);
+    assert_eq!(tree.leaf_builds(), leaves + 1);
+
+    // A shard-straddling rect rebuilds both its leaves, nothing else.
+    let straddle = Rect::new(120, 135, 0, 31);
+    for (r, c) in straddle.cells() {
+        sig.set(r, c, sig.get(r, c) - 1.0);
+    }
+    let stats = PrefixStats::new(&sig);
+    let rebuilt = tree.update(straddle, &sig, &stats, Exec::Spawn(2));
+    assert_eq!(rebuilt, 2);
+    assert_eq!(tree.leaf_builds(), leaves + 3);
+}
+
+#[test]
+fn incremental_update_matches_from_scratch_within_tolerance() {
+    // Incremental-vs-from-scratch equivalence at the reduce-tolerance
+    // level, on all three regimes, at 1/2/4/8 threads: identical
+    // present mass (block moments are exact), identical bits across
+    // thread counts, and both coresets within the fitting-loss
+    // tolerance of the exact oracle on a random query sweep.
+    let config = CoresetConfig::new(4, 0.3);
+    for (name, base) in regimes() {
+        let dirty = Rect::new(33, 71, 2, base.cols() - 3);
+        let mut mutated = base.clone();
+        for (r, c) in dirty.cells() {
+            if mutated.is_present(r, c) {
+                mutated.set(r, c, mutated.get(r, c) + 2.5);
+            }
+        }
+        let stats2 = PrefixStats::new(&mutated);
+        let mut reference: Option<SignalCoreset> = None;
+        for threads in [1, 2, 4, 8] {
+            let exec = Exec::Spawn(threads);
+            let stats = PrefixStats::new(&base);
+            let mut tree = MergeTree::build(&base, &stats, config, 64, exec);
+            tree.update(dirty, &mutated, &stats2, exec);
+            let updated = tree.full();
+            match &reference {
+                None => reference = Some(updated.clone()),
+                Some(r) => {
+                    assert_bit_identical(&updated, r, &format!("{name} update {threads}T"))
+                }
+            }
+            let scratch = SignalCoreset::construct_sharded_exec(&mutated, config, 64, exec);
+            let (w_upd, w_scr) = (updated.total_weight(), scratch.total_weight());
+            assert!(
+                (w_upd - w_scr).abs() <= 1e-6 * (1.0 + w_scr),
+                "{name} {threads}T: weight {w_upd} vs {w_scr}"
+            );
+            let mut qrng = Rng::new(602);
+            for _ in 0..10 {
+                let mut s = random_segmentation(mutated.bounds(), 4, &mut qrng);
+                s.refit_values(&stats2);
+                let exact = s.loss(&stats2);
+                for (which, cs) in [("updated", &updated), ("scratch", &scratch)] {
+                    let approx = cs.fitting_loss(&s);
+                    assert!(
+                        (approx - exact).abs() <= 0.35 * exact + 1e-6,
+                        "{name} {threads}T {which}: {approx} vs {exact}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn eps_audit_passes_after_twenty_seeded_edits() {
+    // The guarantee under mutation: 20 seeded rect edits applied
+    // incrementally, then the audit's structured query sweep on the
+    // mutated signal — every gated family within its threshold.
+    let mut rng = Rng::new(603);
+    let mut sig = generate::smooth(180, 24, 3, &mut rng);
+    let k = 4;
+    let eps = 0.5;
+    let config = CoresetConfig::new(k, eps);
+    let mut stats = PrefixStats::new(&sig);
+    let mut tree = MergeTree::build(&sig, &stats, config, 36, Exec::Spawn(2));
+    assert!(tree.leaf_count() >= 4);
+    for _ in 0..20 {
+        let h = 1 + rng.usize(10);
+        let w = 1 + rng.usize(10);
+        let r0 = rng.usize(180 - h + 1);
+        let c0 = rng.usize(24 - w + 1);
+        let rect = Rect::new(r0, r0 + h - 1, c0, c0 + w - 1);
+        let delta = rng.normal_ms(0.0, 1.5);
+        for (r, c) in rect.cells() {
+            sig.set(r, c, sig.get(r, c) + delta);
+        }
+        stats = PrefixStats::new(&sig);
+        tree.update(rect, &sig, &stats, Exec::Spawn(2));
+    }
+    let updated = tree.full();
+    let (families, queries) =
+        build_queries(sig.bounds(), &stats, &updated, None, k, false, &mut rng);
+    let approx = updated.fitting_loss_batch(&queries, 2);
+    for ((family, q), a) in families.iter().zip(&queries).zip(approx) {
+        let err = relative_error(a, q.loss(&stats));
+        if let Some(threshold) = family.threshold(eps) {
+            assert!(
+                err <= threshold,
+                "family {} rel err {err} > {threshold} after 20 incremental edits",
+                family.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn streaming_facade_is_bit_identical_across_entry_points() {
+    // Band-aligned input: the facade, its multi-threaded configuration,
+    // and driving the tree's push_band directly all stream the same
+    // bits — StreamingCoreset really is a thin view over MergeTree.
+    let mut rng = Rng::new(604);
+    let sig = generate::smooth(256, 20, 3, &mut rng);
+    let config = CoresetConfig::new(3, 0.3);
+    let mut facade = StreamingCoreset::new(20, config);
+    let mut threaded = StreamingCoreset::new(20, config).with_threads(4);
+    let mut tree = MergeTree::for_stream(20, config);
+    let mut r0 = 0;
+    while r0 < 256 {
+        let band = Rect::new(r0, (r0 + 63).min(255), 0, 19);
+        facade.push_band(&sig.crop(band));
+        threaded.push_band(&sig.crop(band));
+        tree.push_band(&sig.crop(band));
+        r0 = band.r1 + 1;
+    }
+    let a = facade.finish().expect("bands were pushed");
+    let b = threaded.finish().expect("bands were pushed");
+    let c = tree.into_streamed().expect("bands were pushed");
+    assert_bit_identical(&a, &b, "facade vs threaded facade");
+    assert_bit_identical(&a, &c, "facade vs raw tree");
+}
+
+#[test]
+fn streamed_height_stays_logarithmic() {
+    // N pushed bands memoize into a tree of height ⌈log_fanout N⌉ —
+    // the unbounded-streaming shape guarantee.
+    let mut rng = Rng::new(605);
+    let sig = generate::smooth(320, 12, 3, &mut rng);
+    let config = CoresetConfig::new(3, 0.35);
+    let mut tree = MergeTree::for_stream(12, config);
+    let mut pushed = 0usize;
+    let mut r0 = 0;
+    while r0 < 320 {
+        let band = Rect::new(r0, (r0 + 9).min(319), 0, 11);
+        tree.push_band(&sig.crop(band));
+        pushed += 1;
+        let bound = usize::BITS as usize - (pushed.max(1) - 1).leading_zeros() as usize;
+        assert!(
+            tree.height() <= bound.max(1),
+            "height {} after {pushed} pushes exceeds ceil(log2) = {bound}",
+            tree.height()
+        );
+        r0 = band.r1 + 1;
+    }
+    assert_eq!(pushed, 32);
+    assert_eq!(tree.height(), 5); // ceil(log2 32)
+}
+
+#[test]
+fn empty_stream_finish_is_a_typed_error() {
+    let config = CoresetConfig::new(3, 0.3);
+    let err = StreamingCoreset::new(16, config).finish().unwrap_err();
+    assert!(
+        err.to_string().contains("empty stream"),
+        "unexpected error text: {err}"
+    );
+}

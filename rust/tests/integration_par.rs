@@ -128,9 +128,12 @@ fn build_par_masked_signal() {
     for b in &reference.blocks {
         assert!(b.total_weight() > 0.0, "empty block survived: {:?}", b.rect);
     }
-    // compression_ratio must divide by present cells (satellite fix).
-    let expected = reference.stored_points() as f64 / reference.total_weight();
+    // compression_ratio divides the deduplicated positive-weight support
+    // by present cells — not the 4-slot storage footprint, which
+    // double-counts coincident thin-block corners on merged coresets.
+    let expected = reference.support_cells() as f64 / reference.total_weight();
     assert!((reference.compression_ratio() - expected).abs() < 1e-12);
+    assert!(reference.support_cells() <= reference.stored_points());
 }
 
 #[test]

@@ -11,6 +11,12 @@ cargo clippy --all-targets -- -D warnings
 
 cargo build --release
 cargo test -q
+# Merge-tree acceptance suite, named explicitly: bit-identity of
+# MergeTree::full() with construct_sharded_exec, dirty-leaf-only
+# updates, the ε-audit after a seeded mutation sequence, and the
+# streaming facade (redundant with `cargo test` above, but this is the
+# tentpole's contract — a rename or filter must not silently drop it).
+cargo test -q --test integration_merge_tree
 cargo build --examples
 
 # Docs gate: deprecation notes and intra-doc links (the engine migration
@@ -27,6 +33,11 @@ cargo run --release -- coreset --k 5 --eps 0.4 --threads 2
 # Multi-thread smoke: exercises the engine pool paths (sharded build,
 # pool-built prefix stats) plus the kernel parity checks.
 cargo run --release -- runtime --backend native --threads 2
+
+# Incremental-update smoke: seeded tile edits through an EditSession —
+# fails non-zero if the updated coreset's weight drifts from a
+# from-scratch rebuild of the mutated signal.
+cargo run --release -- update --n 256 --m 256 --k 16 --eps 0.3 --edits 4 --tile 64 --threads 2
 
 # Empirical ε-guarantee audit (fixed seed): adversarial query families +
 # optimal-tree-transfer checks; exits non-zero on any violated gate and
