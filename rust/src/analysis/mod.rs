@@ -1,0 +1,499 @@
+//! Static analysis for the crate's own sources: the determinism &
+//! panic-freedom lint behind `sigtree lint`.
+//!
+//! The paper's guarantee (PAPER.md, Theorem 10) and the repo's standing
+//! bit-identity constraint (ROADMAP) are enforced *dynamically* by the
+//! [`crate::audit`] engine and the differential integration suites. This
+//! module adds the missing *static* layer: a std-only, hand-rolled pass
+//! over `rust/src/**` (comment/string-aware line scanner, no external
+//! crates — the same offline discipline as [`crate::json`]) that denies
+//! the constructs those dynamic checks cannot see until they fire:
+//!
+//! * `panic` — `.unwrap()` / `.expect(..)` / `panic!`-family in non-test
+//!   library code. Serving-grade engines return [`crate::error::Result`].
+//! * `det-order` / `det-clock` / `det-thread` — `HashMap`/`HashSet`,
+//!   wall-clock / thread-id / env reads, and raw `std::thread` inside
+//!   the deterministic modules ([`DETERMINISTIC_MODULES`]). Float
+//!   reductions must go through the order-preserving
+//!   [`crate::par::parallel_map`] / left-fold idiom; raw threads are how
+//!   nondeterministic reduction orders sneak in.
+//! * `unsafe-safety` — every `unsafe` needs an adjacent `// SAFETY:`.
+//! * `error-discipline` — public fns must not return `Result<_, String>`
+//!   (the PR-6 `StreamingCoreset::finish` lesson, generalized).
+//! * `shim-delegation` — `#[deprecated]` `build*` shims must still
+//!   delegate to their `construct*` twins.
+//! * `allow-hygiene` — escape hatches must be well-formed and earn
+//!   their keep.
+//! * `index-hot` (opt-in) — advisory indexing check in hot modules.
+//!
+//! Any match can be waived inline with
+//! `// lint:allow(<rule>) -- <reason>` on the same line or in the
+//! comment block directly above; the directive must open its comment
+//! (mid-sentence mentions are prose), a reason is mandatory, and a
+//! waiver that suppresses nothing is itself a finding. Reports are
+//! deterministic: sorted walk order, relative paths, no timestamps —
+//! byte-identical across runs by construction.
+
+mod rules;
+mod scanner;
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::cli::Args;
+use crate::error::{Context, Result};
+use crate::json::Json;
+use crate::{bail, ensure};
+
+pub use rules::{is_test_path, rule_id, RuleInfo, DETERMINISTIC_MODULES, RULES};
+
+/// One lint finding: rule, file (relative to the lint root, `/`
+/// separators), 1-based line, and a human-readable message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// Configuration for one lint run. Layering matches the engine config:
+/// CLI flags override the `--config` file, which overrides defaults
+/// ([`RULES`]); in the shared JSON config file the knobs live under a
+/// `"lint"` key next to the engine keys (see
+/// [`crate::engine::EngineConfig`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LintConfig {
+    /// Directory to scan; `None` auto-detects `rust/src` then `src`.
+    pub root: Option<String>,
+    /// Rules to force on (wins over `disable`; turns on opt-in rules).
+    pub enable: Vec<String>,
+    /// Rules to turn off.
+    pub disable: Vec<String>,
+}
+
+impl LintConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder-style root override.
+    pub fn with_root(mut self, root: &str) -> Self {
+        self.root = Some(root.to_string());
+        self
+    }
+
+    /// Builder-style per-rule toggle.
+    pub fn with_rule(mut self, id: &str, on: bool) -> Self {
+        if on {
+            self.enable.push(id.to_string());
+        } else {
+            self.disable.push(id.to_string());
+        }
+        self
+    }
+
+    /// Reject unknown rule names early, listing the valid ids.
+    pub fn validate(&self) -> Result<()> {
+        for name in self.enable.iter().chain(self.disable.iter()) {
+            ensure!(
+                rules::rule_id(name).is_some(),
+                "unknown lint rule '{name}'; valid rules: {}",
+                RULES.iter().map(|r| r.id).collect::<Vec<_>>().join(", ")
+            );
+        }
+        Ok(())
+    }
+
+    /// The effective rule set: defaults, minus `disable`, plus `enable`
+    /// (an explicit enable wins over a disable of the same rule).
+    pub fn enabled_rules(&self) -> BTreeSet<&'static str> {
+        let mut set: BTreeSet<&'static str> =
+            RULES.iter().filter(|r| r.default_on).map(|r| r.id).collect();
+        for name in &self.disable {
+            if let Some(id) = rules::rule_id(name) {
+                set.remove(id);
+            }
+        }
+        for name in &self.enable {
+            if let Some(id) = rules::rule_id(name) {
+                set.insert(id);
+            }
+        }
+        set
+    }
+
+    /// Apply a JSON document: either a bare lint object
+    /// (`{"root": .., "enable": [..], "disable": [..]}`) or an engine
+    /// config file carrying the same object under its `"lint"` key.
+    pub fn apply_json(&mut self, doc: &Json) -> Result<()> {
+        let section = doc.get("lint").unwrap_or(doc);
+        let Json::Obj(pairs) = section else {
+            bail!("lint config must be a JSON object");
+        };
+        for (key, value) in pairs {
+            match key.as_str() {
+                "root" => match value.as_str() {
+                    Some(s) => self.root = Some(s.to_string()),
+                    None => bail!("lint config 'root' must be a string"),
+                },
+                "enable" => self.enable.extend(str_list(value, "enable")?),
+                "disable" => self.disable.extend(str_list(value, "disable")?),
+                other => bail!(
+                    "unknown lint config key '{other}' (valid: root, enable, disable; \
+                     engine keys belong beside a nested \"lint\" object)"
+                ),
+            }
+        }
+        Ok(())
+    }
+
+    /// CLI layering: `--config <file>` first, then `--root`,
+    /// `--enable a,b`, `--disable a,b` on top.
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let mut config = LintConfig::default();
+        if let Some(path) = args.get("config") {
+            let text = fs::read_to_string(path)
+                .with_context(|| format!("reading lint config {path}"))?;
+            let doc = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+            config.apply_json(&doc)?;
+        }
+        if let Some(root) = args.get("root") {
+            config.root = Some(root.to_string());
+        }
+        if let Some(list) = args.get("enable") {
+            config.enable.extend(split_list(list));
+        }
+        if let Some(list) = args.get("disable") {
+            config.disable.extend(split_list(list));
+        }
+        config.validate()?;
+        Ok(config)
+    }
+
+    fn resolved_root(&self) -> Result<PathBuf> {
+        if let Some(root) = &self.root {
+            let path = PathBuf::from(root);
+            ensure!(path.is_dir(), "lint root '{root}' is not a directory");
+            return Ok(path);
+        }
+        for candidate in ["rust/src", "src"] {
+            let path = PathBuf::from(candidate);
+            if path.is_dir() {
+                return Ok(path);
+            }
+        }
+        bail!("no lint root found: pass --root <dir> or run from the repo root (rust/src)")
+    }
+}
+
+fn split_list(list: &str) -> Vec<String> {
+    list.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect()
+}
+
+fn str_list(value: &Json, key: &str) -> Result<Vec<String>> {
+    let Json::Arr(items) = value else {
+        bail!("lint config '{key}' must be an array of strings");
+    };
+    let mut out = Vec::new();
+    for item in items {
+        match item.as_str() {
+            Some(s) => out.push(s.to_string()),
+            None => bail!("lint config '{key}' must be an array of strings"),
+        }
+    }
+    Ok(out)
+}
+
+/// Outcome of linting a single source file.
+#[derive(Debug)]
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    /// Matches waived by a well-formed `lint:allow`.
+    pub suppressed: usize,
+    /// Physical lines scanned.
+    pub lines: usize,
+}
+
+/// Lint one in-memory source file — the seam `run` and the fixture
+/// tests share. `rel_path` uses `/` separators relative to the lint
+/// root; it drives the module classification (deterministic modules,
+/// test exemptions).
+pub fn lint_source(rel_path: &str, text: &str, enabled: &BTreeSet<&'static str>) -> FileReport {
+    let lines = scanner::scan(text);
+    let file = rules::lint_lines(rel_path, &lines, enabled);
+    FileReport { findings: file.findings, suppressed: file.suppressed, lines: lines.len() }
+}
+
+/// The deterministic, JSON-serializable result of one lint run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LintReport {
+    /// Root that was scanned, as configured (normalized separators).
+    pub root: String,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// Total physical lines scanned.
+    pub lines: usize,
+    /// Matches waived by well-formed `lint:allow` directives.
+    pub suppressed: usize,
+    /// The rule ids that were active, sorted.
+    pub enabled: Vec<&'static str>,
+    /// All findings, sorted by (file, line, rule, message).
+    pub findings: Vec<Finding>,
+}
+
+impl LintReport {
+    /// True when the tree lints clean.
+    pub fn pass(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable report (rendered with [`crate::json`]); contains
+    /// no timestamps or absolute finding paths, so repeated runs are
+    /// byte-identical.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("sigtree-lint-v1")),
+            ("root", Json::str(self.root.clone())),
+            ("files", Json::int(self.files)),
+            ("lines", Json::int(self.lines)),
+            ("rules", Json::Arr(self.enabled.iter().map(|r| Json::str(*r)).collect())),
+            ("suppressed", Json::int(self.suppressed)),
+            ("pass", Json::Bool(self.pass())),
+            (
+                "findings",
+                Json::Arr(
+                    self.findings
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("rule", Json::str(f.rule)),
+                                ("file", Json::str(f.file.clone())),
+                                ("line", Json::int(f.line)),
+                                ("message", Json::str(f.message.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable summary, one line per finding.
+    pub fn summary(&self) -> String {
+        let mut parts = vec![format!(
+            "lint: {} file(s), {} line(s), {} finding(s), {} suppressed by lint:allow",
+            self.files,
+            self.lines,
+            self.findings.len(),
+            self.suppressed
+        )];
+        for f in &self.findings {
+            parts.push(format!("  [{}] {}:{} — {}", f.rule, f.file, f.line, f.message));
+        }
+        parts.join("\n")
+    }
+}
+
+/// Run the lint over every `.rs` file under the configured root.
+/// Deterministic by construction: files are walked in sorted order and
+/// findings are globally sorted.
+pub fn run(config: &LintConfig) -> Result<LintReport> {
+    config.validate()?;
+    let root = config.resolved_root()?;
+    let mut files = Vec::new();
+    collect_sources(&root, &root, &mut files)?;
+    files.sort();
+    let enabled = config.enabled_rules();
+    let mut findings = Vec::new();
+    let mut lines = 0usize;
+    let mut suppressed = 0usize;
+    for rel in &files {
+        let text =
+            fs::read_to_string(root.join(rel)).with_context(|| format!("reading {rel}"))?;
+        let file = lint_source(rel, &text, &enabled);
+        findings.extend(file.findings);
+        lines += file.lines;
+        suppressed += file.suppressed;
+    }
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message))
+    });
+    Ok(LintReport {
+        root: root.to_string_lossy().replace('\\', "/"),
+        files: files.len(),
+        lines,
+        suppressed,
+        enabled: enabled.into_iter().collect(),
+        findings,
+    })
+}
+
+fn collect_sources(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let mut entries = Vec::new();
+    for entry in fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        entries.push(entry.with_context(|| format!("reading {}", dir.display()))?.path());
+    }
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            if path.file_name().map_or(false, |n| n == "target") {
+                continue;
+            }
+            collect_sources(root, &path, out)?;
+        } else if path.extension().map_or(false, |e| e == "rs") {
+            let rel = path.strip_prefix(root).unwrap_or(&path);
+            let rel: Vec<String> =
+                rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+            out.push(rel.join("/"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(rel: &str, text: &str) -> Vec<Finding> {
+        lint_source(rel, text, &LintConfig::default().enabled_rules()).findings
+    }
+
+    fn rules_of(found: &[Finding]) -> Vec<&'static str> {
+        found.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn panic_rule_catches_unwrap_expect_and_macros() {
+        let src = "pub fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\nfn g() {\n    panic!(\"boom\");\n}\n";
+        let found = findings("tree/mod.rs", src);
+        assert_eq!(rules_of(&found), vec!["panic", "panic"]);
+        assert_eq!((found[0].line, found[1].line), (2, 5));
+    }
+
+    #[test]
+    fn panic_rule_skips_json_parser_cursor_helper() {
+        assert!(findings("json.rs", "fn f(&mut self) { self.expect(b) }\n").is_empty());
+        assert_eq!(rules_of(&findings("json.rs", "fn f(p: &mut P) { p.expect(b) }\n")), ["panic"]);
+    }
+
+    #[test]
+    fn cfg_test_and_test_paths_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { None::<u32>.unwrap(); }\n}\n";
+        assert!(findings("coreset/mod.rs", src).is_empty());
+        assert!(findings("proptest.rs", "fn f() { panic!(\"x\") }\n").is_empty());
+        assert!(findings("tests/helper.rs", "fn f() { panic!(\"x\") }\n").is_empty());
+    }
+
+    #[test]
+    fn allow_suppresses_and_is_counted() {
+        let src = "fn f(v: Option<u32>) {\n    // lint:allow(panic) -- documented invariant\n    v.unwrap();\n}\n";
+        let report = lint_source("par/mod.rs", src, &LintConfig::default().enabled_rules());
+        assert!(report.findings.is_empty());
+        assert_eq!(report.suppressed, 1);
+        let same_line = "fn f(v: Option<u32>) { v.unwrap() } // lint:allow(panic) -- invariant\n";
+        assert!(findings("par/mod.rs", same_line).is_empty());
+    }
+
+    #[test]
+    fn allow_hygiene_flags_malformed_unknown_and_dangling() {
+        let missing = "fn f(v: Option<u32>) {\n    // lint:allow(panic)\n    v.unwrap();\n}\n";
+        assert_eq!(rules_of(&findings("a.rs", missing)), vec!["allow-hygiene", "panic"]);
+        let unknown = "// lint:allow(bogus) -- why\nfn f() {}\n";
+        assert_eq!(rules_of(&findings("a.rs", unknown)), vec!["allow-hygiene"]);
+        let dangling = "// lint:allow(panic) -- nothing here panics\nfn f() {}\n";
+        let found = findings("a.rs", dangling);
+        assert_eq!(rules_of(&found), vec!["allow-hygiene"]);
+        assert!(found[0].message.contains("dangling"));
+    }
+
+    #[test]
+    fn det_rules_fire_only_in_deterministic_modules() {
+        let src = "use std::collections::HashMap;\nfn f() { let t = std::time::Instant::now(); }\nfn g() { std::thread::spawn(|| {}); }\n";
+        let found = findings("coreset/x.rs", src);
+        assert_eq!(rules_of(&found), vec!["det-order", "det-clock", "det-thread"]);
+        assert!(findings("runtime/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_requires_adjacent_safety_comment() {
+        let bad = "fn f() {\n    let x = unsafe { core() };\n}\n";
+        assert_eq!(rules_of(&findings("par/mod.rs", bad)), vec!["unsafe-safety"]);
+        let good = "fn f() {\n    // SAFETY: justified at length.\n    let x = unsafe { core() };\n}\n";
+        assert!(findings("par/mod.rs", good).is_empty());
+        let same_line = "fn f() { unsafe { core() } } // SAFETY: fits on one line\n";
+        assert!(findings("par/mod.rs", same_line).is_empty());
+    }
+
+    #[test]
+    fn error_discipline_flags_public_stringly_results() {
+        let bad = "pub fn load() -> Result<(), String> {\n    Ok(())\n}\n";
+        assert_eq!(rules_of(&findings("audit/mod.rs", bad)), vec!["error-discipline"]);
+        let private = "fn load() -> Result<(), String> {\n    Ok(())\n}\n";
+        assert!(findings("audit/mod.rs", private).is_empty());
+    }
+
+    #[test]
+    fn shim_delegation_checks_deprecated_build_fns() {
+        let bad = "#[deprecated(note = \"use construct\")]\npub fn build_x(v: u32) -> u32 {\n    other(v)\n}\n";
+        assert_eq!(rules_of(&findings("coreset/mod.rs", bad)), vec!["shim-delegation"]);
+        let good = "#[deprecated(note = \"renamed\")]\npub fn build_x(v: u32) -> u32 {\n    Self::construct_x(v)\n}\n";
+        assert!(findings("coreset/mod.rs", good).is_empty());
+    }
+
+    #[test]
+    fn index_rule_is_opt_in() {
+        let src = "fn f(v: &[f64]) -> f64 { v[0] }\n";
+        assert!(findings("coreset/x.rs", src).is_empty());
+        let enabled = LintConfig::default().with_rule("index-hot", true).enabled_rules();
+        let found = lint_source("coreset/x.rs", src, &enabled).findings;
+        assert_eq!(rules_of(&found), vec!["index-hot"]);
+        // Still scoped to deterministic modules.
+        assert!(lint_source("runtime/x.rs", src, &enabled).findings.is_empty());
+    }
+
+    #[test]
+    fn literals_and_comments_never_match() {
+        let src = "fn f() -> &'static str {\n    // calling .unwrap() here would be bad\n    \"panic!(no) .unwrap()\"\n}\n";
+        assert!(findings("coreset/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn config_validation_and_layering() {
+        assert!(LintConfig::default().with_rule("bogus", true).validate().is_err());
+        let disabled = LintConfig::default().with_rule("panic", false).enabled_rules();
+        assert!(!disabled.contains("panic"));
+
+        let mut config = LintConfig::default();
+        let doc = Json::parse(
+            "{\"k\": 4, \"lint\": {\"root\": \"rust/src\", \"disable\": [\"panic\"]}}",
+        )
+        .expect("valid json");
+        config.apply_json(&doc).expect("nested lint section applies");
+        assert_eq!(config.root.as_deref(), Some("rust/src"));
+        assert_eq!(config.disable, vec!["panic".to_string()]);
+
+        let mut config = LintConfig::default();
+        let doc = Json::parse("{\"enable\": [\"index-hot\"]}").expect("valid json");
+        config.apply_json(&doc).expect("bare lint object applies");
+        assert!(config.enabled_rules().contains("index-hot"));
+
+        let mut config = LintConfig::default();
+        let doc = Json::parse("{\"k\": 4}").expect("valid json");
+        assert!(config.apply_json(&doc).is_err());
+    }
+
+    #[test]
+    fn rule_table_is_consistent() {
+        for rule in RULES {
+            assert_eq!(rule_id(rule.id), Some(rule.id));
+        }
+        assert!(rule_id("index-hot").is_some());
+        assert!(rule_id("nope").is_none());
+    }
+}

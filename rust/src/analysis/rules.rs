@@ -1,0 +1,511 @@
+//! The lint rules for [`crate::analysis`]: each one is a line-oriented
+//! pattern over the masked code produced by the scanner, with a uniform
+//! `// lint:allow(<rule>) -- <reason>` escape hatch.
+//!
+//! Rule design notes live in DESIGN.md §Static analysis. The important
+//! contract here: every check runs on [`ScannedLine::code`] (comments
+//! stripped, literal contents dropped), skips `#[cfg(test)]` items, and
+//! reports at most one finding per (rule, line) so counts are stable.
+
+use std::collections::BTreeSet;
+
+use super::scanner::ScannedLine;
+use super::Finding;
+
+/// Static description of one lint rule.
+#[derive(Debug, Clone, Copy)]
+pub struct RuleInfo {
+    /// Stable identifier, used in reports, config, and `lint:allow(..)`.
+    pub id: &'static str,
+    /// Whether the rule is on without any configuration.
+    pub default_on: bool,
+    /// One-line summary for `sigtree lint --rules`.
+    pub summary: &'static str,
+}
+
+/// The rule table, in report order.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "panic",
+        default_on: true,
+        summary: ".unwrap()/.expect()/panic!-family in non-test library code",
+    },
+    RuleInfo {
+        id: "index-hot",
+        default_on: false,
+        summary: "slice/array indexing inside deterministic (hot) modules — advisory, opt-in",
+    },
+    RuleInfo {
+        id: "det-order",
+        default_on: true,
+        summary: "HashMap/HashSet inside deterministic modules (iteration order can leak)",
+    },
+    RuleInfo {
+        id: "det-clock",
+        default_on: true,
+        summary: "wall-clock, thread-id, or environment reads inside deterministic modules",
+    },
+    RuleInfo {
+        id: "det-thread",
+        default_on: true,
+        summary: "raw std::thread in deterministic modules — use par::parallel_map / par::Exec",
+    },
+    RuleInfo {
+        id: "unsafe-safety",
+        default_on: true,
+        summary: "`unsafe` without an adjacent // SAFETY: justification",
+    },
+    RuleInfo {
+        id: "error-discipline",
+        default_on: true,
+        summary: "pub fn returning Result<_, String> instead of sigtree::error::Result",
+    },
+    RuleInfo {
+        id: "shim-delegation",
+        default_on: true,
+        summary: "#[deprecated] build* shim that no longer delegates to its construct* twin",
+    },
+    RuleInfo {
+        id: "allow-hygiene",
+        default_on: true,
+        summary: "malformed, unknown-rule, or dangling lint:allow directives",
+    },
+];
+
+/// Modules whose build/query paths must be bit-identical at any thread
+/// count and fanout (ROADMAP "standing constraint"); the det-* rules and
+/// the opt-in indexing rule apply only here.
+pub const DETERMINISTIC_MODULES: &[&str] =
+    &["audit", "bicriteria", "coreset", "partition", "segmentation", "signal"];
+
+/// Resolve a user-supplied rule name to its static id.
+pub fn rule_id(name: &str) -> Option<&'static str> {
+    RULES.iter().find(|r| r.id == name).map(|r| r.id)
+}
+
+/// An inline `lint:allow` directive parsed out of a `//` comment.
+struct Allow {
+    rule: String,
+    known: bool,
+    has_reason: bool,
+    /// 0-based line of the directive itself.
+    line: usize,
+    /// 0-based code line the directive covers (same line, or the first
+    /// code line after a contiguous comment block), if any.
+    covered: Option<usize>,
+    used: bool,
+}
+
+fn first_component(rel: &str) -> &str {
+    rel.split('/').next().unwrap_or(rel)
+}
+
+fn is_deterministic_module(rel: &str) -> bool {
+    DETERMINISTIC_MODULES.contains(&first_component(rel))
+}
+
+/// Test-only source is exempt from every rule: anything under a `tests/`
+/// or `benches/` path component, and the `proptest.rs` shrinking harness
+/// (its whole job is panicking on failure).
+pub fn is_test_path(rel: &str) -> bool {
+    let base = rel.rsplit('/').next().unwrap_or(rel);
+    rel.split('/').any(|c| c == "tests" || c == "benches") || base == "proptest.rs"
+}
+
+/// Find `pat` in `code`; with `word_start`, the match must not be
+/// preceded by an identifier character.
+fn find_token(code: &str, pat: &str, word_start: bool) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(seg) = code.get(from..) {
+        let off = seg.find(pat)?;
+        let at = from + off;
+        let boundary = !word_start
+            || at == 0
+            || !(bytes[at - 1].is_ascii_alphanumeric() || bytes[at - 1] == b'_');
+        if boundary {
+            return Some(at);
+        }
+        from = at + pat.len();
+    }
+    None
+}
+
+/// `.expect(` occurrences that are not the JSON parser's internal
+/// `self.expect(b'..')` cursor helper.
+fn has_expect_call(code: &str) -> bool {
+    let mut from = 0;
+    while let Some(seg) = code.get(from..) {
+        let Some(off) = seg.find(".expect(") else { return false };
+        let at = from + off;
+        if !code[..at].ends_with("self") {
+            return true;
+        }
+        from = at + ".expect(".len();
+    }
+    false
+}
+
+fn parse_directives(comment: &str) -> Vec<(String, bool)> {
+    const KEY: &str = "lint:allow(";
+    let mut out = Vec::new();
+    // A directive must open its comment; `lint:allow(...)` mid-sentence
+    // (docs *talking about* the linter) is prose, not a directive.
+    let mut rest = comment.trim_start();
+    if !rest.starts_with(KEY) {
+        return out;
+    }
+    while let Some(pos) = rest.find(KEY) {
+        let after = &rest[pos + KEY.len()..];
+        let Some(end) = after.find(')') else { break };
+        let rule = after[..end].trim().to_string();
+        let tail = &after[end + 1..];
+        let has_reason = tail
+            .trim_start()
+            .strip_prefix("--")
+            .map_or(false, |r| !r.trim().is_empty());
+        out.push((rule, has_reason));
+        rest = tail;
+    }
+    out
+}
+
+/// The code line a directive on `idx` covers: its own line if it carries
+/// code, else the first code line after the contiguous comment block
+/// below it (a blank line breaks the chain).
+fn covered_line(lines: &[ScannedLine], idx: usize) -> Option<usize> {
+    if !lines[idx].is_code_free() {
+        return Some(idx);
+    }
+    let mut j = idx + 1;
+    while j < lines.len() {
+        if !lines[j].is_code_free() {
+            return Some(j);
+        }
+        if lines[j].comment.is_none() {
+            return None;
+        }
+        j += 1;
+    }
+    None
+}
+
+fn collect_allows(lines: &[ScannedLine]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (idx, l) in lines.iter().enumerate() {
+        if l.in_test {
+            continue;
+        }
+        let Some(comment) = l.comment.as_deref() else { continue };
+        for (rule, has_reason) in parse_directives(comment) {
+            let known = rule_id(&rule).is_some();
+            out.push(Allow {
+                known,
+                has_reason,
+                line: idx,
+                covered: covered_line(lines, idx),
+                used: false,
+                rule,
+            });
+        }
+    }
+    out
+}
+
+/// True when line `idx` has a `// SAFETY:` note on the same line or in
+/// the contiguous comment block directly above it.
+fn has_safety_comment(lines: &[ScannedLine], idx: usize) -> bool {
+    let safety = |l: &ScannedLine| l.comment.as_deref().map_or(false, |c| c.contains("SAFETY:"));
+    if safety(&lines[idx]) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        if !(lines[j].is_code_free() && lines[j].comment.is_some()) {
+            return false;
+        }
+        if safety(&lines[j]) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Either suppress a match through a matching, well-formed allow on the
+/// covered line, or record a finding.
+#[allow(clippy::too_many_arguments)]
+fn emit(
+    findings: &mut Vec<Finding>,
+    suppressed: &mut usize,
+    allows: &mut [Allow],
+    rel: &str,
+    rule: &'static str,
+    idx: usize,
+    message: String,
+) {
+    for a in allows.iter_mut() {
+        if a.covered == Some(idx) && a.known && a.has_reason && a.rule == rule {
+            a.used = true;
+            *suppressed += 1;
+            return;
+        }
+    }
+    findings.push(Finding { rule, file: rel.to_string(), line: idx + 1, message });
+}
+
+/// Outcome of linting one file.
+pub(crate) struct FileLint {
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+}
+
+const PANIC_MACROS: &[&str] = &["panic!", "unreachable!", "todo!", "unimplemented!"];
+const CLOCK_TOKENS: &[&str] =
+    &["Instant::now", "SystemTime", "thread::current", "env::var", "env::args"];
+const THREAD_TOKENS: &[&str] = &["thread::spawn", "thread::scope", "thread::Builder"];
+const ORDER_TOKENS: &[&str] = &["HashMap", "HashSet"];
+
+/// Run every enabled rule over one scanned file.
+pub(crate) fn lint_lines(
+    rel: &str,
+    lines: &[ScannedLine],
+    enabled: &BTreeSet<&'static str>,
+) -> FileLint {
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    if is_test_path(rel) {
+        return FileLint { findings, suppressed };
+    }
+    let mut allows = collect_allows(lines);
+    let det = is_deterministic_module(rel);
+    let on = |id: &str| enabled.contains(id);
+
+    for (idx, l) in lines.iter().enumerate() {
+        if l.in_test || l.is_code_free() {
+            continue;
+        }
+        let code = l.code.as_str();
+
+        if on("panic") {
+            let token = if find_token(code, ".unwrap()", false).is_some() {
+                Some(".unwrap()")
+            } else if has_expect_call(code) {
+                Some(".expect(..)")
+            } else {
+                PANIC_MACROS
+                    .iter()
+                    .copied()
+                    .find(|m| find_token(code, m, true).is_some())
+            };
+            if let Some(token) = token {
+                emit(
+                    &mut findings,
+                    &mut suppressed,
+                    &mut allows,
+                    rel,
+                    "panic",
+                    idx,
+                    format!("`{token}` in library code — return error::Result instead"),
+                );
+            }
+        }
+
+        if on("index-hot") && det && has_indexing(code) {
+            emit(
+                &mut findings,
+                &mut suppressed,
+                &mut allows,
+                rel,
+                "index-hot",
+                idx,
+                "slice/array indexing in a hot deterministic module (can panic)".to_string(),
+            );
+        }
+
+        if det {
+            for (rule, tokens) in [
+                ("det-order", ORDER_TOKENS),
+                ("det-clock", CLOCK_TOKENS),
+                ("det-thread", THREAD_TOKENS),
+            ] {
+                if !on(rule) {
+                    continue;
+                }
+                if let Some(tok) =
+                    tokens.iter().copied().find(|t| find_token(code, t, true).is_some())
+                {
+                    emit(
+                        &mut findings,
+                        &mut suppressed,
+                        &mut allows,
+                        rel,
+                        rule,
+                        idx,
+                        format!("`{tok}` inside deterministic module `{}`", first_component(rel)),
+                    );
+                }
+            }
+        }
+
+        if on("unsafe-safety") {
+            if let Some(at) = find_token(code, "unsafe", true) {
+                let end = at + "unsafe".len();
+                let word_end = code
+                    .as_bytes()
+                    .get(end)
+                    .map_or(true, |b| !(b.is_ascii_alphanumeric() || *b == b'_'));
+                if word_end && !has_safety_comment(lines, idx) {
+                    emit(
+                        &mut findings,
+                        &mut suppressed,
+                        &mut allows,
+                        rel,
+                        "unsafe-safety",
+                        idx,
+                        "`unsafe` without an adjacent `// SAFETY:` justification".to_string(),
+                    );
+                }
+            }
+        }
+
+        if on("error-discipline") && code.contains("pub fn ") {
+            if let Some(at) = code.find("-> Result<") {
+                let tail = &code[at..];
+                if tail.contains(", String>") || tail.contains(",String>") {
+                    emit(
+                        &mut findings,
+                        &mut suppressed,
+                        &mut allows,
+                        rel,
+                        "error-discipline",
+                        idx,
+                        "public fn returns Result<_, String>; use sigtree::error::Result"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+
+    if on("shim-delegation") {
+        check_shims(rel, lines, &mut findings, &mut suppressed, &mut allows);
+    }
+
+    if on("allow-hygiene") {
+        for a in &allows {
+            let (line, message) = if !a.known {
+                (a.line, format!("unknown rule `{}` in lint:allow", a.rule))
+            } else if !a.has_reason {
+                (a.line, format!("lint:allow({}) is missing ` -- <reason>`", a.rule))
+            } else if !enabled.contains(a.rule.as_str()) {
+                continue;
+            } else if !a.used {
+                (a.line, format!("dangling lint:allow({}) — it suppresses nothing", a.rule))
+            } else {
+                continue;
+            };
+            findings.push(Finding {
+                rule: "allow-hygiene",
+                file: rel.to_string(),
+                line: line + 1,
+                message,
+            });
+        }
+    }
+
+    findings.sort_by(|a, b| (a.line, a.rule, &a.message).cmp(&(b.line, b.rule, &b.message)));
+    FileLint { findings, suppressed }
+}
+
+/// `ident[` / `)[` / `][` indexing detector for the opt-in hot-path rule.
+fn has_indexing(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    bytes.windows(2).any(|w| {
+        w[1] == b'['
+            && (w[0].is_ascii_alphanumeric() || w[0] == b'_' || w[0] == b')' || w[0] == b']')
+    })
+}
+
+/// Every `#[deprecated]` `build*` shim must still call into a
+/// `construct*` twin (the rename contract from the PR-4 API redesign).
+fn check_shims(
+    rel: &str,
+    lines: &[ScannedLine],
+    findings: &mut Vec<Finding>,
+    suppressed: &mut usize,
+    allows: &mut [Allow],
+) {
+    let mut pending = false;
+    let mut idx = 0;
+    while idx < lines.len() {
+        let l = &lines[idx];
+        if l.in_test || l.is_code_free() {
+            idx += 1;
+            continue;
+        }
+        let code = l.code.as_str();
+        let is_attr_line = code.contains("#[deprecated");
+        if is_attr_line {
+            pending = true;
+        }
+        if pending {
+            if let Some(at) = find_token(code, "fn ", true) {
+                let name: String = code[at + 3..]
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                if name.starts_with("build") && !shim_body_delegates(lines, idx) {
+                    emit(
+                        findings,
+                        suppressed,
+                        allows,
+                        rel,
+                        "shim-delegation",
+                        idx,
+                        format!("deprecated shim `{name}` does not delegate to a construct* twin"),
+                    );
+                }
+                pending = false;
+            } else if !is_attr_line
+                && ["struct ", "enum ", "trait ", "impl ", "mod ", "use "]
+                    .iter()
+                    .any(|t| code.contains(t))
+            {
+                // The attribute decorated something that is not a fn.
+                pending = false;
+            }
+        }
+        idx += 1;
+    }
+}
+
+/// Walk the brace-balanced body starting at the shim's `fn` line and
+/// look for a `construct` call.
+fn shim_body_delegates(lines: &[ScannedLine], fn_idx: usize) -> bool {
+    let mut depth: i64 = 0;
+    let mut started = false;
+    for l in lines.iter().skip(fn_idx) {
+        if started && depth <= 0 {
+            break;
+        }
+        if (started || depth > 0 || l.code.contains('{')) && l.code.contains("construct") {
+            return true;
+        }
+        for b in l.code.bytes() {
+            match b {
+                b'{' => {
+                    depth += 1;
+                    started = true;
+                }
+                b'}' => depth -= 1,
+                b';' if !started => return true, // declaration only — nothing to check
+                _ => {}
+            }
+        }
+        if started && depth <= 0 {
+            break;
+        }
+    }
+    false
+}

@@ -1,0 +1,311 @@
+//! Comment/string-aware source scanner for [`crate::analysis`].
+//!
+//! Hand-rolled and std-only (same offline discipline as [`crate::json`]):
+//! the scanner walks a Rust source file character by character and emits
+//! one [`ScannedLine`] per physical line, where
+//!
+//! * `code` holds the line with comments removed and the *contents* of
+//!   string / char literals dropped (the delimiting quotes are kept), so
+//!   rule patterns never match inside literals or prose;
+//! * `comment` holds the text of the trailing `//` comment, which is
+//!   where `lint:allow(...)` directives and `// SAFETY:` justifications
+//!   live;
+//! * `in_test` marks lines inside a `#[cfg(test)]` item, which every
+//!   rule skips.
+//!
+//! Handled literal forms: `"…"`, `b"…"`, `r"…"`, `r#"…"#` (any hash
+//! depth), `br#"…"#`, `'x'`, `'\n'`-style escapes, and the
+//! lifetime-vs-char-literal ambiguity (`'a` in `<'a>` is not a literal).
+//! Block comments `/* … */` nest, span lines, and are discarded (a
+//! `SAFETY:` note must be a `//` comment to be seen). Known limits are
+//! documented in DESIGN.md §Static analysis.
+
+/// One physical source line after masking.
+#[derive(Debug, Clone, Default)]
+pub struct ScannedLine {
+    /// Code with comments stripped and literal contents dropped.
+    pub code: String,
+    /// Text of the trailing `//` comment (without the slashes), if any.
+    pub comment: Option<String>,
+    /// True when the line sits inside a `#[cfg(test)]` item.
+    pub in_test: bool,
+}
+
+impl ScannedLine {
+    /// A line that carries no code after masking (blank or comment-only).
+    pub fn is_code_free(&self) -> bool {
+        self.code.trim().is_empty()
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    /// Ordinary code.
+    Code,
+    /// Inside a (nestable) block comment, at the given depth.
+    Block(u32),
+    /// Inside a string literal; `Some(h)` is a raw string closed by
+    /// `"` followed by `h` hashes, `None` a normal escaped string.
+    Str(Option<u32>),
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// Scan `text` into masked lines (state persists across lines, so
+/// multi-line strings and block comments are handled).
+pub fn scan(text: &str) -> Vec<ScannedLine> {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut lines: Vec<ScannedLine> = Vec::new();
+    let mut code = String::new();
+    let mut comment: Option<String> = None;
+    let mut mode = Mode::Code;
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(ScannedLine {
+                code: std::mem::take(&mut code),
+                comment: comment.take(),
+                in_test: false,
+            });
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    // Line comment: capture its text for directive parsing.
+                    let mut txt = String::new();
+                    i += 2;
+                    while i < n && chars[i] != '\n' {
+                        txt.push(chars[i]);
+                        i += 1;
+                    }
+                    comment = Some(txt);
+                    continue;
+                }
+                if c == '/' && next == Some('*') {
+                    mode = Mode::Block(1);
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    code.push('"');
+                    mode = Mode::Str(None);
+                    i += 1;
+                    continue;
+                }
+                // Raw strings: r"…", r#"…"#, br#"…"# (the plain b"…"
+                // prefix needs no special care — `b` is emitted as code
+                // and the quote takes the normal-string path above).
+                if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    if j > i + 1 || c == 'r' {
+                        let mut hashes = 0u32;
+                        while chars.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if chars.get(j) == Some(&'"') {
+                            for &p in &chars[i..=j] {
+                                code.push(p);
+                            }
+                            mode = Mode::Str(Some(hashes));
+                            i = j + 1;
+                            continue;
+                        }
+                    }
+                }
+                if c == '\'' {
+                    // Char literal vs lifetime.
+                    if next == Some('\\') {
+                        // Escaped char literal: skip to the closing quote.
+                        code.push('\'');
+                        let mut j = i + 3; // past the escaped character
+                        while j < n && chars[j] != '\'' && chars[j] != '\n' {
+                            j += 1;
+                        }
+                        if chars.get(j) == Some(&'\'') {
+                            code.push('\'');
+                            j += 1;
+                        }
+                        i = j;
+                        continue;
+                    }
+                    if chars.get(i + 2) == Some(&'\'') && next != Some('\'') {
+                        // Plain one-character literal 'x'.
+                        code.push_str("''");
+                        i += 3;
+                        continue;
+                    }
+                    // Lifetime: emit the tick, the name follows as code.
+                    code.push('\'');
+                    i += 1;
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+            }
+            Mode::Block(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    mode = if depth == 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Str(None) => {
+                if c == '\\' && chars.get(i + 1) == Some(&'\n') {
+                    // Line-continuation escape: let the newline be seen
+                    // by the top of the loop so line counts stay right.
+                    i += 1;
+                } else if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Str(Some(hashes)) => {
+                if c == '"' {
+                    let h = hashes as usize;
+                    let closed = (0..h).all(|k| chars.get(i + 1 + k) == Some(&'#'));
+                    if closed {
+                        code.push('"');
+                        for _ in 0..h {
+                            code.push('#');
+                        }
+                        mode = Mode::Code;
+                        i += 1 + h;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || comment.is_some() {
+        lines.push(ScannedLine { code, comment, in_test: false });
+    }
+    mark_cfg_test(&mut lines);
+    lines
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item by balancing the
+/// braces of the item that follows the attribute. `#[cfg(test)] use …;`
+/// (no braces) ends at the semicolon.
+fn mark_cfg_test(lines: &mut [ScannedLine]) {
+    let n = lines.len();
+    let mut i = 0;
+    while i < n {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut started = false;
+        let mut j = i;
+        while j < n {
+            lines[j].in_test = true;
+            let mut semi = false;
+            for b in lines[j].code.bytes() {
+                match b {
+                    b'{' => {
+                        depth += 1;
+                        started = true;
+                    }
+                    b'}' => depth -= 1,
+                    b';' if !started => semi = true,
+                    _ => {}
+                }
+            }
+            if (started && depth <= 0) || (!started && semi) {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(text: &str) -> Vec<String> {
+        scan(text).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_line_comments_and_keeps_text() {
+        let lines = scan("let x = 1; // lint:allow(panic) -- why\n");
+        assert_eq!(lines[0].code, "let x = 1; ");
+        assert_eq!(lines[0].comment.as_deref(), Some(" lint:allow(panic) -- why"));
+    }
+
+    #[test]
+    fn masks_string_contents() {
+        let c = codes("let s = \"a.unwrap() // not a comment\";\n");
+        assert_eq!(c[0], "let s = \"\";");
+    }
+
+    #[test]
+    fn masks_raw_strings_across_lines() {
+        let c = codes("let s = r#\"one\ntwo.unwrap()\nthree\"#;\nafter();\n");
+        assert_eq!(c, vec!["let s = r#\"", "", "\"#;", "after();"]);
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_close_strings() {
+        let c = codes("let s = \"he said \\\"hi\\\".unwrap()\"; x();\n");
+        assert_eq!(c[0], "let s = \"\"; x();");
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let c = codes("a(); /* outer /* inner */ still */ b();\n/*\nmulti.unwrap()\n*/ c();\n");
+        assert_eq!(c[0], "a();   b();");
+        assert_eq!(c[1], " ");
+        assert_eq!(c[2], "");
+        assert_eq!(c[3], " c();");
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let c = codes("fn f<'a>(x: &'a str) -> &'a str { x }\nlet c = 'q'; let nl = '\\n';\n");
+        assert_eq!(c[0], "fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert_eq!(c[1], "let c = ''; let nl = '';");
+    }
+
+    #[test]
+    fn cfg_test_items_are_marked() {
+        let text = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn after() {}\n";
+        let lines = scan(text);
+        let flags: Vec<bool> = lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn cfg_test_statement_without_braces_ends_at_semicolon() {
+        let lines = scan("#[cfg(test)]\nuse std::collections::HashMap;\nfn live() {}\n");
+        assert!(lines[0].in_test && lines[1].in_test);
+        assert!(!lines[2].in_test);
+    }
+}

@@ -326,11 +326,11 @@ impl AuditCase {
 
     /// The property the shrink hook minimizes: every gated family within
     /// its threshold.
-    pub fn check(&self) -> Result<(), String> {
+    pub fn check(&self) -> crate::error::Result<()> {
         for (family, err) in self.samples(1) {
             if let Some(threshold) = family.threshold(self.config.eps) {
                 if err > threshold {
-                    return Err(format!(
+                    crate::bail!(
                         "family {} rel err {err:.4} > {threshold} on {} {}x{} (k={}, eps={})",
                         family.name(),
                         self.kind,
@@ -338,7 +338,7 @@ impl AuditCase {
                         self.signal.cols(),
                         self.config.k,
                         self.config.eps,
-                    ));
+                    );
                 }
             }
         }

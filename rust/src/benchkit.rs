@@ -46,7 +46,7 @@ pub fn bench<T>(
         mean: sum / times.len() as u32,
         median: times[times.len() / 2],
         min: times[0],
-        max: *times.last().unwrap(),
+        max: times.last().copied().unwrap_or_default(),
     }
 }
 

@@ -119,7 +119,7 @@ fn grid_bound_once(stats: &PrefixStats, region: Rect, k: usize, p: usize, q: usi
     if keep == 0 {
         return 0.0;
     }
-    losses.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    losses.sort_by(|a, b| a.total_cmp(b));
     losses[..keep].iter().sum()
 }
 

@@ -51,12 +51,10 @@ impl Args {
             if let Some(name) = arg.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     options.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map_or(false, |nxt| !nxt.starts_with("--"))
-                {
-                    let v = it.next().unwrap();
-                    options.insert(name.to_string(), v);
+                } else if it.peek().map_or(false, |nxt| !nxt.starts_with("--")) {
+                    if let Some(v) = it.next() {
+                        options.insert(name.to_string(), v);
+                    }
                 } else {
                     options.insert(name.to_string(), "true".to_string());
                 }

@@ -123,20 +123,23 @@ impl CaratheodoryReducer {
 
     /// Degenerate fallback: merge the lightest point into the nearest y.
     fn merge_lightest(&mut self) {
-        let (idx, _) = self
+        let Some((idx, _)) = self
             .support
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
-            .unwrap();
+            .min_by(|a, b| a.1 .1.total_cmp(&b.1 .1))
+        else {
+            return; // empty support: nothing to merge
+        };
         let (y, w) = self.support.remove(idx);
-        let (_, tgt) = self
+        if let Some((_, tgt)) = self
             .support
             .iter_mut()
             .map(|p| ((p.0 - y).abs(), p))
-            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
-            .unwrap();
-        tgt.1 += w;
+            .min_by(|a, b| a.0.total_cmp(&b.0))
+        {
+            tgt.1 += w;
+        }
     }
 }
 
@@ -159,10 +162,12 @@ fn null_vector_3x5(ys: &[f64]) -> [f64; 5] {
             break;
         }
         // Partial pivot.
-        let (best_r, best_v) = (row..3)
+        let Some((best_r, best_v)) = (row..3)
             .map(|r| (r, a[r][col].abs()))
-            .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
-            .unwrap();
+            .max_by(|x, y| x.1.total_cmp(&y.1))
+        else {
+            break; // row == 3 is caught above; defensive only
+        };
         if best_v < 1e-12 {
             continue; // free column
         }
@@ -186,7 +191,9 @@ fn null_vector_3x5(ys: &[f64]) -> [f64; 5] {
     }
     // Pick the first free column, set λ_free = 1, back-substitute pivots.
     let mut lambda = [0.0f64; 5];
-    let free = (0..5).find(|c| !pivot_cols.contains(c)).unwrap();
+    // At most 3 pivot columns exist, so a free column always does; the
+    // fallback index is unreachable.
+    let free = (0..5).find(|c| !pivot_cols.contains(c)).unwrap_or(4);
     lambda[free] = 1.0;
     for (r, &pc) in pivot_cols.iter().enumerate() {
         lambda[pc] = -a[r][free];

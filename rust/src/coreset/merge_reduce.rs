@@ -16,6 +16,8 @@
 //! block's 4-point support is rebuilt by running Caratheodory over the
 //! two supports (8 weighted labels → ≤ 4), so moments stay exact.
 
+// lint:allow(det-order) -- keyed O(1) lookup only; the map is never
+// iterated, so hash order cannot affect results.
 use std::collections::HashMap;
 
 use crate::signal::{Rect, SignalSource};
@@ -55,10 +57,11 @@ pub fn reduce(coreset: SignalCoreset, tol: f64) -> SignalCoreset {
     let SignalCoreset { blocks, config, sigma, gamma, .. } = coreset;
     // Index blocks by (c0, c1, r0): a block ending at row r merges with a
     // block starting at row r+1 with the same column span.
+    // lint:allow(det-order) -- keyed lookup only, never iterated.
     let mut by_start: HashMap<(usize, usize, usize), usize> = HashMap::new();
     let mut pool: Vec<Option<BlockCoreset>> = blocks.into_iter().map(Some).collect();
     for (i, b) in pool.iter().enumerate() {
-        let b = b.as_ref().unwrap();
+        let Some(b) = b else { continue };
         by_start.insert((b.rect.c0, b.rect.c1, b.rect.r0), i);
     }
     // Greedy single pass (repeat until no merges — bounded by pool size).

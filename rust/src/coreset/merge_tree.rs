@@ -523,6 +523,9 @@ impl<'p> MergeTree<'p> {
                     if lvl == 0 {
                         blocks.extend_from_slice(&self.leaves[j].part.blocks);
                     } else {
+                        // lint:allow(panic) -- levels refresh bottom-up, so
+                        // every child at lvl-1 was filled by the previous
+                        // iteration of this loop.
                         blocks.extend_from_slice(prev[j].blocks.as_deref().unwrap());
                     }
                 }
@@ -533,6 +536,8 @@ impl<'p> MergeTree<'p> {
             .last()
             .and_then(|lvl| lvl.first())
             .and_then(|n| n.blocks.clone())
+            // lint:allow(panic) -- the loop above just refreshed every
+            // node, including the root, and `levels` is non-empty here.
             .expect("root node refreshed")
     }
 }

@@ -499,7 +499,9 @@ impl SignalCoreset {
     /// coresets concatenate many thin shard-boundary blocks and inflate
     /// it further.
     pub fn support_cells(&self) -> usize {
-        let mut cells = std::collections::HashSet::with_capacity(self.blocks.len() * 4);
+        // BTreeSet, not HashSet: support_cells feeds reported sizes and
+        // must stay hash-order-free like the rest of the coreset path.
+        let mut cells = std::collections::BTreeSet::new();
         for b in &self.blocks {
             for p in b.points() {
                 cells.insert((p.row, p.col));

@@ -52,7 +52,7 @@ impl BackendChoice {
 /// [`Args::expect_only`] allowlist enforces for flags. (The spellings
 /// differ slightly: JSON uses `_` where the CLI uses `-`, and the
 /// CLI's `--dir` is the JSON `artifacts_dir`.)
-pub const CONFIG_KEYS: [&str; 11] = [
+pub const CONFIG_KEYS: [&str; 12] = [
     "k",
     "eps",
     "beta",
@@ -64,6 +64,11 @@ pub const CONFIG_KEYS: [&str; 11] = [
     "backend",
     "artifacts_dir",
     "seed",
+    // Tolerated sub-object: the static-analysis knobs ride the same
+    // config file, read by `sigtree lint` through
+    // `analysis::LintConfig::apply_json` (the engine never consumes
+    // them — one file can drive both `engine` and `lint` subcommands).
+    "lint",
 ];
 
 /// One serializable configuration for the whole stack: coreset
@@ -278,6 +283,15 @@ impl EngineConfig {
                 );
             }
         }
+        // The 'lint' section belongs to `crate::analysis::LintConfig`;
+        // the engine only checks its shape so a malformed file still
+        // fails loudly no matter which subcommand reads it first.
+        if let Some(section) = doc.get("lint") {
+            ensure!(
+                matches!(section, Json::Obj(_)),
+                "'lint' must be an object (see sigtree::analysis::LintConfig)"
+            );
+        }
         let usize_field = |key: &str, default: usize| -> Result<usize> {
             match doc.get(key) {
                 None => Ok(default),
@@ -452,6 +466,18 @@ mod tests {
         assert!(EngineConfig::from_json_str("{\"k\": 4}").is_err());
         assert!(EngineConfig::from_json_str("[1, 2]").is_err());
         assert!(EngineConfig::from_json_str("{\"k\": 4, \"eps\": 2.0}").is_err());
+    }
+
+    #[test]
+    fn lint_section_is_tolerated_but_shape_checked() {
+        // One config file drives both the engine and `sigtree lint`:
+        // the engine skips the 'lint' sub-object but still rejects a
+        // malformed one.
+        let cfg =
+            EngineConfig::from_json_str("{\"k\": 4, \"eps\": 0.3, \"lint\": {\"disable\": []}}")
+                .expect("lint sub-object is tolerated");
+        assert_eq!(cfg.k, 4);
+        assert!(EngineConfig::from_json_str("{\"k\": 4, \"eps\": 0.3, \"lint\": 7}").is_err());
     }
 
     #[test]

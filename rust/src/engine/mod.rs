@@ -320,10 +320,8 @@ impl<S: SignalSource> EngineSession<'_, S> {
     /// it stays cached until the next invalidation.
     pub fn coreset_tree(&mut self) -> &mut MergeTree<'static> {
         self.refresh();
-        if self.tree.is_none() {
-            self.tree = Some(self.engine.tree_of(self.signal, &self.stats));
-        }
-        self.tree.as_mut().expect("tree just built")
+        let (engine, signal, stats) = (self.engine, self.signal, &self.stats);
+        self.tree.get_or_insert_with(|| engine.tree_of(signal, stats))
     }
 
     /// Report that the attached signal's cells inside `rect` changed

@@ -45,9 +45,9 @@ impl TuningCurve {
         self.points
             .iter()
             .map(|&(k, l)| (k, l + k as f64 / 1e5))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
             .map(|(k, _)| k)
-            .unwrap()
+            .unwrap_or(0)
     }
 }
 

@@ -99,6 +99,9 @@ impl Json {
     /// writer's non-finite → `null` degradation. Nesting is capped at
     /// [`MAX_PARSE_DEPTH`] so a corrupt config (`[[[[…`) errors instead
     /// of overflowing the stack — every misparse must surface as `Err`.
+    // lint:allow(error-discipline) -- the byte-offset String diagnostics
+    // are this parser's public contract; the engine-config boundary wraps
+    // them into sigtree::error::Error with file context.
     pub fn parse(text: &str) -> Result<Json, String> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();

@@ -48,7 +48,13 @@
 //! * [`json`] — hand-rolled JSON (the machine-readable evidence-trail
 //!   format of `audit` and the benches, and the on-disk format of
 //!   engine config files; std-only serde substitute).
+//! * [`analysis`] — the determinism & panic-freedom static-analysis
+//!   pass over the crate's own sources (`sigtree lint`): panic-freedom,
+//!   deterministic-module hygiene, `// SAFETY:` discipline, error
+//!   discipline, and deprecated-shim delegation, with an inline
+//!   `lint:allow` escape hatch and a byte-stable JSON report.
 
+pub mod analysis;
 pub mod audit;
 pub mod benchkit;
 pub mod bicriteria;

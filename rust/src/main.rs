@@ -18,6 +18,8 @@
 //! * `update`     — incremental-rebuild demo: seeded tile edits through an
 //!   [`sigtree::engine::EditSession`], incremental vs from-scratch timings.
 //! * `runtime`    — run kernel-backend parity checks (`--backend native|pjrt`).
+//! * `lint`       — the determinism & panic-freedom static-analysis pass
+//!   over `rust/src` ([`sigtree::analysis`]); non-zero exit on findings.
 //! * `help`       — this text.
 
 use std::process::ExitCode;
@@ -44,6 +46,7 @@ fn main() -> ExitCode {
         "tune" => cmd_tune(&args),
         "update" => cmd_update(&args),
         "runtime" => cmd_runtime(&args),
+        "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -77,6 +80,7 @@ fn print_help() {
            tune        --dataset air|gesture --scale 0.1 --grid 8 --eps 0.3\n\
            update      --n 512 --m 512 --k 64 --eps 0.2 --edits 8 --tile 64\n\
            runtime     [--backend native|pjrt] [--dir artifacts]\n\
+           lint        [--root rust/src] [--enable a,b] [--disable a,b] [--json lint.json] [--rules]\n\
            help\n\
          \n\
          ENGINE FLAGS (each subcommand accepts exactly the subset it\n\
@@ -526,5 +530,31 @@ fn cmd_runtime(args: &Args) -> Result<()> {
         );
     }
     println!("runtime OK");
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    args.expect_only(&["root", "enable", "disable", "json", "rules", "config"])?;
+    if args.get_flag("rules") {
+        println!("{:<16} {:<8} SUMMARY", "RULE", "DEFAULT");
+        for rule in sigtree::analysis::RULES {
+            let default = if rule.default_on { "on" } else { "off" };
+            println!("{:<16} {default:<8} {}", rule.id, rule.summary);
+        }
+        return Ok(());
+    }
+    let config = sigtree::analysis::LintConfig::from_args(args)?;
+    let report = sigtree::analysis::run(&config)?;
+    println!("{}", report.summary());
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().render())?;
+        println!("wrote {path}");
+    }
+    if !report.pass() {
+        return Err(Error::msg(format!(
+            "lint failed with {} finding(s)",
+            report.findings.len()
+        )));
+    }
     Ok(())
 }

@@ -57,6 +57,18 @@ pub fn resolve_threads(threads: usize) -> usize {
     }
 }
 
+/// Lock `m`, treating a poisoned lock as the worker panic it records:
+/// the panic payload is already captured (or about to be re-raised by
+/// the caller's latch protocol), so propagating the poison here is the
+/// correct — and only — response. Routing every pool lock through this
+/// one audited helper keeps the rest of the crate free of bare
+/// `lock().unwrap()` calls.
+pub fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // lint:allow(panic) -- a poisoned pool lock means a worker already
+    // panicked; propagating that panic is this helper's contract.
+    m.lock().unwrap()
+}
+
 /// Map `f` over `items` on `threads` scoped workers, returning results in
 /// input order. Work distribution is a shared atomic cursor: each worker
 /// repeatedly claims the next unprocessed index, so uneven per-item costs
@@ -128,7 +140,7 @@ struct PoolShared {
 fn worker_loop(shared: &PoolShared) {
     loop {
         let task = {
-            let mut queue = shared.queue.lock().unwrap();
+            let mut queue = lock(&shared.queue);
             loop {
                 if let Some(task) = queue.pop_front() {
                     break Some(task);
@@ -136,6 +148,9 @@ fn worker_loop(shared: &PoolShared) {
                 if shared.shutdown.load(Ordering::Acquire) {
                     break None;
                 }
+                // lint:allow(panic) -- poison on the queue lock re-raises
+                // a worker panic (see `lock`); the Condvar wait itself
+                // cannot fail otherwise.
                 queue = shared.task_ready.wait(queue).unwrap();
             }
         };
@@ -233,11 +248,11 @@ impl WorkerPool {
                     local.push((i, (state.f)(i, &state.items[i])));
                 }
                 if !local.is_empty() {
-                    state.out.lock().unwrap().extend(local);
+                    lock(&state.out).extend(local);
                 }
             }));
             if let Err(payload) = result {
-                *state.panic.lock().unwrap() = Some(payload);
+                *lock(&state.panic) = Some(payload);
             }
         }
 
@@ -264,12 +279,12 @@ impl WorkerPool {
 
         {
             let state_ref = &state;
-            let mut queue = shared.queue.lock().unwrap();
+            let mut queue = lock(&shared.queue);
             for _ in 0..helpers {
                 let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                     drain(state_ref);
                     if state_ref.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
-                        let mut done = state_ref.done_lock.lock().unwrap();
+                        let mut done = lock(&state_ref.done_lock);
                         *done = true;
                         state_ref.done_cv.notify_all();
                     }
@@ -295,16 +310,24 @@ impl WorkerPool {
 
         // The caller works the same cursor, then waits for the helpers.
         drain(&state);
-        let mut done = state.done_lock.lock().unwrap();
+        let mut done = lock(&state.done_lock);
         while !*done {
+            // lint:allow(panic) -- same poison-propagation contract as
+            // `lock`: a poisoned latch lock re-raises a worker panic.
             done = state.done_cv.wait(done).unwrap();
         }
         drop(done);
 
-        if let Some(payload) = state.panic.lock().unwrap().take() {
+        if let Some(payload) = lock(&state.panic).take() {
             resume_unwind(payload);
         }
-        let mut tagged = state.out.into_inner().unwrap();
+        // A poisoned out-buffer can only mean a helper panicked, and
+        // that panic was re-raised just above — recover the data either
+        // way instead of double-panicking.
+        let mut tagged = match state.out.into_inner() {
+            Ok(tagged) => tagged,
+            Err(poisoned) => poisoned.into_inner(),
+        };
         tagged.sort_unstable_by_key(|&(i, _)| i);
         tagged.into_iter().map(|(_, r)| r).collect()
     }
@@ -319,7 +342,7 @@ impl Drop for WorkerPool {
             // loaded `shutdown == false` while holding the lock, the
             // notify lands before it enters `wait`, and the join below
             // hangs forever on a worker nobody will ever wake again).
-            let guard = shared.queue.lock().unwrap();
+            let guard = lock(&shared.queue);
             shared.shutdown.store(true, Ordering::Release);
             shared.task_ready.notify_all();
             drop(guard);

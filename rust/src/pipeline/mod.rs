@@ -145,7 +145,7 @@ pub fn run_with_stats<S: SignalSource>(
             let stats = &stats;
             scope.spawn(move || loop {
                 let job = {
-                    let guard = rx.lock().unwrap();
+                    let guard = crate::par::lock(&rx);
                     guard.recv()
                 };
                 let Ok((seq, rect)) = job else { break };
@@ -218,7 +218,7 @@ pub fn run_streaming(
             let ccfg = config.coreset;
             scope.spawn(move || loop {
                 let job = {
-                    let guard = rx.lock().unwrap();
+                    let guard = crate::par::lock(&rx);
                     guard.recv()
                 };
                 let Ok(job) = job else { break };

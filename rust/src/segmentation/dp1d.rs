@@ -17,11 +17,16 @@ impl Prefix1D {
     pub fn new(ys: &[f64]) -> Self {
         let mut sum = Vec::with_capacity(ys.len() + 1);
         let mut sum_sq = Vec::with_capacity(ys.len() + 1);
-        sum.push(0.0);
-        sum_sq.push(0.0);
+        // Running left-fold accumulators: same float order as the
+        // former `last() + y` form, bit for bit.
+        let (mut s, mut sq) = (0.0f64, 0.0f64);
+        sum.push(s);
+        sum_sq.push(sq);
         for &y in ys {
-            sum.push(sum.last().unwrap() + y);
-            sum_sq.push(sum_sq.last().unwrap() + y * y);
+            s += y;
+            sq += y * y;
+            sum.push(s);
+            sum_sq.push(sq);
         }
         Self { sum, sum_sq }
     }

@@ -12,6 +12,8 @@
 //! budget. Memoized over the O(n²m²) rectangles; feasible for signals up
 //! to ~32×32 with small k — precisely the "on the coreset" regime.
 
+// lint:allow(det-order) -- memo cache: keyed get/insert only, never
+// iterated, so its order cannot leak into any result.
 use std::collections::HashMap;
 
 use crate::signal::{PrefixStats, Rect};
@@ -57,11 +59,13 @@ impl RectOracle for PrefixStats {
 /// oracle (defaults to [`PrefixStats`] — the ground-truth solver).
 pub struct TreeDP<'a, O: RectOracle = PrefixStats> {
     stats: &'a O,
+    // lint:allow(det-order) -- keyed lookups only (see the import note).
     memo: HashMap<(Rect, usize), f64>,
 }
 
 impl<'a, O: RectOracle> TreeDP<'a, O> {
     pub fn new(stats: &'a O) -> Self {
+        // lint:allow(det-order) -- keyed lookups only.
         Self { stats, memo: HashMap::new() }
     }
 

@@ -64,14 +64,16 @@ fn best_cut(stats: &PrefixStats, rect: &Rect) -> Option<(f64, bool, usize)> {
             cut += stride;
         }
         if stride > 1 {
-            // Refine ±stride around the coarse winner.
-            let center = local.unwrap().1;
-            let from = center.saturating_sub(stride).max(lo);
-            let to = (center + stride).min(hi - 1);
-            for cut in from..=to {
-                let gain = eval(cut);
-                if local.map_or(true, |(g, _)| gain > g) {
-                    local = Some((gain, cut));
+            // Refine ±stride around the coarse winner (always present:
+            // the coarse scan above saw at least one cut).
+            if let Some((_, center)) = local {
+                let from = center.saturating_sub(stride).max(lo);
+                let to = (center + stride).min(hi - 1);
+                for cut in from..=to {
+                    let gain = eval(cut);
+                    if local.map_or(true, |(g, _)| gain > g) {
+                        local = Some((gain, cut));
+                    }
                 }
             }
         }
@@ -105,15 +107,13 @@ pub fn greedy_tree_on(stats: &PrefixStats, bounds: Rect, k: usize) -> KSegmentat
         let Some((idx, _)) = leaves
             .iter()
             .enumerate()
-            .filter(|(_, l)| l.best.is_some())
-            .max_by(|a, b| {
-                a.1.best.unwrap().0.partial_cmp(&b.1.best.unwrap().0).unwrap()
-            })
+            .filter_map(|(i, l)| l.best.map(|(g, _, _)| (i, g)))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
         else {
             break; // nothing splittable (all leaves pure)
         };
         let leaf = leaves.swap_remove(idx);
-        let (_, is_row, cut) = leaf.best.unwrap();
+        let Some((_, is_row, cut)) = leaf.best else { break };
         let (a, b) = if is_row {
             (
                 Rect::new(leaf.rect.r0, cut, leaf.rect.c0, leaf.rect.c1),

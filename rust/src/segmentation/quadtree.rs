@@ -30,7 +30,7 @@ pub fn quadtree_compress(
             .iter()
             .enumerate()
             .filter(|(_, (r, loss))| *loss > tolerance && (r.height() > 1 || r.width() > 1))
-            .max_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap());
+            .max_by(|a, b| a.1 .1.total_cmp(&b.1 .1));
         let Some((idx, _)) = worst else { break };
         let (rect, _) = leaves.swap_remove(idx);
         let budget = max_leaves - leaves.len();

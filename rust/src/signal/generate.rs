@@ -23,13 +23,17 @@ pub fn piecewise_constant(
     let mut pieces: Vec<Rect> = vec![Rect::new(0, n - 1, 0, m - 1)];
     // Greedily split the largest piece until we have k.
     while pieces.len() < k {
-        // Pick the piece with the largest area that is splittable.
-        let (idx, _) = pieces
+        // Pick the piece with the largest area that is splittable. When
+        // k exceeds the number of cells, every piece is 1×1 and we stop
+        // with fewer than k pieces instead of panicking.
+        let Some((idx, _)) = pieces
             .iter()
             .enumerate()
             .filter(|(_, r)| r.height() > 1 || r.width() > 1)
             .max_by_key(|(_, r)| r.area())
-            .expect("cannot split further: k too large for grid");
+        else {
+            break;
+        };
         let rect = pieces.swap_remove(idx);
         let split_rows = rect.height() > 1 && (rect.width() <= 1 || rng.bool(0.5));
         if split_rows {

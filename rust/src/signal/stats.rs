@@ -267,9 +267,12 @@ impl PrefixStats {
                 let slots: Vec<std::sync::Mutex<Option<BandJob<'_>>>> =
                     jobs.into_iter().map(|j| std::sync::Mutex::new(Some(j))).collect();
                 pool.map(&slots, |_, slot| {
-                    let ((r0, r1), (c, s, q)) =
-                        slot.lock().unwrap().take().expect("band claimed once");
-                    fill_band_local(signal, r0, r1, c, s, q);
+                    // Each slot is `Some` exactly once by construction;
+                    // a second visit (impossible: the map visits every
+                    // index once) would be a silent no-op, not a panic.
+                    if let Some(((r0, r1), (c, s, q))) = crate::par::lock(slot).take() {
+                        fill_band_local(signal, r0, r1, c, s, q);
+                    }
                 });
             } else {
                 // Static round-robin assignment: bands have near-equal
@@ -281,6 +284,10 @@ impl PrefixStats {
                 for (i, job) in jobs.into_iter().enumerate() {
                     assigned[i % workers].push(job);
                 }
+                // lint:allow(det-thread) -- the one audited exception:
+                // `&mut` band slices cannot ride the shared-cursor pool,
+                // and bands own disjoint row ranges, so scheduling can
+                // never reorder a single float (see the note above).
                 std::thread::scope(|scope| {
                     for work in assigned {
                         scope.spawn(move || {

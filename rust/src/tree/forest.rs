@@ -73,7 +73,7 @@ impl RandomForest {
                 })
                 .collect()
         };
-        let total_w = *cum.last().unwrap();
+        let total_w = cum.last().copied().unwrap_or(0.0);
         assert!(total_w > 0.0, "total weight must be positive");
         let draws = ((samples.len() as f64) * params.subsample).ceil() as usize;
         let draws = draws.max(1);
@@ -90,7 +90,7 @@ impl RandomForest {
                 let per_draw_w = total_w / draws as f64;
                 for _ in 0..draws {
                     let u = trng.f64() * total_w;
-                    let idx = match cum.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+                    let idx = match cum.binary_search_by(|c| c.total_cmp(&u)) {
                         Ok(i) => i,
                         Err(i) => i.min(samples.len() - 1),
                     };

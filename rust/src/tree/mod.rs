@@ -168,16 +168,12 @@ impl DecisionTree {
             let best_idx = frontier
                 .iter()
                 .enumerate()
-                .filter(|(_, (_, s))| s.is_some())
-                .max_by(|a, b| {
-                    let ga = a.1 .1.as_ref().unwrap().gain;
-                    let gb = b.1 .1.as_ref().unwrap().gain;
-                    ga.partial_cmp(&gb).unwrap()
-                })
+                .filter_map(|(i, (_, s))| s.as_ref().map(|s| (i, s.gain)))
+                .max_by(|a, b| a.1.total_cmp(&b.1))
                 .map(|(i, _)| i);
             let Some(best_idx) = best_idx else { break };
             let (work, split) = frontier.swap_remove(best_idx);
-            let split = split.unwrap();
+            let Some(split) = split else { break };
             if split.gain < params.min_impurity_decrease {
                 break;
             }

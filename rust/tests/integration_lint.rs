@@ -1,0 +1,113 @@
+//! Integration tests for `sigtree::analysis` — the engine behind the
+//! `lint` CLI subcommand — pinned against the fixture corpus in
+//! `tests/lint_fixtures/` (which Cargo never compiles: it only builds
+//! `.rs` files sitting directly in `tests/`) and against the crate's
+//! own source tree, which must lint clean.
+
+use std::collections::BTreeSet;
+
+use sigtree::analysis::{self, LintConfig};
+
+fn fixture_root() -> String {
+    format!("{}/tests/lint_fixtures", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn src_root() -> String {
+    format!("{}/src", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn fixture_corpus_findings_are_exact() {
+    let report = analysis::run(&LintConfig::new().with_root(&fixture_root())).expect("lint runs");
+    assert!(!report.pass());
+    let got: Vec<(&str, &str, usize)> =
+        report.findings.iter().map(|f| (f.rule, f.file.as_str(), f.line)).collect();
+    let want: Vec<(&str, &str, usize)> = vec![
+        ("allow-hygiene", "bad_allow.rs", 4),
+        ("panic", "bad_allow.rs", 5),
+        ("allow-hygiene", "bad_allow.rs", 9),
+        ("panic", "bad_allow.rs", 10),
+        ("allow-hygiene", "bad_allow.rs", 14),
+        ("error-discipline", "bad_error.rs", 3),
+        ("panic", "bad_panic.rs", 4),
+        ("panic", "bad_panic.rs", 8),
+        ("panic", "bad_panic.rs", 12),
+        ("shim-delegation", "bad_shim.rs", 11),
+        ("unsafe-safety", "bad_unsafe.rs", 9),
+        ("det-order", "coreset/bad_det.rs", 3),
+        ("det-order", "coreset/bad_det.rs", 6),
+        ("det-clock", "coreset/bad_det.rs", 11),
+        ("det-thread", "coreset/bad_det.rs", 15),
+    ];
+    assert_eq!(got, want);
+    // Exactly the two well-formed waivers in allowed.rs are honored.
+    assert_eq!(report.suppressed, 2);
+    assert_eq!(report.files, 9);
+}
+
+#[test]
+fn crate_source_tree_lints_clean() {
+    let report = analysis::run(&LintConfig::new().with_root(&src_root())).expect("lint runs");
+    assert!(
+        report.pass(),
+        "the crate's own sources must lint clean:\n{}",
+        report.summary()
+    );
+    assert!(report.findings.is_empty());
+    // The audited escape hatches (par locks, dp2d memo, …) are real:
+    // they suppress matches rather than sitting on dead lines.
+    assert!(report.suppressed > 0);
+}
+
+#[test]
+fn report_is_byte_identical_across_runs() {
+    let config = LintConfig::new().with_root(&fixture_root());
+    let a = analysis::run(&config).expect("first run").to_json().render();
+    let b = analysis::run(&config).expect("second run").to_json().render();
+    assert_eq!(a, b);
+    assert!(a.contains("\"schema\""));
+}
+
+#[test]
+fn index_hot_is_opt_in() {
+    let base = analysis::run(&LintConfig::new().with_root(&fixture_root())).expect("lint runs");
+    assert!(base.findings.iter().all(|f| f.rule != "index-hot"));
+
+    let config = LintConfig::new().with_root(&fixture_root()).with_rule("index-hot", true);
+    let report = analysis::run(&config).expect("lint runs");
+    let hot: Vec<(&str, usize)> = report
+        .findings
+        .iter()
+        .filter(|f| f.rule == "index-hot")
+        .map(|f| (f.file.as_str(), f.line))
+        .collect();
+    assert_eq!(hot, vec![("coreset/bad_index.rs", 4)]);
+}
+
+#[test]
+fn disabling_a_rule_drops_its_findings() {
+    let config = LintConfig::new().with_root(&fixture_root()).with_rule("panic", false);
+    let report = analysis::run(&config).expect("lint runs");
+    assert!(report.findings.iter().all(|f| f.rule != "panic"));
+    // The other rules are untouched.
+    assert!(report.findings.iter().any(|f| f.rule == "det-order"));
+}
+
+#[test]
+fn deprecated_build_shims_still_delegate() {
+    // The PR-4 rename contract: every `#[deprecated]` `build*` shim in
+    // the real tree forwards to its `construct*` twin. Pin both the
+    // clean state and the rule's ability to catch a regression.
+    let path = format!("{}/coreset/mod.rs", src_root());
+    let src = std::fs::read_to_string(&path).expect("read coreset/mod.rs");
+    let mut enabled: BTreeSet<&'static str> = BTreeSet::new();
+    enabled.insert("shim-delegation");
+    let clean = analysis::lint_source("coreset/mod.rs", &src, &enabled);
+    assert!(clean.findings.is_empty(), "shims must delegate: {:?}", clean.findings);
+
+    let broken = src.replace("Self::construct_with(signal, config)", "Self::build(signal, 4, 0.3)");
+    assert_ne!(broken, src, "expected the build_with shim body in coreset/mod.rs");
+    let report = analysis::lint_source("coreset/mod.rs", &broken, &enabled);
+    assert_eq!(report.findings.len(), 1);
+    assert_eq!(report.findings[0].rule, "shim-delegation");
+}

@@ -1,0 +1,10 @@
+//! Fixture: correctly waived matches — the linter reports nothing.
+
+pub fn waived(v: Option<u32>) -> u32 {
+    // lint:allow(panic) -- fixture invariant: always Some
+    v.unwrap()
+}
+
+pub fn same_line(v: Option<u32>) -> u32 {
+    v.unwrap() // lint:allow(panic) -- fixture invariant: always Some
+}

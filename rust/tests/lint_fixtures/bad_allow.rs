@@ -1,0 +1,16 @@
+//! Fixture: malformed, unknown-rule, and dangling allow directives.
+
+pub fn unknown(v: Option<u32>) -> u32 {
+    // lint:allow(bogus-rule) -- not a rule id
+    v.unwrap()
+}
+
+pub fn missing_reason(v: Option<u32>) -> u32 {
+    // lint:allow(panic)
+    v.unwrap()
+}
+
+pub fn dangling() -> u32 {
+    // lint:allow(panic) -- suppresses nothing
+    7
+}

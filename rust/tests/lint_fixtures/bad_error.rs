@@ -1,0 +1,5 @@
+//! Fixture: error discipline — a `Result<_, String>` public API.
+
+pub fn load(text: &str) -> Result<u32, String> {
+    text.parse::<u32>().map_err(|e| e.to_string())
+}

@@ -1,0 +1,13 @@
+//! Fixture: panic-freedom violations (see `integration_lint`).
+
+pub fn first(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn second(v: Option<u32>) -> u32 {
+    v.expect("fixture")
+}
+
+pub fn third() {
+    panic!("fixture");
+}

@@ -1,0 +1,14 @@
+//! Fixture: a deprecated `build*` shim that no longer delegates.
+
+pub struct Thing;
+
+impl Thing {
+    pub fn construct() -> Self {
+        Thing
+    }
+
+    #[deprecated(note = "use construct")]
+    pub fn build() -> Self {
+        Thing
+    }
+}

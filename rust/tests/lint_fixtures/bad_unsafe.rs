@@ -1,0 +1,10 @@
+//! Fixture: `unsafe` with and without a SAFETY justification.
+
+pub fn covered(x: *const u32) -> u32 {
+    // SAFETY: caller guarantees `x` is valid (fixture).
+    unsafe { *x }
+}
+
+pub fn uncovered(x: *const u32) -> u32 {
+    unsafe { *x }
+}

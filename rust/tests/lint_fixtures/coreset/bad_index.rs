@@ -1,0 +1,5 @@
+//! Fixture: opt-in `index-hot` — indexing in a deterministic module.
+
+pub fn pick(v: &[u32], i: usize) -> u32 {
+    v[i]
+}

@@ -1,0 +1,15 @@
+//! Fixture: `#[cfg(test)]` items are exempt from every rule.
+
+pub fn live() -> u32 {
+    7
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        assert_eq!(super::live(), 7);
+        Some(1u32).unwrap();
+        panic!("fine in tests");
+    }
+}

@@ -10,6 +10,13 @@ cargo fmt --check
 cargo clippy --all-targets -- -D warnings
 
 cargo build --release
+
+# Static-analysis gate: the crate's own linter (panic-freedom,
+# determinism, unsafe hygiene, error discipline, shim delegation) must
+# pass on the tree. Hard gate — non-zero exit on any finding; the
+# byte-stable JSON report lands in lint.json (archived by ci.yml).
+cargo run --release -- lint --json lint.json
+
 cargo test -q
 # Merge-tree acceptance suite, named explicitly: bit-identity of
 # MergeTree::full() with construct_sharded_exec, dirty-leaf-only
