@@ -1,16 +1,24 @@
 //! Kernel-backend benchmarks: artifact-contract execution throughput per
 //! backend vs the native f64 statistics for the same quantities (the
-//! L1/L2 perf pass measurements recorded in EXPERIMENTS.md §Perf).
+//! L1/L2 perf pass measurements recorded in EXPERIMENTS.md §Perf), plus
+//! the machine-readable `BENCH_runtime.json` evidence trail consumed by
+//! `scripts/bench_gate.sh` — the perf regression gate.
 //!
-//! Always benches the pure-Rust `NativeBackend`; with `--features pjrt`
-//! and the artifacts built, the PJRT backend is benched side by side.
+//! Always benches the pure-Rust `NativeBackend` and the cache-blocked
+//! `BlockedBackend`; with `--features pjrt` and the artifacts built, the
+//! PJRT backend is benched side by side. `--quick` shrinks budgets,
+//! thread sweeps, and the big prefix build for CI smoke runs (rows are
+//! keyed by their op string, so a quick row never gates against a
+//! full-run baseline row of a different size).
 
 use sigtree::benchkit::{bench, fmt_duration, fmt_f, Table};
 use sigtree::coreset::{CoresetConfig, SignalCoreset};
 use sigtree::engine::{Engine, EngineConfig};
 use sigtree::json::Json;
 use sigtree::rng::Rng;
-use sigtree::runtime::{pad_integral, KernelBackend, NativeBackend, RECT_BATCH, TILE};
+use sigtree::runtime::{
+    pad_integral, BlockedBackend, KernelBackend, NativeBackend, RECT_BATCH, TILE,
+};
 use sigtree::segmentation::{random_segmentation, KSegmentation};
 use sigtree::signal::{generate, PrefixStats, Rect, Signal};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -82,7 +90,15 @@ fn pjrt_backend() -> Option<Box<dyn KernelBackend>> {
 }
 
 fn main() {
-    let mut backends: Vec<Box<dyn KernelBackend>> = vec![Box::new(NativeBackend::new())];
+    // `--quick` (CI smoke): 3 timed iters per row, 1 s budgets, a 1024²
+    // big-build instead of 4096², and a reduced thread sweep.
+    let quick = std::env::args().any(|a| a == "--quick");
+    let budget = |secs: u64| Duration::from_secs(if quick { 1 } else { secs });
+    let qiters = |full: usize| if quick { 3 } else { full };
+    let thread_counts: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
+
+    let mut backends: Vec<Box<dyn KernelBackend>> =
+        vec![Box::new(NativeBackend::new()), Box::new(BlockedBackend::new())];
     if let Some(rt) = pjrt_backend() {
         backends.push(rt);
     }
@@ -109,64 +125,154 @@ fn main() {
         .collect();
     let rendered: Vec<f32> = (0..TILE * TILE).map(|_| rng.normal() as f32).collect();
 
-    let mut table = Table::new(&["op", "impl", "median", "throughput"]);
+    let mut table = Table::new(&["op", "impl", "median", "p90", "throughput"]);
+    // (op, impl, median_s) triples feeding the kernels / blocked_speedup
+    // arrays in BENCH_runtime.json.
+    let mut kernel_meds: Vec<(String, String, f64)> = Vec::new();
 
     // f64 reference rows (PrefixStats — the exact oracle the kernels
     // approximate).
-    let t_ref = bench(1, 8, Duration::from_secs(4), || PrefixStats::new(&sig));
+    let t_ref = bench(1, qiters(8), budget(4), || PrefixStats::new(&sig));
     table.row(&[
         "prefix2d (integral images)".into(),
         "f64 PrefixStats".into(),
         fmt_duration(t_ref.median),
+        fmt_duration(t_ref.p90),
         format!("{} cells/s", fmt_f(cells / t_ref.median.as_secs_f64())),
     ]);
+    kernel_meds.push(("prefix2d".into(), "f64-stats".into(), t_ref.median.as_secs_f64()));
     let stats = PrefixStats::new(&sig);
-    let t_ref = bench(1, 8, Duration::from_secs(4), || {
+    let t_ref = bench(1, qiters(8), budget(4), || {
         native_rects.iter().map(|r| stats.opt1(r)).sum::<f64>()
     });
     table.row(&[
         format!("block_sse ({RECT_BATCH} rects)"),
         "f64 PrefixStats".into(),
         fmt_duration(t_ref.median),
+        fmt_duration(t_ref.p90),
         format!("{} rects/s", fmt_f(RECT_BATCH as f64 / t_ref.median.as_secs_f64())),
     ]);
+    kernel_meds.push(("block_sse".into(), "f64-stats".into(), t_ref.median.as_secs_f64()));
 
     // Per-backend kernel rows.
     for backend in &backends {
         let name = backend.name();
-        let t = bench(1, 8, Duration::from_secs(4), || backend.prefix2d(&tile).unwrap());
+        let t = bench(1, qiters(8), budget(4), || backend.prefix2d(&tile).unwrap());
         table.row(&[
             "prefix2d (integral images)".into(),
             name.clone(),
             fmt_duration(t.median),
+            fmt_duration(t.p90),
             format!("{} cells/s", fmt_f(cells / t.median.as_secs_f64())),
         ]);
+        kernel_meds.push(("prefix2d".into(), name.clone(), t.median.as_secs_f64()));
 
         let (ii_y, ii_y2) = backend.prefix2d(&tile).unwrap();
         let p_y = pad_integral(&ii_y);
         let p_y2 = pad_integral(&ii_y2);
-        let t = bench(1, 8, Duration::from_secs(4), || {
+        let t = bench(1, qiters(8), budget(4), || {
             backend.block_sse(&p_y, &p_y2, &rects).unwrap()
         });
         table.row(&[
             format!("block_sse ({RECT_BATCH} rects)"),
             name.clone(),
             fmt_duration(t.median),
+            fmt_duration(t.p90),
             format!("{} rects/s", fmt_f(RECT_BATCH as f64 / t.median.as_secs_f64())),
         ]);
+        kernel_meds.push(("block_sse".into(), name.clone(), t.median.as_secs_f64()));
 
-        let t = bench(1, 8, Duration::from_secs(4), || {
+        let t = bench(1, qiters(8), budget(4), || {
             backend.seg_loss(&tile, &rendered).unwrap()
         });
         table.row(&[
             "seg_loss (SSE of tile)".into(),
-            name,
+            name.clone(),
             fmt_duration(t.median),
+            fmt_duration(t.p90),
             format!("{} cells/s", fmt_f(cells / t.median.as_secs_f64())),
         ]);
+        kernel_meds.push(("seg_loss".into(), name, t.median.as_secs_f64()));
     }
 
     table.print("kernel backends vs f64 reference (TILE=256)");
+
+    // Blocked-vs-native speedup rows (the headline tentpole measurement;
+    // both backends were asserted bit-identical / pinned-tolerance by the
+    // differential suites, so these compare identical outputs).
+    let med_of = |op: &str, imp: &str| {
+        kernel_meds.iter().find(|(o, i, _)| o == op && i == imp).map(|&(_, _, m)| m)
+    };
+    let mut speedup_rows: Vec<Json> = Vec::new();
+    for op in ["prefix2d", "block_sse", "seg_loss"] {
+        if let (Some(n), Some(b)) = (med_of(op, "native"), med_of(op, "blocked")) {
+            println!("blocked speedup vs native [{op}]: x{:.2}", n / b.max(1e-12));
+            speedup_rows.push(Json::obj(vec![
+                ("op", Json::str(op)),
+                ("native_median_s", Json::num(n)),
+                ("blocked_median_s", Json::num(b)),
+                ("speedup_vs_native", Json::num(n / b.max(1e-12))),
+            ]));
+        }
+    }
+    let kernel_rows: Vec<Json> = kernel_meds
+        .iter()
+        .map(|(op, imp, med)| {
+            Json::obj(vec![
+                ("op", Json::str(op.as_str())),
+                ("impl", Json::str(imp.as_str())),
+                ("median_s", Json::num(*med)),
+            ])
+        })
+        .collect();
+
+    // ---- big prefix build: scalar vs cache-blocked fill ------------------
+    // The tentpole row: one full three-image PrefixStats build on a large
+    // signal, scalar band fill (`new_par`) vs cache-blocked two-pass fill
+    // (`new_blocked`, default block). Bit-identity is asserted before
+    // timing, so the speedup compares *identical* outputs.
+    let mut pb_rows: Vec<Json> = Vec::new();
+    {
+        let big = if quick { 1024 } else { 4096 };
+        let mut rng_big = Rng::new(33);
+        let sig_big = generate::smooth(big, big, 5, &mut rng_big);
+        let whole = sig_big.bounds();
+        assert_eq!(
+            PrefixStats::new_par(&sig_big, 1).moments(&whole),
+            PrefixStats::new_blocked(&sig_big, 1, 0).moments(&whole),
+            "blocked fill must be bit-identical to the scalar fill"
+        );
+        let pb_threads: &[usize] = if quick { &[1] } else { &[1, 4] };
+        let mut pb_table = Table::new(&["op", "impl", "threads", "median", "p90", "speedup"]);
+        for &t in pb_threads {
+            let t_scalar =
+                bench(1, qiters(4), budget(8), || PrefixStats::new_par(&sig_big, t));
+            let t_blocked =
+                bench(1, qiters(4), budget(8), || PrefixStats::new_blocked(&sig_big, t, 0));
+            let (ss, bs) = (t_scalar.median.as_secs_f64(), t_blocked.median.as_secs_f64());
+            for (imp, tm, speed) in
+                [("scalar", t_scalar, 1.0), ("blocked", t_blocked, ss / bs.max(1e-12))]
+            {
+                pb_table.row(&[
+                    format!("prefix_build ({big}x{big})"),
+                    imp.into(),
+                    format!("{t}"),
+                    fmt_duration(tm.median),
+                    fmt_duration(tm.p90),
+                    format!("x{speed:.2}"),
+                ]);
+                pb_rows.push(Json::obj(vec![
+                    ("op", Json::str(format!("prefix_build ({big}x{big})"))),
+                    ("impl", Json::str(imp)),
+                    ("threads", Json::int(t)),
+                    ("median_s", Json::num(tm.median.as_secs_f64())),
+                    ("p90_s", Json::num(tm.p90.as_secs_f64())),
+                    ("speedup_vs_scalar", Json::num(speed)),
+                ]));
+            }
+        }
+        pb_table.print("full prefix-statistics build: scalar vs blocked fill");
+    }
 
     // ---- sigtree::par thread scaling ------------------------------------
     // The acceptance case: 512×512 smooth signal, k=64, ε=0.2 — parallel
@@ -196,14 +302,14 @@ fn main() {
     // audit's evidence trail), so the repo's perf trajectory is diffable
     // run over run instead of living only in stdout tables.
     let mut scaling_rows: Vec<Json> = Vec::new();
-    for &t in &[1usize, 2, 4, 8] {
+    for &t in thread_counts {
         let medians = [
-            bench(1, 4, Duration::from_secs(6), || {
+            bench(1, qiters(4), budget(6), || {
                 SignalCoreset::construct_sharded(&sig512, config, t)
             })
             .median,
-            bench(1, 6, Duration::from_secs(2), || PrefixStats::new_par(&sig512, t)).median,
-            bench(1, 6, Duration::from_secs(2), || {
+            bench(1, qiters(6), budget(2), || PrefixStats::new_par(&sig512, t)).median,
+            bench(1, qiters(6), budget(2), || {
                 cs512.fitting_loss_batch(&queries, t)
             })
             .median,
@@ -251,12 +357,12 @@ fn main() {
     );
     let mut reuse_table = Table::new(&["op", "mode", "median", "batches/s"]);
     let mut reuse_rows: Vec<Json> = Vec::new();
-    let engine_timing = bench(1, 4, Duration::from_secs(6), || {
+    let engine_timing = bench(1, qiters(4), budget(6), || {
         for _ in 0..REUSE_BATCHES {
             engine.fitting_loss(&cs512, &queries);
         }
     });
-    let spawn_timing = bench(1, 4, Duration::from_secs(6), || {
+    let spawn_timing = bench(1, qiters(4), budget(6), || {
         for _ in 0..REUSE_BATCHES {
             cs512.fitting_loss_batch(&queries, reuse_threads);
         }
@@ -298,7 +404,7 @@ fn main() {
         "KiB/shard",
     ]);
     let mut alloc_rows: Vec<Json> = Vec::new();
-    for &t in &[1usize, 2, 4, 8] {
+    for &t in thread_counts {
         let (c0, b0) = alloc_snapshot();
         let stats_probe = PrefixStats::new_par(&sig512, t);
         let (c1, b1) = alloc_snapshot();
@@ -330,17 +436,49 @@ fn main() {
         "allocation counts on the build path (8 shards; shared-stats cost subtracted)",
     );
 
+    // prefix2d scratch reuse: the `prefix2d` entry point must allocate
+    // two fresh TILE² images per call; the `prefix2d_into` entry point
+    // reuses caller buffers, so repeated calls allocate only on the
+    // first (buffer growth) — the hoisted-allocation win, counted.
+    let native = NativeBackend::new();
+    let (c0, _) = alloc_snapshot();
+    for _ in 0..8 {
+        std::hint::black_box(native.prefix2d(&tile).unwrap());
+    }
+    let (c1, _) = alloc_snapshot();
+    let (mut scratch_y, mut scratch_y2) = (Vec::new(), Vec::new());
+    for _ in 0..8 {
+        native.prefix2d_into(&tile, &mut scratch_y, &mut scratch_y2).unwrap();
+        std::hint::black_box((&scratch_y, &scratch_y2));
+    }
+    let (c2, _) = alloc_snapshot();
+    println!(
+        "\nprefix2d allocation profile (8 calls, one {TILE}x{TILE} tile):\n  \
+         fresh `prefix2d`:       {} allocs\n  \
+         `prefix2d_into` reuse:  {} allocs (scratch buffers reused across calls)",
+        c1 - c0,
+        c2 - c1
+    );
+    alloc_rows.push(Json::obj(vec![
+        ("op", Json::str("prefix2d x8 fresh")),
+        ("allocs_total", Json::num((c1 - c0) as f64)),
+    ]));
+    alloc_rows.push(Json::obj(vec![
+        ("op", Json::str("prefix2d_into x8 scratch-reuse")),
+        ("allocs_total", Json::num((c2 - c1) as f64)),
+    ]));
+
     // ---- incremental update vs full rebuild ------------------------------
     // The merge-tree payoff: one 64×64-tile edit on the 512×512
     // acceptance case through a long-lived EditSession (dirty leaf
     // rebuilt + O(log S) ancestor re-merge + stats refresh) vs a full
     // from-scratch sharded build of the same signal.
-    let full_timing = bench(1, 4, Duration::from_secs(6), || {
+    let full_timing = bench(1, qiters(4), budget(6), || {
         SignalCoreset::construct_sharded(&sig512, config, reuse_threads)
     });
     let mut session = engine.edit_session(sig512.clone());
     let tile = Rect::new(192, 255, 192, 255); // one shard-interior 64×64 tile
-    let update_timing = bench(1, 8, Duration::from_secs(6), || {
+    let update_timing = bench(1, qiters(8), budget(6), || {
         session.edit(tile, |_, _, v| v + 1e-3);
         session.coreset()
     });
@@ -377,6 +515,11 @@ fn main() {
     // ---- machine-readable evidence trail ---------------------------------
     let doc = Json::obj(vec![
         ("bench", Json::str("bench_runtime")),
+        // "measured" (vs the committed bootstrap placeholder) tells
+        // scripts/bench_gate.sh these medians are real timings it may
+        // hard-gate against; "quick" flags reduced CI-smoke budgets.
+        ("provenance", Json::str("measured")),
+        ("quick", Json::Bool(quick)),
         (
             "acceptance_case",
             Json::obj(vec![
@@ -394,6 +537,9 @@ fn main() {
             "backends",
             Json::Arr(names.iter().map(|n| Json::str(n.as_str())).collect()),
         ),
+        ("kernels", Json::Arr(kernel_rows)),
+        ("blocked_speedup", Json::Arr(speedup_rows)),
+        ("prefix_build", Json::Arr(pb_rows)),
         ("thread_scaling", Json::Arr(scaling_rows)),
         ("engine_reuse", Json::Arr(reuse_rows)),
         ("alloc_profile", Json::Arr(alloc_rows)),

@@ -24,7 +24,10 @@
 //!   delegate to their `construct*` twins.
 //! * `allow-hygiene` — escape hatches must be well-formed and earn
 //!   their keep.
-//! * `index-hot` (opt-in) — advisory indexing check in hot modules.
+//! * `index-hot` — per-element slice/array indexing on the hot kernel
+//!   paths (`runtime/`, `signal/stats.rs`), where it is both a panic
+//!   path and a bounds check the autovectorizer must hoist; range
+//!   slices (`&xs[a..b]`) are exempt.
 //!
 //! Any match can be waived inline with
 //! `// lint:allow(<rule>) -- <reason>` on the same line or in the
@@ -447,14 +450,22 @@ mod tests {
     }
 
     #[test]
-    fn index_rule_is_opt_in() {
+    fn index_rule_scopes_to_hot_kernel_paths() {
         let src = "fn f(v: &[f64]) -> f64 { v[0] }\n";
+        // On by default on the hot kernel paths…
+        assert_eq!(rules_of(&findings("runtime/x.rs", src)), vec!["index-hot"]);
+        assert_eq!(rules_of(&findings("signal/stats.rs", src)), vec!["index-hot"]);
+        // …but nowhere else — not even the deterministic modules.
         assert!(findings("coreset/x.rs", src).is_empty());
-        let enabled = LintConfig::default().with_rule("index-hot", true).enabled_rules();
-        let found = lint_source("coreset/x.rs", src, &enabled).findings;
-        assert_eq!(rules_of(&found), vec!["index-hot"]);
-        // Still scoped to deterministic modules.
-        assert!(lint_source("runtime/x.rs", src, &enabled).findings.is_empty());
+        assert!(findings("signal/mod.rs", src).is_empty());
+        // Range slices are one bounds check per slice, not per element.
+        let ranged = "fn f(v: &[f64]) -> f64 { sum(&v[1..4]) }\n";
+        assert!(findings("runtime/x.rs", ranged).is_empty());
+        // An unmatched bracket on the line is conservatively flagged.
+        let open = "fn f(v: &[f64], i: usize) -> f64 {\n    v[long(\n        i)]\n}\n";
+        assert_eq!(rules_of(&findings("runtime/x.rs", open)), vec!["index-hot"]);
+        let disabled = LintConfig::default().with_rule("index-hot", false).enabled_rules();
+        assert!(lint_source("runtime/x.rs", src, &disabled).findings.is_empty());
     }
 
     #[test]

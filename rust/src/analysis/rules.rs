@@ -32,8 +32,9 @@ pub const RULES: &[RuleInfo] = &[
     },
     RuleInfo {
         id: "index-hot",
-        default_on: false,
-        summary: "slice/array indexing inside deterministic (hot) modules — advisory, opt-in",
+        default_on: true,
+        summary: "slice/array indexing on hot kernel paths (runtime/, signal/stats.rs); \
+                  range slices exempt",
     },
     RuleInfo {
         id: "det-order",
@@ -73,8 +74,8 @@ pub const RULES: &[RuleInfo] = &[
 ];
 
 /// Modules whose build/query paths must be bit-identical at any thread
-/// count and fanout (ROADMAP "standing constraint"); the det-* rules and
-/// the opt-in indexing rule apply only here.
+/// count and fanout (ROADMAP "standing constraint"); the det-* rules
+/// apply only here.
 pub const DETERMINISTIC_MODULES: &[&str] =
     &["audit", "bicriteria", "coreset", "partition", "segmentation", "signal"];
 
@@ -102,6 +103,17 @@ fn first_component(rel: &str) -> &str {
 
 fn is_deterministic_module(rel: &str) -> bool {
     DETERMINISTIC_MODULES.contains(&first_component(rel))
+}
+
+/// Hot kernel paths where `index-hot` applies: the `runtime` execution
+/// backends and the prefix-statistics fill. These are the cache-blocked
+/// inner loops — indexing there is both a panic path and a per-element
+/// bounds check the autovectorizer has to hoist, so the rule is on by
+/// default and satisfied structurally (zips, `split_at_mut`, slice
+/// patterns, range slices), with `lint:allow` reserved for O(1) corner
+/// reads.
+fn is_hot_kernel_path(rel: &str) -> bool {
+    first_component(rel) == "runtime" || rel == "signal/stats.rs"
 }
 
 /// Test-only source is exempt from every rule: anything under a `tests/`
@@ -311,7 +323,7 @@ pub(crate) fn lint_lines(
             }
         }
 
-        if on("index-hot") && det && has_indexing(code) {
+        if on("index-hot") && is_hot_kernel_path(rel) && has_indexing(code) {
             emit(
                 &mut findings,
                 &mut suppressed,
@@ -319,7 +331,8 @@ pub(crate) fn lint_lines(
                 rel,
                 "index-hot",
                 idx,
-                "slice/array indexing in a hot deterministic module (can panic)".to_string(),
+                "slice/array indexing on a hot kernel path (can panic; prefer zips/splits)"
+                    .to_string(),
             );
         }
 
@@ -418,13 +431,44 @@ pub(crate) fn lint_lines(
     FileLint { findings, suppressed }
 }
 
-/// `ident[` / `)[` / `][` indexing detector for the opt-in hot-path rule.
+/// Indexing detector for the hot-path rule: an `ident[` / `)[` / `][`
+/// opener whose bracket content (at the bracket's own nesting depth)
+/// does *not* contain `..`. Range slicing (`&xs[a..b]`, `[off..]`) is
+/// idiomatic on the blocked kernel paths — one bounds check per slice,
+/// not per element — so it is exempt; a bracket left unmatched on the
+/// line is conservatively flagged.
 fn has_indexing(code: &str) -> bool {
     let bytes = code.as_bytes();
-    bytes.windows(2).any(|w| {
-        w[1] == b'['
-            && (w[0].is_ascii_alphanumeric() || w[0] == b'_' || w[0] == b')' || w[0] == b']')
-    })
+    let mut i = 0;
+    while i < bytes.len() {
+        let opener = bytes[i] == b'['
+            && i > 0
+            && (bytes[i - 1].is_ascii_alphanumeric()
+                || bytes[i - 1] == b'_'
+                || bytes[i - 1] == b')'
+                || bytes[i - 1] == b']');
+        if !opener {
+            i += 1;
+            continue;
+        }
+        let mut depth = 1usize;
+        let mut j = i + 1;
+        let mut has_range = false;
+        while j < bytes.len() && depth > 0 {
+            match bytes[j] {
+                b'[' => depth += 1,
+                b']' => depth -= 1,
+                b'.' if depth == 1 && bytes.get(j + 1) == Some(&b'.') => has_range = true,
+                _ => {}
+            }
+            j += 1;
+        }
+        if depth > 0 || !has_range {
+            return true; // unmatched bracket → conservative; no `..` → indexing
+        }
+        i = j;
+    }
+    false
 }
 
 /// Every `#[deprecated]` `build*` shim must still call into a

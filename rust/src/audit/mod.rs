@@ -89,13 +89,19 @@ pub struct AuditConfig {
     pub threads: usize,
     /// DP-feasible optimal-tree-transfer instances (min 3).
     pub transfer_instances: usize,
+    /// `Some(block)` builds every per-case [`PrefixStats`] through the
+    /// cache-blocked fill ([`PrefixStats::new_blocked`]) — bit-identical
+    /// to the scalar fill for every block width, so the evidence trail
+    /// is unchanged; this is how the `blocked` engine backend audits
+    /// through its own code path end-to-end.
+    pub stats_block: Option<usize>,
 }
 
 impl AuditConfig {
     pub fn new(k: usize, eps: f64) -> Self {
         assert!(k >= 1);
         assert!(eps > 0.0 && eps < 1.0, "eps must be in (0,1)");
-        Self { k, eps, cases: 25, seed: 7, threads: 1, transfer_instances: 4 }
+        Self { k, eps, cases: 25, seed: 7, threads: 1, transfer_instances: 4, stats_block: None }
     }
 
     pub fn with_cases(mut self, cases: usize) -> Self {
@@ -116,6 +122,23 @@ impl AuditConfig {
     pub fn with_transfer_instances(mut self, instances: usize) -> Self {
         self.transfer_instances = instances.max(3);
         self
+    }
+
+    pub fn with_stats_block(mut self, block: Option<usize>) -> Self {
+        self.stats_block = block;
+        self
+    }
+
+    /// Per-case exact statistics through the configured fill: scalar by
+    /// default, cache-blocked when [`Self::stats_block`] is set. Both
+    /// fills are bit-identical (DESIGN.md §Kernels), so the audit's
+    /// verdicts cannot depend on the choice — but the blocked engine
+    /// path genuinely executes its own kernels under audit.
+    fn stats_for(&self, signal: &Signal) -> PrefixStats {
+        match self.stats_block {
+            None => PrefixStats::new(signal),
+            Some(block) => PrefixStats::new_blocked(signal, 1, block),
+        }
     }
 }
 
@@ -210,12 +233,28 @@ impl CoresetOracle {
             let per_cell = mom.count / b.rect.area() as f64;
             let mu = mom.mean();
             let var = mom.opt1() / mom.count;
-            for (r, c) in b.rect.cells() {
-                let i = r * m + c;
-                w_cell[i] += per_cell;
-                wy_cell[i] += per_cell * mu;
-                wy2_cell[i] += per_cell * (mu * mu + var);
-                irr_cell[i] += per_cell * var;
+            // Row-range scatter: one contiguous slice per signal row
+            // instead of per-cell index arithmetic — the same constants
+            // land on the same cells, but each array is walked in
+            // vectorizable runs (the grids then feed the blocked
+            // two-pass `padded_prefix_from_cells` below).
+            let wy_add = per_cell * mu;
+            let wy2_add = per_cell * (mu * mu + var);
+            let irr_add = per_cell * var;
+            for r in b.rect.r0..=b.rect.r1 {
+                let span = r * m + b.rect.c0..r * m + b.rect.c1 + 1;
+                for w in &mut w_cell[span.clone()] {
+                    *w += per_cell;
+                }
+                for wy in &mut wy_cell[span.clone()] {
+                    *wy += wy_add;
+                }
+                for wy2 in &mut wy2_cell[span.clone()] {
+                    *wy2 += wy2_add;
+                }
+                for irr in &mut irr_cell[span] {
+                    *irr += irr_add;
+                }
             }
         }
         Self {
@@ -298,7 +337,7 @@ impl AuditCase {
             2 => ("image", generate::image_like(n, m, 2, rng), None),
             _ => ("noise", generate::noise(n, m, 1.0, rng), None),
         };
-        let stats = PrefixStats::new(&signal);
+        let stats = config.stats_for(&signal);
         let coreset = SignalCoreset::construct(&signal, k, config.eps);
         let (families, queries) = build_queries(
             signal.bounds(),
@@ -465,7 +504,7 @@ fn transfer_check(config: &AuditConfig, instance: usize) -> TransferCheck {
         1 => ("smooth", generate::smooth(n, m, 3, &mut rng)),
         _ => ("image", generate::image_like(n, m, 2, &mut rng)),
     };
-    let stats = PrefixStats::new(&signal);
+    let stats = config.stats_for(&signal);
     let coreset = SignalCoreset::construct(&signal, k, config.eps);
     let bounds = signal.bounds();
 
@@ -568,7 +607,7 @@ fn incremental_check(config: &AuditConfig, instance: usize) -> IncrementalCheck 
     };
 
     let cfg = CoresetConfig::new(config.k, config.eps);
-    let mut stats = PrefixStats::new(&signal);
+    let mut stats = config.stats_for(&signal);
     let mut tree = MergeTree::build(&signal, &stats, cfg, INCREMENTAL_SHARD_ROWS, Exec::Spawn(1));
     let before = tree.leaf_builds();
 
@@ -588,7 +627,7 @@ fn incremental_check(config: &AuditConfig, instance: usize) -> IncrementalCheck 
                 signal.set(r, c, signal.get(r, c) + delta);
             }
         }
-        stats = PrefixStats::new(&signal);
+        stats = config.stats_for(&signal);
         tree.update(rect, &signal, &stats, Exec::Spawn(1));
     }
     let leaf_rebuilds = tree.leaf_builds() - before;
@@ -1253,6 +1292,17 @@ mod tests {
         // Thread count is a pure performance knob: identical evidence.
         let report1 = run_audit(&config.with_threads(1));
         assert_eq!(rendered, report1.to_json().render());
+    }
+
+    #[test]
+    fn blocked_stats_audit_is_byte_identical() {
+        // Routing the per-case statistics through the cache-blocked fill
+        // (the blocked engine backend's audit path) cannot change one
+        // byte of evidence — the fills are bit-identical.
+        let base = AuditConfig::new(3, 0.5).with_cases(4).with_seed(11).with_threads(1);
+        let reference = run_audit(&base).to_json().render();
+        let blocked = run_audit(&base.with_stats_block(Some(37))).to_json().render();
+        assert_eq!(reference, blocked);
     }
 }
 

@@ -1,7 +1,7 @@
 //! Minimal benchmark harness (criterion is unavailable in the offline
 //! registry — DESIGN.md §Substitutions). Provides warmup + repeated
-//! timing with median/mean/min reporting and a tabular printer used by
-//! the per-figure experiment benches.
+//! timing with median/mean/min/p90 reporting and a tabular printer used
+//! by the per-figure experiment benches and the perf regression gate.
 
 use std::time::{Duration, Instant};
 
@@ -12,6 +12,10 @@ pub struct Timing {
     pub mean: Duration,
     pub median: Duration,
     pub min: Duration,
+    /// 90th-percentile sample (nearest-rank; equals `max` for < 10 iters'
+    /// worth of resolution). Regression gating keys on `median`; `p90`
+    /// is reported so tail noise is visible in the committed baseline.
+    pub p90: Duration,
     pub max: Duration,
 }
 
@@ -46,6 +50,7 @@ pub fn bench<T>(
         mean: sum / times.len() as u32,
         median: times[times.len() / 2],
         min: times[0],
+        p90: times[((times.len() * 9) / 10).min(times.len() - 1)],
         max: times.last().copied().unwrap_or_default(),
     }
 }
@@ -130,7 +135,7 @@ mod tests {
     fn bench_runs_at_least_three_iters() {
         let t = bench(0, 5, Duration::from_millis(10), || 1 + 1);
         assert!(t.iters >= 3);
-        assert!(t.min <= t.median && t.median <= t.max);
+        assert!(t.min <= t.median && t.median <= t.p90 && t.p90 <= t.max);
     }
 
     #[test]

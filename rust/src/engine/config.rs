@@ -22,6 +22,10 @@ use crate::{bail, ensure};
 pub enum BackendChoice {
     /// The pure-Rust f32 kernels (always available, the default).
     Native,
+    /// The cache-blocked auto-vectorizing f32 kernels
+    /// ([`crate::runtime::BlockedBackend`]; also routes `PrefixStats`
+    /// construction through the blocked fill).
+    Blocked,
     /// PJRT execution of the AOT-compiled artifacts (`pjrt` feature).
     Pjrt,
 }
@@ -31,6 +35,7 @@ impl BackendChoice {
     pub fn name(self) -> &'static str {
         match self {
             BackendChoice::Native => "native",
+            BackendChoice::Blocked => "blocked",
             BackendChoice::Pjrt => "pjrt",
         }
     }
@@ -39,9 +44,10 @@ impl BackendChoice {
     pub fn from_name(name: &str) -> Result<Self> {
         match name {
             "native" => Ok(BackendChoice::Native),
+            "blocked" => Ok(BackendChoice::Blocked),
             "pjrt" => Ok(BackendChoice::Pjrt),
             other => Err(Error::msg(format!(
-                "unknown backend '{other}' (expected 'native' or 'pjrt')"
+                "unknown backend '{other}' (expected 'native', 'blocked', or 'pjrt')"
             ))),
         }
     }
@@ -52,7 +58,7 @@ impl BackendChoice {
 /// [`Args::expect_only`] allowlist enforces for flags. (The spellings
 /// differ slightly: JSON uses `_` where the CLI uses `-`, and the
 /// CLI's `--dir` is the JSON `artifacts_dir`.)
-pub const CONFIG_KEYS: [&str; 12] = [
+pub const CONFIG_KEYS: [&str; 13] = [
     "k",
     "eps",
     "beta",
@@ -62,6 +68,7 @@ pub const CONFIG_KEYS: [&str; 12] = [
     "merge_fanout",
     "reduce_tol",
     "backend",
+    "block_size",
     "artifacts_dir",
     "seed",
     // Tolerated sub-object: the static-analysis knobs ride the same
@@ -111,6 +118,12 @@ pub struct EngineConfig {
     pub reduce_tol: Option<f64>,
     /// Kernel backend for the runtime layer.
     pub backend: BackendChoice,
+    /// Column-block width of the blocked backend / blocked stats fill
+    /// (≥ 1). A pure performance knob: every block size produces
+    /// bit-identical f64 statistics and bit-identical blocked-backend
+    /// prefix images (DESIGN.md §Kernels). Ignored by the other
+    /// backends.
+    pub block_size: usize,
     /// Artifact directory override for the PJRT backend (`None` →
     /// `SIGTREE_ARTIFACTS` / `./artifacts`).
     pub artifacts_dir: Option<String>,
@@ -131,6 +144,7 @@ impl EngineConfig {
             merge_fanout: 2,
             reduce_tol: None,
             backend: BackendChoice::Native,
+            block_size: crate::runtime::blocked::BLOCK,
             artifacts_dir: None,
             seed: 7,
         }
@@ -168,6 +182,11 @@ impl EngineConfig {
 
     pub fn with_backend(mut self, backend: BackendChoice) -> Self {
         self.backend = backend;
+        self
+    }
+
+    pub fn with_block_size(mut self, block_size: usize) -> Self {
+        self.block_size = block_size;
         self
     }
 
@@ -216,6 +235,11 @@ impl EngineConfig {
                 "reduce_tol must be a non-negative finite number (got {tol})"
             );
         }
+        ensure!(
+            self.block_size >= 1,
+            "block_size must be >= 1 (got {})",
+            self.block_size
+        );
         Ok(())
     }
 
@@ -245,6 +269,7 @@ impl EngineConfig {
             ("merge_fanout", Json::int(self.merge_fanout)),
             ("reduce_tol", self.reduce_tol.map_or(Json::Null, Json::num)),
             ("backend", Json::str(self.backend.name())),
+            ("block_size", Json::int(self.block_size)),
             (
                 "artifacts_dir",
                 self.artifacts_dir.as_deref().map_or(Json::Null, Json::str),
@@ -333,6 +358,7 @@ impl EngineConfig {
                 .ok_or_else(|| Error::msg("'backend' must be a string"))?;
             config.backend = BackendChoice::from_name(name)?;
         }
+        config.block_size = usize_field("block_size", config.block_size)?;
         config.artifacts_dir = match doc.get("artifacts_dir") {
             None => config.artifacts_dir,
             Some(Json::Null) => None,
@@ -393,6 +419,7 @@ impl EngineConfig {
                 None => base.backend,
                 Some(name) => BackendChoice::from_name(name)?,
             },
+            block_size: args.get_usize("block-size", base.block_size)?,
             artifacts_dir: args.get("dir").map(str::to_string).or(base.artifacts_dir),
             seed: args.get_u64("seed", base.seed)?,
         };
@@ -553,10 +580,32 @@ mod tests {
 
     #[test]
     fn backend_names_round_trip() {
-        for choice in [BackendChoice::Native, BackendChoice::Pjrt] {
+        for choice in [BackendChoice::Native, BackendChoice::Blocked, BackendChoice::Pjrt] {
             assert_eq!(BackendChoice::from_name(choice.name()).unwrap(), choice);
         }
-        assert!(BackendChoice::from_name("cuda").is_err());
+        let err = BackendChoice::from_name("cuda").unwrap_err().to_string();
+        assert!(err.contains("blocked"), "error must list all spellings: {err}");
+    }
+
+    #[test]
+    fn block_size_knob_parses_and_validates() {
+        let defaults = EngineConfig::new(64, 0.2);
+        assert_eq!(defaults.block_size, crate::runtime::blocked::BLOCK);
+        let config = EngineConfig::from_args(
+            &argv("runtime --backend blocked --block-size 37"),
+            EngineConfig::new(64, 0.2),
+        )
+        .unwrap();
+        assert_eq!(config.backend, BackendChoice::Blocked);
+        assert_eq!(config.block_size, 37);
+        // JSON round-trip carries the knob.
+        let back = EngineConfig::from_json_str(&config.to_json().render()).unwrap();
+        assert_eq!(back.block_size, 37);
+        assert_eq!(back.backend, BackendChoice::Blocked);
+        // Zero is rejected by the shared validator, from both surfaces.
+        assert!(EngineConfig::new(4, 0.3).with_block_size(0).validate().is_err());
+        let defaults = EngineConfig::new(64, 0.2);
+        assert!(EngineConfig::from_args(&argv("runtime --block-size 0"), defaults).is_err());
     }
 
     #[test]

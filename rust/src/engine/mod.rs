@@ -15,7 +15,10 @@
 //!   are dedicated scoped threads around a bounded backpressure queue
 //!   by design — only its statistics build runs on the pool);
 //! * the **kernel backend** ([`crate::runtime::KernelBackend`]) chosen
-//!   by the config (`native` / `pjrt`);
+//!   by the config (`native` / `blocked` / `pjrt`; `blocked` also
+//!   routes the shared statistics through the cache-blocked fill
+//!   [`PrefixStats::new_blocked_exec`] — bit-identical f64 results,
+//!   see DESIGN.md §Kernels);
 //! * per attached signal, the **shared [`PrefixStats`]**
 //!   ([`Engine::session`]) every region build and exact-loss query
 //!   answers from.
@@ -83,10 +86,17 @@ impl Engine {
     /// Validate `config` and bring the session up (pool + backend).
     pub fn new(config: EngineConfig) -> Result<Engine> {
         config.validate()?;
-        let backend = backend_from_name(
-            config.backend.name(),
-            config.artifacts_dir.as_ref().map(std::path::Path::new),
-        )?;
+        let backend: Box<dyn KernelBackend> = match config.backend {
+            // The blocked backend takes the config's block width (the
+            // name-based factory only knows the default).
+            BackendChoice::Blocked => {
+                Box::new(crate::runtime::BlockedBackend::with_block(config.block_size))
+            }
+            choice => backend_from_name(
+                choice.name(),
+                config.artifacts_dir.as_ref().map(std::path::Path::new),
+            )?,
+        };
         let pool = WorkerPool::new(config.threads);
         let threads = pool.threads();
         Ok(Engine { config, threads, pool, backend })
@@ -115,9 +125,18 @@ impl Engine {
 
     /// Shared prefix statistics of `signal`, built on the engine pool
     /// (thread-invariant: bit-identical to [`PrefixStats::new_par`] at
-    /// any thread count).
+    /// any thread count). With the `blocked` backend the build goes
+    /// through the cache-blocked fill
+    /// ([`PrefixStats::new_blocked_exec`], block width =
+    /// [`EngineConfig::block_size`]) — still bit-identical, so backend
+    /// choice never changes a downstream coreset.
     pub fn stats<S: SignalSource>(&self, signal: &S) -> PrefixStats {
-        PrefixStats::new_par_exec(signal, self.exec())
+        match self.config.backend {
+            BackendChoice::Blocked => {
+                PrefixStats::new_blocked_exec(signal, self.exec(), self.config.block_size)
+            }
+            _ => PrefixStats::new_par_exec(signal, self.exec()),
+        }
     }
 
     /// Build the (k, ε)-coreset of `signal` — the sharded construction
@@ -133,7 +152,7 @@ impl Engine {
         if signal.rows() / shard_rows <= 1 {
             return SignalCoreset::construct_with(signal, self.config.coreset_config());
         }
-        let stats = PrefixStats::new_par_exec(signal, self.exec());
+        let stats = self.stats(signal);
         self.tree_of(signal, &stats).full()
     }
 
@@ -256,11 +275,18 @@ impl Engine {
     /// seed) on the engine pool. The evidence trail is bit-identical to
     /// [`audit::run_audit`] with the same knobs at any thread count.
     pub fn audit(&self, cases: usize, transfer_instances: usize) -> AuditReport {
+        // The blocked backend audits through its own statistics fill
+        // (bit-identical evidence — `AuditConfig::stats_block` docs).
+        let stats_block = match self.config.backend {
+            BackendChoice::Blocked => Some(self.config.block_size),
+            _ => None,
+        };
         let config = AuditConfig::new(self.config.k, self.config.eps)
             .with_cases(cases)
             .with_seed(self.config.seed)
             .with_threads(self.threads)
-            .with_transfer_instances(transfer_instances);
+            .with_transfer_instances(transfer_instances)
+            .with_stats_block(stats_block);
         audit::run_audit_exec(&config, self.exec())
     }
 }
@@ -549,6 +575,32 @@ mod tests {
             assert_same_coreset(&engine.coreset(&sig), &reference, "fanout");
             let mut session = engine.session(&sig);
             assert_same_coreset(&session.coreset_tree().full(), &reference, "fanout tree");
+        }
+    }
+
+    #[test]
+    fn blocked_backend_engine_is_bit_identical_to_native() {
+        // Backend choice is a pure execution knob: the blocked stats
+        // fill is bit-identical to the scalar one, so the engine's
+        // coresets must match bitwise for every block size — including
+        // a non-divisor width.
+        let mut rng = Rng::new(78);
+        let sig = generate::smooth(192, 40, 3, &mut rng);
+        let native = Engine::new(EngineConfig::new(4, 0.3).with_threads(2)).unwrap();
+        let reference = native.coreset(&sig);
+        for block in [8, 37, 64] {
+            let engine = Engine::new(
+                EngineConfig::new(4, 0.3)
+                    .with_threads(2)
+                    .with_backend(BackendChoice::Blocked)
+                    .with_block_size(block),
+            )
+            .unwrap();
+            assert_eq!(engine.backend().name(), "blocked");
+            assert_same_coreset(&engine.coreset(&sig), &reference, "blocked engine");
+            let stats = engine.stats(&sig);
+            let s = KSegmentation::constant(sig.bounds(), 0.5);
+            assert_eq!(s.loss(&stats), s.loss(&native.stats(&sig)), "stats loss");
         }
     }
 

@@ -17,7 +17,8 @@
 //! * `tune`       — hyperparameter sweep on full data vs coreset.
 //! * `update`     — incremental-rebuild demo: seeded tile edits through an
 //!   [`sigtree::engine::EditSession`], incremental vs from-scratch timings.
-//! * `runtime`    — run kernel-backend parity checks (`--backend native|pjrt`).
+//! * `runtime`    — run kernel-backend parity checks
+//!   (`--backend native|blocked|pjrt`).
 //! * `lint`       — the determinism & panic-freedom static-analysis pass
 //!   over `rust/src` ([`sigtree::analysis`]); non-zero exit on findings.
 //! * `help`       — this text.
@@ -31,7 +32,9 @@ use sigtree::engine::{Engine, EngineConfig};
 use sigtree::error::{Error, Result};
 use sigtree::experiments::{self, Solver};
 use sigtree::rng::Rng;
-use sigtree::runtime::{pad_integral, KernelBackend, TiledPrefix, TILE};
+use sigtree::runtime::{
+    pad_integral, BlockedBackend, KernelBackend, NativeBackend, TiledPrefix, TILE,
+};
 use sigtree::segmentation::random_segmentation;
 use sigtree::signal::{generate, PrefixStats, Rect, Signal};
 
@@ -79,7 +82,7 @@ fn print_help() {
            experiment  --dataset air|gesture --scale 0.1 --k 200 --eps 0.3 [--solver forest|gbdt]\n\
            tune        --dataset air|gesture --scale 0.1 --grid 8 --eps 0.3\n\
            update      --n 512 --m 512 --k 64 --eps 0.2 --edits 8 --tile 64\n\
-           runtime     [--backend native|pjrt] [--dir artifacts]\n\
+           runtime     [--backend native|blocked|pjrt] [--block-size B] [--dir artifacts]\n\
            lint        [--root rust/src] [--enable a,b] [--disable a,b] [--json lint.json] [--rules]\n\
            help\n\
          \n\
@@ -95,7 +98,9 @@ fn print_help() {
                             never changes the composed coreset's bits).\n\
            --reduce-tol T   override the root reduce tolerance (default:\n\
                             the guarantee-preserving gamma^2*sigma).\n\
-           --backend NAME   kernel backend: native (default) or pjrt.\n\
+           --backend NAME   kernel backend: native (default), blocked, or pjrt.\n\
+           --block-size B   column-block width of the blocked backend/stats\n\
+                            fill (>= 1; bit-identical results for every B).\n\
            --dir PATH       artifacts directory for the pjrt backend.\n\
            --seed S         base seed (decimal or 0x-hex).\n\
            --config FILE    JSON engine config (sigtree::engine::EngineConfig);\n\
@@ -134,6 +139,8 @@ fn cmd_coreset(args: &Args) -> Result<()> {
         "shard-rows",
         "merge-fanout",
         "reduce-tol",
+        "backend",
+        "block-size",
         "seed",
         "config",
         "n",
@@ -251,7 +258,8 @@ fn cmd_audit(args: &Args) -> Result<()> {
     // The audit builds practically-calibrated coresets internally, so
     // --beta/--shard-rows/--band-rows would be inert here — rejected.
     args.expect_only(&[
-        "k", "eps", "threads", "seed", "config", "cases", "transfer-instances", "json",
+        "k", "eps", "threads", "backend", "block-size", "seed", "config", "cases",
+        "transfer-instances", "json",
     ])?;
     let engine = Engine::new(EngineConfig::from_args(args, EngineConfig::new(5, 0.5))?)?;
     let cases = args.get_usize("cases", 25)?;
@@ -456,7 +464,8 @@ fn cmd_update(args: &Args) -> Result<()> {
 
 fn cmd_runtime(args: &Args) -> Result<()> {
     args.expect_only(&[
-        "k", "eps", "beta", "threads", "shard-rows", "backend", "dir", "seed", "config",
+        "k", "eps", "beta", "threads", "shard-rows", "backend", "block-size", "dir", "seed",
+        "config",
     ])?;
     // Historical default: threads=1 runs the kernel parity checks only;
     // any other value adds the engine-vs-sequential parity section.
@@ -498,6 +507,30 @@ fn cmd_runtime(args: &Args) -> Result<()> {
         "tiled moments parity: sum {s:.3} vs {:.3}, sumsq {q:.3} vs {:.3}",
         exact.sum, exact.sum_sq
     );
+
+    // Blocked-kernel bit-identity (always checked; the gate `--backend
+    // blocked` runs through end-to-end): the cache-blocked backend must
+    // reproduce the native prefix images exactly, and the blocked
+    // statistics fill must reproduce the scalar fill exactly, at the
+    // configured --block-size.
+    let block = engine.config().block_size;
+    let blocked = BlockedBackend::with_block(block);
+    let (by, by2) = blocked.prefix2d(&tile)?;
+    let (ny, ny2) = NativeBackend::new().prefix2d(&tile)?;
+    if by != ny || by2 != ny2 {
+        return Err(Error::msg(format!(
+            "blocked prefix2d is not bit-identical to native at block {block}"
+        )));
+    }
+    let blk_stats = PrefixStats::new_blocked(&signal, engine.threads(), block);
+    let seq_stats = PrefixStats::new(&signal);
+    let (bm, sm) = (blk_stats.moments(&probe), seq_stats.moments(&probe));
+    if bm != sm {
+        return Err(Error::msg(format!(
+            "blocked stats parity failure at block {block}: {bm:?} vs {sm:?}"
+        )));
+    }
+    println!("blocked kernel/stats bit-identity OK (block {block})");
 
     // Engine parity (--threads N, 0/auto = all cores): the engine's
     // pool-built statistics and sharded coreset must agree with their

@@ -1,0 +1,316 @@
+//! Cache-blocked, auto-vectorizable kernel backend — std-only, no
+//! `unsafe`, no intrinsics. Same artifact contract as
+//! [`super::NativeBackend`], restructured so rustc/LLVM can vectorize
+//! the order-independent halves of each kernel:
+//!
+//! * **`prefix2d` — two-pass blocked prefix sum.** The scalar reference
+//!   interleaves, per cell, a serial row accumulation with the vertical
+//!   add of the stored row above. Here each row is processed in two
+//!   passes over column blocks of width `block`:
+//!
+//!   1. *Per-block local scan with a carried accumulator*: the f64 row
+//!      running sums (Σy, Σy²) are written to scratch rows, block by
+//!      block, with the accumulator carried across block boundaries.
+//!      Because the carry IS the running accumulator (not a separately
+//!      re-associated block total), the addition chain is exactly the
+//!      scalar recurrence's — block size cannot change a single bit.
+//!   2. *Vertical block carry*: the previous output row is added
+//!      elementwise in fixed-width lanes (slice patterns over
+//!      `chunks_exact`). Elementwise adds are order-independent per
+//!      column, so this pass is trivially bit-stable under any blocking
+//!      and is the part LLVM vectorizes.
+//!
+//!   Net effect: `BlockedBackend::prefix2d` is **bit-identical** to
+//!   `NativeBackend::prefix2d` for every block size (pinned by the unit
+//!   tests below and `tests/integration_blocked.rs`).
+//!
+//! * **`block_sse`** — the same per-rect arithmetic as the native
+//!   backend (shared [`super::rect_opt1`]), evaluated in block-sized
+//!   batches so the four integral-image corner streams stay hot in L1.
+//!   Bit-identical to native by construction.
+//!
+//! * **`seg_loss`** — blocked cascaded summation: one serial f64
+//!   partial per `block`-wide lane chunk, then a pairwise (tree)
+//!   reduction over the partials. Output depends on the partial layout
+//!   (block size), so this kernel is pinned against the native backend
+//!   at the f32-quantization tolerance instead of bit-identity (see
+//!   DESIGN.md §Kernels); with `block == TILE` the partial layout
+//!   matches native's per-row cascade exactly and the outputs are
+//!   bit-equal.
+
+use crate::ensure;
+use crate::error::Result;
+
+use super::{pairwise_sum, rect_opt1, KernelBackend, RECT_BATCH, TILE};
+
+/// Default column-block width: 64 f64 scratch lanes = 512 B, so one
+/// block of scratch plus the two output rows it touches stays resident
+/// in L1 while pass 2 streams over it.
+pub const BLOCK: usize = 64;
+
+/// Fixed lane width of pass 2's innermost loop — 8 f32/f64 elements, one
+/// AVX2 f64 register pair / half an AVX-512 register, unrolled via slice
+/// patterns so the chunk size is a compile-time constant.
+pub const LANES: usize = 8;
+
+/// The cache-blocked kernel backend. `block` is runtime-tunable (CLI
+/// `--block-size`, `EngineConfig::with_block_size`); [`BLOCK`] is the
+/// compile-time default.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockedBackend {
+    block: usize,
+}
+
+impl Default for BlockedBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BlockedBackend {
+    /// Backend with the default [`BLOCK`] width.
+    pub fn new() -> Self {
+        Self::with_block(BLOCK)
+    }
+
+    /// Backend with an explicit block width (clamped to ≥ 1). Any width
+    /// yields bit-identical `prefix2d`/`block_sse` results; the width
+    /// only moves the cache/vectorization sweet spot.
+    pub fn with_block(block: usize) -> Self {
+        Self { block: block.max(1) }
+    }
+
+    /// The configured block width.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+}
+
+/// Pass 2 inner kernel: `dst[i] = (up[i] as f64 + pref[i]) as f32`,
+/// elementwise over one column block, in [`LANES`]-wide exact chunks
+/// with slice patterns (remainder handled scalar). The per-element
+/// operation matches the scalar backend's store exactly.
+fn vadd_cast(dst: &mut [f32], up: &[f32], pref: &[f64]) {
+    debug_assert!(dst.len() == up.len() && dst.len() == pref.len());
+    let mut d_lanes = dst.chunks_exact_mut(LANES);
+    let mut u_lanes = up.chunks_exact(LANES);
+    let mut p_lanes = pref.chunks_exact(LANES);
+    for ((d, u), p) in (&mut d_lanes).zip(&mut u_lanes).zip(&mut p_lanes) {
+        let [d0, d1, d2, d3, d4, d5, d6, d7] = d else { continue };
+        let ([u0, u1, u2, u3, u4, u5, u6, u7], [p0, p1, p2, p3, p4, p5, p6, p7]) = (u, p) else {
+            continue;
+        };
+        *d0 = (*u0 as f64 + *p0) as f32;
+        *d1 = (*u1 as f64 + *p1) as f32;
+        *d2 = (*u2 as f64 + *p2) as f32;
+        *d3 = (*u3 as f64 + *p3) as f32;
+        *d4 = (*u4 as f64 + *p4) as f32;
+        *d5 = (*u5 as f64 + *p5) as f32;
+        *d6 = (*u6 as f64 + *p6) as f32;
+        *d7 = (*u7 as f64 + *p7) as f32;
+    }
+    let d_rem = d_lanes.into_remainder();
+    let rem = u_lanes.remainder().iter().zip(p_lanes.remainder().iter());
+    for (d, (&u, &p)) in d_rem.iter_mut().zip(rem) {
+        *d = (u as f64 + p) as f32;
+    }
+}
+
+impl KernelBackend for BlockedBackend {
+    fn name(&self) -> String {
+        "blocked".to_string()
+    }
+
+    fn prefix2d(&self, tile: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut ii_y = Vec::new();
+        let mut ii_y2 = Vec::new();
+        self.prefix2d_into(tile, &mut ii_y, &mut ii_y2)?;
+        Ok((ii_y, ii_y2))
+    }
+
+    /// Two-pass blocked integral-image fill (module docs); bit-identical
+    /// to the scalar backend for every block size.
+    fn prefix2d_into(
+        &self,
+        tile: &[f32],
+        out_y: &mut Vec<f32>,
+        out_y2: &mut Vec<f32>,
+    ) -> Result<()> {
+        ensure!(tile.len() == TILE * TILE, "tile must be {TILE}x{TILE}");
+        out_y.clear();
+        out_y.resize(TILE * TILE, 0.0);
+        out_y2.clear();
+        out_y2.resize(TILE * TILE, 0.0);
+        const ZEROS: [f32; TILE] = [0.0; TILE];
+        // Scratch rows for the f64 row-prefixes (stack-resident, 2 KiB
+        // each — no heap traffic on the hot path).
+        let mut pref_y = [0.0f64; TILE];
+        let mut pref_y2 = [0.0f64; TILE];
+        let block = self.block;
+        for r in 0..TILE {
+            let row = &tile[r * TILE..(r + 1) * TILE];
+            // Pass 1: serial row scan into the scratch rows, walked in
+            // column blocks with the accumulator carried across blocks.
+            let mut row_y = 0.0f64;
+            let mut row_y2 = 0.0f64;
+            let prefs = pref_y.chunks_mut(block).zip(pref_y2.chunks_mut(block));
+            for (vals, (py, py2)) in row.chunks(block).zip(prefs) {
+                for ((&v, dy), dy2) in vals.iter().zip(py.iter_mut()).zip(py2.iter_mut()) {
+                    let v = v as f64;
+                    row_y += v;
+                    row_y2 += v * v;
+                    *dy = row_y;
+                    *dy2 = row_y2;
+                }
+            }
+            // Pass 2: vertical block carry — add the stored f32 row
+            // above, block by block, lane-chunked inside each block.
+            let (above_y, cur_y) = out_y[..(r + 1) * TILE].split_at_mut(r * TILE);
+            let (above_y2, cur_y2) = out_y2[..(r + 1) * TILE].split_at_mut(r * TILE);
+            let (up_y, up_y2): (&[f32], &[f32]) = if r > 0 {
+                (&above_y[(r - 1) * TILE..], &above_y2[(r - 1) * TILE..])
+            } else {
+                (&ZEROS, &ZEROS)
+            };
+            let ups = up_y.chunks(block).zip(pref_y.chunks(block));
+            for ((dst, up), pref) in cur_y.chunks_mut(block).zip(ups) {
+                vadd_cast(dst, up, pref);
+            }
+            let ups2 = up_y2.chunks(block).zip(pref_y2.chunks(block));
+            for ((dst, up), pref) in cur_y2.chunks_mut(block).zip(ups2) {
+                vadd_cast(dst, up, pref);
+            }
+        }
+        Ok(())
+    }
+
+    /// Same per-rect arithmetic as the native backend (shared
+    /// [`rect_opt1`]), in block-sized batches.
+    fn block_sse(
+        &self,
+        padded_ii_y: &[f32],
+        padded_ii_y2: &[f32],
+        rects: &[[i32; 4]],
+    ) -> Result<Vec<f32>> {
+        let side = TILE + 1;
+        ensure!(padded_ii_y.len() == side * side, "padded ii shape");
+        ensure!(padded_ii_y2.len() == side * side, "padded ii shape");
+        ensure!(rects.len() <= RECT_BATCH, "≤ {RECT_BATCH} rects per call");
+        let mut out = Vec::with_capacity(rects.len());
+        for batch in rects.chunks(self.block) {
+            for rect in batch {
+                out.push(rect_opt1(padded_ii_y, padded_ii_y2, rect)?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Blocked cascaded SSE: one serial f64 partial per block-wide
+    /// chunk, pairwise (tree) reduction over the partials.
+    fn seg_loss(&self, signal: &[f32], rendered: &[f32]) -> Result<f32> {
+        ensure!(
+            signal.len() == TILE * TILE && rendered.len() == TILE * TILE,
+            "seg_loss tiles must be {TILE}x{TILE}"
+        );
+        let n_parts = (TILE * TILE).div_ceil(self.block);
+        let mut partials = Vec::with_capacity(n_parts);
+        for (sig, ren) in signal.chunks(self.block).zip(rendered.chunks(self.block)) {
+            let mut acc = 0.0f64;
+            for (a, b) in sig.iter().zip(ren.iter()) {
+                let d = (*a - *b) as f64;
+                acc += d * d;
+            }
+            partials.push(acc);
+        }
+        Ok(pairwise_sum(&partials) as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::runtime::NativeBackend;
+
+    fn random_tile(seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..TILE * TILE).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn prefix2d_is_bit_identical_to_native_for_every_block_size() {
+        let tile = random_tile(70);
+        let native = NativeBackend::new();
+        let (ny, ny2) = native.prefix2d(&tile).unwrap();
+        for block in [1, 8, 32, 37, 64, TILE, TILE * TILE] {
+            let b = BlockedBackend::with_block(block);
+            let (by, by2) = b.prefix2d(&tile).unwrap();
+            assert_eq!(ny, by, "ii_y, block={block}");
+            assert_eq!(ny2, by2, "ii_y2, block={block}");
+        }
+    }
+
+    #[test]
+    fn prefix2d_into_reuses_buffers_and_matches() {
+        let tile = random_tile(71);
+        let b = BlockedBackend::new();
+        let (y, y2) = b.prefix2d(&tile).unwrap();
+        let mut by = vec![7.0f32; 5];
+        let mut by2 = vec![7.0f32; TILE * TILE + 3];
+        b.prefix2d_into(&tile, &mut by, &mut by2).unwrap();
+        assert_eq!(y, by);
+        assert_eq!(y2, by2);
+    }
+
+    #[test]
+    fn block_sse_is_bit_identical_to_native() {
+        let tile = random_tile(72);
+        let native = NativeBackend::new();
+        let (ii_y, ii_y2) = native.prefix2d(&tile).unwrap();
+        let p_y = crate::runtime::pad_integral(&ii_y);
+        let p_y2 = crate::runtime::pad_integral(&ii_y2);
+        let mut rng = Rng::new(73);
+        let mut rects = Vec::new();
+        for _ in 0..257 {
+            let r0 = rng.usize(TILE);
+            let r1 = rng.range(r0, TILE);
+            let c0 = rng.usize(TILE);
+            let c1 = rng.range(c0, TILE);
+            rects.push([r0 as i32, r1 as i32, c0 as i32, c1 as i32]);
+        }
+        let want = native.block_sse(&p_y, &p_y2, &rects).unwrap();
+        for block in [1, 37, 64] {
+            let got = BlockedBackend::with_block(block).block_sse(&p_y, &p_y2, &rects).unwrap();
+            assert_eq!(want, got, "block={block}");
+        }
+    }
+
+    #[test]
+    fn seg_loss_tracks_native_within_f32_quantization() {
+        let a = random_tile(74);
+        let b = random_tile(75);
+        let native = NativeBackend::new().seg_loss(&a, &b).unwrap() as f64;
+        for block in [8, 37, 64] {
+            let got = BlockedBackend::with_block(block).seg_loss(&a, &b).unwrap() as f64;
+            // Both accumulate in f64; only the partial layout differs, so
+            // the results agree to the final f32 cast (~6e-8 rel).
+            assert!((got - native).abs() <= 1e-6 * (1.0 + native.abs()), "block={block}");
+        }
+        // With block == TILE the partial layout matches native's per-row
+        // cascade exactly: bit-equal.
+        let same = BlockedBackend::with_block(TILE).seg_loss(&a, &b).unwrap();
+        assert_eq!(same.to_bits(), (native as f32).to_bits());
+    }
+
+    #[test]
+    fn shape_violations_are_errors() {
+        let b = BlockedBackend::new();
+        assert!(b.prefix2d(&[0.0; 4]).is_err());
+        assert!(b.seg_loss(&[0.0; 4], &[0.0; 4]).is_err());
+        let side = TILE + 1;
+        let padded = vec![0.0f32; side * side];
+        assert!(b.block_sse(&padded, &padded, &[[0, TILE as i32, 0, 0]]).is_err());
+        let too_many = vec![[0i32, 0, 0, 0]; RECT_BATCH + 1];
+        assert!(b.block_sse(&padded, &padded, &too_many).is_err());
+    }
+}

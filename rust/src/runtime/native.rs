@@ -1,14 +1,16 @@
 //! Pure-Rust kernel backend — a std-only implementation of the artifact
 //! contract ([`super::KernelBackend`]), always available and the default
 //! execution path. Shapes and output precision (f32) match the AOT
-//! kernels exactly; internal accumulation is f64, which stays within the
-//! f32 tolerance the contract allows (the PJRT kernels accumulate in f32,
-//! so the native backend is the *more* accurate of the two).
+//! kernels exactly; internal accumulation is f64 with cascaded pairwise
+//! reduction for the long sums (`seg_loss`), which stays well within the
+//! f32 tolerance the contract allows (the PJRT kernels accumulate in
+//! f32, so the native backend is the *more* accurate of the two; the
+//! tolerance policy is documented in DESIGN.md §Kernels).
 
 use crate::ensure;
 use crate::error::Result;
 
-use super::{KernelBackend, RECT_BATCH, TILE};
+use super::{pairwise_sum, rect_opt1, KernelBackend, RECT_BATCH, TILE};
 
 /// The native (pure-Rust) kernel backend. Stateless; construction is
 /// free, so build one wherever a [`KernelBackend`] is needed.
@@ -21,6 +23,36 @@ impl NativeBackend {
     }
 }
 
+/// The scalar one-pass integral-image fill: per row, a serial f64
+/// running sum over the row, interleaved with the vertical add of the
+/// stored (f32) row above. This is the reference arithmetic every other
+/// in-process backend must reproduce bit-for-bit (see
+/// [`super::blocked`] for the two-pass restatement).
+fn fill_prefix2d(tile: &[f32], ii_y: &mut [f32], ii_y2: &mut [f32]) {
+    const ZEROS: [f32; TILE] = [0.0; TILE];
+    for r in 0..TILE {
+        let mut row_y = 0.0f64;
+        let mut row_y2 = 0.0f64;
+        let row = &tile[r * TILE..(r + 1) * TILE];
+        let (above_y, cur_y) = ii_y[..(r + 1) * TILE].split_at_mut(r * TILE);
+        let (above_y2, cur_y2) = ii_y2[..(r + 1) * TILE].split_at_mut(r * TILE);
+        let (up_y, up_y2): (&[f32], &[f32]) = if r > 0 {
+            (&above_y[(r - 1) * TILE..], &above_y2[(r - 1) * TILE..])
+        } else {
+            (&ZEROS, &ZEROS)
+        };
+        let dst = cur_y.iter_mut().zip(cur_y2.iter_mut());
+        let up = up_y.iter().zip(up_y2.iter());
+        for ((&v, (dy, dy2)), (&uy, &uy2)) in row.iter().zip(dst).zip(up) {
+            let v = v as f64;
+            row_y += v;
+            row_y2 += v * v;
+            *dy = (uy as f64 + row_y) as f32;
+            *dy2 = (uy2 as f64 + row_y2) as f32;
+        }
+    }
+}
+
 impl KernelBackend for NativeBackend {
     fn name(&self) -> String {
         "native".to_string()
@@ -29,29 +61,27 @@ impl KernelBackend for NativeBackend {
     /// Inclusive 2D prefix sums of y and y² over a TILE×TILE tile
     /// (row-major), returned as unpadded TILE×TILE integral images.
     fn prefix2d(&self, tile: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        ensure!(tile.len() == TILE * TILE, "tile must be {TILE}x{TILE}");
-        let mut ii_y = vec![0.0f32; TILE * TILE];
-        let mut ii_y2 = vec![0.0f32; TILE * TILE];
-        for r in 0..TILE {
-            let mut row_y = 0.0f64;
-            let mut row_y2 = 0.0f64;
-            for c in 0..TILE {
-                let v = tile[r * TILE + c] as f64;
-                row_y += v;
-                row_y2 += v * v;
-                let (up_y, up_y2) = if r > 0 {
-                    (
-                        ii_y[(r - 1) * TILE + c] as f64,
-                        ii_y2[(r - 1) * TILE + c] as f64,
-                    )
-                } else {
-                    (0.0, 0.0)
-                };
-                ii_y[r * TILE + c] = (up_y + row_y) as f32;
-                ii_y2[r * TILE + c] = (up_y2 + row_y2) as f32;
-            }
-        }
+        let mut ii_y = Vec::new();
+        let mut ii_y2 = Vec::new();
+        self.prefix2d_into(tile, &mut ii_y, &mut ii_y2)?;
         Ok((ii_y, ii_y2))
+    }
+
+    /// In-place [`Self::prefix2d`]: reuses the buffers' capacity, so hot
+    /// callers ([`super::tiled::TiledPrefix`]) stop allocating per tile.
+    fn prefix2d_into(
+        &self,
+        tile: &[f32],
+        out_y: &mut Vec<f32>,
+        out_y2: &mut Vec<f32>,
+    ) -> Result<()> {
+        ensure!(tile.len() == TILE * TILE, "tile must be {TILE}x{TILE}");
+        out_y.clear();
+        out_y.resize(TILE * TILE, 0.0);
+        out_y2.clear();
+        out_y2.resize(TILE * TILE, 0.0);
+        fill_prefix2d(tile, out_y, out_y2);
+        Ok(())
     }
 
     /// Batched opt₁ over tile-local rectangles from *padded* (TILE+1)²
@@ -70,41 +100,32 @@ impl KernelBackend for NativeBackend {
         ensure!(rects.len() <= RECT_BATCH, "≤ {RECT_BATCH} rects per call");
         let mut out = Vec::with_capacity(rects.len());
         for rect in rects {
-            let (r0, r1, c0, c1) = (rect[0], rect[1], rect[2], rect[3]);
-            ensure!(
-                0 <= r0 && r0 <= r1 && (r1 as usize) < TILE
-                    && 0 <= c0 && c0 <= c1 && (c1 as usize) < TILE,
-                "rect {rect:?} out of tile bounds"
-            );
-            let (r0, r1, c0, c1) = (r0 as usize, r1 as usize, c0 as usize, c1 as usize);
-            let q = |arr: &[f32]| -> f64 {
-                arr[(r1 + 1) * side + (c1 + 1)] as f64
-                    - arr[r0 * side + (c1 + 1)] as f64
-                    - arr[(r1 + 1) * side + c0] as f64
-                    + arr[r0 * side + c0] as f64
-            };
-            let moments = crate::signal::stats::Moments {
-                count: ((r1 - r0 + 1) * (c1 - c0 + 1)) as f64,
-                sum: q(padded_ii_y),
-                sum_sq: q(padded_ii_y2),
-            };
-            out.push(moments.opt1() as f32);
+            out.push(rect_opt1(padded_ii_y, padded_ii_y2, rect)?);
         }
         Ok(out)
     }
 
     /// SSE between a signal tile and a rendered segmentation tile.
+    /// Cascaded pairwise summation: one serial f64 partial per row, then
+    /// a pairwise (tree) reduction over the TILE row partials — rounding
+    /// error O(TILE + log TILE)·ε instead of the flat scan's O(TILE²)·ε,
+    /// so large-tile error stops growing linearly with the cell count.
     fn seg_loss(&self, signal: &[f32], rendered: &[f32]) -> Result<f32> {
         ensure!(
             signal.len() == TILE * TILE && rendered.len() == TILE * TILE,
             "seg_loss tiles must be {TILE}x{TILE}"
         );
-        let mut total = 0.0f64;
-        for (a, b) in signal.iter().zip(rendered.iter()) {
-            let d = (*a - *b) as f64;
-            total += d * d;
+        let mut partials = [0.0f64; TILE];
+        let rows = signal.chunks_exact(TILE).zip(rendered.chunks_exact(TILE));
+        for (p, (sig_row, ren_row)) in partials.iter_mut().zip(rows) {
+            let mut acc = 0.0f64;
+            for (a, b) in sig_row.iter().zip(ren_row.iter()) {
+                let d = (*a - *b) as f64;
+                acc += d * d;
+            }
+            *p = acc;
         }
-        Ok(total as f32)
+        Ok(pairwise_sum(&partials) as f32)
     }
 }
 
@@ -155,6 +176,20 @@ mod tests {
     }
 
     #[test]
+    fn prefix2d_into_reuses_buffers_and_matches() {
+        let backend = NativeBackend::new();
+        let mut rng = Rng::new(63);
+        let tile: Vec<f32> = (0..TILE * TILE).map(|_| rng.normal() as f32).collect();
+        let (y, y2) = backend.prefix2d(&tile).unwrap();
+        // Pre-dirtied, pre-sized buffers: contents must be fully replaced.
+        let mut by = vec![7.0f32; TILE * TILE];
+        let mut by2 = vec![7.0f32; 3];
+        backend.prefix2d_into(&tile, &mut by, &mut by2).unwrap();
+        assert_eq!(y, by);
+        assert_eq!(y2, by2);
+    }
+
+    #[test]
     fn block_sse_matches_prefix_stats_opt1() {
         let backend = NativeBackend::new();
         let mut rng = Rng::new(61);
@@ -195,7 +230,10 @@ mod tests {
             .zip(b.iter())
             .map(|(x, y)| ((x - y) as f64).powi(2))
             .sum();
-        assert!((got - expect).abs() < 1e-3 * (1.0 + expect), "{got} vs {expect}");
+        // With cascaded pairwise accumulation the only budget left is the
+        // final f32 cast (~6e-8 rel) — pinned at 1e-6 (was 1e-3 for the
+        // flat scan).
+        assert!((got - expect).abs() < 1e-6 * (1.0 + expect), "{got} vs {expect}");
     }
 
     #[test]

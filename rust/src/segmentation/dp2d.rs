@@ -87,6 +87,26 @@ impl<'a, O: RectOracle> TreeDP<'a, O> {
             return v;
         }
         let mut best = self.stats.opt1(&rect);
+        // 2-leaf pre-pass: every guillotine cut's opt₁(a) + opt₁(b) is
+        // itself an achievable tree (k ≥ 2 here), so its minimum is a
+        // valid upper bound that tightens `best` *before* the recursive
+        // search — the `la >= best` prune in `best_split` then fires much
+        // earlier. The DP value is unchanged: each bound dominates some
+        // candidate the split loop examines anyway (opt(·, k') ≤ opt₁(·)
+        // for k' ≥ 1), and a tighter `best` only skips candidates that
+        // cannot beat the minimum. Each bound is two O(1) prefix queries,
+        // batched per cut direction — the `padded_prefix_query`-heavy
+        // loop the blocked prefix layout below serves.
+        for cut in rect.r0..rect.r1 {
+            let top = Rect::new(rect.r0, cut, rect.c0, rect.c1);
+            let bot = Rect::new(cut + 1, rect.r1, rect.c0, rect.c1);
+            best = best.min(self.stats.opt1(&top) + self.stats.opt1(&bot));
+        }
+        for cut in rect.c0..rect.c1 {
+            let left = Rect::new(rect.r0, rect.r1, rect.c0, cut);
+            let right = Rect::new(rect.r0, rect.r1, cut + 1, rect.c1);
+            best = best.min(self.stats.opt1(&left) + self.stats.opt1(&right));
+        }
         // Horizontal cuts (split rows).
         for cut in rect.r0..rect.r1 {
             let top = Rect::new(rect.r0, cut, rect.c0, rect.c1);

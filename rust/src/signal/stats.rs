@@ -75,22 +75,70 @@ impl Moments {
     }
 }
 
+/// Default column-block width for the blocked fills below (matches
+/// [`crate::runtime::blocked::BLOCK`]; kept as a local constant so the
+/// signal layer stays independent of the runtime layer).
+const BLOCK_COLS: usize = 64;
+
+/// Lane width of the vectorizable vertical-add pass: 4 f64 = one 256-bit
+/// register, unrolled via slice patterns over exact-size chunks.
+const LANE_F64: usize = 4;
+
+/// Elementwise `dst[i] = up[i] + pref[i]` over one padded row, walked in
+/// `block`-wide chunks of [`LANE_F64`]-wide exact lanes (remainder
+/// scalar). Elementwise adds are order-independent per column, so this
+/// pass is bit-stable under **any** blocking — the carry-propagation
+/// half of the two-pass prefix fills (DESIGN.md §Kernels).
+fn vadd_rows(dst: &mut [f64], up: &[f64], pref: &[f64], block: usize) {
+    debug_assert!(dst.len() == up.len() && dst.len() == pref.len());
+    let ups = up.chunks(block).zip(pref.chunks(block));
+    for ((d, u), p) in dst.chunks_mut(block).zip(ups) {
+        let mut d_lanes = d.chunks_exact_mut(LANE_F64);
+        let mut u_lanes = u.chunks_exact(LANE_F64);
+        let mut p_lanes = p.chunks_exact(LANE_F64);
+        for ((dl, ul), pl) in (&mut d_lanes).zip(&mut u_lanes).zip(&mut p_lanes) {
+            let [d0, d1, d2, d3] = dl else { continue };
+            let ([u0, u1, u2, u3], [p0, p1, p2, p3]) = (ul, pl) else { continue };
+            *d0 = *u0 + *p0;
+            *d1 = *u1 + *p1;
+            *d2 = *u2 + *p2;
+            *d3 = *u3 + *p3;
+        }
+        let rem = u_lanes.remainder().iter().zip(p_lanes.remainder().iter());
+        for (dv, (&uv, &pv)) in d_lanes.into_remainder().iter_mut().zip(rem) {
+            *dv = uv + pv;
+        }
+    }
+}
+
 /// Build a zero-padded `(m+1)`-stride integral image over a dense
 /// row-major `n × m` cell grid: entry `[(r+1)*(m+1) + (c+1)]` holds the
 /// prefix over rows `0..=r`, cols `0..=c`. The shared construction
 /// primitive behind both [`PrefixStats`]' per-signal arrays (which use
-/// the mask-aware band filler below on signal sources) and arbitrary
+/// the mask-aware band fillers below on signal sources) and arbitrary
 /// per-cell density grids (the audit's coreset-density oracle).
+///
+/// Two-pass blocked fill: a serial row-prefix scan into a scratch row,
+/// then a vectorizable elementwise add of the padded row above
+/// ([`vadd_rows`]). Per-element operations and operand order match the
+/// classic one-pass recurrence exactly, so the result is bit-identical
+/// to it.
 pub fn padded_prefix_from_cells(n: usize, m: usize, cells: &[f64]) -> Vec<f64> {
     assert_eq!(cells.len(), n * m, "cell grid must be n*m");
     let stride = m + 1;
     let mut out = vec![0.0f64; (n + 1) * stride];
+    let mut pref = vec![0.0f64; m];
     for r in 0..n {
-        let mut row_acc = 0.0;
-        for c in 0..m {
-            row_acc += cells[r * m + c];
-            out[(r + 1) * stride + c + 1] = out[r * stride + c + 1] + row_acc;
+        // Pass 1: serial row prefix into scratch — the carry chain.
+        let mut acc = 0.0;
+        for (dst, &v) in pref.iter_mut().zip(&cells[r * m..(r + 1) * m]) {
+            acc += v;
+            *dst = acc;
         }
+        // Pass 2: vertical add of the padded row above.
+        let (above, cur) = out[..(r + 2) * stride].split_at_mut((r + 1) * stride);
+        let up = &above[r * stride..];
+        vadd_rows(&mut cur[1..], &up[1..], &pref, BLOCK_COLS);
     }
     out
 }
@@ -102,6 +150,8 @@ pub fn padded_prefix_from_cells(n: usize, m: usize, cells: &[f64]) -> Vec<f64> {
 pub fn padded_prefix_query(arr: &[f64], m: usize, rect: &Rect) -> f64 {
     let stride = m + 1;
     let (r0, r1, c0, c1) = (rect.r0, rect.r1 + 1, rect.c0, rect.c1 + 1);
+    // lint:allow(index-hot) -- the four O(1) corner reads behind every
+    // rect query; callers validate rect bounds (debug_assert upstream).
     arr[r1 * stride + c1] - arr[r0 * stride + c1] - arr[r1 * stride + c0] + arr[r0 * stride + c0]
 }
 
@@ -122,6 +172,12 @@ fn fill_band_local<S: SignalSource>(
 ) {
     let m = signal.cols();
     let stride = m + 1;
+    // Virtual zero row above the band: one shared source slice keeps the
+    // first local row on the same code path as the rest (`0.0 + x` is
+    // bitwise `x` for the running accumulators — they are never `-0.0`,
+    // since IEEE round-to-nearest addition only produces `-0.0` from
+    // `-0.0 + -0.0`, and every accumulator starts at `+0.0`).
+    let zeros = vec![0.0f64; stride];
     for (lr, r) in (r0..r1).enumerate() {
         // Running row accumulators avoid one extra pass; the row slices
         // from the source keep the inner loop free of (r, c) → index
@@ -131,41 +187,137 @@ fn fill_band_local<S: SignalSource>(
         let mut row_cnt = 0.0;
         let mut row_sum = 0.0;
         let mut row_sq = 0.0;
-        let cur = lr * stride;
-        if lr == 0 {
-            for c in 0..m {
-                let present = match row_mask {
-                    None => true,
-                    Some(mask) => mask[c],
-                };
-                if present {
-                    let y = row[c];
-                    row_cnt += 1.0;
-                    row_sum += y;
-                    row_sq += y * y;
-                }
-                count[cur + c + 1] = row_cnt;
-                sum[cur + c + 1] = row_sum;
-                sum_sq[cur + c + 1] = row_sq;
-            }
+        let off = lr * stride;
+        let (c_above, c_cur) = count[..off + stride].split_at_mut(off);
+        let (s_above, s_cur) = sum[..off + stride].split_at_mut(off);
+        let (q_above, q_cur) = sum_sq[..off + stride].split_at_mut(off);
+        let (c_up, s_up, q_up): (&[f64], &[f64], &[f64]) = if lr == 0 {
+            (&zeros, &zeros, &zeros)
         } else {
-            let up = cur - stride;
-            for c in 0..m {
-                let present = match row_mask {
-                    None => true,
-                    Some(mask) => mask[c],
-                };
-                if present {
-                    let y = row[c];
+            (&c_above[off - stride..], &s_above[off - stride..], &q_above[off - stride..])
+        };
+        let dst = c_cur[1..]
+            .iter_mut()
+            .zip(s_cur[1..].iter_mut())
+            .zip(q_cur[1..].iter_mut());
+        let up = c_up[1..].iter().zip(s_up[1..].iter()).zip(q_up[1..].iter());
+        match row_mask {
+            None => {
+                for (&y, (((dc, ds), dq), ((&uc, &us), &uq))) in row.iter().zip(dst.zip(up)) {
                     row_cnt += 1.0;
                     row_sum += y;
                     row_sq += y * y;
+                    *dc = uc + row_cnt;
+                    *ds = us + row_sum;
+                    *dq = uq + row_sq;
                 }
-                count[cur + c + 1] = count[up + c + 1] + row_cnt;
-                sum[cur + c + 1] = sum[up + c + 1] + row_sum;
-                sum_sq[cur + c + 1] = sum_sq[up + c + 1] + row_sq;
+            }
+            Some(mask) => {
+                for ((&y, &present), (((dc, ds), dq), ((&uc, &us), &uq))) in
+                    row.iter().zip(mask.iter()).zip(dst.zip(up))
+                {
+                    if present {
+                        row_cnt += 1.0;
+                        row_sum += y;
+                        row_sq += y * y;
+                    }
+                    *dc = uc + row_cnt;
+                    *ds = us + row_sum;
+                    *dq = uq + row_sq;
+                }
             }
         }
+    }
+}
+
+/// Two-pass blocked variant of [`fill_band_local`]: pass 1 walks each
+/// row in `block`-wide column chunks computing the serial row prefixes
+/// into scratch rows — the accumulators are **carried** across chunk
+/// boundaries, so the addition chain is exactly the scalar recurrence's
+/// and no block size can change a bit — and pass 2 adds the row above
+/// elementwise in vectorizable lanes ([`vadd_rows`]; order-independent
+/// per column, hence bit-stable under any blocking). Per-element
+/// operations and operand order match [`fill_band_local`] exactly, so
+/// the output is bit-identical to it for **every** `block` (DESIGN.md
+/// §Kernels).
+fn fill_band_blocked<S: SignalSource>(
+    signal: &S,
+    r0: usize,
+    r1: usize,
+    block: usize,
+    count: &mut [f64],
+    sum: &mut [f64],
+    sum_sq: &mut [f64],
+) {
+    let m = signal.cols();
+    let stride = m + 1;
+    let block = block.max(1);
+    // Scratch rows: the f64 row accumulators for (count, Σy, Σy²).
+    let mut pref_cnt = vec![0.0f64; m];
+    let mut pref_sum = vec![0.0f64; m];
+    let mut pref_sq = vec![0.0f64; m];
+    let zeros = vec![0.0f64; stride];
+    for (lr, r) in (r0..r1).enumerate() {
+        let row = signal.row_values(r);
+        let row_mask = signal.row_mask(r);
+        // Pass 1: serial row scan in column blocks, accumulators carried
+        // across blocks (bit-equal to the scalar scan for any block).
+        let mut row_cnt = 0.0;
+        let mut row_sum = 0.0;
+        let mut row_sq = 0.0;
+        match row_mask {
+            None => {
+                let prefs = pref_cnt
+                    .chunks_mut(block)
+                    .zip(pref_sum.chunks_mut(block))
+                    .zip(pref_sq.chunks_mut(block));
+                for (vals, ((pc, ps), pq)) in row.chunks(block).zip(prefs) {
+                    let dst = pc.iter_mut().zip(ps.iter_mut()).zip(pq.iter_mut());
+                    for (&y, ((dc, ds), dq)) in vals.iter().zip(dst) {
+                        row_cnt += 1.0;
+                        row_sum += y;
+                        row_sq += y * y;
+                        *dc = row_cnt;
+                        *ds = row_sum;
+                        *dq = row_sq;
+                    }
+                }
+            }
+            Some(mask) => {
+                let prefs = pref_cnt
+                    .chunks_mut(block)
+                    .zip(pref_sum.chunks_mut(block))
+                    .zip(pref_sq.chunks_mut(block));
+                let src = row.chunks(block).zip(mask.chunks(block));
+                for ((vals, mk), ((pc, ps), pq)) in src.zip(prefs) {
+                    let dst = pc.iter_mut().zip(ps.iter_mut()).zip(pq.iter_mut());
+                    for ((&y, &present), ((dc, ds), dq)) in vals.iter().zip(mk.iter()).zip(dst) {
+                        if present {
+                            row_cnt += 1.0;
+                            row_sum += y;
+                            row_sq += y * y;
+                        }
+                        *dc = row_cnt;
+                        *ds = row_sum;
+                        *dq = row_sq;
+                    }
+                }
+            }
+        }
+        // Pass 2: vertical add of the row above (virtual zeros for the
+        // band's first row — bitwise identity, see fill_band_local).
+        let off = lr * stride;
+        let (c_above, c_cur) = count[..off + stride].split_at_mut(off);
+        let (s_above, s_cur) = sum[..off + stride].split_at_mut(off);
+        let (q_above, q_cur) = sum_sq[..off + stride].split_at_mut(off);
+        let (c_up, s_up, q_up): (&[f64], &[f64], &[f64]) = if lr == 0 {
+            (&zeros, &zeros, &zeros)
+        } else {
+            (&c_above[off - stride..], &s_above[off - stride..], &q_above[off - stride..])
+        };
+        vadd_rows(&mut c_cur[1..], &c_up[1..], &pref_cnt, block);
+        vadd_rows(&mut s_cur[1..], &s_up[1..], &pref_sum, block);
+        vadd_rows(&mut q_cur[1..], &q_up[1..], &pref_sq, block);
     }
 }
 
@@ -218,13 +370,70 @@ impl PrefixStats {
     /// band plan and every per-band float are executor-independent, so
     /// all variants are bit-identical.
     pub fn new_par_exec<S: SignalSource>(signal: &S, exec: crate::par::Exec<'_>) -> Self {
+        Self::new_banded_with(signal, exec, fill_band_local::<S>)
+    }
+
+    /// Cache-blocked construction: the band-parallel plan of
+    /// [`Self::new_par`] with [`fill_band_blocked`] as the per-band
+    /// filler, so bands × column blocks nest. The blocked filler is
+    /// bit-identical to the scalar one for every `block` (carried
+    /// accumulators in pass 1, elementwise adds in pass 2 — DESIGN.md
+    /// §Kernels), and the band plan is thread-invariant, so the result
+    /// is bit-identical to [`Self::new`]/[`Self::new_par`] across
+    /// **all** thread counts × block sizes. `block == 0` falls back to
+    /// the default [`BLOCK_COLS`].
+    pub fn new_blocked<S: SignalSource>(signal: &S, threads: usize, block: usize) -> Self {
+        Self::new_blocked_exec(signal, crate::par::Exec::Spawn(threads), block)
+    }
+
+    /// [`Self::new_blocked`] on an explicit executor — the
+    /// [`crate::engine::Engine`] path when the blocked backend is
+    /// selected.
+    pub fn new_blocked_exec<S: SignalSource>(
+        signal: &S,
+        exec: crate::par::Exec<'_>,
+        block: usize,
+    ) -> Self {
+        let block = if block == 0 { BLOCK_COLS } else { block };
+        let fill =
+            move |sig: &S, r0: usize, r1: usize, c: &mut [f64], s: &mut [f64], q: &mut [f64]| {
+                fill_band_blocked(sig, r0, r1, block, c, s, q)
+            };
+        Self::new_banded_with(signal, exec, fill)
+    }
+
+    /// The shared band-parallel construction plan, generic over the
+    /// per-band filler: carve the padded arrays into disjoint per-band
+    /// row slices, fill them (sequentially, on a long-lived pool, or on
+    /// scoped threads), then stitch sequentially. Both
+    /// [`Self::new_par_exec`] (scalar filler) and
+    /// [`Self::new_blocked_exec`] (blocked filler) are thin wrappers.
+    fn new_banded_with<S, F>(signal: &S, exec: crate::par::Exec<'_>, fill: F) -> Self
+    where
+        S: SignalSource,
+        F: Fn(&S, usize, usize, &mut [f64], &mut [f64], &mut [f64]) + Copy + Send + Sync,
+    {
         const BAND_ROWS: usize = 64;
         let threads = exec.threads();
         let n = signal.rows();
         let m = signal.cols();
         let bands = n.div_ceil(BAND_ROWS);
         if bands <= 1 {
-            return Self::new(signal);
+            // Single-band fallback: one fill over the whole row range —
+            // for the scalar filler this is exactly [`Self::new`].
+            let stride = m + 1;
+            let mut count = vec![0.0; (n + 1) * stride];
+            let mut sum = vec![0.0; (n + 1) * stride];
+            let mut sum_sq = vec![0.0; (n + 1) * stride];
+            fill(
+                signal,
+                0,
+                n,
+                &mut count[stride..],
+                &mut sum[stride..],
+                &mut sum_sq[stride..],
+            );
+            return Self { n, m, count, sum, sum_sq };
         }
         let stride = m + 1;
         let ranges: Vec<(usize, usize)> = (0..bands)
@@ -256,7 +465,7 @@ impl PrefixStats {
                 // identical floats to the multi-threaded path (each band's
                 // arithmetic is independent; only scheduling differs).
                 for ((r0, r1), (c, s, q)) in jobs {
-                    fill_band_local(signal, r0, r1, c, s, q);
+                    fill(signal, r0, r1, c, s, q);
                 }
             } else if let crate::par::Exec::Pool(pool) = exec {
                 // Long-lived pool path: each band job is claimed exactly
@@ -271,7 +480,7 @@ impl PrefixStats {
                     // a second visit (impossible: the map visits every
                     // index once) would be a silent no-op, not a panic.
                     if let Some(((r0, r1), (c, s, q))) = crate::par::lock(slot).take() {
-                        fill_band_local(signal, r0, r1, c, s, q);
+                        fill(signal, r0, r1, c, s, q);
                     }
                 });
             } else {
@@ -282,6 +491,9 @@ impl PrefixStats {
                 let mut assigned: Vec<Vec<BandJob<'_>>> =
                     (0..workers).map(|_| Vec::new()).collect();
                 for (i, job) in jobs.into_iter().enumerate() {
+                    // lint:allow(index-hot) -- O(bands) scheduling setup,
+                    // not a kernel inner loop; `i % workers` is in-bounds
+                    // by construction.
                     assigned[i % workers].push(job);
                 }
                 // lint:allow(det-thread) -- the one audited exception:
@@ -292,7 +504,7 @@ impl PrefixStats {
                     for work in assigned {
                         scope.spawn(move || {
                             for ((r0, r1), (c, s, q)) in work {
-                                fill_band_local(signal, r0, r1, c, s, q);
+                                fill(signal, r0, r1, c, s, q);
                             }
                         });
                     }
@@ -313,10 +525,17 @@ impl PrefixStats {
             off_sq.copy_from_slice(&sum_sq[off..off + stride]);
             for t in (r0 + 1)..=r1 {
                 let base = t * stride;
-                for c in 1..stride {
-                    count[base + c] += off_cnt[c];
-                    sum[base + c] += off_sum[c];
-                    sum_sq[base + c] += off_sq[c];
+                let dst_c = &mut count[base + 1..base + stride];
+                for (d, &o) in dst_c.iter_mut().zip(off_cnt[1..].iter()) {
+                    *d += o;
+                }
+                let dst_s = &mut sum[base + 1..base + stride];
+                for (d, &o) in dst_s.iter_mut().zip(off_sum[1..].iter()) {
+                    *d += o;
+                }
+                let dst_q = &mut sum_sq[base + 1..base + stride];
+                for (d, &o) in dst_q.iter_mut().zip(off_sq[1..].iter()) {
+                    *d += o;
                 }
             }
         }
@@ -598,6 +817,61 @@ mod tests {
             assert_eq!(pooled.count, reference.count, "pool threads {threads}");
             assert_eq!(pooled.sum, reference.sum, "pool threads {threads}");
             assert_eq!(pooled.sum_sq, reference.sum_sq, "pool threads {threads}");
+        }
+    }
+
+    #[test]
+    fn blocked_construction_is_bit_identical_across_threads_and_blocks() {
+        // The tentpole invariant: the blocked filler carries its row
+        // accumulators across column blocks (pass 1) and adds the row
+        // above elementwise (pass 2), so every thread count × block size
+        // must reproduce the scalar path bit-for-bit — masked region and
+        // non-divisor block width (37) included.
+        let mut sig = Signal::from_fn(200, 23, |r, c| ((r * 31 + c * 7) % 13) as f64 - 6.0);
+        sig.mask_rect(Rect::new(70, 80, 2, 9));
+        let reference = PrefixStats::new_par(&sig, 1);
+        let seq = PrefixStats::new(&sig);
+        assert_eq!(seq.count, reference.count);
+        assert_eq!(seq.sum, reference.sum);
+        assert_eq!(seq.sum_sq, reference.sum_sq);
+        for block in [1, 8, 32, 37, 64, 1024] {
+            for threads in [1, 2, 4, 8] {
+                let blk = PrefixStats::new_blocked(&sig, threads, block);
+                assert_eq!(blk.count, reference.count, "block {block} threads {threads}");
+                assert_eq!(blk.sum, reference.sum, "block {block} threads {threads}");
+                assert_eq!(blk.sum_sq, reference.sum_sq, "block {block} threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_pool_executor_is_bit_identical() {
+        // Blocked fill on the engine's long-lived pool: still the same
+        // bits as the sequential scalar build.
+        let mut sig = Signal::from_fn(200, 23, |r, c| ((r * 31 + c * 7) % 13) as f64 - 6.0);
+        sig.mask_rect(Rect::new(70, 80, 2, 9));
+        let reference = PrefixStats::new(&sig);
+        for threads in [1, 3] {
+            let pool = crate::par::WorkerPool::new(threads);
+            let blk = PrefixStats::new_blocked_exec(&sig, crate::par::Exec::Pool(&pool), 37);
+            assert_eq!(blk.count, reference.count, "pool threads {threads}");
+            assert_eq!(blk.sum, reference.sum, "pool threads {threads}");
+            assert_eq!(blk.sum_sq, reference.sum_sq, "pool threads {threads}");
+        }
+    }
+
+    #[test]
+    fn blocked_single_band_signal_matches_sequential() {
+        // Signals under one band (n < 64) take the single-band fallback;
+        // the blocked filler must still match `new` bitwise, and
+        // `block == 0` must resolve to the default width.
+        let sig = Signal::from_fn(17, 23, |r, c| ((r * 7 + c * 13) % 11) as f64 - 5.0);
+        let reference = PrefixStats::new(&sig);
+        for block in [0, 5, 64] {
+            let blk = PrefixStats::new_blocked(&sig, 2, block);
+            assert_eq!(blk.count, reference.count, "block {block}");
+            assert_eq!(blk.sum, reference.sum, "block {block}");
+            assert_eq!(blk.sum_sq, reference.sum_sq, "block {block}");
         }
     }
 

@@ -1,0 +1,157 @@
+//! Differential suite for the cache-blocked execution paths: the
+//! [`BlockedBackend`] kernel backend and the blocked prefix-statistics
+//! fill ([`PrefixStats::new_blocked`]).
+//!
+//! Two different claims are pinned at two different strengths:
+//!
+//! * **Bit-identity (f64 / kernel-vs-kernel)** — the blocked stats fill
+//!   must equal the scalar fill *exactly*, for every thread count and
+//!   every block width (including non-divisor widths), and the blocked
+//!   backend's tiled pipeline must equal the native backend's
+//!   bit-for-bit (same addition chains by construction — the row carry
+//!   *is* the scalar running accumulator; see DESIGN.md §Kernels).
+//! * **Pinned tolerance (f32 trait path vs f64 oracle)** — both f32
+//!   backends sit at the same documented distance from the exact
+//!   [`PrefixStats`] oracle: 1e-2 on moments, 0.05 on opt₁ (the
+//!   integral-image cancellation bound of `integration_backend.rs`).
+
+use sigtree::engine::{BackendChoice, Engine, EngineConfig};
+use sigtree::proptest;
+use sigtree::rng::Rng;
+use sigtree::runtime::{BlockedBackend, KernelBackend, NativeBackend, TiledPrefix, TILE};
+use sigtree::signal::{generate, PrefixStats, Rect, Signal};
+
+/// The f64 oracle for the kernel pipeline: masked cells become 0-valued
+/// present cells (same convention as `integration_backend.rs`).
+fn zero_filled(sig: &Signal) -> Signal {
+    Signal::from_fn(sig.rows(), sig.cols(), |r, c| {
+        if sig.is_present(r, c) {
+            sig.get(r, c)
+        } else {
+            0.0
+        }
+    })
+}
+
+fn random_rects(n: usize, m: usize, count: usize, rng: &mut Rng) -> Vec<Rect> {
+    (0..count)
+        .map(|_| {
+            let r0 = rng.usize(n);
+            let r1 = rng.range(r0, n);
+            let c0 = rng.usize(m);
+            let c1 = rng.range(c0, m);
+            Rect::new(r0, r1, c0, c1)
+        })
+        .collect()
+}
+
+#[test]
+fn blocked_differential_sweep() {
+    // Property sweep over the regimes the tiling must handle — aligned,
+    // ragged, sub-tile, masked — with a random block width each case
+    // (1 ..= 2·TILE covers sub-lane, non-divisor, and larger-than-tile).
+    proptest::check_seeded("blocked-vs-native-vs-stats", 0xB10C_0001, 10, |rng| {
+        let n = 1 + rng.usize(TILE + TILE / 2);
+        let m = 1 + rng.usize(TILE + TILE / 2);
+        let mut sig = generate::smooth(n, m, 3, rng);
+        for _ in 0..rng.usize(3) {
+            let r0 = rng.usize(n);
+            let r1 = rng.range(r0, n);
+            let c0 = rng.usize(m);
+            let c1 = rng.range(c0, m);
+            sig.mask_rect(Rect::new(r0, r1, c0, c1));
+        }
+        let block = 1 + rng.usize(2 * TILE);
+        let blocked = BlockedBackend::with_block(block);
+        let native = NativeBackend::new();
+        let tp_b = TiledPrefix::build(&blocked, &sig).map_err(|e| e.to_string())?;
+        let tp_n = TiledPrefix::build(&native, &sig).map_err(|e| e.to_string())?;
+        let rects = random_rects(n, m, 20, rng);
+
+        // Kernel vs kernel: bit-identical tiled moments and batched opt₁.
+        for rect in &rects {
+            let (bs, bq) = tp_b.moments(rect);
+            let (ns, nq) = tp_n.moments(rect);
+            if bs != ns || bq != nq {
+                return Err(format!(
+                    "{n}x{m} block {block} {rect:?}: blocked ({bs}, {bq}) != native ({ns}, {nq})"
+                ));
+            }
+        }
+        let ob = tp_b.batched_opt1(&rects).map_err(|e| e.to_string())?;
+        let on = tp_n.batched_opt1(&rects).map_err(|e| e.to_string())?;
+        if ob != on {
+            return Err(format!("{n}x{m} block {block}: batched_opt1 diverged from native"));
+        }
+
+        // f32 trait path vs the exact f64 oracle, at the pinned bounds.
+        let stats = PrefixStats::new(&zero_filled(&sig));
+        for rect in &rects {
+            let (s, q) = tp_b.moments(rect);
+            let exact = stats.moments(rect);
+            if (s - exact.sum).abs() >= 1e-2 * (1.0 + exact.sum.abs())
+                || (q - exact.sum_sq).abs() >= 1e-2 * (1.0 + exact.sum_sq.abs())
+            {
+                return Err(format!("{n}x{m} {rect:?}: moments out of f32 tolerance"));
+            }
+        }
+        for (g, rect) in ob.iter().zip(rects.iter()) {
+            let e = stats.opt1(rect);
+            if (g - e).abs() > 0.05 * (1.0 + e.abs()) {
+                return Err(format!("{n}x{m} {rect:?}: opt1 {g} vs {e}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn blocked_stats_bit_identical_across_threads_and_blocks() {
+    // The hard tentpole invariant: `new_blocked` returns the *same bits*
+    // as the sequential scalar fill for every thread count × block width
+    // combination, including the non-divisor width 37 and widths larger
+    // than the column count. Checked densely through rect queries (every
+    // moment is a 4-corner read of the underlying f64 arrays).
+    let mut rng = Rng::new(0xB10C_0002);
+    let mut sig = generate::image_like(209, 133, 4, &mut rng); // 4 ragged 64-row bands
+    sig.mask_rect(Rect::new(20, 90, 10, 80));
+    sig.mask_rect(Rect::new(150, 208, 100, 132));
+    let reference = PrefixStats::new(&sig);
+    let rects = random_rects(209, 133, 150, &mut rng);
+    for &threads in &[1usize, 2, 4, 8] {
+        for &block in &[8usize, 32, 64, 37, 1024] {
+            let blk = PrefixStats::new_blocked(&sig, threads, block);
+            for rect in &rects {
+                assert_eq!(
+                    reference.moments(rect),
+                    blk.moments(rect),
+                    "threads {threads} block {block} {rect:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn audit_eps_gate_through_blocked_engine() {
+    // The audit ε-gate run end-to-end through the blocked engine path:
+    // every audit-internal statistics build goes through the blocked
+    // fill (`AuditConfig::stats_block`), the gate must still pass, and
+    // the evidence trail must be byte-identical to the native engine's —
+    // backend choice is a pure execution-strategy knob.
+    let blocked = Engine::new(
+        EngineConfig::new(3, 0.5)
+            .with_backend(BackendChoice::Blocked)
+            .with_block_size(37)
+            .with_threads(1)
+            .with_seed(7),
+    )
+    .expect("valid blocked engine config");
+    assert_eq!(blocked.backend().name(), "blocked");
+    let report = blocked.audit(4, 3);
+    assert!(report.pass, "blocked-path audit failed:\n{}", report.to_json().render());
+
+    let native = Engine::new(EngineConfig::new(3, 0.5).with_threads(1).with_seed(7))
+        .expect("valid native engine config");
+    assert_eq!(report.to_json().render(), native.audit(4, 3).to_json().render());
+}

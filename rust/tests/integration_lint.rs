@@ -38,6 +38,7 @@ fn fixture_corpus_findings_are_exact() {
         ("det-order", "coreset/bad_det.rs", 6),
         ("det-clock", "coreset/bad_det.rs", 11),
         ("det-thread", "coreset/bad_det.rs", 15),
+        ("index-hot", "runtime/bad_index.rs", 4),
     ];
     assert_eq!(got, want);
     // Exactly the two well-formed waivers in allowed.rs are honored.
@@ -69,19 +70,22 @@ fn report_is_byte_identical_across_runs() {
 }
 
 #[test]
-fn index_hot_is_opt_in() {
+fn index_hot_fires_by_default_on_hot_paths_only() {
+    // On by default, scoped to the hot kernel paths (runtime/ and
+    // signal/stats.rs) — the deterministic modules are no longer in its
+    // scope, so the only fixture hit is the runtime/ one.
     let base = analysis::run(&LintConfig::new().with_root(&fixture_root())).expect("lint runs");
-    assert!(base.findings.iter().all(|f| f.rule != "index-hot"));
-
-    let config = LintConfig::new().with_root(&fixture_root()).with_rule("index-hot", true);
-    let report = analysis::run(&config).expect("lint runs");
-    let hot: Vec<(&str, usize)> = report
+    let hot: Vec<(&str, usize)> = base
         .findings
         .iter()
         .filter(|f| f.rule == "index-hot")
         .map(|f| (f.file.as_str(), f.line))
         .collect();
-    assert_eq!(hot, vec![("coreset/bad_index.rs", 4)]);
+    assert_eq!(hot, vec![("runtime/bad_index.rs", 4)]);
+
+    let config = LintConfig::new().with_root(&fixture_root()).with_rule("index-hot", false);
+    let report = analysis::run(&config).expect("lint runs");
+    assert!(report.findings.iter().all(|f| f.rule != "index-hot"));
 }
 
 #[test]

@@ -1,0 +1,5 @@
+//! Fixture: `index-hot` — per-element indexing on a hot kernel path.
+
+pub fn pick(v: &[u32], i: usize) -> u32 {
+    v[i]
+}

@@ -1,0 +1,131 @@
+#!/usr/bin/env bash
+# Perf regression gate over bench_runtime's machine-readable output.
+#
+#   scripts/bench_gate.sh               compare rust/BENCH_runtime.json
+#                                       (current run) against the committed
+#                                       BENCH_runtime.json baseline
+#   scripts/bench_gate.sh --rebaseline  promote the current run to be the
+#                                       committed baseline
+#
+# Policy:
+#   * baseline provenance "bootstrap" (the committed placeholder with null
+#     medians): schema check only, always exit 0 — there is nothing honest
+#     to gate against until someone runs the bench on real hardware and
+#     promotes it with --rebaseline.
+#   * baseline provenance "measured": hard-fail when any row's median_s
+#     regresses by more than 15% vs the baseline row with the same
+#     identity (section + op + impl/mode + threads). Rows present on only
+#     one side (e.g. a --quick run vs a full baseline) are skipped with a
+#     note, never failed.
+#   * BENCH_GATE_ADVISORY=1 downgrades a failing comparison to a warning
+#     (for shared CI runners whose timings are too noisy to hard-gate).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# cargo bench runs the harness with cwd = the package root (rust/), so
+# the current run lands there; the committed baseline sits at the
+# workspace root.
+BASELINE="BENCH_runtime.json"
+CURRENT="rust/BENCH_runtime.json"
+
+if [ "${1:-}" = "--rebaseline" ]; then
+    if [ ! -f "$CURRENT" ]; then
+        echo "bench_gate: no current run at rust/BENCH_runtime.json — run \`cargo bench --bench bench_runtime\` first" >&2
+        exit 1
+    fi
+    cp "$CURRENT" "$BASELINE"
+    echo "bench_gate: promoted $CURRENT -> $BASELINE (commit it to update the baseline)"
+    exit 0
+fi
+
+THRESHOLD="${BENCH_GATE_THRESHOLD:-1.15}" \
+ADVISORY="${BENCH_GATE_ADVISORY:-0}" \
+python3 - "$BASELINE" "$CURRENT" <<'PY'
+import json, os, sys
+
+baseline_path, current_path = sys.argv[1], sys.argv[2]
+threshold = float(os.environ["THRESHOLD"])
+advisory = os.environ["ADVISORY"] == "1"
+
+REQUIRED = [
+    "bench", "provenance", "quick", "acceptance_case", "backends",
+    "kernels", "blocked_speedup", "prefix_build", "thread_scaling",
+    "engine_reuse", "alloc_profile", "incremental_update",
+]
+# Fields that are measurements, not row identity.
+METRICS = {
+    "median_s", "p90_s", "speedup_vs_1t", "speedup_vs_full",
+    "speedup_vs_scalar", "speedup_vs_native", "batches_per_s",
+    "native_median_s", "blocked_median_s", "allocs_total", "stats_allocs",
+    "allocs_per_shard", "kib_per_shard", "blocks",
+}
+
+def load(path, who):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        print(f"bench_gate: {who} file {path} not found", file=sys.stderr)
+        sys.exit(0 if advisory else 1)
+    missing = [k for k in REQUIRED if k not in doc]
+    if missing:
+        print(f"bench_gate: {who} {path} is missing keys {missing}", file=sys.stderr)
+        sys.exit(0 if advisory else 1)
+    return doc
+
+def rows(doc):
+    out = {}
+    for section, val in doc.items():
+        if not isinstance(val, list):
+            continue
+        for row in val:
+            if not isinstance(row, dict) or "median_s" not in row:
+                continue
+            ident = (section,) + tuple(
+                f"{k}={row[k]}" for k in sorted(row) if k not in METRICS
+            )
+            out[ident] = row["median_s"]
+    return out
+
+base = load(baseline_path, "baseline")
+cur = load(current_path, "current")
+
+if cur.get("provenance") != "measured":
+    print(f"bench_gate: current run has provenance {cur.get('provenance')!r}, expected 'measured'",
+          file=sys.stderr)
+    sys.exit(0 if advisory else 1)
+
+if base.get("provenance") == "bootstrap":
+    print("bench_gate: baseline is the bootstrap placeholder (null medians) — "
+          "schema OK, nothing to gate against. Promote a measured run with "
+          "`scripts/bench_gate.sh --rebaseline`.")
+    sys.exit(0)
+
+base_rows, cur_rows = rows(base), rows(cur)
+failures, compared, skipped = [], 0, 0
+for ident, b in sorted(base_rows.items()):
+    c = cur_rows.get(ident)
+    if c is None or b is None or not (b > 0):
+        skipped += 1
+        continue
+    compared += 1
+    ratio = c / b
+    tag = " ".join(ident)
+    if ratio > threshold:
+        failures.append(f"  {tag}: {b:.6f}s -> {c:.6f}s (x{ratio:.2f} > x{threshold:.2f})")
+    else:
+        print(f"bench_gate: ok   {tag}: x{ratio:.2f}")
+only_current = sum(1 for k in cur_rows if k not in base_rows)
+if skipped or only_current:
+    print(f"bench_gate: skipped {skipped} baseline row(s) without a comparable "
+          f"current row; {only_current} current row(s) not in baseline")
+print(f"bench_gate: compared {compared} row(s) against {baseline_path}")
+if failures:
+    print(f"bench_gate: median regression > {(threshold - 1) * 100:.0f}% on:", file=sys.stderr)
+    print("\n".join(failures), file=sys.stderr)
+    if advisory:
+        print("bench_gate: BENCH_GATE_ADVISORY=1 — reporting only, not failing")
+        sys.exit(0)
+    sys.exit(1)
+print("bench_gate: OK")
+PY

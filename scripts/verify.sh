@@ -41,6 +41,11 @@ cargo run --release -- coreset --k 5 --eps 0.4 --threads 2
 # pool-built prefix stats) plus the kernel parity checks.
 cargo run --release -- runtime --backend native --threads 2
 
+# Cache-blocked backend smoke: the same parity checks end-to-end through
+# the blocked kernel + blocked prefix-stats fill (non-divisor block
+# width on purpose — exercises the ragged-tail lanes).
+cargo run --release -- runtime --backend blocked --threads 2 --block-size 48
+
 # Incremental-update smoke: seeded tile edits through an EditSession —
 # fails non-zero if the updated coreset's weight drifts from a
 # from-scratch rebuild of the mutated signal.
@@ -51,5 +56,13 @@ cargo run --release -- update --n 256 --m 256 --k 16 --eps 0.3 --edits 4 --tile 
 # leaves the machine-readable evidence trail in audit.json (archived as
 # a CI artifact by ci.yml).
 cargo run --release -- audit --k 5 --eps 0.5 --cases 25 --seed 7 --json audit.json
+
+# Perf regression gate: a quick bench pass (reduced sizes/iterations,
+# sizes embedded in row identities so quick rows never gate against
+# full-run baseline rows), then hard-gate medians against the committed
+# BENCH_runtime.json baseline (>15% median slowdown fails; a bootstrap
+# baseline with null medians is schema-checked only).
+cargo bench --bench bench_runtime -- --quick
+./scripts/bench_gate.sh
 
 echo "verify.sh: OK"
