@@ -1,0 +1,284 @@
+//! Loopback load generator for the `sigtree serve` daemon: per-request
+//! p50/p99 latency and request throughput of `/fitting_loss` under
+//! concurrent keep-alive clients, batched (collector window open) vs
+//! unbatched (window 0), plus coreset-cache build-miss vs hit latency.
+//! Emits the machine-readable `BENCH_serve.json` evidence trail consumed
+//! by `scripts/bench_gate.sh` alongside `BENCH_runtime.json`.
+//!
+//! The server runs in-process on an ephemeral loopback port; clients are
+//! plain threads writing hand-framed HTTP/1.1 (the same framing the
+//! daemon speaks — `sigtree::serve::http`). `--quick` shrinks client
+//! counts and request budgets for CI smoke runs; rows are keyed by
+//! (endpoint, mode, clients, queries_per_request), so a quick row never
+//! gates against a full-run row of a different shape.
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use sigtree::benchkit::{fmt_f, Table};
+use sigtree::engine::{Engine, EngineConfig};
+use sigtree::json::Json;
+use sigtree::serve::{http, ServeConfig, Server};
+use sigtree::signal::Signal;
+
+fn engine_config() -> EngineConfig {
+    EngineConfig::new(8, 0.3).with_threads(4)
+}
+
+fn bench_signal(salt: f64) -> Signal {
+    Signal::from_fn(128, 96, |r, c| ((5 * r + 3 * c) % 17) as f64 * 0.21 + salt)
+}
+
+fn signal_json(signal: &Signal) -> Json {
+    let mut values = Vec::with_capacity(signal.len());
+    for r in 0..signal.rows() {
+        for c in 0..signal.cols() {
+            values.push(Json::num(signal.get(r, c)));
+        }
+    }
+    Json::obj(vec![
+        ("rows", Json::int(signal.rows())),
+        ("cols", Json::int(signal.cols())),
+        ("values", Json::Arr(values)),
+    ])
+}
+
+/// `queries` horizontal-stripe segmentations over the bench signal.
+fn queries_json(rows: usize, cols: usize, queries: usize) -> Json {
+    let mut out = Vec::new();
+    for q in 0..queries {
+        let pieces = 2 + q % 4;
+        let step = rows / pieces;
+        let mut arr = Vec::new();
+        for i in 0..pieces {
+            let r0 = i * step;
+            let r1 = if i + 1 == pieces { rows - 1 } else { (i + 1) * step - 1 };
+            arr.push(Json::obj(vec![
+                ("r0", Json::int(r0)),
+                ("r1", Json::int(r1)),
+                ("c0", Json::int(0)),
+                ("c1", Json::int(cols - 1)),
+                ("value", Json::num(q as f64 * 0.13 + i as f64 / 7.0)),
+            ]));
+        }
+        out.push(Json::obj(vec![("pieces", Json::Arr(arr))]));
+    }
+    Json::Arr(out)
+}
+
+fn start_server(batch_window_ms: u64) -> (SocketAddr, thread::JoinHandle<()>) {
+    let engine = Engine::new(engine_config()).expect("engine");
+    let cfg = ServeConfig { threads: 8, batch_window_ms, ..ServeConfig::default() };
+    let server = Server::bind(engine, cfg).expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let handle = thread::spawn(move || server.run().expect("serve run"));
+    (addr, handle)
+}
+
+fn post(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, path: &str, body: &str) -> u16 {
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("send");
+    stream.flush().expect("flush");
+    let (status, resp) = http::read_response(reader).expect("response");
+    assert_eq!(status, 200, "{path}: {resp}");
+    status
+}
+
+fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    let reader = BufReader::new(stream.try_clone().expect("clone"));
+    (stream, reader)
+}
+
+fn shutdown(addr: SocketAddr, handle: thread::JoinHandle<()>) {
+    let (mut stream, mut reader) = connect(addr);
+    post(&mut stream, &mut reader, "/shutdown", "");
+    drop((stream, reader));
+    handle.join().expect("server thread");
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Drive `clients` concurrent keep-alive connections, each issuing
+/// `requests` `/fitting_loss` POSTs; return (sorted latencies, wall
+/// seconds).
+fn run_load(
+    addr: SocketAddr,
+    clients: usize,
+    requests: usize,
+    body: Arc<String>,
+) -> (Vec<f64>, f64) {
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for _ in 0..clients {
+        let body = Arc::clone(&body);
+        handles.push(thread::spawn(move || {
+            let (mut stream, mut reader) = connect(addr);
+            let mut lat = Vec::with_capacity(requests);
+            for _ in 0..requests {
+                let t = Instant::now();
+                post(&mut stream, &mut reader, "/fitting_loss", &body);
+                lat.push(t.elapsed().as_secs_f64());
+            }
+            lat
+        }));
+    }
+    let mut all = Vec::new();
+    for handle in handles {
+        all.extend(handle.join().expect("client"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    (all, wall)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let client_counts: &[usize] = if quick { &[1, 4] } else { &[1, 4, 8] };
+    let requests_per_client = if quick { 25 } else { 100 };
+    const QUERIES_PER_REQUEST: usize = 8;
+
+    let signal = bench_signal(0.0);
+    let sig_json = signal_json(&signal);
+    let warm_body = Json::obj(vec![("signal", sig_json.clone())]).render();
+    let fit_body = Arc::new(
+        Json::obj(vec![
+            ("signal", sig_json),
+            ("queries", queries_json(signal.rows(), signal.cols(), QUERIES_PER_REQUEST)),
+        ])
+        .render(),
+    );
+
+    // ---- /fitting_loss latency & throughput: batched vs unbatched -------
+    let mut table = Table::new(&["mode", "clients", "p50", "p99", "req/s"]);
+    let mut fit_rows: Vec<Json> = Vec::new();
+    for (mode, window_ms) in [("batched", 2u64), ("unbatched", 0u64)] {
+        for &clients in client_counts {
+            let (addr, handle) = start_server(window_ms);
+            // Warm the coreset cache so rows measure query serving, not
+            // the one-time build.
+            let (mut stream, mut reader) = connect(addr);
+            post(&mut stream, &mut reader, "/coreset", &warm_body);
+            drop((stream, reader));
+
+            let (lat, wall) = run_load(addr, clients, requests_per_client, Arc::clone(&fit_body));
+            shutdown(addr, handle);
+
+            let total = clients * requests_per_client;
+            let (p50, p99) = (percentile(&lat, 0.50), percentile(&lat, 0.99));
+            let rps = total as f64 / wall.max(1e-12);
+            table.row(&[
+                mode.into(),
+                format!("{clients}"),
+                format!("{:.3} ms", p50 * 1e3),
+                format!("{:.3} ms", p99 * 1e3),
+                fmt_f(rps),
+            ]);
+            fit_rows.push(Json::obj(vec![
+                ("endpoint", Json::str("fitting_loss")),
+                ("mode", Json::str(mode)),
+                ("clients", Json::int(clients)),
+                ("queries_per_request", Json::int(QUERIES_PER_REQUEST)),
+                ("requests", Json::int(total)),
+                ("median_s", Json::num(p50)),
+                ("p99_s", Json::num(p99)),
+                ("rps", Json::num(rps)),
+            ]));
+        }
+    }
+    table.print(&format!(
+        "serve /fitting_loss ({QUERIES_PER_REQUEST} queries/request, keep-alive, {requests_per_client} req/client)"
+    ));
+
+    // ---- coreset cache: build-miss vs hit --------------------------------
+    // Distinct salts → distinct content digests → every build is a real
+    // miss; repeating one signal measures the rebuild-free hit path.
+    let miss_samples = if quick { 3 } else { 5 };
+    let hit_samples = if quick { 20 } else { 100 };
+    let (addr, handle) = start_server(0);
+    let (mut stream, mut reader) = connect(addr);
+    let mut miss_lat = Vec::new();
+    for i in 0..miss_samples {
+        let body = Json::obj(vec![("signal", signal_json(&bench_signal(1.0 + i as f64)))]).render();
+        let t = Instant::now();
+        post(&mut stream, &mut reader, "/coreset", &body);
+        miss_lat.push(t.elapsed().as_secs_f64());
+    }
+    let mut hit_lat = Vec::new();
+    let hit_body = Json::obj(vec![("signal", signal_json(&bench_signal(1.0)))]).render();
+    for _ in 0..hit_samples {
+        let t = Instant::now();
+        post(&mut stream, &mut reader, "/coreset", &hit_body);
+        hit_lat.push(t.elapsed().as_secs_f64());
+    }
+    drop((stream, reader));
+    shutdown(addr, handle);
+    miss_lat.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    hit_lat.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let (miss_p50, hit_p50) = (percentile(&miss_lat, 0.5), percentile(&hit_lat, 0.5));
+
+    let mut cache_table = Table::new(&["op", "samples", "p50", "speedup"]);
+    cache_table.row(&[
+        "coreset build (cache miss)".into(),
+        format!("{miss_samples}"),
+        format!("{:.3} ms", miss_p50 * 1e3),
+        "x1.00".into(),
+    ]);
+    cache_table.row(&[
+        "coreset lookup (cache hit)".into(),
+        format!("{hit_samples}"),
+        format!("{:.3} ms", hit_p50 * 1e3),
+        format!("x{:.1}", miss_p50 / hit_p50.max(1e-12)),
+    ]);
+    cache_table.print("serve /coreset: LRU cache miss (full build) vs hit");
+    let cache_rows = vec![
+        Json::obj(vec![
+            ("op", Json::str("coreset_build_miss")),
+            ("samples", Json::int(miss_samples)),
+            ("median_s", Json::num(miss_p50)),
+        ]),
+        Json::obj(vec![
+            ("op", Json::str("coreset_cache_hit")),
+            ("samples", Json::int(hit_samples)),
+            ("median_s", Json::num(hit_p50)),
+            ("speedup_vs_miss", Json::num(miss_p50 / hit_p50.max(1e-12))),
+        ]),
+    ];
+
+    // ---- machine-readable evidence trail ---------------------------------
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("provenance", Json::str("measured")),
+        ("quick", Json::Bool(quick)),
+        (
+            "serve_case",
+            Json::obj(vec![
+                ("rows", Json::int(signal.rows())),
+                ("cols", Json::int(signal.cols())),
+                ("k", Json::int(8)),
+                ("eps", Json::num(0.3)),
+                ("server_threads", Json::int(8)),
+                ("engine_threads", Json::int(4)),
+            ]),
+        ),
+        ("serve_fitting_loss", Json::Arr(fit_rows)),
+        ("coreset_cache", Json::Arr(cache_rows)),
+    ]);
+    match std::fs::write("BENCH_serve.json", doc.render()) {
+        Ok(()) => println!("\nwrote BENCH_serve.json"),
+        Err(e) => println!("\ncould not write BENCH_serve.json: {e}"),
+    }
+}

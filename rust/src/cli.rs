@@ -42,7 +42,26 @@ pub struct Args {
 
 impl Args {
     /// Parse from an iterator of arguments (excluding argv[0]).
+    ///
+    /// Without declared boolean flags this keeps the historical
+    /// ambiguity: `--flag positional` reads the positional as the
+    /// flag's value. Subcommands with boolean flags next to positionals
+    /// must declare them via [`Args::parse_with_flags`] (the launcher
+    /// does, through [`boolean_flags_for`]).
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        Self::parse_with_flags(argv, &[])
+    }
+
+    /// Parse with a set of *declared boolean flags*: a flag named in
+    /// `boolean_flags` never consumes the following token as its value,
+    /// so `serve --foreground config.json` yields `foreground=true`
+    /// plus the `config.json` positional instead of
+    /// `foreground=config.json`. An explicit `--foreground=false` still
+    /// works (the `=` form always wins).
+    pub fn parse_with_flags(
+        argv: impl IntoIterator<Item = String>,
+        boolean_flags: &[&str],
+    ) -> Args {
         let mut it = argv.into_iter().peekable();
         let command = it.next().unwrap_or_else(|| "help".to_string());
         let mut options = HashMap::new();
@@ -51,6 +70,8 @@ impl Args {
             if let Some(name) = arg.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     options.insert(k.to_string(), v.to_string());
+                } else if boolean_flags.contains(&name) {
+                    options.insert(name.to_string(), "true".to_string());
                 } else if it.peek().map_or(false, |nxt| !nxt.starts_with("--")) {
                     if let Some(v) = it.next() {
                         options.insert(name.to_string(), v);
@@ -66,7 +87,9 @@ impl Args {
     }
 
     pub fn from_env() -> Args {
-        Self::parse(std::env::args().skip(1))
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let bools = boolean_flags_for(argv.first().map_or("", String::as_str));
+        Self::parse_with_flags(argv, bools)
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
@@ -164,6 +187,20 @@ impl Args {
     }
 }
 
+/// The per-subcommand boolean-flag registry consulted by
+/// [`Args::from_env`]. Every value-less flag a subcommand consumes via
+/// [`Args::get_flag`] belongs here; anything not listed keeps the
+/// historical greedy parse (next non-`--` token becomes the value), so
+/// adding a flag to this table is a local, per-subcommand decision that
+/// cannot reinterpret another subcommand's argv.
+pub fn boolean_flags_for(command: &str) -> &'static [&'static str] {
+    match command {
+        "lint" => &["rules"],
+        "serve" => &["foreground"],
+        _ => &[],
+    }
+}
+
 /// The repo-wide u64/seed spelling: decimal or `0x`/`0X`-prefixed hex.
 /// Shared by [`Args::get_u64`] and the engine's JSON config reader so
 /// the two surfaces can never diverge on what a seed looks like.
@@ -184,15 +221,70 @@ mod tests {
 
     #[test]
     fn parses_subcommand_and_options() {
-        // NOTE the documented ambiguity: `--flag positional` reads the
-        // positional as the flag's value. Boolean flags next to
-        // positionals must use `--flag=true`.
+        // The historical ambiguity for UNDECLARED flags: `--flag
+        // positional` reads the positional as the flag's value, so
+        // boolean flags next to positionals either use `--flag=true`
+        // or get declared in `boolean_flags_for`.
         let a = Args::parse(argv("coreset --k 10 --eps=0.2 --verbose=true input.bin"));
         assert_eq!(a.command, "coreset");
         assert_eq!(a.get("k"), Some("10"));
         assert_eq!(a.get("eps"), Some("0.2"));
         assert!(a.get_flag("verbose"));
         assert_eq!(a.positionals, vec!["input.bin"]);
+    }
+
+    #[test]
+    fn undeclared_flag_still_swallows_the_positional() {
+        // Regression pin for the pre-fix behavior: with no declaration,
+        // the greedy parse is unchanged (back-compat for scripts that
+        // rely on `--flag value`).
+        let a = Args::parse(argv("coreset --verbose input.bin"));
+        assert_eq!(a.get("verbose"), Some("input.bin"));
+        assert!(a.positionals.is_empty());
+    }
+
+    #[test]
+    fn declared_boolean_flag_does_not_consume_the_positional() {
+        // The serve launch line from ISSUE/ROADMAP: `--foreground` is a
+        // declared boolean, so the config path stays positional.
+        let a = Args::parse_with_flags(argv("serve --foreground config.json"), &["foreground"]);
+        assert!(a.get_flag("foreground"));
+        assert_eq!(a.positionals, vec!["config.json"]);
+        // Fails on the pre-fix parser: Args::parse has no declarations,
+        // so the same argv swallows the positional.
+        let pre = Args::parse(argv("serve --foreground config.json"));
+        assert_eq!(pre.get("foreground"), Some("config.json"));
+    }
+
+    #[test]
+    fn declared_boolean_flag_accepts_explicit_values() {
+        let a = Args::parse_with_flags(
+            argv("serve --foreground=false config.json"),
+            &["foreground"],
+        );
+        assert!(!a.get_flag("foreground"));
+        assert_eq!(a.get("foreground"), Some("false"));
+        assert_eq!(a.positionals, vec!["config.json"]);
+        // Declared booleans mixed with valued flags parse positionally.
+        let b = Args::parse_with_flags(
+            argv("serve --foreground --port 8080 config.json"),
+            &["foreground"],
+        );
+        assert!(b.get_flag("foreground"));
+        assert_eq!(b.get("port"), Some("8080"));
+        assert_eq!(b.positionals, vec!["config.json"]);
+    }
+
+    #[test]
+    fn boolean_flag_registry_covers_flag_consumers() {
+        assert!(boolean_flags_for("serve").contains(&"foreground"));
+        assert!(boolean_flags_for("lint").contains(&"rules"));
+        assert!(boolean_flags_for("coreset").is_empty());
+        // And from_env's lookup composes with the parser: `lint --rules
+        // extra.rs` keeps the positional.
+        let a = Args::parse_with_flags(argv("lint --rules extra.rs"), boolean_flags_for("lint"));
+        assert!(a.get_flag("rules"));
+        assert_eq!(a.positionals, vec!["extra.rs"]);
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! Hand-rolled JSON (serde is unavailable offline — DESIGN.md
 //! §Substitutions). The writer side emits the machine-readable evidence
 //! trails (`AuditReport`, `BENCH_runtime.json`) CI archives; the reader
-//! side ([`Json::parse`]) exists for exactly one consumer — engine
-//! configuration files ([`crate::engine::EngineConfig`]), so a config
-//! written with [`Json::render`] round-trips through disk and the CLI's
-//! `--config` flag. Crate-level on purpose — it carries no
+//! side ([`Json::parse`]) has two consumers — engine configuration
+//! files ([`crate::engine::EngineConfig`]), so a config written with
+//! [`Json::render`] round-trips through disk and the CLI's `--config`
+//! flag, and the serving daemon ([`crate::serve`]), which parses
+//! *untrusted network bodies*, so the grammar is strict RFC 8259 (see
+//! [`MAX_PARSE_DEPTH`] and the number-grammar note on `Parser::number`).
+//! Crate-level on purpose — it carries no
 //! audit-specific logic, so any emitter (pipeline metrics, experiment
 //! results) depends on `sigtree::json`, not on the audit subsystem
 //! (which re-exports it as `audit::json` for the evidence-trail docs).
@@ -273,13 +276,55 @@ impl Parser<'_> {
         }
     }
 
+    /// Strict JSON number grammar:
+    /// `-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?[0-9]+)?`.
+    ///
+    /// Rust's `f64::from_str` is deliberately laxer (`01`, `1.`, `+1`,
+    /// `.5`, `inf` all parse), which was harmless while the only input
+    /// was the crate's own `render` output but is wrong at the serving
+    /// boundary (`sigtree::serve` feeds network bodies through here) —
+    /// so the span is validated against the RFC 8259 grammar *before*
+    /// the final `f64` conversion. Note `"01"` errors as trailing
+    /// content rather than inside this method: the grammar says the
+    /// number ends after `0`, and the container/top-level parse then
+    /// rejects the dangling `1`.
     fn number(&mut self) -> Result<Json, String> {
         let start = self.pos;
-        while let Some(b) = self.peek() {
-            if matches!(b, b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9') {
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        match self.peek() {
+            Some(b'0') => self.pos += 1,
+            Some(b'1'..=b'9') => {
+                while matches!(self.peek(), Some(b'0'..=b'9')) {
+                    self.pos += 1;
+                }
+            }
+            _ => return Err(format!("invalid number at byte {start}: expected digit")),
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(format!(
+                    "invalid number at byte {start}: expected digit after '.'"
+                ));
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
                 self.pos += 1;
-            } else {
-                break;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if !matches!(self.peek(), Some(b'0'..=b'9')) {
+                return Err(format!(
+                    "invalid number at byte {start}: expected exponent digits"
+                ));
+            }
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos])
@@ -544,6 +589,37 @@ mod tests {
             "\"\\ud800x\"", "1e999", "\"\\u+041\"", "\"\\u00g1\"",
         ] {
             assert!(Json::parse(bad).is_err(), "accepted malformed {bad:?}");
+        }
+    }
+
+    #[test]
+    fn parse_enforces_the_json_number_grammar() {
+        // Regression for the lenient-f64 inheritance: each of these is
+        // accepted by Rust's `f64::from_str` (so the pre-fix parser let
+        // them through) but is not a JSON number per RFC 8259.
+        for bad in [
+            "01", "007", "[01]", "1.", "[1.]", "{\"a\": 2.}", ".5", "+1",
+            "1e", "1e+", "2E-", "1.e3", "-", "-.5", "[1, 02]", "1.5e",
+            "0x10", "inf", "-inf",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted non-JSON number {bad:?}");
+        }
+        // …while every shape the grammar does allow still parses, with
+        // exact values.
+        for (ok, want) in [
+            ("0", 0.0),
+            ("-0", 0.0),
+            ("10", 10.0),
+            ("0.5", 0.5),
+            ("-0.25", -0.25),
+            ("1e9", 1e9),
+            ("1E+9", 1e9),
+            ("2.5e-3", 2.5e-3),
+            ("123.456", 123.456),
+            ("9007199254740991", 9_007_199_254_740_991.0),
+        ] {
+            let got = Json::parse(ok).unwrap().as_f64().unwrap();
+            assert_eq!(got.to_bits(), want.to_bits(), "{ok}");
         }
     }
 

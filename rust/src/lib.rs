@@ -43,6 +43,11 @@
 //!   contract: the pure-Rust [`runtime::NativeBackend`] (default) and,
 //!   behind the off-by-default `pjrt` cargo feature, PJRT execution of
 //!   the AOT-compiled JAX/Pallas artifacts from `artifacts/*.hlo.txt`.
+//! * [`serve`] — the batched coreset-query daemon (`sigtree serve`):
+//!   std-only HTTP/1.1 over one shared [`engine::Engine`], cross-request
+//!   fitting-loss batching on the persistent worker pool (bit-identical
+//!   to sequential evaluation), and an LRU coreset cache keyed by
+//!   signal content digest × engine-config digest.
 //! * [`error`] — the crate-wide error/result types (std-only `anyhow`
 //!   substitute).
 //! * [`json`] — hand-rolled JSON (the machine-readable evidence-trail
@@ -71,6 +76,7 @@ pub mod pipeline;
 pub mod rng;
 pub mod runtime;
 pub mod segmentation;
+pub mod serve;
 pub mod signal;
 pub mod tree;
 

@@ -19,6 +19,10 @@
 //!   [`sigtree::engine::EditSession`], incremental vs from-scratch timings.
 //! * `runtime`    — run kernel-backend parity checks
 //!   (`--backend native|blocked|pjrt`).
+//! * `serve`      — the batched coreset-query daemon
+//!   ([`sigtree::serve`]): std-only HTTP/1.1 over one shared engine,
+//!   cross-request fitting-loss batching, LRU coreset cache; drains on
+//!   `POST /shutdown`.
 //! * `lint`       — the determinism & panic-freedom static-analysis pass
 //!   over `rust/src` ([`sigtree::analysis`]); non-zero exit on findings.
 //! * `help`       — this text.
@@ -49,6 +53,7 @@ fn main() -> ExitCode {
         "tune" => cmd_tune(&args),
         "update" => cmd_update(&args),
         "runtime" => cmd_runtime(&args),
+        "serve" => cmd_serve(&args),
         "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -83,6 +88,10 @@ fn print_help() {
            tune        --dataset air|gesture --scale 0.1 --grid 8 --eps 0.3\n\
            update      --n 512 --m 512 --k 64 --eps 0.2 --edits 8 --tile 64\n\
            runtime     [--backend native|blocked|pjrt] [--block-size B] [--dir artifacts]\n\
+           serve       [config.json] [--addr 127.0.0.1:0 | --port P] [--serve-threads 4]\n\
+                       [--batch-window-ms 2] [--batch-max 1024] [--cache-cap 16]\n\
+                       [--max-body BYTES] [--read-timeout-ms 5000] [--port-file PATH]\n\
+                       [--foreground]\n\
            lint        [--root rust/src] [--enable a,b] [--disable a,b] [--json lint.json] [--rules]\n\
            help\n\
          \n\
@@ -564,6 +573,68 @@ fn cmd_runtime(args: &Args) -> Result<()> {
     }
     println!("runtime OK");
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_only(&[
+        "k",
+        "eps",
+        "beta",
+        "threads",
+        "shard-rows",
+        "merge-fanout",
+        "reduce-tol",
+        "backend",
+        "block-size",
+        "seed",
+        "config",
+        "addr",
+        "port",
+        "serve-threads",
+        "batch-window-ms",
+        "batch-max",
+        "cache-cap",
+        "max-body",
+        "read-timeout-ms",
+        "port-file",
+        "foreground",
+    ])?;
+    // `serve config.json` is sugar for `serve --config config.json`
+    // (the daemon's config file is its primary interface; `--foreground`
+    // next to the positional is why `serve` declares boolean flags in
+    // `cli::boolean_flags_for`). An explicit --config wins.
+    let mut args = args.clone();
+    if args.get("config").is_none() {
+        if let Some(path) = args.positionals.first().cloned() {
+            args.options.insert("config".to_string(), path);
+        }
+    }
+    let engine = Engine::new(EngineConfig::from_args(&args, EngineConfig::new(16, 0.3))?)?;
+
+    let defaults = sigtree::serve::ServeConfig::default();
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => format!("127.0.0.1:{}", args.get_usize("port", 0)?),
+    };
+    let cfg = sigtree::serve::ServeConfig {
+        addr,
+        threads: args.get_usize("serve-threads", defaults.threads)?.max(1),
+        batch_window_ms: args.get_u64("batch-window-ms", defaults.batch_window_ms)?,
+        batch_max: args.get_usize("batch-max", defaults.batch_max)?.max(1),
+        cache_cap: args.get_usize("cache-cap", defaults.cache_cap)?,
+        max_body: args.get_usize("max-body", defaults.max_body)?,
+        read_timeout_ms: args.get_u64("read-timeout-ms", defaults.read_timeout_ms)?,
+        log_requests: args.get_flag("foreground"),
+    };
+    let server = sigtree::serve::Server::bind(engine, cfg)?;
+    let bound = server.local_addr()?;
+    // The ephemeral-port handshake scripts rely on: the port file (when
+    // asked for) appears only after the listener is accepting.
+    if let Some(path) = args.get("port-file") {
+        std::fs::write(path, format!("{}\n", bound.port()))?;
+    }
+    println!("sigtree serve: listening on {bound} (POST /shutdown to drain)");
+    server.run()
 }
 
 fn cmd_lint(args: &Args) -> Result<()> {

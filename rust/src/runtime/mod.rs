@@ -51,7 +51,14 @@ pub const RECT_BATCH: usize = 1024;
 /// downstream — [`tiled::TiledPrefix`], the CLI `runtime` subcommand,
 /// `bench_runtime`, the integration tests — runs against this trait, so
 /// swapping execution engines never touches the pipeline.
-pub trait KernelBackend {
+///
+/// `Send + Sync` is part of the contract: one `Engine` (and therefore
+/// one backend instance) is shared by every connection thread of the
+/// serving daemon (`sigtree::serve`), so an implementation holding
+/// non-thread-safe device handles must wrap them itself (the bundled
+/// PJRT stub's handles are plain data; a real binding would typically
+/// hold an `Arc`'d client).
+pub trait KernelBackend: Send + Sync {
     /// Human-readable backend identifier (e.g. `"native"`, `"pjrt(cpu)"`).
     fn name(&self) -> String;
 

@@ -1,0 +1,188 @@
+//! LRU cache of built coresets, keyed by *content*, not connection.
+//!
+//! The expensive operation the daemon guards is `Engine::coreset` — a
+//! full bicriteria + partition + Caratheodory pipeline over the input
+//! signal. Two requests carrying the same signal under the same engine
+//! configuration provably produce the bit-identical coreset (the whole
+//! pipeline is deterministic by construction — DESIGN.md
+//! §Determinism), so the daemon caches by
+//! `(signal content digest, engine-config digest)`:
+//!
+//! * the signal digest is [`crate::signal::content_digest`] — FNV-1a
+//!   over dimensions, mask, and the exact value bits;
+//! * the config digest is FNV-1a over the canonical JSON rendering of
+//!   the [`crate::engine::EngineConfig`], so *any* parameter change
+//!   (ε, k, seed, backend…) isolates its own cache line.
+//!
+//! Entries are `Arc`-shared: a hit hands out a clone of the pointer,
+//! so eviction never invalidates a coreset an in-flight request is
+//! still reading. The store is a plain vector in MRU-first order —
+//! capacities are tens of entries, where a linear scan beats any
+//! hashed structure and keeps recency bookkeeping trivial.
+//!
+//! The cache itself is not synchronised; `serve::mod` wraps it in a
+//! `Mutex` and — deliberately — builds missing coresets *outside* the
+//! lock so a slow build never stalls hits on other keys.
+
+use std::sync::Arc;
+
+use crate::coreset::SignalCoreset;
+
+/// `(signal content digest, engine-config digest)`.
+pub type CacheKey = (u64, u64);
+
+/// A built coreset plus the source-signal dimensions, which requests
+/// that address the entry by digest alone still need for validating
+/// query-segmentation bounds.
+#[derive(Debug)]
+pub struct CachedCoreset {
+    pub coreset: SignalCoreset,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Fixed-capacity LRU map, MRU-first vector order.
+#[derive(Debug)]
+pub struct CoresetCache {
+    cap: usize,
+    entries: Vec<(CacheKey, Arc<CachedCoreset>)>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl CoresetCache {
+    /// A zero capacity is clamped to 1: the daemon always keeps at
+    /// least the most recent coreset alive.
+    pub fn new(cap: usize) -> Self {
+        CoresetCache { cap: cap.max(1), entries: Vec::new(), hits: 0, misses: 0, evictions: 0 }
+    }
+
+    /// Look `key` up, refreshing its recency and counting a hit or a
+    /// miss. Misses include digest-only requests for entries that were
+    /// never built (or already evicted).
+    pub fn lookup(&mut self, key: CacheKey) -> Option<Arc<CachedCoreset>> {
+        match self.entries.iter().position(|(k, _)| *k == key) {
+            Some(pos) => {
+                self.hits += 1;
+                let entry = self.entries.remove(pos);
+                let value = Arc::clone(&entry.1);
+                self.entries.insert(0, entry);
+                Some(value)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly built entry, evicting the LRU tail beyond
+    /// capacity. If another thread raced the same build in, the
+    /// incumbent wins and is returned — both builds are bit-identical
+    /// (determinism), so which `Arc` survives is unobservable.
+    pub fn insert(&mut self, key: CacheKey, value: Arc<CachedCoreset>) -> Arc<CachedCoreset> {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| *k == key) {
+            let entry = self.entries.remove(pos);
+            let incumbent = Arc::clone(&entry.1);
+            self.entries.insert(0, entry);
+            return incumbent;
+        }
+        self.entries.insert(0, (key, Arc::clone(&value)));
+        while self.entries.len() > self.cap {
+            self.entries.pop();
+            self.evictions += 1;
+        }
+        value
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::SignalCoreset;
+
+    fn entry() -> Arc<CachedCoreset> {
+        let signal = crate::signal::Signal::from_fn(4, 4, |r, c| (r + 2 * c) as f64);
+        let coreset = SignalCoreset::construct(&signal, 1, 0.5);
+        Arc::new(CachedCoreset { coreset, rows: 4, cols: 4 })
+    }
+
+    #[test]
+    fn lookup_counts_hits_and_misses() {
+        let mut cache = CoresetCache::new(4);
+        assert!(cache.lookup((1, 1)).is_none());
+        cache.insert((1, 1), entry());
+        assert!(cache.lookup((1, 1)).is_some());
+        assert!(cache.lookup((2, 1)).is_none());
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+    }
+
+    #[test]
+    fn evicts_least_recently_used_beyond_capacity() {
+        let mut cache = CoresetCache::new(2);
+        cache.insert((1, 0), entry());
+        cache.insert((2, 0), entry());
+        // Touch (1, 0) so (2, 0) becomes the LRU tail.
+        assert!(cache.lookup((1, 0)).is_some());
+        cache.insert((3, 0), entry());
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        assert!(cache.lookup((2, 0)).is_none(), "LRU entry must be the one evicted");
+        assert!(cache.lookup((1, 0)).is_some());
+        assert!(cache.lookup((3, 0)).is_some());
+    }
+
+    #[test]
+    fn racing_insert_keeps_the_incumbent() {
+        let mut cache = CoresetCache::new(2);
+        let first = cache.insert((7, 7), entry());
+        let second = cache.insert((7, 7), entry());
+        assert!(Arc::ptr_eq(&first, &second), "incumbent entry must win the race");
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one() {
+        let mut cache = CoresetCache::new(0);
+        assert_eq!(cache.cap(), 1);
+        cache.insert((1, 0), entry());
+        cache.insert((2, 0), entry());
+        assert_eq!(cache.len(), 1);
+        assert!(cache.lookup((2, 0)).is_some());
+    }
+
+    #[test]
+    fn eviction_does_not_invalidate_outstanding_handles() {
+        let mut cache = CoresetCache::new(1);
+        let held = cache.insert((1, 0), entry());
+        cache.insert((2, 0), entry());
+        assert!(cache.lookup((1, 0)).is_none());
+        // The Arc handed out before eviction still works.
+        assert_eq!(held.rows, 4);
+    }
+}

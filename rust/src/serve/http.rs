@@ -1,0 +1,408 @@
+//! Hand-rolled HTTP/1.1 request/response framing for [`crate::serve`]
+//! (hyper/axum are unavailable offline — DESIGN.md §Substitutions, same
+//! policy as `sigtree::json`/`sigtree::cli`).
+//!
+//! Deliberately minimal and hostile-input-first:
+//!
+//! * **`Content-Length` bodies only** — `Transfer-Encoding` (chunked)
+//!   is rejected with `501`, a missing `Content-Length` means an empty
+//!   body. Every frame boundary is therefore known before any body
+//!   byte is read.
+//! * Hard caps before allocation: request line + headers together are
+//!   capped at [`MAX_HEAD_BYTES`] (`431` beyond), the declared body
+//!   length is checked against the server's `max_body` (`413`) before
+//!   the body buffer is allocated — an oversized `Content-Length` can
+//!   never balloon memory or hang the connection.
+//! * Keep-alive follows HTTP/1.1 defaults (`Connection: close` opts
+//!   out; HTTP/1.0 must opt in with `keep-alive`).
+//!
+//! Parsing is generic over [`BufRead`] so the unit tests drive it from
+//! byte slices without sockets; the connection loop in `serve::mod`
+//! hands it a `BufReader<TcpStream>`.
+
+use std::io::{BufRead, Write};
+
+/// Cap on the request line + headers, combined. Far above any client
+/// this crate ships, far below memory-pressure territory.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// One parsed request frame.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+    /// Whether the client may reuse the connection after the response.
+    pub keep_alive: bool,
+}
+
+/// Outcome of reading one frame off a connection.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// A well-formed request.
+    Request(Request),
+    /// Clean close (EOF before any byte) or an I/O failure — either
+    /// way the connection is done and nothing can be written back.
+    Closed,
+    /// Malformed or over-limit input: respond with this status +
+    /// message, then close.
+    Reject(u16, String),
+}
+
+/// Read one `\n`-terminated line, enforcing the remaining head budget.
+/// `Ok(None)` is clean EOF; `Err(true)` means over budget, `Err(false)`
+/// an I/O error.
+fn read_line<R: BufRead>(
+    reader: &mut R,
+    budget: &mut usize,
+    line: &mut Vec<u8>,
+) -> Result<Option<()>, bool> {
+    line.clear();
+    // +1 so a line exactly on the budget still terminates.
+    let mut limited = reader.take(*budget as u64 + 1);
+    match limited.read_until(b'\n', line) {
+        Ok(0) => Ok(None),
+        Ok(n) if n > *budget => Err(true),
+        Ok(n) => {
+            *budget -= n;
+            if line.last() != Some(&b'\n') {
+                // EOF mid-line: treat as close (nothing to answer).
+                return Ok(None);
+            }
+            Ok(Some(()))
+        }
+        Err(_) => Err(false),
+    }
+}
+
+fn trim_crlf(line: &[u8]) -> &[u8] {
+    let mut end = line.len();
+    while end > 0 && (line[end - 1] == b'\n' || line[end - 1] == b'\r') {
+        end -= 1;
+    }
+    &line[..end]
+}
+
+/// Read and validate one request frame. `max_body` caps the declared
+/// `Content-Length` (checked *before* the body buffer is allocated).
+pub fn read_request<R: BufRead>(reader: &mut R, max_body: usize) -> ReadOutcome {
+    let mut budget = MAX_HEAD_BYTES;
+    let mut line = Vec::new();
+
+    // Request line.
+    match read_line(reader, &mut budget, &mut line) {
+        Ok(None) => return ReadOutcome::Closed,
+        Err(true) => {
+            return ReadOutcome::Reject(431, format!("request head exceeds {MAX_HEAD_BYTES} bytes"))
+        }
+        Err(false) => return ReadOutcome::Closed,
+        Ok(Some(())) => {}
+    }
+    let Ok(request_line) = std::str::from_utf8(trim_crlf(&line)) else {
+        return ReadOutcome::Reject(400, "request line is not UTF-8".to_string());
+    };
+    let mut parts = request_line.split_whitespace();
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) => (m.to_string(), p.to_string(), v),
+        _ => {
+            return ReadOutcome::Reject(400, format!("malformed request line '{request_line}'"));
+        }
+    };
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        other => {
+            return ReadOutcome::Reject(400, format!("unsupported protocol version '{other}'"));
+        }
+    };
+
+    // Headers (the serving API only consumes framing-relevant ones; the
+    // rest are tolerated and ignored).
+    let mut content_length: Option<usize> = None;
+    let mut keep_alive = http11;
+    loop {
+        match read_line(reader, &mut budget, &mut line) {
+            Ok(None) => return ReadOutcome::Closed,
+            Err(true) => {
+                return ReadOutcome::Reject(
+                    431,
+                    format!("request head exceeds {MAX_HEAD_BYTES} bytes"),
+                )
+            }
+            Err(false) => return ReadOutcome::Closed,
+            Ok(Some(())) => {}
+        }
+        let raw = trim_crlf(&line);
+        if raw.is_empty() {
+            break;
+        }
+        let Ok(header) = std::str::from_utf8(raw) else {
+            return ReadOutcome::Reject(400, "header is not UTF-8".to_string());
+        };
+        let Some((name, value)) = header.split_once(':') else {
+            return ReadOutcome::Reject(400, format!("malformed header '{header}'"));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => {
+                let Ok(len) = value.parse::<usize>() else {
+                    return ReadOutcome::Reject(400, format!("invalid Content-Length '{value}'"));
+                };
+                if content_length.is_some_and(|prev| prev != len) {
+                    return ReadOutcome::Reject(400, "conflicting Content-Length".to_string());
+                }
+                content_length = Some(len);
+            }
+            "transfer-encoding" => {
+                return ReadOutcome::Reject(
+                    501,
+                    "Transfer-Encoding is unsupported; send a Content-Length body".to_string(),
+                );
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.split(',').any(|t| t.trim() == "close") {
+                    keep_alive = false;
+                } else if v.split(',').any(|t| t.trim() == "keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // Body: length known up front, capped before allocation.
+    let len = content_length.unwrap_or(0);
+    if len > max_body {
+        return ReadOutcome::Reject(
+            413,
+            format!("Content-Length {len} exceeds the {max_body}-byte body limit"),
+        );
+    }
+    let mut body = vec![0u8; len];
+    if reader.read_exact(&mut body).is_err() {
+        return ReadOutcome::Closed;
+    }
+    ReadOutcome::Request(Request { method, path, body, keep_alive })
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "",
+    }
+}
+
+/// Write one response frame (JSON body, explicit length, explicit
+/// connection disposition).
+pub fn write_response(
+    writer: &mut impl Write,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let disposition = if keep_alive { "keep-alive" } else { "close" };
+    write!(
+        writer,
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {disposition}\r\n\r\n",
+        reason(status),
+        body.len(),
+    )?;
+    writer.write_all(body.as_bytes())?;
+    writer.flush()
+}
+
+/// Client-side counterpart (integration tests, `bench_serve`, smoke
+/// checks): read one response frame, returning `(status, body)`.
+/// Responses are trusted — this is a test/bench convenience, not a
+/// hardened parser — but it still refuses frames it cannot frame.
+pub fn read_response<R: BufRead>(reader: &mut R) -> std::io::Result<(u16, String)> {
+    use std::io::{Error, ErrorKind};
+
+    let bad = |msg: &str| Error::new(ErrorKind::InvalidData, msg.to_string());
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad("malformed status line"))?;
+    let mut content_length: Option<usize> = None;
+    loop {
+        line.clear();
+        reader.read_line(&mut line)?;
+        let trimmed = line.trim_end_matches(['\r', '\n']);
+        if trimmed.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = trimmed.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length =
+                    Some(value.trim().parse().map_err(|_| bad("bad Content-Length"))?);
+            }
+        }
+    }
+    let len = content_length.ok_or_else(|| bad("response without Content-Length"))?;
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    String::from_utf8(body)
+        .map(|text| (status, text))
+        .map_err(|_| bad("response body is not UTF-8"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn read(input: &[u8], max_body: usize) -> ReadOutcome {
+        let mut reader = input;
+        read_request(&mut reader, max_body)
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let out = read(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n", 1024);
+        let ReadOutcome::Request(req) = out else { panic!("{out:?}") };
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn parses_post_with_content_length_body() {
+        let out = read(
+            b"POST /coreset HTTP/1.1\r\nContent-Length: 4\r\nConnection: close\r\n\r\n{\"a\"",
+            1024,
+        );
+        let ReadOutcome::Request(req) = out else { panic!("{out:?}") };
+        assert_eq!(req.body, b"{\"a\"");
+        assert!(!req.keep_alive);
+    }
+
+    #[test]
+    fn http10_defaults_to_close_unless_keep_alive() {
+        let out = read(b"GET / HTTP/1.0\r\n\r\n", 64);
+        let ReadOutcome::Request(req) = out else { panic!("{out:?}") };
+        assert!(!req.keep_alive);
+        let out = read(b"GET / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n", 64);
+        let ReadOutcome::Request(req) = out else { panic!("{out:?}") };
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn clean_eof_is_closed_not_an_error() {
+        assert!(matches!(read(b"", 64), ReadOutcome::Closed));
+        // EOF mid-request-line: nothing well-formed to answer.
+        assert!(matches!(read(b"GET /x HT", 64), ReadOutcome::Closed));
+    }
+
+    #[test]
+    fn garbage_request_line_is_400() {
+        let ReadOutcome::Reject(status, _) = read(b"BLAH\r\n\r\n", 64) else {
+            panic!("expected reject")
+        };
+        assert_eq!(status, 400);
+        let ReadOutcome::Reject(status, _) = read(b"GET /x SPDY/3\r\n\r\n", 64) else {
+            panic!("expected reject")
+        };
+        assert_eq!(status, 400);
+    }
+
+    #[test]
+    fn oversized_content_length_is_413_before_any_allocation() {
+        // The declared length is absurd and the body bytes are absent —
+        // the reject must fire from the header alone.
+        let out = read(
+            b"POST /coreset HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n",
+            1024,
+        );
+        // usize parse succeeds on 64-bit; either way it must reject.
+        let ReadOutcome::Reject(status, msg) = out else { panic!("{out:?}") };
+        assert!(status == 413 || status == 400, "{status} {msg}");
+    }
+
+    #[test]
+    fn invalid_and_conflicting_content_length_are_400() {
+        let ReadOutcome::Reject(status, _) =
+            read(b"POST / HTTP/1.1\r\nContent-Length: ten\r\n\r\n", 64)
+        else {
+            panic!("expected reject")
+        };
+        assert_eq!(status, 400);
+        let ReadOutcome::Reject(status, _) = read(
+            b"POST / HTTP/1.1\r\nContent-Length: 1\r\nContent-Length: 2\r\n\r\nx",
+            64,
+        ) else {
+            panic!("expected reject")
+        };
+        assert_eq!(status, 400);
+    }
+
+    #[test]
+    fn transfer_encoding_is_501() {
+        let ReadOutcome::Reject(status, _) =
+            read(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 64)
+        else {
+            panic!("expected reject")
+        };
+        assert_eq!(status, 501);
+    }
+
+    #[test]
+    fn oversized_head_is_431() {
+        let mut input = b"GET / HTTP/1.1\r\n".to_vec();
+        input.extend_from_slice(format!("X-Pad: {}\r\n", "y".repeat(MAX_HEAD_BYTES)).as_bytes());
+        input.extend_from_slice(b"\r\n");
+        let ReadOutcome::Reject(status, _) = read(&input, 64) else { panic!("expected reject") };
+        assert_eq!(status, 431);
+    }
+
+    #[test]
+    fn response_frame_shape() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "{\"ok\": true}", true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 12\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"ok\": true}"), "{text}");
+        let mut out = Vec::new();
+        write_response(&mut out, 404, "{}", false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 404 Not Found\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+    }
+
+    #[test]
+    fn read_response_round_trips_write_response() {
+        let mut out = Vec::new();
+        write_response(&mut out, 503, "{\"error\": \"draining\"}", false).unwrap();
+        let mut reader: &[u8] = &out;
+        let (status, body) = read_response(&mut reader).unwrap();
+        assert_eq!(status, 503);
+        assert_eq!(body, "{\"error\": \"draining\"}");
+    }
+
+    #[test]
+    fn keep_alive_frames_parse_back_to_back() {
+        let mut input: &[u8] =
+            b"GET /a HTTP/1.1\r\n\r\nPOST /b HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi";
+        let ReadOutcome::Request(a) = read_request(&mut input, 64) else { panic!() };
+        assert_eq!(a.path, "/a");
+        let ReadOutcome::Request(b) = read_request(&mut input, 64) else { panic!() };
+        assert_eq!(b.path, "/b");
+        assert_eq!(b.body, b"hi");
+        assert!(matches!(read_request(&mut input, 64), ReadOutcome::Closed));
+    }
+}

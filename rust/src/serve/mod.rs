@@ -1,0 +1,686 @@
+//! `sigtree serve` — a long-lived coreset-query daemon over one shared
+//! [`Engine`].
+//!
+//! The CLI pipeline (`coreset` → `evaluate` → …) pays the full engine
+//! bring-up — worker-pool spawn, prefix statistics, coreset build — on
+//! every invocation. The serving workflow inverts that: bring the
+//! engine up once, keep built coresets hot, and answer many small
+//! queries cheaply. Everything is `std`-only (hand-rolled HTTP/1.1 in
+//! [`http`], [`crate::json`] for bodies — DESIGN.md §Substitutions).
+//!
+//! ## Architecture
+//!
+//! ```text
+//!  TcpListener (acceptor, caller thread)
+//!      │ accepted connections, mpsc
+//!      ▼
+//!  N connection threads ──────────────┐
+//!      │ parse + validate (wire)      │ /coreset, /optimal_tree,
+//!      │ /fitting_loss jobs, bounded  │ /stats … run on the
+//!      ▼ mpsc                         │ connection thread
+//!  collector thread ── gathers jobs within the batch window,
+//!      │               concatenates queries per coreset
+//!      ▼
+//!  Engine::fitting_loss (persistent WorkerPool) ── scatter slices
+//!      ▲                                            back per job
+//!  LRU CoresetCache (keyed by signal digest × config digest)
+//! ```
+//!
+//! **Batching is invisible to callers.** `Engine::fitting_loss` maps a
+//! pure function over its query slice — query `i`'s loss depends on
+//! nothing but `(coreset, queries[i])` — so evaluating a concatenation
+//! and re-slicing the result is *bit-identical* to evaluating each
+//! request alone (the integration tests assert this at 1/2/4/8 server
+//! threads). The collector drains its queue with a quiet-gap timeout
+//! ([`ServeConfig::batch_window_ms`]) and never reads a clock, so the
+//! window bounds added latency without entangling results with timing.
+//!
+//! **Shutdown is a request, not a signal.** `POST /shutdown` answers
+//! `200`, flips the drain flag, and wakes the acceptor with a loopback
+//! connection; in-flight requests finish, keep-alive connections close
+//! after their current response, worker threads join, and
+//! [`Server::run`] returns. No SIGTERM handling — signal-safe teardown
+//! without `unsafe` handlers, and exercisable from plain tests.
+//!
+//! Hostile input is the normal case: framing caps heads and bodies
+//! before allocating ([`http`]), [`wire`] re-validates every invariant
+//! the library's constructors only `assert!`, and handler threads are
+//! panic-free by construction (`sigtree lint` enforces the no-panic
+//! rule here as on the rest of the crate).
+
+pub mod http;
+
+mod cache;
+mod wire;
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::engine::Engine;
+use crate::error::Result;
+use crate::json::Json;
+use crate::par::lock;
+use crate::segmentation::KSegmentation;
+use crate::signal::{content_digest, Fnv1a};
+
+use cache::{CachedCoreset, CoresetCache};
+use http::{ReadOutcome, Request};
+
+/// Upper bound on queries in one `/fitting_loss` request.
+pub const MAX_REQUEST_QUERIES: usize = 4096;
+
+/// Upper bound on `k` for `/optimal_tree` — the guillotine DP over the
+/// coreset grid is exponential-ish in `k`; this keeps one request from
+/// monopolising the daemon.
+pub const MAX_TREE_K: usize = 32;
+
+/// Pending `/fitting_loss` jobs the collector queue will hold before
+/// senders block (backpressure, not unbounded growth).
+const FIT_QUEUE_BOUND: usize = 1024;
+
+/// Daemon knobs, separate from the [`crate::engine::EngineConfig`] the
+/// wrapped engine runs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (read it back via
+    /// [`Server::local_addr`]).
+    pub addr: String,
+    /// Connection-handler threads (clamped to ≥ 1). These only parse,
+    /// validate and route; numeric work runs on the engine's pool.
+    pub threads: usize,
+    /// Quiet-gap batch window in milliseconds. After the first pending
+    /// `/fitting_loss` job, the collector keeps gathering until the
+    /// queue stays empty this long (or [`ServeConfig::batch_max`]
+    /// queries accumulate). `0` disables gathering — every request
+    /// evaluates alone (the bench's "unbatched" baseline).
+    pub batch_window_ms: u64,
+    /// Cap on concatenated queries per engine call.
+    pub batch_max: usize,
+    /// LRU capacity of the coreset cache (entries, clamped to ≥ 1).
+    pub cache_cap: usize,
+    /// Request-body cap in bytes (`413` beyond).
+    pub max_body: usize,
+    /// Per-connection read timeout in milliseconds; idle keep-alive
+    /// connections are dropped after this long so they cannot pin
+    /// handler threads. `0` waits forever.
+    pub read_timeout_ms: u64,
+    /// Log one line per request to stderr (`serve --foreground`).
+    pub log_requests: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 4,
+            batch_window_ms: 2,
+            batch_max: 1024,
+            cache_cap: 16,
+            max_body: 8 * 1024 * 1024,
+            read_timeout_ms: 5000,
+            log_requests: false,
+        }
+    }
+}
+
+/// Monotone counters for `/stats` (relaxed ordering throughout — they
+/// are operational telemetry, not synchronisation).
+#[derive(Debug, Default)]
+struct ServeStats {
+    requests: AtomicU64,
+    http_errors: AtomicU64,
+    coreset: AtomicU64,
+    fitting_loss: AtomicU64,
+    optimal_tree: AtomicU64,
+    healthz: AtomicU64,
+    stats: AtomicU64,
+    shutdown: AtomicU64,
+    queries: AtomicU64,
+    batches: AtomicU64,
+    max_batch: AtomicU64,
+    coreset_builds: AtomicU64,
+}
+
+fn bump(counter: &AtomicU64) {
+    counter.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One pending `/fitting_loss` request, parked on its rendezvous
+/// channel until the collector scatters the batch result back.
+struct FitJob {
+    coreset: Arc<CachedCoreset>,
+    queries: Vec<KSegmentation>,
+    reply: SyncSender<Vec<f64>>,
+}
+
+/// Shared server state (one per [`Server::run`], `Arc`ed across the
+/// connection threads).
+struct Ctx {
+    engine: Arc<Engine>,
+    cache: Mutex<CoresetCache>,
+    stats: ServeStats,
+    shutdown: AtomicBool,
+    cfg: ServeConfig,
+    /// FNV-1a over the engine config's canonical JSON — half of every
+    /// cache key, so a parameter change can never serve stale coresets.
+    config_digest: u64,
+    /// Loopback address for the shutdown self-connect wake-up.
+    addr: SocketAddr,
+}
+
+/// The daemon: a bound listener plus the engine it serves.
+pub struct Server {
+    engine: Engine,
+    listener: TcpListener,
+    cfg: ServeConfig,
+}
+
+impl Server {
+    /// Bind `cfg.addr` (port 0 = ephemeral). The engine is taken by
+    /// value: the daemon owns it for its lifetime.
+    pub fn bind(engine: Engine, cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        Ok(Server { engine, listener, cfg })
+    }
+
+    /// The bound address (read the ephemeral port back from here).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until a `POST /shutdown` drains the daemon. Blocks the
+    /// calling thread (the acceptor loop runs here); returns after
+    /// every connection thread and the batch collector have joined.
+    pub fn run(self) -> Result<()> {
+        let Server { engine, listener, cfg } = self;
+        let addr = listener.local_addr()?;
+        let config_digest = config_digest(&engine);
+        let engine = Arc::new(engine);
+
+        let ctx = Arc::new(Ctx {
+            engine: Arc::clone(&engine),
+            cache: Mutex::new(CoresetCache::new(cfg.cache_cap)),
+            stats: ServeStats::default(),
+            shutdown: AtomicBool::new(false),
+            cfg: cfg.clone(),
+            config_digest,
+            addr,
+        });
+
+        let (fit_tx, fit_rx) = mpsc::sync_channel::<FitJob>(FIT_QUEUE_BOUND);
+        let collector = {
+            let ctx = Arc::clone(&ctx);
+            std::thread::Builder::new()
+                .name("sigtree-serve-batch".to_string())
+                .spawn(move || collector_loop(&ctx, &fit_rx))?
+        };
+
+        let (conn_tx, conn_rx) = mpsc::channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut handlers = Vec::with_capacity(cfg.threads.max(1));
+        for i in 0..cfg.threads.max(1) {
+            let ctx = Arc::clone(&ctx);
+            let rx = Arc::clone(&conn_rx);
+            let tx = fit_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("sigtree-serve-conn-{i}"))
+                .spawn(move || handler_loop(&ctx, &rx, &tx))?;
+            handlers.push(handle);
+        }
+        // The collector must observe disconnect once every handler
+        // exits; run() keeps no sender of its own.
+        drop(fit_tx);
+
+        for stream in listener.incoming() {
+            if ctx.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            if conn_tx.send(stream).is_err() {
+                break;
+            }
+        }
+
+        // Drain: no new connections; handlers finish their queues and
+        // exit, then the collector sees its senders disconnect.
+        drop(conn_tx);
+        for handle in handlers {
+            let _ = handle.join();
+        }
+        let _ = collector.join();
+        Ok(())
+    }
+}
+
+/// FNV-1a over the canonical JSON rendering of the engine's config.
+fn config_digest(engine: &Engine) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(engine.config().to_json().render().as_bytes());
+    h.finish()
+}
+
+/// Connection-thread main: pull accepted sockets off the shared
+/// receiver (lock held only for the `recv`, never while serving) until
+/// the acceptor hangs up.
+fn handler_loop(ctx: &Ctx, rx: &Mutex<Receiver<TcpStream>>, fit_tx: &SyncSender<FitJob>) {
+    loop {
+        let stream = match lock(rx).recv() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        handle_connection(ctx, fit_tx, stream);
+    }
+}
+
+/// Serve one connection until close, keep-alive exhaustion, or drain.
+fn handle_connection(ctx: &Ctx, fit_tx: &SyncSender<FitJob>, stream: TcpStream) {
+    if ctx.cfg.read_timeout_ms > 0 {
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(ctx.cfg.read_timeout_ms)));
+    }
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        match http::read_request(&mut reader, ctx.cfg.max_body) {
+            ReadOutcome::Closed => return,
+            ReadOutcome::Reject(status, msg) => {
+                bump(&ctx.stats.http_errors);
+                let body = error_body(&msg);
+                let _ = http::write_response(&mut writer, status, &body, false);
+                return;
+            }
+            ReadOutcome::Request(req) => {
+                let routed = route(ctx, fit_tx, &req);
+                if routed.status >= 400 {
+                    bump(&ctx.stats.http_errors);
+                }
+                let keep = req.keep_alive
+                    && !routed.shutdown
+                    && !ctx.shutdown.load(Ordering::SeqCst);
+                let write = http::write_response(&mut writer, routed.status, &routed.body, keep);
+                if ctx.cfg.log_requests {
+                    eprintln!("sigtree serve: {} {} -> {}", req.method, req.path, routed.status);
+                }
+                if routed.shutdown {
+                    trigger_shutdown(ctx);
+                }
+                if write.is_err() || !keep {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Flip the drain flag and wake the blocked acceptor with a loopback
+/// self-connect (the accepted wake-up socket is discarded there).
+fn trigger_shutdown(ctx: &Ctx) {
+    ctx.shutdown.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(ctx.addr);
+}
+
+struct Routed {
+    status: u16,
+    body: String,
+    shutdown: bool,
+}
+
+fn respond(status: u16, body: Json) -> Routed {
+    Routed { status, body: body.render(), shutdown: false }
+}
+
+fn error_body(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).render()
+}
+
+fn fail(status: u16, msg: String) -> Routed {
+    Routed { status, body: error_body(&msg), shutdown: false }
+}
+
+const ROUTES: &[(&str, &str)] = &[
+    ("GET", "/healthz"),
+    ("GET", "/stats"),
+    ("POST", "/coreset"),
+    ("POST", "/fitting_loss"),
+    ("POST", "/optimal_tree"),
+    ("POST", "/shutdown"),
+];
+
+fn route(ctx: &Ctx, fit_tx: &SyncSender<FitJob>, req: &Request) -> Routed {
+    bump(&ctx.stats.requests);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            bump(&ctx.stats.healthz);
+            respond(200, Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        ("GET", "/stats") => {
+            bump(&ctx.stats.stats);
+            respond(200, stats_body(ctx))
+        }
+        ("POST", "/coreset") => {
+            bump(&ctx.stats.coreset);
+            post_coreset(ctx, &req.body)
+        }
+        ("POST", "/fitting_loss") => {
+            bump(&ctx.stats.fitting_loss);
+            post_fitting_loss(ctx, fit_tx, &req.body)
+        }
+        ("POST", "/optimal_tree") => {
+            bump(&ctx.stats.optimal_tree);
+            post_optimal_tree(ctx, &req.body)
+        }
+        ("POST", "/shutdown") => {
+            bump(&ctx.stats.shutdown);
+            Routed {
+                status: 200,
+                body: Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("draining", Json::Bool(true)),
+                ])
+                .render(),
+                shutdown: true,
+            }
+        }
+        (_, path) if ROUTES.iter().any(|(_, p)| *p == path) => {
+            fail(405, format!("method {} not allowed on {path}", req.method))
+        }
+        (_, path) => fail(404, format!("unknown endpoint {path}")),
+    }
+}
+
+fn parse_body(body: &[u8]) -> Result<Json, (u16, String)> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| (400, "request body is not UTF-8".to_string()))?;
+    Json::parse(text).map_err(|e| (400, format!("request body is not valid JSON: {e}")))
+}
+
+/// Resolve the coreset a request addresses: by content (`"signal"`,
+/// building + caching on miss) or by reference (`"digest"`, cache-only).
+/// Returns the entry, whether it was served from cache, and its digest.
+fn resolve_coreset(
+    ctx: &Ctx,
+    doc: &Json,
+) -> Result<(Arc<CachedCoreset>, bool, u64), (u16, String)> {
+    if let Some(d) = doc.get("digest") {
+        let Some(digest) = d.as_str().and_then(wire::parse_digest) else {
+            return Err((400, "\"digest\" must be a hex string like \"0x1b3\"".to_string()));
+        };
+        let key = (digest, ctx.config_digest);
+        return match lock(&ctx.cache).lookup(key) {
+            Some(entry) => Ok((entry, true, digest)),
+            None => Err((
+                404,
+                format!(
+                    "no cached coreset for digest {digest:#x}; POST the signal to /coreset first"
+                ),
+            )),
+        };
+    }
+    let Some(sig_doc) = doc.get("signal") else {
+        return Err((400, "body must carry a \"signal\" object or a \"digest\"".to_string()));
+    };
+    let signal = wire::signal_from_json(sig_doc).map_err(|e| (400, format!("signal: {e}")))?;
+    let digest = content_digest(&signal);
+    let key = (digest, ctx.config_digest);
+    if let Some(entry) = lock(&ctx.cache).lookup(key) {
+        return Ok((entry, true, digest));
+    }
+    // Build outside the cache lock: a slow build must not stall hits
+    // on other keys. A racing duplicate build returns identical bits
+    // (determinism), and `insert` keeps the incumbent.
+    let coreset = ctx.engine.coreset(&signal);
+    bump(&ctx.stats.coreset_builds);
+    let entry = Arc::new(CachedCoreset {
+        coreset,
+        rows: signal.rows(),
+        cols: signal.cols(),
+    });
+    let entry = lock(&ctx.cache).insert(key, entry);
+    Ok((entry, false, digest))
+}
+
+fn post_coreset(ctx: &Ctx, body: &[u8]) -> Routed {
+    let doc = match parse_body(body) {
+        Ok(doc) => doc,
+        Err((status, msg)) => return fail(status, msg),
+    };
+    let (entry, cached, digest) = match resolve_coreset(ctx, &doc) {
+        Ok(r) => r,
+        Err((status, msg)) => return fail(status, msg),
+    };
+    respond(
+        200,
+        Json::obj(vec![
+            ("digest", wire::digest_to_json(digest)),
+            ("cached", Json::Bool(cached)),
+            ("rows", Json::int(entry.rows)),
+            ("cols", Json::int(entry.cols)),
+            ("blocks", Json::int(entry.coreset.blocks.len())),
+            ("stored_points", Json::int(entry.coreset.stored_points())),
+            ("sigma", Json::num(entry.coreset.sigma)),
+            ("total_weight", Json::num(entry.coreset.total_weight())),
+        ]),
+    )
+}
+
+fn post_fitting_loss(ctx: &Ctx, fit_tx: &SyncSender<FitJob>, body: &[u8]) -> Routed {
+    let doc = match parse_body(body) {
+        Ok(doc) => doc,
+        Err((status, msg)) => return fail(status, msg),
+    };
+    let (entry, cached, digest) = match resolve_coreset(ctx, &doc) {
+        Ok(r) => r,
+        Err((status, msg)) => return fail(status, msg),
+    };
+    let Some(Json::Arr(raw)) = doc.get("queries") else {
+        return fail(400, "body needs a \"queries\" array of segmentations".to_string());
+    };
+    if raw.len() > MAX_REQUEST_QUERIES {
+        return fail(
+            400,
+            format!("{} queries in one request, limit is {MAX_REQUEST_QUERIES}", raw.len()),
+        );
+    }
+    let mut queries = Vec::with_capacity(raw.len());
+    for (i, q) in raw.iter().enumerate() {
+        match wire::segmentation_from_json(q, entry.rows, entry.cols) {
+            Ok(seg) => queries.push(seg),
+            Err(e) => return fail(400, format!("query {i}: {e}")),
+        }
+    }
+    let n = queries.len();
+    ctx.stats.queries.fetch_add(n as u64, Ordering::Relaxed);
+    let losses = if n == 0 {
+        Vec::new()
+    } else {
+        let (reply_tx, reply_rx) = mpsc::sync_channel::<Vec<f64>>(1);
+        let job = FitJob { coreset: Arc::clone(&entry), queries, reply: reply_tx };
+        if fit_tx.send(job).is_err() {
+            return fail(503, "server is draining".to_string());
+        }
+        match reply_rx.recv() {
+            Ok(losses) => losses,
+            Err(_) => return fail(503, "server is draining".to_string()),
+        }
+    };
+    respond(
+        200,
+        Json::obj(vec![
+            ("digest", wire::digest_to_json(digest)),
+            ("cached", Json::Bool(cached)),
+            ("losses", Json::Arr(losses.into_iter().map(Json::num).collect())),
+        ]),
+    )
+}
+
+fn post_optimal_tree(ctx: &Ctx, body: &[u8]) -> Routed {
+    let doc = match parse_body(body) {
+        Ok(doc) => doc,
+        Err((status, msg)) => return fail(status, msg),
+    };
+    let (entry, cached, digest) = match resolve_coreset(ctx, &doc) {
+        Ok(r) => r,
+        Err((status, msg)) => return fail(status, msg),
+    };
+    let k = match doc.get("k").and_then(Json::as_usize) {
+        Some(k) if (1..=MAX_TREE_K).contains(&k) => k,
+        Some(k) => return fail(400, format!("k = {k} outside 1..={MAX_TREE_K}")),
+        None => return fail(400, "body needs an integer \"k\"".to_string()),
+    };
+    let (seg, loss) = ctx.engine.optimal_tree_of_coreset(&entry.coreset, k);
+    respond(
+        200,
+        Json::obj(vec![
+            ("digest", wire::digest_to_json(digest)),
+            ("cached", Json::Bool(cached)),
+            ("k", Json::int(k)),
+            ("loss", Json::num(loss)),
+            ("pieces", wire::segmentation_to_json(&seg)),
+        ]),
+    )
+}
+
+fn stats_body(ctx: &Ctx) -> Json {
+    let count = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+    let s = &ctx.stats;
+    let cache = lock(&ctx.cache);
+    Json::obj(vec![
+        ("requests", count(&s.requests)),
+        ("http_errors", count(&s.http_errors)),
+        (
+            "endpoints",
+            Json::obj(vec![
+                ("coreset", count(&s.coreset)),
+                ("fitting_loss", count(&s.fitting_loss)),
+                ("optimal_tree", count(&s.optimal_tree)),
+                ("healthz", count(&s.healthz)),
+                ("stats", count(&s.stats)),
+                ("shutdown", count(&s.shutdown)),
+            ]),
+        ),
+        ("queries", count(&s.queries)),
+        ("batches", count(&s.batches)),
+        ("max_batch", count(&s.max_batch)),
+        ("coreset_builds", count(&s.coreset_builds)),
+        (
+            "cache",
+            Json::obj(vec![
+                ("entries", Json::int(cache.len())),
+                ("capacity", Json::int(cache.cap())),
+                ("hits", Json::Num(cache.hits() as f64)),
+                ("misses", Json::Num(cache.misses() as f64)),
+                ("evictions", Json::Num(cache.evictions() as f64)),
+            ]),
+        ),
+        (
+            "engine",
+            Json::obj(vec![
+                ("threads", Json::int(ctx.engine.threads())),
+                ("config_digest", wire::digest_to_json(ctx.config_digest)),
+            ]),
+        ),
+    ])
+}
+
+/// Collector-thread main: gather `/fitting_loss` jobs within the batch
+/// window, evaluate each coreset's concatenated queries in ONE engine
+/// call, scatter result slices back in arrival order. Exits when every
+/// handler (sender) is gone.
+fn collector_loop(ctx: &Ctx, rx: &Receiver<FitJob>) {
+    let window = Duration::from_millis(ctx.cfg.batch_window_ms);
+    let batch_max = ctx.cfg.batch_max.max(1);
+    loop {
+        let first = match rx.recv() {
+            Ok(job) => job,
+            Err(_) => return,
+        };
+        let mut jobs = vec![first];
+        let mut total = jobs.iter().map(|j| j.queries.len()).sum::<usize>();
+        if !window.is_zero() {
+            while total < batch_max {
+                match rx.recv_timeout(window) {
+                    Ok(job) => {
+                        total += job.queries.len();
+                        jobs.push(job);
+                    }
+                    Err(RecvTimeoutError::Timeout | RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+        ctx.stats.max_batch.fetch_max(total as u64, Ordering::Relaxed);
+
+        // Group by coreset identity (Arc pointer — entries are unique
+        // per cache key), preserving arrival order within each group.
+        let mut groups: Vec<(*const CachedCoreset, Vec<FitJob>)> = Vec::new();
+        for job in jobs {
+            let key = Arc::as_ptr(&job.coreset);
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, group)) => group.push(job),
+                None => groups.push((key, vec![job])),
+            }
+        }
+        for (_, group) in groups {
+            bump(&ctx.stats.batches);
+            let Some(coreset) = group.first().map(|j| Arc::clone(&j.coreset)) else { continue };
+            let mut replies = Vec::with_capacity(group.len());
+            let mut flat: Vec<KSegmentation> = Vec::with_capacity(
+                group.iter().map(|j| j.queries.len()).sum::<usize>(),
+            );
+            for job in group {
+                replies.push((job.reply, job.queries.len()));
+                flat.extend(job.queries);
+            }
+            let losses = ctx.engine.fitting_loss(&coreset.coreset, &flat);
+            let mut offset = 0;
+            for (reply, n) in replies {
+                let slice = losses.get(offset..offset + n).map(<[f64]>::to_vec);
+                offset += n;
+                // A handler that vanished mid-flight (should not
+                // happen; handlers always await) just drops the slice.
+                let _ = reply.send(slice.unwrap_or_default());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineConfig;
+
+    fn test_engine() -> Engine {
+        let mut cfg = EngineConfig::new(2, 0.5);
+        cfg.threads = 1;
+        Engine::new(cfg).expect("engine")
+    }
+
+    #[test]
+    fn config_digest_tracks_every_engine_knob() {
+        let a = config_digest(&test_engine());
+        let mut cfg = EngineConfig::new(2, 0.5);
+        cfg.threads = 1;
+        cfg.seed = cfg.seed.wrapping_add(1);
+        let b = config_digest(&Engine::new(cfg).expect("engine"));
+        assert_ne!(a, b, "seed change must isolate its own cache lines");
+    }
+
+    #[test]
+    fn serve_config_defaults_are_sane() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.threads >= 1);
+        assert!(cfg.batch_max >= 1);
+        assert!(cfg.cache_cap >= 1);
+        assert!(cfg.max_body >= 1024);
+    }
+
+    #[test]
+    fn bind_on_ephemeral_port_reports_an_address() {
+        let server = Server::bind(test_engine(), ServeConfig::default()).expect("bind");
+        let addr = server.local_addr().expect("addr");
+        assert_ne!(addr.port(), 0);
+    }
+}

@@ -1,0 +1,324 @@
+//! JSON ⇄ domain-object conversion for the serving API, with the
+//! validation posture the library itself deliberately does not have.
+//!
+//! Library constructors (`Signal::from_values`, `Rect::new`,
+//! `KSegmentation::new`) `assert!`/`debug_assert!` their invariants —
+//! correct for trusted in-process callers, but a panic path when the
+//! bytes came off a socket. Every function here therefore re-validates
+//! *before* touching a constructor, so malformed network input surfaces
+//! as a `400`-able `Err(String)` and can never take a handler thread
+//! down. Conversions are exact: values travel as JSON numbers rendered
+//! by `Json::render` (shortest round-trip form) and re-parsed by the
+//! strict grammar, so `f64` bits survive the wire unchanged — the
+//! property the batched-vs-sequential bit-identity tests assert
+//! end-to-end.
+
+use crate::json::Json;
+use crate::segmentation::KSegmentation;
+use crate::signal::{Rect, Signal};
+
+/// Hard cap on `rows * cols` for a signal received over the wire
+/// (16.7M cells ≈ 128 MiB of JSON text, far above the default body
+/// limit — this is defence in depth for operators who raise it).
+pub const MAX_SIGNAL_CELLS: usize = 1 << 24;
+
+/// Hard cap on pieces per query segmentation; disjointness validation
+/// is O(pieces²), so this bounds per-request CPU as well as memory.
+pub const MAX_QUERY_PIECES: usize = 1024;
+
+/// Decode `{"rows": n, "cols": m, "values": [...], "mask": [...]}` —
+/// `values` row-major with `n * m` finite numbers, `mask` optional
+/// booleans of the same length (false = missing cell).
+pub(crate) fn signal_from_json(doc: &Json) -> Result<Signal, String> {
+    let rows = field_usize(doc, "rows")?;
+    let cols = field_usize(doc, "cols")?;
+    if rows == 0 || cols == 0 {
+        return Err("signal dimensions must be positive".to_string());
+    }
+    let cells = rows
+        .checked_mul(cols)
+        .filter(|&c| c <= MAX_SIGNAL_CELLS)
+        .ok_or_else(|| format!("signal exceeds {MAX_SIGNAL_CELLS} cells"))?;
+    let Some(Json::Arr(raw)) = doc.get("values") else {
+        return Err("signal needs a \"values\" array".to_string());
+    };
+    if raw.len() != cells {
+        return Err(format!(
+            "\"values\" holds {} entries, expected rows*cols = {cells}",
+            raw.len()
+        ));
+    }
+    let mut values = Vec::with_capacity(cells);
+    for (i, v) in raw.iter().enumerate() {
+        match v.as_f64() {
+            Some(x) if x.is_finite() => values.push(x),
+            _ => return Err(format!("\"values\"[{i}] is not a finite number")),
+        }
+    }
+    let mut signal = Signal::from_values(rows, cols, values);
+    match doc.get("mask") {
+        None => {}
+        Some(Json::Arr(raw_mask)) => {
+            if raw_mask.len() != cells {
+                return Err(format!(
+                    "\"mask\" holds {} entries, expected rows*cols = {cells}",
+                    raw_mask.len()
+                ));
+            }
+            let mut mask = Vec::with_capacity(cells);
+            for (i, b) in raw_mask.iter().enumerate() {
+                match b.as_bool() {
+                    Some(present) => mask.push(present),
+                    None => return Err(format!("\"mask\"[{i}] is not a boolean")),
+                }
+            }
+            if !mask.iter().any(|&p| p) {
+                return Err("\"mask\" leaves no present cells".to_string());
+            }
+            signal = signal.with_mask(mask);
+        }
+        Some(_) => return Err("\"mask\" must be an array of booleans".to_string()),
+    }
+    Ok(signal)
+}
+
+/// Decode `{"pieces": [{"r0", "r1", "c0", "c1", "value"}, ...]}` into a
+/// [`KSegmentation`] whose rectangles fit inside `rows × cols` and are
+/// pairwise disjoint (inclusive coordinates, as everywhere in the
+/// crate). Partial coverage is fine — `fitting_loss` treats uncovered
+/// area as zero contribution.
+pub(crate) fn segmentation_from_json(
+    doc: &Json,
+    rows: usize,
+    cols: usize,
+) -> Result<KSegmentation, String> {
+    let Some(Json::Arr(raw)) = doc.get("pieces") else {
+        return Err("query needs a \"pieces\" array".to_string());
+    };
+    if raw.is_empty() {
+        return Err("query needs at least one piece".to_string());
+    }
+    if raw.len() > MAX_QUERY_PIECES {
+        return Err(format!(
+            "query holds {} pieces, limit is {MAX_QUERY_PIECES}",
+            raw.len()
+        ));
+    }
+    let mut pieces = Vec::with_capacity(raw.len());
+    for (i, p) in raw.iter().enumerate() {
+        let r0 = field_usize(p, "r0").map_err(|e| format!("piece {i}: {e}"))?;
+        let r1 = field_usize(p, "r1").map_err(|e| format!("piece {i}: {e}"))?;
+        let c0 = field_usize(p, "c0").map_err(|e| format!("piece {i}: {e}"))?;
+        let c1 = field_usize(p, "c1").map_err(|e| format!("piece {i}: {e}"))?;
+        if r0 > r1 || c0 > c1 {
+            return Err(format!("piece {i}: degenerate rectangle {r0}..{r1} x {c0}..{c1}"));
+        }
+        if r1 >= rows || c1 >= cols {
+            return Err(format!(
+                "piece {i}: rectangle {r0}..{r1} x {c0}..{c1} exceeds the {rows}x{cols} signal"
+            ));
+        }
+        let value = match p.get("value").and_then(Json::as_f64) {
+            Some(x) if x.is_finite() => x,
+            _ => return Err(format!("piece {i}: \"value\" is not a finite number")),
+        };
+        pieces.push((Rect { r0, r1, c0, c1 }, value));
+    }
+    if !KSegmentation::pairwise_disjoint(&pieces) {
+        return Err("pieces overlap; a k-segmentation needs disjoint rectangles".to_string());
+    }
+    Ok(KSegmentation::new(pieces))
+}
+
+/// Render a segmentation as the same shape [`segmentation_from_json`]
+/// reads, so `/optimal_tree` output can be replayed as a
+/// `/fitting_loss` query verbatim.
+pub(crate) fn segmentation_to_json(seg: &KSegmentation) -> Json {
+    Json::Arr(
+        seg.pieces()
+            .iter()
+            .map(|(rect, value)| {
+                Json::obj(vec![
+                    ("r0", Json::int(rect.r0)),
+                    ("r1", Json::int(rect.r1)),
+                    ("c0", Json::int(rect.c0)),
+                    ("c1", Json::int(rect.c1)),
+                    ("value", Json::num(*value)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Digests travel as `0x`-prefixed hex strings — JSON numbers are f64
+/// and cannot carry 64 bits exactly.
+pub(crate) fn digest_to_json(digest: u64) -> Json {
+    Json::str(format!("{digest:#x}"))
+}
+
+pub(crate) fn parse_digest(s: &str) -> Option<u64> {
+    crate::cli::parse_u64(s)
+}
+
+fn field_usize(doc: &Json, key: &str) -> Result<usize, String> {
+    doc.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("\"{key}\" must be a non-negative integer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::{content_digest, SignalSource};
+
+    fn signal_doc(rows: usize, cols: usize) -> Json {
+        let values: Vec<Json> = (0..rows * cols).map(|i| Json::num(i as f64 * 0.5)).collect();
+        Json::obj(vec![
+            ("rows", Json::int(rows)),
+            ("cols", Json::int(cols)),
+            ("values", Json::Arr(values)),
+        ])
+    }
+
+    #[test]
+    fn signal_round_trips_exact_bits_through_render_and_parse() {
+        // Awkward values: shortest-roundtrip rendering + the strict
+        // parser must reproduce identical bits.
+        let values = [0.1, -0.3, 1.0 / 3.0, 1e-300, 123456789.123456, f64::MIN_POSITIVE];
+        let doc = Json::obj(vec![
+            ("rows", Json::int(2)),
+            ("cols", Json::int(3)),
+            ("values", Json::Arr(values.iter().map(|&v| Json::num(v)).collect())),
+        ]);
+        let reparsed = Json::parse(&doc.render()).unwrap();
+        let signal = signal_from_json(&reparsed).unwrap();
+        for (i, &v) in values.iter().enumerate() {
+            assert_eq!(signal.row_values(i / 3)[i % 3].to_bits(), v.to_bits());
+        }
+        let direct = signal_from_json(&doc).unwrap();
+        assert_eq!(content_digest(&signal), content_digest(&direct));
+    }
+
+    #[test]
+    fn signal_mask_is_decoded_and_validated() {
+        let mut doc = signal_doc(2, 2);
+        let Json::Obj(pairs) = &mut doc else { unreachable!() };
+        pairs.push((
+            "mask".to_string(),
+            Json::Arr(vec![
+                Json::Bool(true),
+                Json::Bool(false),
+                Json::Bool(true),
+                Json::Bool(true),
+            ]),
+        ));
+        let signal = signal_from_json(&doc).unwrap();
+        assert_eq!(signal.present(), 3);
+
+        let Json::Obj(pairs) = &mut doc else { unreachable!() };
+        pairs.retain(|(k, _)| k != "mask");
+        pairs.push(("mask".to_string(), Json::Arr(vec![Json::Bool(true)])));
+        assert!(signal_from_json(&doc).unwrap_err().contains("mask"));
+
+        // A mask with zero present cells would hand the engine an empty
+        // signal — rejected at the wire, not discovered mid-build.
+        let Json::Obj(pairs) = &mut doc else { unreachable!() };
+        pairs.retain(|(k, _)| k != "mask");
+        pairs.push(("mask".to_string(), Json::Arr(vec![Json::Bool(false); 4])));
+        assert!(signal_from_json(&doc).unwrap_err().contains("no present cells"));
+    }
+
+    #[test]
+    fn signal_rejections_name_the_offending_field() {
+        let err = signal_from_json(&Json::obj(vec![("rows", Json::int(2))])).unwrap_err();
+        assert!(err.contains("cols"), "{err}");
+
+        let mut doc = signal_doc(2, 2);
+        let Json::Obj(pairs) = &mut doc else { unreachable!() };
+        pairs.retain(|(k, _)| k != "values");
+        pairs.push(("values".to_string(), Json::Arr(vec![Json::num(1.0)])));
+        let err = signal_from_json(&doc).unwrap_err();
+        assert!(err.contains("expected rows*cols"), "{err}");
+
+        let zero = Json::obj(vec![
+            ("rows", Json::int(0)),
+            ("cols", Json::int(5)),
+            ("values", Json::Arr(vec![])),
+        ]);
+        assert!(signal_from_json(&zero).unwrap_err().contains("positive"));
+
+        let huge = Json::obj(vec![
+            ("rows", Json::int(1 << 20)),
+            ("cols", Json::int(1 << 20)),
+            ("values", Json::Arr(vec![])),
+        ]);
+        assert!(signal_from_json(&huge).unwrap_err().contains("cells"));
+    }
+
+    fn piece(r0: usize, r1: usize, c0: usize, c1: usize, value: f64) -> Json {
+        Json::obj(vec![
+            ("r0", Json::int(r0)),
+            ("r1", Json::int(r1)),
+            ("c0", Json::int(c0)),
+            ("c1", Json::int(c1)),
+            ("value", Json::num(value)),
+        ])
+    }
+
+    #[test]
+    fn segmentation_round_trips_and_validates() {
+        let doc = Json::obj(vec![(
+            "pieces",
+            Json::Arr(vec![piece(0, 3, 0, 1, 2.5), piece(0, 3, 2, 7, -1.0)]),
+        )]);
+        let seg = segmentation_from_json(&doc, 8, 8).unwrap();
+        assert_eq!(seg.k(), 2);
+        let replay = Json::obj(vec![("pieces", segmentation_to_json(&seg))]);
+        let again = segmentation_from_json(&replay, 8, 8).unwrap();
+        assert_eq!(again.pieces(), seg.pieces());
+    }
+
+    #[test]
+    fn segmentation_rejects_overlap_out_of_bounds_and_degenerate() {
+        let overlap = Json::obj(vec![(
+            "pieces",
+            Json::Arr(vec![piece(0, 3, 0, 3, 1.0), piece(2, 5, 2, 5, 2.0)]),
+        )]);
+        let err = segmentation_from_json(&overlap, 8, 8).unwrap_err();
+        assert!(err.contains("overlap"), "{err}");
+
+        let oob = Json::obj(vec![("pieces", Json::Arr(vec![piece(0, 8, 0, 3, 1.0)]))]);
+        let err = segmentation_from_json(&oob, 8, 8).unwrap_err();
+        assert!(err.contains("exceeds"), "{err}");
+
+        let degenerate = Json::obj(vec![("pieces", Json::Arr(vec![piece(3, 1, 0, 3, 1.0)]))]);
+        let err = segmentation_from_json(&degenerate, 8, 8).unwrap_err();
+        assert!(err.contains("degenerate"), "{err}");
+
+        let empty = Json::obj(vec![("pieces", Json::Arr(vec![]))]);
+        assert!(segmentation_from_json(&empty, 8, 8).is_err());
+
+        let infinite = Json::obj(vec![(
+            "pieces",
+            Json::Arr(vec![Json::obj(vec![
+                ("r0", Json::int(0)),
+                ("r1", Json::int(1)),
+                ("c0", Json::int(0)),
+                ("c1", Json::int(1)),
+                ("value", Json::Str("inf".to_string())),
+            ])]),
+        )]);
+        let err = segmentation_from_json(&infinite, 8, 8).unwrap_err();
+        assert!(err.contains("finite"), "{err}");
+    }
+
+    #[test]
+    fn digest_hex_round_trips() {
+        for d in [0u64, 1, 0xdead_beef, u64::MAX] {
+            let rendered = digest_to_json(d);
+            let parsed = parse_digest(rendered.as_str().unwrap()).unwrap();
+            assert_eq!(parsed, d);
+        }
+        assert!(parse_digest("not hex").is_none());
+    }
+}

@@ -549,6 +549,93 @@ impl SignalSource for SignalView<'_> {
     }
 }
 
+/// Incremental 64-bit FNV-1a hasher — the crate's one content-hash
+/// primitive (std's `DefaultHasher` is explicitly unstable across
+/// releases, and cache keys / digests printed in wire responses must be
+/// reproducible everywhere). Byte-oriented, deterministic, dependency
+/// free.
+#[derive(Debug, Clone)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Self {
+        Fnv1a(Self::OFFSET)
+    }
+
+    #[inline]
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    #[inline]
+    pub fn write_u8(&mut self, x: u8) {
+        self.write(&[x]);
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, x: u64) {
+        self.write(&x.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Content digest of a signal: FNV-1a over the dimensions, the presence
+/// mask, and the *present* cells' exact `f64` bit patterns, in row-major
+/// order. Two sources digest equal iff they are semantically the same
+/// input to a coreset build:
+///
+/// * the value stored under a masked-out cell does **not** contribute
+///   (builds never read it), so editing hidden cells keeps the digest;
+/// * an absent mask and an all-`true` mask digest identically;
+/// * dimensions are folded in first, so a 2×3 and a 3×2 signal with the
+///   same flat values differ.
+///
+/// This is the cache key the serving layer uses (`sigtree::serve`, LRU
+/// keyed by `(content_digest, EngineConfig)`), and the reason it lives
+/// here: nothing else in the crate can name a signal without holding it.
+pub fn content_digest<S: SignalSource + ?Sized>(signal: &S) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_u64(signal.rows() as u64);
+    h.write_u64(signal.cols() as u64);
+    for r in 0..signal.rows() {
+        let values = signal.row_values(r);
+        match signal.row_mask(r) {
+            None => {
+                for v in values {
+                    h.write_u8(1);
+                    h.write_u64(v.to_bits());
+                }
+            }
+            Some(mask) => {
+                for (v, present) in values.iter().zip(mask) {
+                    if *present {
+                        h.write_u8(1);
+                        h.write_u64(v.to_bits());
+                    } else {
+                        h.write_u8(0);
+                    }
+                }
+            }
+        }
+    }
+    h.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -683,5 +770,61 @@ mod tests {
             assert!(view.row_mask(r).is_none());
         }
         assert!(view.to_signal().mask().is_none());
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        let mut h = Fnv1a::new();
+        assert_eq!(h.finish(), 0xcbf2_9ce4_8422_2325);
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h = Fnv1a::new();
+        h.write(b"foobar");
+        assert_eq!(h.finish(), 0x8594_4171_f737_10b0);
+    }
+
+    #[test]
+    fn content_digest_is_deterministic_and_value_sensitive() {
+        let a = Signal::from_fn(7, 5, |r, c| (r * 31 + c) as f64);
+        let b = Signal::from_fn(7, 5, |r, c| (r * 31 + c) as f64);
+        assert_eq!(content_digest(&a), content_digest(&b));
+        let mut c = Signal::from_fn(7, 5, |r, c| (r * 31 + c) as f64);
+        // One ULP on one cell must change the digest (exact bit hashing).
+        c.set(3, 2, f64::from_bits(c.get(3, 2).to_bits() + 1));
+        assert_ne!(content_digest(&a), content_digest(&c));
+    }
+
+    #[test]
+    fn content_digest_folds_in_dimensions() {
+        let flat: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let a = Signal::from_values(3, 4, flat.clone());
+        let b = Signal::from_values(4, 3, flat);
+        assert_ne!(content_digest(&a), content_digest(&b));
+    }
+
+    #[test]
+    fn content_digest_ignores_hidden_values_but_not_the_mask() {
+        let base = Signal::from_fn(6, 6, |r, c| (r + c) as f64);
+        let mut masked = Signal::from_fn(6, 6, |r, c| (r + c) as f64);
+        masked.mask_rect(Rect::new(1, 2, 1, 2));
+        // Toggling presence changes identity…
+        assert_ne!(content_digest(&base), content_digest(&masked));
+        // …but editing a value no build can read does not.
+        let mut hidden_edit = masked.clone();
+        hidden_edit.set(1, 1, 999.0);
+        assert_eq!(content_digest(&masked), content_digest(&hidden_edit));
+        // An all-present mask is the same identity as no mask at all.
+        let all_true = Signal::from_fn(6, 6, |r, c| (r + c) as f64).with_mask(vec![true; 36]);
+        assert_eq!(content_digest(&base), content_digest(&all_true));
+    }
+
+    #[test]
+    fn content_digest_sees_views_as_their_content() {
+        let s = Signal::from_fn(10, 10, |r, c| (r * 10 + c) as f64);
+        let rect = Rect::new(2, 6, 1, 8);
+        // A zero-copy view and its materialized crop are the same input.
+        assert_eq!(content_digest(&s.view(rect)), content_digest(&s.crop(rect)));
+        assert_ne!(content_digest(&s.view(rect)), content_digest(&s));
     }
 }

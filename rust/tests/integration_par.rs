@@ -210,6 +210,48 @@ fn streaming_through_parallel_builder() {
 }
 
 #[test]
+fn worker_pool_supports_concurrent_map_callers() {
+    // The serve daemon shares ONE engine pool across many connection
+    // threads: `/optimal_tree` handlers and the fitting-loss collector
+    // all call `pool.map` concurrently. Hammer that contract directly —
+    // many caller threads, many rounds, varying batch shapes — and
+    // require exact per-caller results (a lost task, a cross-caller
+    // result leak, or a deadlock all fail loudly here).
+    let pool = std::sync::Arc::new(sigtree::par::WorkerPool::new(3));
+    const CALLERS: usize = 8;
+    const ROUNDS: usize = 25;
+    let mut handles = Vec::new();
+    for caller in 0..CALLERS {
+        let pool = std::sync::Arc::clone(&pool);
+        handles.push(std::thread::spawn(move || {
+            for round in 0..ROUNDS {
+                // Mix shapes: singletons, odd lengths, and empty batches
+                // all cross the pool while other callers are mid-map.
+                let len = match round % 4 {
+                    0 => 1,
+                    1 => 7,
+                    2 => 64,
+                    _ => 0,
+                };
+                let items: Vec<u64> =
+                    (0..len).map(|i| (caller * 100_000 + round * 100 + i) as u64).collect();
+                let got = pool
+                    .map(&items, |idx, &x| x.wrapping_mul(0x9e37_79b9).wrapping_add(idx as u64));
+                let want: Vec<u64> = items
+                    .iter()
+                    .enumerate()
+                    .map(|(idx, &x)| x.wrapping_mul(0x9e37_79b9).wrapping_add(idx as u64))
+                    .collect();
+                assert_eq!(got, want, "caller {caller} round {round}");
+            }
+        }));
+    }
+    for handle in handles {
+        handle.join().expect("caller thread");
+    }
+}
+
+#[test]
 fn parallel_prefix_stats_agree_on_coreset_path() {
     // Building a coreset from parallel-constructed statistics must match
     // the sequential-statistics build (same partition decisions — the

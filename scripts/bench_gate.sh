@@ -1,61 +1,113 @@
 #!/usr/bin/env bash
-# Perf regression gate over bench_runtime's machine-readable output.
+# Perf regression gate over the benches' machine-readable output.
 #
-#   scripts/bench_gate.sh               compare rust/BENCH_runtime.json
-#                                       (current run) against the committed
-#                                       BENCH_runtime.json baseline
-#   scripts/bench_gate.sh --rebaseline  promote the current run to be the
-#                                       committed baseline
+#   scripts/bench_gate.sh               compare every current run
+#                                       (rust/BENCH_<name>.json) against its
+#                                       committed baseline (BENCH_<name>.json)
+#   scripts/bench_gate.sh --pair NAME   gate one pair only (runtime | serve)
+#   scripts/bench_gate.sh --rebaseline  promote every current run present to
+#                                       be the committed baseline
 #
-# Policy:
-#   * baseline provenance "bootstrap" (the committed placeholder with null
+# Gated pairs:
+#   runtime  BENCH_runtime.json  <- cargo bench --bench bench_runtime
+#   serve    BENCH_serve.json    <- cargo bench --bench bench_serve
+#
+# Policy (per pair):
+#   * baseline provenance "bootstrap" (a committed placeholder with null
 #     medians): schema check only, always exit 0 — there is nothing honest
 #     to gate against until someone runs the bench on real hardware and
 #     promotes it with --rebaseline.
 #   * baseline provenance "measured": hard-fail when any row's median_s
 #     regresses by more than 15% vs the baseline row with the same
-#     identity (section + op + impl/mode + threads). Rows present on only
-#     one side (e.g. a --quick run vs a full baseline) are skipped with a
-#     note, never failed.
+#     identity (section + op + impl/mode/clients + threads). Rows present
+#     on only one side (e.g. a --quick run vs a full baseline) are skipped
+#     with a note, never failed. A row present in the current run whose
+#     median_s is null (the bench emitted the row but measured nothing) is
+#     also skipped, with an explicit "null median_s" note — it is NOT a
+#     comparison and NOT the same as a missing row.
 #   * BENCH_GATE_ADVISORY=1 downgrades a failing comparison to a warning
 #     (for shared CI runners whose timings are too noisy to hard-gate).
+#
+# Test hooks (used by scripts/test_bench_gate.sh to exercise the
+# comparator against synthetic JSON without touching the real files):
+#   BENCH_GATE_BASELINE / BENCH_GATE_CURRENT  override the file pair
+#   BENCH_GATE_REQUIRED                       comma-separated schema keys
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-# cargo bench runs the harness with cwd = the package root (rust/), so
-# the current run lands there; the committed baseline sits at the
-# workspace root.
-BASELINE="BENCH_runtime.json"
-CURRENT="rust/BENCH_runtime.json"
+RUNTIME_REQUIRED="bench,provenance,quick,acceptance_case,backends,kernels,blocked_speedup,prefix_build,thread_scaling,engine_reuse,alloc_profile,incremental_update"
+SERVE_REQUIRED="bench,provenance,quick,serve_case,serve_fitting_loss,coreset_cache"
 
-if [ "${1:-}" = "--rebaseline" ]; then
-    if [ ! -f "$CURRENT" ]; then
-        echo "bench_gate: no current run at rust/BENCH_runtime.json — run \`cargo bench --bench bench_runtime\` first" >&2
+# name|baseline|current|required-keys
+PAIRS=(
+    "runtime|BENCH_runtime.json|rust/BENCH_runtime.json|$RUNTIME_REQUIRED"
+    "serve|BENCH_serve.json|rust/BENCH_serve.json|$SERVE_REQUIRED"
+)
+
+ONLY_PAIR=""
+REBASELINE=0
+while [ $# -gt 0 ]; do
+    case "$1" in
+        --rebaseline) REBASELINE=1 ;;
+        --pair)
+            shift
+            ONLY_PAIR="${1:-}"
+            ;;
+        *)
+            echo "bench_gate: unknown argument '$1' (usage: bench_gate.sh [--pair NAME] [--rebaseline])" >&2
+            exit 2
+            ;;
+    esac
+    shift
+done
+
+# Synthetic-pair override for the self-test: one pair, caller-supplied
+# files and schema.
+if [ -n "${BENCH_GATE_BASELINE:-}" ] || [ -n "${BENCH_GATE_CURRENT:-}" ]; then
+    PAIRS=("synthetic|${BENCH_GATE_BASELINE:?}|${BENCH_GATE_CURRENT:?}|${BENCH_GATE_REQUIRED:-bench,provenance}")
+fi
+
+if [ "$REBASELINE" = 1 ]; then
+    promoted=0
+    for pair in "${PAIRS[@]}"; do
+        IFS='|' read -r name baseline current _required <<<"$pair"
+        [ -n "$ONLY_PAIR" ] && [ "$name" != "$ONLY_PAIR" ] && continue
+        if [ -f "$current" ]; then
+            cp "$current" "$baseline"
+            echo "bench_gate: promoted $current -> $baseline (commit it to update the baseline)"
+            promoted=$((promoted + 1))
+        else
+            echo "bench_gate: no current run at $current — skipping the $name pair"
+        fi
+    done
+    if [ "$promoted" = 0 ]; then
+        echo "bench_gate: nothing to promote — run the benches first (e.g. \`cargo bench --bench bench_runtime\`)" >&2
         exit 1
     fi
-    cp "$CURRENT" "$BASELINE"
-    echo "bench_gate: promoted $CURRENT -> $BASELINE (commit it to update the baseline)"
     exit 0
 fi
 
-THRESHOLD="${BENCH_GATE_THRESHOLD:-1.15}" \
-ADVISORY="${BENCH_GATE_ADVISORY:-0}" \
-python3 - "$BASELINE" "$CURRENT" <<'PY'
+status=0
+for pair in "${PAIRS[@]}"; do
+    IFS='|' read -r name baseline current required <<<"$pair"
+    [ -n "$ONLY_PAIR" ] && [ "$name" != "$ONLY_PAIR" ] && continue
+    echo "bench_gate: === pair '$name' ($current vs $baseline) ==="
+    if THRESHOLD="${BENCH_GATE_THRESHOLD:-1.15}" \
+       ADVISORY="${BENCH_GATE_ADVISORY:-0}" \
+       REQUIRED_KEYS="$required" \
+       python3 - "$baseline" "$current" <<'PY'
 import json, os, sys
 
 baseline_path, current_path = sys.argv[1], sys.argv[2]
 threshold = float(os.environ["THRESHOLD"])
 advisory = os.environ["ADVISORY"] == "1"
 
-REQUIRED = [
-    "bench", "provenance", "quick", "acceptance_case", "backends",
-    "kernels", "blocked_speedup", "prefix_build", "thread_scaling",
-    "engine_reuse", "alloc_profile", "incremental_update",
-]
+REQUIRED = [k for k in os.environ["REQUIRED_KEYS"].split(",") if k]
 # Fields that are measurements, not row identity.
 METRICS = {
-    "median_s", "p90_s", "speedup_vs_1t", "speedup_vs_full",
-    "speedup_vs_scalar", "speedup_vs_native", "batches_per_s",
+    "median_s", "p90_s", "p99_s", "rps", "requests", "samples",
+    "speedup_vs_1t", "speedup_vs_full", "speedup_vs_scalar",
+    "speedup_vs_native", "speedup_vs_miss", "batches_per_s",
     "native_median_s", "blocked_median_s", "allocs_total", "stats_allocs",
     "allocs_per_shard", "kib_per_shard", "blocks",
 }
@@ -102,23 +154,40 @@ if base.get("provenance") == "bootstrap":
     sys.exit(0)
 
 base_rows, cur_rows = rows(base), rows(cur)
-failures, compared, skipped = [], 0, 0
+failures, compared = [], 0
+missing_current = null_current = bad_baseline = 0
 for ident, b in sorted(base_rows.items()):
-    c = cur_rows.get(ident)
-    if c is None or b is None or not (b > 0):
-        skipped += 1
+    tag = " ".join(ident)
+    if ident not in cur_rows:
+        # e.g. a --quick current run vs a full baseline: the row was
+        # never emitted this run.
+        missing_current += 1
+        continue
+    c = cur_rows[ident]
+    if c is None:
+        # The current run emitted this row but measured nothing (null
+        # median_s). Distinct from a missing row: the bench reached the
+        # row and produced no timing, which deserves an explicit note —
+        # silently lumping it into the generic skip count hid real
+        # sampler failures.
+        null_current += 1
+        print(f"bench_gate: note {tag}: null median_s in current run — skipped")
+        continue
+    if b is None or not (b > 0):
+        bad_baseline += 1
         continue
     compared += 1
     ratio = c / b
-    tag = " ".join(ident)
     if ratio > threshold:
         failures.append(f"  {tag}: {b:.6f}s -> {c:.6f}s (x{ratio:.2f} > x{threshold:.2f})")
     else:
         print(f"bench_gate: ok   {tag}: x{ratio:.2f}")
 only_current = sum(1 for k in cur_rows if k not in base_rows)
-if skipped or only_current:
-    print(f"bench_gate: skipped {skipped} baseline row(s) without a comparable "
-          f"current row; {only_current} current row(s) not in baseline")
+if missing_current or null_current or bad_baseline or only_current:
+    print(f"bench_gate: skipped {missing_current} baseline row(s) absent from the current run, "
+          f"{null_current} current row(s) with null median_s, "
+          f"{bad_baseline} baseline row(s) without a usable median; "
+          f"{only_current} current row(s) not in baseline")
 print(f"bench_gate: compared {compared} row(s) against {baseline_path}")
 if failures:
     print(f"bench_gate: median regression > {(threshold - 1) * 100:.0f}% on:", file=sys.stderr)
@@ -129,3 +198,10 @@ if failures:
     sys.exit(1)
 print("bench_gate: OK")
 PY
+    then
+        :
+    else
+        status=1
+    fi
+done
+exit "$status"

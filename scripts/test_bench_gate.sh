@@ -1,0 +1,143 @@
+#!/usr/bin/env bash
+# Self-test for scripts/bench_gate.sh: drives the real gate script
+# against synthetic baseline/current JSON (via the BENCH_GATE_BASELINE /
+# BENCH_GATE_CURRENT test hooks) and asserts exit codes and output.
+# Pure bash + python3 — runs anywhere, no Rust toolchain needed.
+#
+# Includes the regression test for the null-median_s bugfix: a current
+# row that is PRESENT but carries `"median_s": null` must be skipped
+# with an explicit "null median_s" note, not silently folded into the
+# generic "row(s) absent from the current run" count.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+GATE="scripts/bench_gate.sh"
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+
+pass=0
+fail=0
+
+# run NAME EXPECTED_EXIT MUST_CONTAIN [MUST_NOT_CONTAIN]
+#   Runs the gate against $TMP/base.json + $TMP/cur.json with the
+#   synthetic schema, captures combined output, checks the exit code and
+#   (optionally) a required / forbidden substring.
+run() {
+    local name="$1" want_exit="$2" must="$3" must_not="${4:-}"
+    local out got_exit=0
+    out="$(BENCH_GATE_BASELINE="$TMP/base.json" \
+           BENCH_GATE_CURRENT="$TMP/cur.json" \
+           BENCH_GATE_REQUIRED="bench,provenance" \
+           "$GATE" 2>&1)" || got_exit=$?
+    local ok=1
+    if [ "$got_exit" != "$want_exit" ]; then
+        echo "FAIL $name: exit $got_exit, wanted $want_exit"
+        ok=0
+    fi
+    if [ -n "$must" ] && ! grep -qF -- "$must" <<<"$out"; then
+        echo "FAIL $name: output missing '$must'"
+        ok=0
+    fi
+    if [ -n "$must_not" ] && grep -qF -- "$must_not" <<<"$out"; then
+        echo "FAIL $name: output must not contain '$must_not'"
+        ok=0
+    fi
+    if [ "$ok" = 1 ]; then
+        echo "ok   $name"
+        pass=$((pass + 1))
+    else
+        sed 's/^/     | /' <<<"$out"
+        fail=$((fail + 1))
+    fi
+}
+
+# Fixture helper: one section ("rows") of measurement rows keyed by op.
+#   doc FILE PROVENANCE "op=NAME:median=VALUE" ...
+doc() {
+    local file="$1" prov="$2"
+    shift 2
+    python3 - "$file" "$prov" "$@" <<'PY'
+import json, sys
+file, prov = sys.argv[1], sys.argv[2]
+rows = []
+for spec in sys.argv[3:]:
+    row = {}
+    for field in spec.split(":"):
+        k, v = field.split("=", 1)
+        row[k] = None if v == "null" else (float(v) if k == "median" else v)
+    rows.append({"op": row["op"], "median_s": row["median"]})
+json.dump({"bench": "synthetic", "provenance": prov, "rows": rows}, open(file, "w"))
+PY
+}
+
+# 1. Clean pass: current within the 15% threshold.
+doc "$TMP/base.json" measured "op=build:median=1.0" "op=query:median=0.5"
+doc "$TMP/cur.json" measured "op=build:median=1.05" "op=query:median=0.5"
+run "within-threshold passes" 0 "bench_gate: OK"
+
+# 2. Regression: >15% slower on one row hard-fails and names the row.
+doc "$TMP/cur.json" measured "op=build:median=1.5" "op=query:median=0.5"
+run "regression fails" 1 "op=build"
+
+# 3. Advisory mode downgrades the same regression to exit 0.
+out_exit=0
+out="$(BENCH_GATE_BASELINE="$TMP/base.json" BENCH_GATE_CURRENT="$TMP/cur.json" \
+       BENCH_GATE_REQUIRED="bench,provenance" BENCH_GATE_ADVISORY=1 \
+       "$GATE" 2>&1)" || out_exit=$?
+if [ "$out_exit" = 0 ] && grep -qF "reporting only" <<<"$out"; then
+    echo "ok   advisory downgrades regression"
+    pass=$((pass + 1))
+else
+    echo "FAIL advisory downgrades regression (exit $out_exit)"
+    sed 's/^/     | /' <<<"$out"
+    fail=$((fail + 1))
+fi
+
+# 4. Bootstrap baseline: schema check only, exit 0 even vs a "regression".
+doc "$TMP/base.json" bootstrap "op=build:median=null"
+run "bootstrap baseline is schema-only" 0 "bootstrap placeholder"
+
+# 5. THE BUGFIX: a current row present with null median_s is skipped
+#    with an explicit note — and is NOT counted as an absent row.
+doc "$TMP/base.json" measured "op=build:median=1.0" "op=query:median=0.5"
+doc "$TMP/cur.json" measured "op=build:median=null" "op=query:median=0.5"
+run "null current median_s gets an explicit note" 0 \
+    "null median_s in current run" \
+    "1 baseline row(s) absent from the current run"
+
+# 6. A row genuinely absent from the current run (e.g. --quick) is the
+#    other skip bucket, and never claims a null median.
+doc "$TMP/cur.json" measured "op=query:median=0.5"
+run "absent current row is the absent bucket" 0 \
+    "1 baseline row(s) absent from the current run" \
+    "null median_s in current run"
+
+# 7. Current run must be measured — a bootstrap current never gates.
+doc "$TMP/cur.json" bootstrap "op=build:median=null"
+run "non-measured current rejected" 1 "expected 'measured'"
+
+# 8. Missing schema key fails the load step.
+doc "$TMP/cur.json" measured "op=build:median=1.0"
+python3 - "$TMP/cur.json" <<'PY'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+del doc["bench"]
+json.dump(doc, open(sys.argv[1], "w"))
+PY
+run "missing required key fails" 1 "missing keys"
+
+# 9. --rebaseline promotes the current file over the baseline.
+doc "$TMP/base.json" measured "op=build:median=1.0"
+doc "$TMP/cur.json" measured "op=build:median=0.9"
+BENCH_GATE_BASELINE="$TMP/base.json" BENCH_GATE_CURRENT="$TMP/cur.json" \
+    "$GATE" --rebaseline >/dev/null
+if cmp -s "$TMP/base.json" "$TMP/cur.json"; then
+    echo "ok   rebaseline promotes current"
+    pass=$((pass + 1))
+else
+    echo "FAIL rebaseline promotes current"
+    fail=$((fail + 1))
+fi
+
+echo "test_bench_gate: $pass passed, $fail failed"
+[ "$fail" = 0 ]

@@ -57,12 +57,53 @@ cargo run --release -- update --n 256 --m 256 --k 16 --eps 0.3 --edits 4 --tile 
 # a CI artifact by ci.yml).
 cargo run --release -- audit --k 5 --eps 0.5 --cases 25 --seed 7 --json audit.json
 
-# Perf regression gate: a quick bench pass (reduced sizes/iterations,
-# sizes embedded in row identities so quick rows never gate against
+# Serve smoke: boot the daemon on an ephemeral port (written to a port
+# file after bind), drive it over raw /dev/tcp — no curl dependency —
+# and require the cache-hit path plus a clean drain. The full
+# bit-identity and hostile-input coverage lives in
+# tests/integration_serve.rs; this proves the shipped binary serves.
+SERVE_PORT_FILE="$(mktemp)"
+cargo run --release -- serve --k 4 --eps 0.4 --threads 2 --serve-threads 2 \
+    --port 0 --port-file "$SERVE_PORT_FILE" &
+SERVE_PID=$!
+for _ in $(seq 1 100); do
+    [ -s "$SERVE_PORT_FILE" ] && break
+    sleep 0.1
+done
+[ -s "$SERVE_PORT_FILE" ] || { echo "serve smoke: no port file" >&2; kill "$SERVE_PID"; exit 1; }
+SERVE_PORT="$(cat "$SERVE_PORT_FILE")"
+serve_req() { # METHOD PATH BODY — prints status line + body to stdout
+    local method="$1" path="$2" body="$3"
+    exec 3<>"/dev/tcp/127.0.0.1/$SERVE_PORT"
+    printf '%s %s HTTP/1.1\r\nContent-Length: %s\r\nConnection: close\r\n\r\n%s' \
+        "$method" "$path" "${#body}" "$body" >&3
+    cat <&3
+    exec 3>&- 3<&-
+}
+SERVE_SIG='{"signal":{"rows":4,"cols":4,"values":[0,1,2,3,1,2,3,4,2,3,4,5,3,4,5,6]}}'
+serve_req GET /healthz "" | grep -q '"ok": true' || { echo "serve smoke: healthz" >&2; exit 1; }
+serve_req POST /coreset "$SERVE_SIG" | grep -q '"cached": false' \
+    || { echo "serve smoke: first /coreset should be a cache miss" >&2; exit 1; }
+serve_req POST /coreset "$SERVE_SIG" | grep -q '"cached": true' \
+    || { echo "serve smoke: second /coreset should be a cache hit" >&2; exit 1; }
+serve_req GET /stats "" | grep -q '"hits": 1' \
+    || { echo "serve smoke: stats should count one cache hit" >&2; exit 1; }
+serve_req POST /shutdown "" | grep -q '"draining": true' \
+    || { echo "serve smoke: shutdown" >&2; exit 1; }
+wait "$SERVE_PID" || { echo "serve smoke: daemon exited non-zero" >&2; exit 1; }
+rm -f "$SERVE_PORT_FILE"
+echo "serve smoke: OK"
+
+# Perf regression gate: quick bench passes (reduced sizes/iterations,
+# shapes embedded in row identities so quick rows never gate against
 # full-run baseline rows), then hard-gate medians against the committed
-# BENCH_runtime.json baseline (>15% median slowdown fails; a bootstrap
-# baseline with null medians is schema-checked only).
+# baselines — BENCH_runtime.json and BENCH_serve.json (>15% median
+# slowdown fails; a bootstrap baseline with null medians is
+# schema-checked only). The gate's own comparator logic is exercised
+# first against synthetic fixtures — pure bash/python3, runs in seconds.
+./scripts/test_bench_gate.sh
 cargo bench --bench bench_runtime -- --quick
+cargo bench --bench bench_serve -- --quick
 ./scripts/bench_gate.sh
 
 echo "verify.sh: OK"
