@@ -1,112 +1,32 @@
-//! Forest/GBDT training benchmarks: train-on-coreset vs train-on-full —
-//! the source of the paper's headline ×10 (E11, solver side).
+//! Forest/GBDT tuning benchmark: tune-on-compression vs tune-on-full —
+//! the paper's headline ×10 (E11, solver side), now driven by the
+//! shared [`sigtree::experiments::x10`] harness so the CLI `x10`
+//! subcommand, this bench, and the bench gate's `forest` pair all
+//! measure the identical protocol.
+//!
+//! Emits `BENCH_forest.json` in the working directory (`rust/` under
+//! `cargo bench`). `--quick` runs the CI-sized configuration; the
+//! default is the experiment-sized sweep.
 
-use sigtree::benchkit::{bench, fmt_duration, fmt_f, Table};
-use sigtree::coreset::{Coreset, SignalCoreset};
-use sigtree::datasets;
-use sigtree::rng::Rng;
-use sigtree::tree::forest::{ForestParams, RandomForest};
-use sigtree::tree::gbdt::{Gbdt, GbdtParams};
-use sigtree::tree::{DecisionTree, Sample, TreeParams};
-use std::time::Duration;
+use sigtree::experiments::x10;
 
 fn main() {
-    let mut rng = Rng::new(10);
-    let sig = datasets::air_quality_like(0.25, &mut rng);
-    let (masked, held) = datasets::holdout_patches(&sig, 0.3, 5, &mut rng);
-    let full: Vec<Sample> = datasets::signal_to_samples(&masked);
-    let cs = SignalCoreset::construct(&masked, 500, 0.3);
-    let core: Vec<Sample> = cs.weighted_points().iter().map(Sample::from_point).collect();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let config = if quick { x10::X10Config::quick() } else { x10::X10Config::full() };
+
     println!(
-        "train set {} cells, coreset {} pts ({:.2}%)",
-        full.len(),
-        core.len(),
-        100.0 * core.len() as f64 / full.len() as f64
+        "E11: tuning on compression vs full (air-quality-like, scale {}, grid {}{})",
+        config.scale,
+        config.grid,
+        if quick { ", --quick" } else { "" }
     );
+    let rows = x10::run(&config);
+    print!("{}", x10::summary(&rows));
 
-    let sse = |pred: &dyn Fn(&[f64]) -> f64| -> f64 {
-        held.iter()
-            .map(|&(r, c, y)| (pred(&[r as f64, c as f64]) - y).powi(2))
-            .sum()
-    };
-
-    let mut table = Table::new(&["solver", "data", "train (median)", "test SSE", "speedup"]);
-    // Single CART tree.
-    let tp = TreeParams::default().with_max_leaves(64);
-    let t_full = bench(0, 3, Duration::from_secs(20), || {
-        DecisionTree::fit(&full, &tp, None)
-    });
-    let t_core = bench(0, 5, Duration::from_secs(10), || {
-        DecisionTree::fit(&core, &tp, None)
-    });
-    let m_full = DecisionTree::fit(&full, &tp, None);
-    let m_core = DecisionTree::fit(&core, &tp, None);
-    let base = t_full.median.as_secs_f64();
-    table.row(&[
-        "CART".into(),
-        "full".into(),
-        fmt_duration(t_full.median),
-        fmt_f(sse(&|x| m_full.predict(x))),
-        "x1.0".into(),
-    ]);
-    table.row(&[
-        "CART".into(),
-        "coreset".into(),
-        fmt_duration(t_core.median),
-        fmt_f(sse(&|x| m_core.predict(x))),
-        format!("x{:.1}", base / t_core.median.as_secs_f64()),
-    ]);
-
-    // Random forest (10 trees).
-    let fp = ForestParams::default().with_trees(10).with_max_leaves(64);
-    let t_full = bench(0, 3, Duration::from_secs(30), || {
-        RandomForest::fit(&full, &fp, &mut Rng::new(1))
-    });
-    let t_core = bench(0, 5, Duration::from_secs(10), || {
-        RandomForest::fit(&core, &fp, &mut Rng::new(1))
-    });
-    let f_full = RandomForest::fit(&full, &fp, &mut Rng::new(1));
-    let f_core = RandomForest::fit(&core, &fp, &mut Rng::new(1));
-    let base = t_full.median.as_secs_f64();
-    table.row(&[
-        "RandomForest".into(),
-        "full".into(),
-        fmt_duration(t_full.median),
-        fmt_f(sse(&|x| f_full.predict(x))),
-        "x1.0".into(),
-    ]);
-    table.row(&[
-        "RandomForest".into(),
-        "coreset".into(),
-        fmt_duration(t_core.median),
-        fmt_f(sse(&|x| f_core.predict(x))),
-        format!("x{:.1}", base / t_core.median.as_secs_f64()),
-    ]);
-
-    // GBDT (LightGBM substitute).
-    let gp = GbdtParams::default().with_stages(20).with_leaves(31);
-    let t_full = bench(0, 3, Duration::from_secs(30), || {
-        Gbdt::fit(&full, &gp, &mut Rng::new(2))
-    });
-    let t_core = bench(0, 5, Duration::from_secs(10), || {
-        Gbdt::fit(&core, &gp, &mut Rng::new(2))
-    });
-    let g_full = Gbdt::fit(&full, &gp, &mut Rng::new(2));
-    let g_core = Gbdt::fit(&core, &gp, &mut Rng::new(2));
-    let base = t_full.median.as_secs_f64();
-    table.row(&[
-        "GBDT".into(),
-        "full".into(),
-        fmt_duration(t_full.median),
-        fmt_f(sse(&|x| g_full.predict(x))),
-        "x1.0".into(),
-    ]);
-    table.row(&[
-        "GBDT".into(),
-        "coreset".into(),
-        fmt_duration(t_core.median),
-        fmt_f(sse(&|x| g_core.predict(x))),
-        format!("x{:.1}", base / t_core.median.as_secs_f64()),
-    ]);
-    table.print("E11: solver training, full vs coreset (air-quality-like, 25% scale)");
+    let doc = x10::report_json(&config, &rows);
+    let path = "BENCH_forest.json";
+    match std::fs::write(path, doc.render() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -77,7 +77,7 @@ pub const RULES: &[RuleInfo] = &[
 /// count and fanout (ROADMAP "standing constraint"); the det-* rules
 /// apply only here.
 pub const DETERMINISTIC_MODULES: &[&str] =
-    &["audit", "bicriteria", "coreset", "partition", "segmentation", "signal"];
+    &["audit", "bicriteria", "coreset", "partition", "sample", "segmentation", "signal"];
 
 /// Resolve a user-supplied rule name to its static id.
 pub fn rule_id(name: &str) -> Option<&'static str> {

@@ -44,6 +44,15 @@
 //!   same ε guarantee against the *mutated* signal's true losses as a
 //!   from-scratch rebuild — the merge-and-reduce property under
 //!   mutation, gated at ε like the main sweep.
+//! * **sensitivity-sampling** — importance-sampling coresets
+//!   ([`crate::sample::SensitivityCoreset`], both the `unified` and the
+//!   `lightweight` sensitivity algorithms) swept against the same query
+//!   classes. Their guarantee is probabilistic, not worst-case, so the
+//!   family aggregate is measured-not-gated like noise-informational;
+//!   each instance still carries its own *probabilistic gate* (exact
+//!   weight parity plus generous error ceilings that hold with
+//!   overwhelming margin at the audited τ = half the present cells) and
+//!   a red instance fails the audit.
 //!
 //! True loss is computed from [`PrefixStats`] regions
 //! (`KSegmentation::loss`), coreset loss through the batch FITTING-LOSS
@@ -153,10 +162,11 @@ pub enum Family {
     DpOptimal,
     NoiseInformational,
     Incremental,
+    Sensitivity,
 }
 
 impl Family {
-    pub const ALL: [Family; 8] = [
+    pub const ALL: [Family; 9] = [
         Family::BlockAligned,
         Family::Random,
         Family::GroundTruth,
@@ -165,6 +175,7 @@ impl Family {
         Family::DpOptimal,
         Family::NoiseInformational,
         Family::Incremental,
+        Family::Sensitivity,
     ];
 
     pub fn name(self) -> &'static str {
@@ -177,16 +188,20 @@ impl Family {
             Family::DpOptimal => "dp-optimal",
             Family::NoiseInformational => "noise-informational",
             Family::Incremental => "incremental-update",
+            Family::Sensitivity => "sensitivity-sampling",
         }
     }
 
     /// Maximum tolerated empirical relative error; `None` = measured but
     /// not gated. Block-aligned queries are Case (i) everywhere, so they
     /// gate at the accurate-coreset bar (ε ≈ 0), not at the configured ε.
+    /// Sensitivity sampling carries only a probabilistic guarantee, so
+    /// its family aggregate is measured here and gated per-instance by
+    /// [`SensitivityCheck`] instead.
     pub fn threshold(self, eps: f64) -> Option<f64> {
         match self {
             Family::BlockAligned => Some(1e-6),
-            Family::NoiseInformational => None,
+            Family::NoiseInformational | Family::Sensitivity => None,
             _ => Some(eps),
         }
     }
@@ -670,6 +685,132 @@ fn incremental_check(config: &AuditConfig, instance: usize) -> IncrementalCheck 
 }
 
 // ---------------------------------------------------------------------------
+// Sensitivity-sampling check: the probabilistic family.
+// ---------------------------------------------------------------------------
+
+/// One sensitivity-sampling instance: a seeded signal, an importance
+/// sampling coreset ([`crate::sample::SensitivityCoreset`]) at
+/// τ = half the present cells, and a structured query sweep measured
+/// against the exact losses. The estimator is unbiased but only
+/// probabilistically concentrated, so the per-query errors feed the
+/// *measured* [`Family::Sensitivity`] aggregate, while the instance
+/// gates on properties that hold with certainty or overwhelming margin:
+///
+/// * **weight parity** — the sampler rescales weights to the exact
+///   present-cell mass, so `|Σw − present| / (1 + present)` must sit at
+///   float-rounding level (≤ 1e-9);
+/// * **generous error ceilings** — at τ = 50 % of the cells the
+///   relative error of these query families concentrates far below 1;
+///   mean ≤ 0.5 and max ≤ 1.0 leave orders-of-magnitude slack (the
+///   ceilings are validated against the seeded instances in the test
+///   suite, not tuned to them).
+#[derive(Clone, Debug)]
+pub struct SensitivityCheck {
+    pub instance: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub kind: &'static str,
+    pub seed: u64,
+    /// Algorithm name ([`crate::sample::SampleAlgorithm::name`]).
+    pub algorithm: &'static str,
+    /// Sample-size budget (distinct stored points is ≤ τ).
+    pub tau: usize,
+    /// Distinct stored points after multiplicity folding.
+    pub size: usize,
+    /// |Σw − present| / (1 + present).
+    pub weight_rel_gap: f64,
+    pub max_rel_err: f64,
+    pub mean_rel_err: f64,
+    /// ε samples contributed to [`Family::Sensitivity`].
+    pub samples: Vec<f64>,
+    pub pass: bool,
+}
+
+/// Seeded signal instances of the sensitivity check; each audits both
+/// non-trivial sensitivity algorithms, so the fan-out runs
+/// `2 × SENSITIVITY_INSTANCES` checks (fixed — the evidence trail must
+/// be bit-identical for every thread count).
+const SENSITIVITY_INSTANCES: usize = 3;
+/// Audited sensitivity algorithms: the bicriteria-partition scores and
+/// the leverage-style row/column bounds. Uniform is the baseline the
+/// integration suite compares against, not an audited family member.
+const SENSITIVITY_ALGORITHMS: [crate::sample::SampleAlgorithm; 2] = [
+    crate::sample::SampleAlgorithm::Unified,
+    crate::sample::SampleAlgorithm::Lightweight,
+];
+
+fn sensitivity_check(config: &AuditConfig, id: usize) -> SensitivityCheck {
+    use crate::coreset::Coreset;
+    use crate::par::Exec;
+    use crate::sample::{SampleParams, SensitivityCoreset};
+
+    let instance = id / SENSITIVITY_ALGORITHMS.len();
+    let algorithm = SENSITIVITY_ALGORITHMS[id % SENSITIVITY_ALGORITHMS.len()];
+    // Distinct seed stream from the case sweep, the transfer instances,
+    // and the incremental checks (same base seed). Derived from the
+    // *instance*, not the id, so both algorithms audit the identical
+    // (signal, queries) pair.
+    let seed = proptest::sized_case_seed(config.seed ^ 0x5E75_1717, instance);
+    let mut rng = Rng::new(seed);
+    let n = 24 + rng.usize(17); // 24..=40 rows
+    let m = 16 + rng.usize(9); // 16..=24 cols
+    let (kind, signal) = match instance % 3 {
+        0 => ("piecewise", generate::piecewise_constant(n, m, config.k.max(2), 0.1, &mut rng).0),
+        1 => ("smooth", generate::smooth(n, m, 3, &mut rng)),
+        _ => ("image", generate::image_like(n, m, 2, &mut rng)),
+    };
+    let stats = config.stats_for(&signal);
+    let bounds = signal.bounds();
+    let refit = |mut s: KSegmentation| {
+        s.refit_values(&stats);
+        s
+    };
+
+    // The query sweep: degenerate + strip + random refit trees, drawn
+    // before the coreset is built so both algorithm checks of the
+    // instance sweep the identical queries.
+    let mut queries = vec![KSegmentation::constant(bounds, stats.mean(&bounds))];
+    queries.push(refit(strip_segmentation(bounds, config.k, true)));
+    queries.push(refit(strip_segmentation(bounds, config.k, false)));
+    for _ in 0..5 {
+        queries.push(refit(random_segmentation(bounds, config.k, &mut rng)));
+    }
+
+    // τ = half the present mass; the sampler's own seed is decorrelated
+    // from the signal/query stream.
+    let present = stats.count(&bounds) as usize;
+    let tau = (present / 2).max(32);
+    let params = SampleParams::new(config.k, config.eps, tau, seed ^ 0x7A11_5EED);
+    let coreset = SensitivityCoreset::build_exec(&signal, algorithm, &params, Exec::Spawn(1));
+
+    let samples: Vec<f64> = queries
+        .iter()
+        .map(|q| relative_error(coreset.fitting_loss(q), q.loss(&stats)))
+        .collect();
+    let max_rel_err = samples.iter().fold(0.0f64, |acc, &e| acc.max(e));
+    let mean_rel_err = samples.iter().sum::<f64>() / samples.len() as f64;
+    let weight_rel_gap =
+        (coreset.total_weight() - present as f64).abs() / (1.0 + present as f64);
+    let pass = weight_rel_gap <= 1e-9 && mean_rel_err <= 0.5 && max_rel_err <= 1.0;
+
+    SensitivityCheck {
+        instance,
+        rows: n,
+        cols: m,
+        kind,
+        seed,
+        algorithm: algorithm.name(),
+        tau,
+        size: coreset.size(),
+        weight_rel_gap,
+        max_rel_err,
+        mean_rel_err,
+        samples,
+        pass,
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Report.
 // ---------------------------------------------------------------------------
 
@@ -710,6 +851,7 @@ pub struct AuditReport {
     pub families: Vec<FamilyReport>,
     pub transfers: Vec<TransferCheck>,
     pub incrementals: Vec<IncrementalCheck>,
+    pub sensitivities: Vec<SensitivityCheck>,
     pub shrunk_failure: Option<String>,
     pub pass: bool,
 }
@@ -771,6 +913,8 @@ impl AuditReport {
                                         Json::str("transfer-instance")
                                     } else if f.family == Family::Incremental {
                                         Json::str("incremental-instance")
+                                    } else if f.family == Family::Sensitivity {
+                                        Json::str("sensitivity-instance")
                                     } else {
                                         Json::str("case")
                                     },
@@ -820,6 +964,30 @@ impl AuditReport {
                                 ("leaf_rebuilds", Json::int(t.leaf_rebuilds)),
                                 ("max_rel_err", Json::num(t.max_rel_err)),
                                 ("weight_rel_gap", Json::num(t.weight_rel_gap)),
+                                ("pass", Json::Bool(t.pass)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "sensitivity",
+                Json::Arr(
+                    self.sensitivities
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("instance", Json::int(t.instance)),
+                                ("rows", Json::int(t.rows)),
+                                ("cols", Json::int(t.cols)),
+                                ("kind", Json::str(t.kind)),
+                                ("seed", Json::str(format!("{:#x}", t.seed))),
+                                ("algorithm", Json::str(t.algorithm)),
+                                ("tau", Json::int(t.tau)),
+                                ("size", Json::int(t.size)),
+                                ("weight_rel_gap", Json::num(t.weight_rel_gap)),
+                                ("max_rel_err", Json::num(t.max_rel_err)),
+                                ("mean_rel_err", Json::num(t.mean_rel_err)),
                                 ("pass", Json::Bool(t.pass)),
                             ])
                         })
@@ -897,6 +1065,21 @@ impl AuditReport {
                 if t.pass { "PASS" } else { "FAIL" }
             ));
         }
+        for t in &self.sensitivities {
+            out.push_str(&format!(
+                "  sensitivity {}x{} {} {} tau={}: {} points, max rel err {:.4e}, mean {:.4e}, weight gap {:.2e}  {}\n",
+                t.rows,
+                t.cols,
+                t.kind,
+                t.algorithm,
+                t.tau,
+                t.size,
+                t.max_rel_err,
+                t.mean_rel_err,
+                t.weight_rel_gap,
+                if t.pass { "PASS" } else { "FAIL" }
+            ));
+        }
         if self.transfers.iter().any(|t| t.k != self.config.k) {
             out.push_str(&format!(
                 "  note: transfer instances certify k={} (configured k={} clamped to 2..=6 for DP feasibility)\n",
@@ -953,6 +1136,11 @@ pub fn run_audit_exec(config: &AuditConfig, exec: crate::par::Exec<'_>) -> Audit
     let incrementals: Vec<IncrementalCheck> =
         exec.map(&incremental_ids, |_, &i| incremental_check(config, i));
 
+    let sensitivity_ids: Vec<usize> =
+        (0..SENSITIVITY_INSTANCES * SENSITIVITY_ALGORITHMS.len()).collect();
+    let sensitivities: Vec<SensitivityCheck> =
+        exec.map(&sensitivity_ids, |_, &i| sensitivity_check(config, i));
+
     // Aggregate per family; transfer instances contribute the dp-optimal
     // samples, incremental instances the incremental-update samples.
     let mut families = Vec::new();
@@ -997,6 +1185,18 @@ pub fn run_audit_exec(config: &AuditConfig, exec: crate::par::Exec<'_>) -> Audit
                 }
             }
         }
+        if family == Family::Sensitivity {
+            for t in &sensitivities {
+                for &err in &t.samples {
+                    queries += 1;
+                    sum += err;
+                    if err >= max_rel_err {
+                        max_rel_err = err;
+                        worst_case = Some((t.instance, t.seed));
+                    }
+                }
+            }
+        }
         families.push(FamilyReport {
             family,
             queries,
@@ -1010,6 +1210,7 @@ pub fn run_audit_exec(config: &AuditConfig, exec: crate::par::Exec<'_>) -> Audit
     let families_pass = families.iter().all(FamilyReport::pass);
     let transfers_pass = transfers.iter().all(|t| t.pass);
     let incrementals_pass = incrementals.iter().all(|t| t.pass);
+    let sensitivities_pass = sensitivities.iter().all(|t| t.pass);
     // A violated gate is handed to the proptest harness: re-sweep the
     // same seed space and greedily shrink the first failing case to a
     // minimal reproducible (signal, tree, seed) triple. Only families
@@ -1046,8 +1247,9 @@ pub fn run_audit_exec(config: &AuditConfig, exec: crate::par::Exec<'_>) -> Audit
         families,
         transfers,
         incrementals,
+        sensitivities,
         shrunk_failure,
-        pass: families_pass && transfers_pass && incrementals_pass,
+        pass: families_pass && transfers_pass && incrementals_pass && sensitivities_pass,
     }
 }
 
@@ -1286,12 +1488,45 @@ mod tests {
             assert!(t.rows <= 32 && t.cols <= 32, "DP-feasible sizes only");
         }
         let rendered = report.to_json().render();
-        for key in ["\"audit\"", "\"families\"", "\"transfer\"", "\"pass\": true"] {
+        for key in
+            ["\"audit\"", "\"families\"", "\"transfer\"", "\"sensitivity\"", "\"pass\": true"]
+        {
             assert!(rendered.contains(key), "missing {key} in\n{rendered}");
         }
         // Thread count is a pure performance knob: identical evidence.
         let report1 = run_audit(&config.with_threads(1));
         assert_eq!(rendered, report1.to_json().render());
+    }
+
+    #[test]
+    fn sensitivity_family_is_measured_and_instances_gate() {
+        let config = AuditConfig::new(3, 0.5).with_cases(2).with_seed(11);
+        let report = run_audit(&config);
+        // Both algorithms audited on every instance, all green.
+        assert_eq!(
+            report.sensitivities.len(),
+            SENSITIVITY_INSTANCES * SENSITIVITY_ALGORITHMS.len()
+        );
+        for t in &report.sensitivities {
+            assert!(t.pass, "sensitivity instance failed: {t:?}");
+            assert!(t.size <= t.tau);
+            assert!(t.weight_rel_gap <= 1e-9);
+        }
+        // Paired checks of one instance share the signal and queries.
+        for pair in report.sensitivities.chunks(2) {
+            assert_eq!(pair[0].instance, pair[1].instance);
+            assert_eq!((pair[0].rows, pair[0].cols), (pair[1].rows, pair[1].cols));
+            assert_ne!(pair[0].algorithm, pair[1].algorithm);
+        }
+        // The family aggregate is measured, never gated.
+        let fam = report
+            .families
+            .iter()
+            .find(|f| f.family == Family::Sensitivity)
+            .unwrap();
+        assert!(fam.threshold.is_none());
+        assert!(fam.queries > 0);
+        assert!(fam.pass());
     }
 
     #[test]

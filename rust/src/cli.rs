@@ -197,6 +197,7 @@ pub fn boolean_flags_for(command: &str) -> &'static [&'static str] {
     match command {
         "lint" => &["rules"],
         "serve" => &["foreground"],
+        "x10" => &["quick"],
         _ => &[],
     }
 }
@@ -279,6 +280,7 @@ mod tests {
     fn boolean_flag_registry_covers_flag_consumers() {
         assert!(boolean_flags_for("serve").contains(&"foreground"));
         assert!(boolean_flags_for("lint").contains(&"rules"));
+        assert!(boolean_flags_for("x10").contains(&"quick"));
         assert!(boolean_flags_for("coreset").is_empty());
         // And from_env's lookup composes with the parser: `lint --rules
         // extra.rs` keeps the positional.

@@ -9,12 +9,12 @@
 
 use crate::rng::Rng;
 use crate::segmentation::KSegmentation;
-use crate::signal::Signal;
+use crate::signal::SignalSource;
 
 use super::{Coreset, WeightedPoint};
 
 /// A uniform sample compression of a signal.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct UniformSample {
     pub points: Vec<WeightedPoint>,
     pub n: usize,
@@ -22,12 +22,19 @@ pub struct UniformSample {
 }
 
 impl UniformSample {
-    /// Sample `tau` present cells uniformly without replacement.
-    pub fn build(signal: &Signal, tau: usize, rng: &mut Rng) -> Self {
+    /// Sample `tau` present cells uniformly without replacement, from
+    /// any [`SignalSource`] (views sample identically to materialized
+    /// crops). A fully-masked signal yields an empty sample — the old
+    /// `tau.min(present.len()).max(1)` clamp forced τ = 1 there and
+    /// indexed an empty vector.
+    pub fn build<S: SignalSource>(signal: &S, tau: usize, rng: &mut Rng) -> Self {
         let present: Vec<(usize, usize)> = (0..signal.rows())
             .flat_map(|r| (0..signal.cols()).map(move |c| (r, c)))
             .filter(|&(r, c)| signal.is_present(r, c))
             .collect();
+        if present.is_empty() {
+            return Self { points: Vec::new(), n: signal.rows(), m: signal.cols() };
+        }
         let tau = tau.min(present.len()).max(1);
         let idx = rng.sample_indices(present.len(), tau);
         let w = present.len() as f64 / tau as f64;
@@ -120,6 +127,34 @@ mod tests {
             (mean - exact).abs() < 0.1 * exact,
             "mean {mean} vs exact {exact}"
         );
+    }
+
+    #[test]
+    fn fully_masked_signal_yields_empty_sample() {
+        // Regression: the old clamp `tau.min(present.len()).max(1)`
+        // produced τ = 1 with an empty `present` vector and panicked on
+        // the out-of-bounds index.
+        let mut sig = generate::smooth(6, 6, 1, &mut Rng::new(7));
+        sig.mask_rect(crate::signal::Rect::new(0, 5, 0, 5));
+        let us = UniformSample::build(&sig, 10, &mut Rng::new(8));
+        assert_eq!(us.size(), 0);
+        assert_eq!(us.n, 6);
+        assert_eq!(us.m, 6);
+        let total_w: f64 = us.points.iter().map(|p| p.w).sum();
+        assert_eq!(total_w, 0.0);
+    }
+
+    #[test]
+    fn view_samples_bit_identical_to_crop() {
+        // Generified build: a zero-copy view and the materialized crop
+        // of the same rect consume the Rng identically.
+        let sig = generate::smooth(24, 18, 3, &mut Rng::new(9));
+        let rect = crate::signal::Rect::new(4, 19, 2, 15);
+        let view = sig.view(rect);
+        let crop = sig.crop(rect);
+        let a = UniformSample::build(&view, 40, &mut Rng::new(10));
+        let b = UniformSample::build(&crop, 40, &mut Rng::new(10));
+        assert_eq!(a, b);
     }
 
     #[test]

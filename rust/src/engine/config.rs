@@ -15,6 +15,7 @@ use crate::cli::Args;
 use crate::coreset::{CoresetConfig, SignalCoreset};
 use crate::error::{Context, Error, Result};
 use crate::json::Json;
+use crate::sample::SampleAlgorithm;
 use crate::{bail, ensure};
 
 /// Which kernel backend an [`crate::engine::Engine`] executes on.
@@ -53,12 +54,68 @@ impl BackendChoice {
     }
 }
 
+/// Which coreset family [`crate::engine::Engine::compress`] builds.
+///
+/// `caratheodory` is the paper's deterministic (k, ε)-construction
+/// ([`crate::coreset::SignalCoreset`], the default and the only family
+/// with the worst-case guarantee); `sensitivity(algorithm, tau)` is the
+/// importance-sampling family ([`crate::sample::SensitivityCoreset`])
+/// with a fixed draw budget τ and a pluggable scoring algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CoresetFamily {
+    /// Deterministic Caratheodory (k, ε)-coreset.
+    Caratheodory,
+    /// Seeded importance sampling: τ draws scored by `algorithm`.
+    Sensitivity { algorithm: SampleAlgorithm, tau: usize },
+}
+
+impl CoresetFamily {
+    /// The CLI / JSON spelling: `caratheodory` or
+    /// `sensitivity(<algorithm>,<tau>)`.
+    pub fn render(self) -> String {
+        match self {
+            CoresetFamily::Caratheodory => "caratheodory".to_string(),
+            CoresetFamily::Sensitivity { algorithm, tau } => {
+                format!("sensitivity({},{tau})", algorithm.name())
+            }
+        }
+    }
+
+    /// Parse the CLI / JSON spelling (see [`Self::render`]).
+    pub fn from_name(name: &str) -> Result<Self> {
+        let name = name.trim();
+        if name == "caratheodory" {
+            return Ok(CoresetFamily::Caratheodory);
+        }
+        if let Some(inner) = name
+            .strip_prefix("sensitivity(")
+            .and_then(|rest| rest.strip_suffix(')'))
+        {
+            let mut parts = inner.splitn(2, ',');
+            let algorithm = SampleAlgorithm::from_name(parts.next().unwrap_or("").trim())?;
+            let tau_text = parts
+                .next()
+                .ok_or_else(|| {
+                    Error::msg(format!("coreset family '{name}' is missing the tau argument"))
+                })?
+                .trim();
+            let tau: usize = tau_text.parse().map_err(|_| {
+                Error::msg(format!("invalid tau '{tau_text}' in coreset family '{name}'"))
+            })?;
+            return Ok(CoresetFamily::Sensitivity { algorithm, tau });
+        }
+        Err(Error::msg(format!(
+            "unknown coreset family '{name}' (expected 'caratheodory' or 'sensitivity(<unified|lightweight|uniform>,<tau>)')"
+        )))
+    }
+}
+
 /// The JSON field names `EngineConfig` understands — the JSON reader
 /// rejects anything else, the same contract each CLI subcommand's
 /// [`Args::expect_only`] allowlist enforces for flags. (The spellings
 /// differ slightly: JSON uses `_` where the CLI uses `-`, and the
 /// CLI's `--dir` is the JSON `artifacts_dir`.)
-pub const CONFIG_KEYS: [&str; 13] = [
+pub const CONFIG_KEYS: [&str; 14] = [
     "k",
     "eps",
     "beta",
@@ -71,6 +128,7 @@ pub const CONFIG_KEYS: [&str; 13] = [
     "block_size",
     "artifacts_dir",
     "seed",
+    "coreset_family",
     // Tolerated sub-object: the static-analysis knobs ride the same
     // config file, read by `sigtree lint` through
     // `analysis::LintConfig::apply_json` (the engine never consumes
@@ -127,8 +185,13 @@ pub struct EngineConfig {
     /// Artifact directory override for the PJRT backend (`None` →
     /// `SIGTREE_ARTIFACTS` / `./artifacts`).
     pub artifacts_dir: Option<String>,
-    /// Base seed for signal generation / audits driven by this engine.
+    /// Base seed for signal generation / audits driven by this engine
+    /// (and the sensitivity family's draws).
     pub seed: u64,
+    /// Which coreset family [`crate::engine::Engine::compress`] builds;
+    /// the deterministic Caratheodory default keeps every existing
+    /// surface bit-identical.
+    pub coreset_family: CoresetFamily,
 }
 
 impl EngineConfig {
@@ -147,6 +210,7 @@ impl EngineConfig {
             block_size: crate::runtime::blocked::BLOCK,
             artifacts_dir: None,
             seed: 7,
+            coreset_family: CoresetFamily::Caratheodory,
         }
     }
 
@@ -200,6 +264,11 @@ impl EngineConfig {
         self
     }
 
+    pub fn with_coreset_family(mut self, family: CoresetFamily) -> Self {
+        self.coreset_family = family;
+        self
+    }
+
     /// The one validator every construction surface funnels through.
     pub fn validate(&self) -> Result<()> {
         ensure!(self.k >= 1, "k must be >= 1 (got {})", self.k);
@@ -240,6 +309,9 @@ impl EngineConfig {
             "block_size must be >= 1 (got {})",
             self.block_size
         );
+        if let CoresetFamily::Sensitivity { tau, .. } = self.coreset_family {
+            ensure!(tau >= 1, "sensitivity tau must be >= 1 (got {tau})");
+        }
         Ok(())
     }
 
@@ -275,6 +347,7 @@ impl EngineConfig {
                 self.artifacts_dir.as_deref().map_or(Json::Null, Json::str),
             ),
             ("seed", Json::str(format!("{:#x}", self.seed))),
+            ("coreset_family", Json::str(self.coreset_family.render())),
         ])
     }
 
@@ -371,6 +444,12 @@ impl EngineConfig {
         if let Some(v) = doc.get("seed") {
             config.seed = parse_seed(v)?;
         }
+        if let Some(v) = doc.get("coreset_family") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| Error::msg("'coreset_family' must be a string"))?;
+            config.coreset_family = CoresetFamily::from_name(name)?;
+        }
         config.validate()?;
         Ok(config)
     }
@@ -422,6 +501,10 @@ impl EngineConfig {
             block_size: args.get_usize("block-size", base.block_size)?,
             artifacts_dir: args.get("dir").map(str::to_string).or(base.artifacts_dir),
             seed: args.get_u64("seed", base.seed)?,
+            coreset_family: match args.get("coreset-family") {
+                None => base.coreset_family,
+                Some(name) => CoresetFamily::from_name(name)?,
+            },
         };
         config.validate()?;
         Ok(config)
@@ -606,6 +689,63 @@ mod tests {
         assert!(EngineConfig::new(4, 0.3).with_block_size(0).validate().is_err());
         let defaults = EngineConfig::new(64, 0.2);
         assert!(EngineConfig::from_args(&argv("runtime --block-size 0"), defaults).is_err());
+    }
+
+    #[test]
+    fn coreset_family_knob_parses_round_trips_and_validates() {
+        // Default stays deterministic Caratheodory.
+        assert_eq!(EngineConfig::new(4, 0.3).coreset_family, CoresetFamily::Caratheodory);
+        // Spelling round-trips for every algorithm.
+        for algorithm in SampleAlgorithm::ALL {
+            let family = CoresetFamily::Sensitivity { algorithm, tau: 256 };
+            assert_eq!(CoresetFamily::from_name(&family.render()).unwrap(), family);
+        }
+        assert_eq!(
+            CoresetFamily::from_name("caratheodory").unwrap(),
+            CoresetFamily::Caratheodory
+        );
+        // Whitespace-tolerant.
+        assert_eq!(
+            CoresetFamily::from_name("sensitivity( unified , 64 )").unwrap(),
+            CoresetFamily::Sensitivity { algorithm: SampleAlgorithm::Unified, tau: 64 }
+        );
+        // Bad spellings are rejected with the valid shapes listed.
+        let err = CoresetFamily::from_name("random").unwrap_err().to_string();
+        assert!(err.contains("caratheodory"), "{err}");
+        assert!(CoresetFamily::from_name("sensitivity(unified)").is_err());
+        assert!(CoresetFamily::from_name("sensitivity(magic,5)").is_err());
+        assert!(CoresetFamily::from_name("sensitivity(unified,five)").is_err());
+        // JSON round-trip through the one serializer.
+        let config = EngineConfig::new(8, 0.25).with_coreset_family(CoresetFamily::Sensitivity {
+            algorithm: SampleAlgorithm::Lightweight,
+            tau: 512,
+        });
+        let back = EngineConfig::from_json_str(&config.to_json().render()).unwrap();
+        assert_eq!(back, config);
+        // CLI flag routes through the same parser + validator.
+        let parsed = EngineConfig::from_args(
+            &argv("coreset --coreset-family sensitivity(uniform,32)"),
+            EngineConfig::new(64, 0.2),
+        )
+        .unwrap();
+        assert_eq!(
+            parsed.coreset_family,
+            CoresetFamily::Sensitivity { algorithm: SampleAlgorithm::Uniform, tau: 32 }
+        );
+        let defaults = EngineConfig::new(64, 0.2);
+        assert!(EngineConfig::from_args(&argv("coreset --coreset-family bogus"), defaults).is_err());
+        // τ = 0 dies in the shared validator from every surface.
+        assert!(EngineConfig::new(4, 0.3)
+            .with_coreset_family(CoresetFamily::Sensitivity {
+                algorithm: SampleAlgorithm::Unified,
+                tau: 0,
+            })
+            .validate()
+            .is_err());
+        assert!(EngineConfig::from_json_str(
+            "{\"k\":4,\"eps\":0.3,\"coreset_family\":\"sensitivity(unified,0)\"}"
+        )
+        .is_err());
     }
 
     #[test]

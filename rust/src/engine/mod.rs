@@ -54,19 +54,98 @@
 
 mod config;
 
-pub use config::{BackendChoice, EngineConfig, CONFIG_KEYS};
+pub use config::{BackendChoice, CoresetFamily, EngineConfig, CONFIG_KEYS};
 
 use crate::audit::{self, AuditConfig, AuditReport, CoresetOracle};
 use crate::coreset::merge_reduce::StreamingCoreset;
 use crate::coreset::merge_tree::MergeTree;
-use crate::coreset::{fitting_loss, SignalCoreset};
+use crate::coreset::{Coreset, SignalCoreset, WeightedPoint};
 use crate::error::Result;
 use crate::par::{Exec, WorkerPool};
 use crate::pipeline::{self, PipelineConfig, PipelineMetrics};
 use crate::runtime::{backend_from_name, KernelBackend};
+use crate::sample::{SampleParams, SensitivityCoreset};
 use crate::segmentation::dp2d::TreeDP;
 use crate::segmentation::KSegmentation;
 use crate::signal::{PrefixStats, Rect, Signal, SignalSource};
+
+/// The result of [`Engine::compress`]: whichever coreset family the
+/// config selected, behind one [`Coreset`]-implementing wrapper so
+/// serving, batch evaluation, and forest training handle both families
+/// uniformly.
+#[derive(Clone, Debug)]
+pub enum Compression {
+    /// Deterministic (k, ε)-coreset ([`CoresetFamily::Caratheodory`]).
+    Caratheodory(SignalCoreset),
+    /// Seeded importance sample ([`CoresetFamily::Sensitivity`]).
+    Sensitivity(SensitivityCoreset),
+}
+
+impl Compression {
+    /// The family's CLI / JSON spelling ("caratheodory"/"sensitivity").
+    pub fn family(&self) -> &'static str {
+        match self {
+            Compression::Caratheodory(_) => "caratheodory",
+            Compression::Sensitivity(_) => "sensitivity",
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            Compression::Caratheodory(cs) => cs.rows(),
+            Compression::Sensitivity(cs) => cs.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Compression::Caratheodory(cs) => cs.cols(),
+            Compression::Sensitivity(cs) => cs.cols(),
+        }
+    }
+
+    /// Σ wᵢ — the present-cell count for both families (the shared
+    /// total-weight invariant).
+    pub fn total_weight(&self) -> f64 {
+        match self {
+            Compression::Caratheodory(cs) => cs.total_weight(),
+            Compression::Sensitivity(cs) => cs.total_weight(),
+        }
+    }
+
+    /// The deterministic coreset, when that family was built — the
+    /// surfaces that need Caratheodory-only structure (the smoothed
+    /// density oracle of `/optimal_tree`) gate on this.
+    pub fn as_caratheodory(&self) -> Option<&SignalCoreset> {
+        match self {
+            Compression::Caratheodory(cs) => Some(cs),
+            Compression::Sensitivity(_) => None,
+        }
+    }
+}
+
+impl Coreset for Compression {
+    fn fitting_loss(&self, s: &KSegmentation) -> f64 {
+        match self {
+            Compression::Caratheodory(cs) => cs.fitting_loss(s),
+            Compression::Sensitivity(cs) => cs.fitting_loss(s),
+        }
+    }
+
+    fn weighted_points(&self) -> Vec<WeightedPoint> {
+        match self {
+            Compression::Caratheodory(cs) => cs.weighted_points(),
+            Compression::Sensitivity(cs) => cs.weighted_points(),
+        }
+    }
+
+    fn size(&self) -> usize {
+        match self {
+            Compression::Caratheodory(cs) => cs.size(),
+            Compression::Sensitivity(cs) => cs.size(),
+        }
+    }
+}
 
 /// A long-lived build/query/audit session — see the module docs.
 ///
@@ -238,13 +317,41 @@ impl Engine {
         pipeline::run_with_stats(signal, &stats, config)
     }
 
-    /// Batch FITTING-LOSS on the engine pool: identical results to
+    /// Build whichever coreset family the config selects
+    /// ([`EngineConfig::coreset_family`]): the deterministic
+    /// Caratheodory construction ([`Engine::coreset`], the default) or
+    /// the seeded sensitivity sample on the engine pool (bit-identical
+    /// at every thread count; the draws consume the config seed). This
+    /// is the family-aware front door `sigtree coreset` and the serve
+    /// daemon route through.
+    pub fn compress<S: SignalSource>(&self, signal: &S) -> Compression {
+        match self.config.coreset_family {
+            CoresetFamily::Caratheodory => Compression::Caratheodory(self.coreset(signal)),
+            CoresetFamily::Sensitivity { algorithm, tau } => {
+                let params =
+                    SampleParams::new(self.config.k, self.config.eps, tau, self.config.seed);
+                Compression::Sensitivity(SensitivityCoreset::build_exec(
+                    signal,
+                    algorithm,
+                    &params,
+                    self.exec(),
+                ))
+            }
+        }
+    }
+
+    /// Batch FITTING-LOSS on the engine pool, for any [`Coreset`]
+    /// family: identical results to
     /// [`SignalCoreset::fitting_loss_batch`] (query order, every
     /// thread count), but repeated batches reuse one set of parked
     /// workers instead of spawning threads per call — the serving
     /// hot path (`bench_runtime`'s engine-reuse rows measure it).
-    pub fn fitting_loss(&self, coreset: &SignalCoreset, queries: &[KSegmentation]) -> Vec<f64> {
-        self.pool.map(queries, |_, s| fitting_loss::fitting_loss(coreset, s))
+    pub fn fitting_loss<C: Coreset + Sync>(
+        &self,
+        coreset: &C,
+        queries: &[KSegmentation],
+    ) -> Vec<f64> {
+        self.pool.map(queries, |_, s| coreset.fitting_loss(s))
     }
 
     /// Exact optimal k-tree of `signal` by the guillotine DP
@@ -412,7 +519,11 @@ impl<S: SignalSource> EngineSession<'_, S> {
     }
 
     /// Batch FITTING-LOSS on the engine pool ([`Engine::fitting_loss`]).
-    pub fn fitting_loss(&self, coreset: &SignalCoreset, queries: &[KSegmentation]) -> Vec<f64> {
+    pub fn fitting_loss<C: Coreset + Sync>(
+        &self,
+        coreset: &C,
+        queries: &[KSegmentation],
+    ) -> Vec<f64> {
         self.engine.fitting_loss(coreset, queries)
     }
 
@@ -777,6 +888,50 @@ mod tests {
                 .with_transfer_instances(3),
         );
         assert_eq!(report.to_json().render(), classic.to_json().render());
+    }
+
+    #[test]
+    fn engine_compress_dispatches_on_family() {
+        use crate::sample::SampleAlgorithm;
+        let mut rng = Rng::new(79);
+        let sig = generate::smooth(96, 40, 3, &mut rng);
+        let cells = sig.present() as f64;
+        // Default family: bit-identical to the classic coreset path.
+        let engine = Engine::new(EngineConfig::new(4, 0.3).with_threads(2)).unwrap();
+        let compressed = engine.compress(&sig);
+        assert_eq!(compressed.family(), "caratheodory");
+        let direct = engine.coreset(&sig);
+        assert_same_coreset(compressed.as_caratheodory().unwrap(), &direct, "compress");
+        assert!((compressed.total_weight() - cells).abs() < 1e-6 * cells);
+        // Sensitivity family: seeded, thread-invariant, weight parity.
+        for algorithm in SampleAlgorithm::ALL {
+            let family = CoresetFamily::Sensitivity { algorithm, tau: 300 };
+            let build = |threads| {
+                let engine = Engine::new(
+                    EngineConfig::new(4, 0.3).with_threads(threads).with_coreset_family(family),
+                )
+                .unwrap();
+                engine.compress(&sig)
+            };
+            let reference = build(1);
+            assert_eq!(reference.family(), "sensitivity");
+            assert!(reference.as_caratheodory().is_none());
+            assert!((reference.total_weight() - cells).abs() <= 1e-9 * cells);
+            assert!(reference.size() <= 300);
+            for threads in [2, 4, 8] {
+                let other = build(threads);
+                match (&reference, &other) {
+                    (Compression::Sensitivity(a), Compression::Sensitivity(b)) => {
+                        assert_eq!(a, b, "{} at {threads} threads", algorithm.name());
+                    }
+                    _ => panic!("family mismatch"),
+                }
+            }
+            // The generic batch API accepts the wrapper directly.
+            let q = KSegmentation::constant(sig.bounds(), 1.0);
+            let batch = engine.fitting_loss(&reference, std::slice::from_ref(&q));
+            assert!((batch[0] - reference.fitting_loss(&q)).abs() <= 1e-9 * (1.0 + batch[0]));
+        }
     }
 
     #[test]

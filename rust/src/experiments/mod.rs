@@ -6,6 +6,7 @@
 //! hyperparameter k on the compression; report test-set SSE and time.
 
 pub mod tuning;
+pub mod x10;
 
 use std::time::{Duration, Instant};
 

@@ -1,0 +1,337 @@
+//! The ×10 reproduction harness (paper §5, Fig. 4 bottom): tune the
+//! leaf budget on a compression instead of the full data and measure
+//! both the wall-clock speedup and the held-out quality you pay for it.
+//!
+//! One sweep point is a `(k_coreset, ε)` pair. For each point and each
+//! solver ([`Solver::RandomForest`], [`Solver::Gbdt`]) the harness
+//! emits two rows at the *same* sample budget τ (the paper's fairness
+//! rule, compression sizes matched):
+//!
+//! * `caratheodory` — [`tune_coreset`]: the deterministic
+//!   bicriteria + partition + Caratheodory coreset, τ = its size;
+//! * `sensitivity(unified)` — a [`SensitivityCoreset`] importance
+//!   sample of exactly that τ, trained through the same grid sweep.
+//!
+//! Every row carries the coreset tuning time, the shared full-data
+//! tuning time, their ratio (`speedup_vs_full` — the headline ×10 at
+//! experiment scale), and the held-out SSE of the best tuned model on
+//! compression vs. full (`sse_gap_pct`). The rows feed
+//! `BENCH_forest.json` (benches/bench_forest.rs and the `x10` CLI
+//! subcommand) and the bench gate's `forest` pair.
+
+use std::time::Instant;
+
+use crate::coreset::Coreset;
+use crate::datasets;
+use crate::json::Json;
+use crate::rng::Rng;
+use crate::sample::{SampleAlgorithm, SampleParams, SensitivityCoreset};
+use crate::tree::Sample;
+
+use super::tuning::{log_grid, tune_coreset, tune_full, TuningCurve};
+use super::{test_sse, train, Solver};
+
+/// The `(k_coreset, ε)` sweep: compression gets coarser left to right
+/// while the coreset construction gets finer — the regime the paper
+/// sweeps in Fig. 4.
+pub const SWEEP: [(usize, f64); 3] = [(32, 0.4), (64, 0.3), (128, 0.2)];
+
+/// Holdout protocol constants (§5: 30 % of the matrix as 5×5 patches).
+pub const HOLDOUT_FRAC: f64 = 0.3;
+pub const HOLDOUT_PATCH: usize = 5;
+
+/// Harness parameters. `scale` is the generator's size knob for
+/// [`datasets::air_quality_like`]; `grid` the number of candidate k
+/// values on the tuning grid.
+#[derive(Clone, Copy, Debug)]
+pub struct X10Config {
+    pub seed: u64,
+    pub scale: f64,
+    pub grid: usize,
+    pub quick: bool,
+}
+
+impl X10Config {
+    /// CI-sized: a small signal and a 3-point grid — seconds, not
+    /// minutes. The JSON schema is identical to the full run.
+    pub fn quick() -> Self {
+        X10Config { seed: 7, scale: 0.05, grid: 3, quick: true }
+    }
+
+    /// Experiment-sized: the scale where the tuning speedup approaches
+    /// the paper's headline figure.
+    pub fn full() -> Self {
+        X10Config { seed: 7, scale: 0.25, grid: 6, quick: false }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_scale(mut self, scale: f64) -> Self {
+        assert!(scale > 0.0, "scale must be positive");
+        self.scale = scale;
+        self
+    }
+
+    pub fn with_grid(mut self, grid: usize) -> Self {
+        self.grid = grid.max(2);
+        self
+    }
+}
+
+/// One emitted sweep row: a (solver, compression family, sweep point)
+/// triple with its timing and quality measurements.
+#[derive(Clone, Debug)]
+pub struct X10Row {
+    pub solver: Solver,
+    /// `"caratheodory"` or `"sensitivity(unified)"`.
+    pub family: &'static str,
+    pub k: usize,
+    pub eps: f64,
+    /// Matched sample budget (the Caratheodory coreset's size).
+    pub tau: usize,
+    /// Tuning time on the compression (compress once + grid sweep).
+    pub median_s: f64,
+    /// Tuning time of the shared full-data sweep.
+    pub full_median_s: f64,
+    pub speedup_vs_full: f64,
+    /// Held-out SSE of the best tuned model, full-data tuning.
+    pub test_sse_full: f64,
+    /// Held-out SSE of the best tuned model, compression tuning.
+    pub test_sse_coreset: f64,
+    /// 100 · (coreset − full) / full — positive means the compression
+    /// paid quality for its speedup.
+    pub sse_gap_pct: f64,
+}
+
+pub fn solver_name(solver: Solver) -> &'static str {
+    match solver {
+        Solver::RandomForest => "forest",
+        Solver::Gbdt => "gbdt",
+    }
+}
+
+/// Held-out SSE of the tuned (best-k) model on a curve.
+fn sse_at_best(curve: &TuningCurve) -> f64 {
+    let best = curve.best_k();
+    curve
+        .points
+        .iter()
+        .find(|&&(k, _)| k == best)
+        .map_or(f64::INFINITY, |&(_, sse)| sse)
+}
+
+fn gap_pct(coreset_sse: f64, full_sse: f64) -> f64 {
+    100.0 * (coreset_sse - full_sse) / full_sse.max(1e-12)
+}
+
+/// Tune on a sensitivity-sampling coreset of exactly `tau` budget:
+/// compress once, sweep the grid on the compression — the same shape
+/// as [`tune_coreset`], with the importance sampler in the compressor
+/// seat.
+pub fn tune_sensitivity(
+    masked: &crate::signal::Signal,
+    held: &[(usize, usize, f64)],
+    grid: &[usize],
+    k_coreset: usize,
+    eps: f64,
+    tau: usize,
+    solver: Solver,
+    seed: u64,
+) -> TuningCurve {
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let params = SampleParams::new(k_coreset, eps, tau.max(1), seed);
+    let coreset = SensitivityCoreset::build(masked, SampleAlgorithm::Unified, &params);
+    let samples: Vec<Sample> = coreset
+        .weighted_points()
+        .iter()
+        .map(Sample::from_point)
+        .collect();
+    let points = grid
+        .iter()
+        .map(|&k| {
+            let model = train(solver, &samples, k, &mut rng);
+            (k, test_sse(&model, held))
+        })
+        .collect();
+    TuningCurve {
+        scheme: format!("SensitivityCoreset(τ={tau})"),
+        points,
+        compression_size: samples.len(),
+        total_time: t0.elapsed(),
+    }
+}
+
+/// Run the sweep: for both solvers, one shared full-data tuning run
+/// plus two compression rows per [`SWEEP`] point.
+pub fn run(config: &X10Config) -> Vec<X10Row> {
+    let mut rng = Rng::new(config.seed);
+    let signal = datasets::air_quality_like(config.scale, &mut rng);
+    let (masked, held) = datasets::holdout_patches(&signal, HOLDOUT_FRAC, HOLDOUT_PATCH, &mut rng);
+    let grid = log_grid(4, 64, config.grid.max(2));
+
+    let mut rows = Vec::new();
+    for solver in [Solver::RandomForest, Solver::Gbdt] {
+        let full = tune_full(&masked, &held, &grid, solver, config.seed);
+        let full_secs = full.total_time.as_secs_f64();
+        let full_sse = sse_at_best(&full);
+
+        for (i, &(k, eps)) in SWEEP.iter().enumerate() {
+            let point_seed = config.seed ^ (0x10 + i as u64);
+
+            let core = tune_coreset(&masked, &held, &grid, k, eps, solver, point_seed);
+            let tau = core.compression_size.max(1);
+            let core_secs = core.total_time.as_secs_f64();
+            let core_sse = sse_at_best(&core);
+            rows.push(X10Row {
+                solver,
+                family: "caratheodory",
+                k,
+                eps,
+                tau,
+                median_s: core_secs,
+                full_median_s: full_secs,
+                speedup_vs_full: full_secs / core_secs.max(1e-12),
+                test_sse_full: full_sse,
+                test_sse_coreset: core_sse,
+                sse_gap_pct: gap_pct(core_sse, full_sse),
+            });
+
+            let sens = tune_sensitivity(
+                &masked,
+                &held,
+                &grid,
+                k,
+                eps,
+                tau,
+                solver,
+                point_seed ^ 0x5E75,
+            );
+            let sens_secs = sens.total_time.as_secs_f64();
+            let sens_sse = sse_at_best(&sens);
+            rows.push(X10Row {
+                solver,
+                family: "sensitivity(unified)",
+                k,
+                eps,
+                tau,
+                median_s: sens_secs,
+                full_median_s: full_secs,
+                speedup_vs_full: full_secs / sens_secs.max(1e-12),
+                test_sse_full: full_sse,
+                test_sse_coreset: sens_sse,
+                sse_gap_pct: gap_pct(sens_sse, full_sse),
+            });
+        }
+    }
+    rows
+}
+
+fn row_json(row: &X10Row) -> Json {
+    Json::obj(vec![
+        ("solver", Json::str(solver_name(row.solver))),
+        ("family", Json::str(row.family)),
+        ("k", Json::int(row.k)),
+        ("eps", Json::num(row.eps)),
+        ("tau", Json::int(row.tau)),
+        ("median_s", Json::num(row.median_s)),
+        ("full_median_s", Json::num(row.full_median_s)),
+        ("speedup_vs_full", Json::num(row.speedup_vs_full)),
+        ("test_sse_full", Json::num(row.test_sse_full)),
+        ("test_sse_coreset", Json::num(row.test_sse_coreset)),
+        ("sse_gap_pct", Json::num(row.sse_gap_pct)),
+    ])
+}
+
+/// The `BENCH_forest.json` document (the bench gate's `forest` pair).
+pub fn report_json(config: &X10Config, rows: &[X10Row]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("forest")),
+        ("provenance", Json::str("measured")),
+        ("quick", Json::Bool(config.quick)),
+        (
+            "forest_case",
+            Json::obj(vec![
+                ("dataset", Json::str("air-quality-like")),
+                ("scale", Json::num(config.scale)),
+                ("grid", Json::int(config.grid)),
+                ("seed", Json::str(format!("{:#x}", config.seed))),
+                ("holdout_frac", Json::num(HOLDOUT_FRAC)),
+                ("patch", Json::int(HOLDOUT_PATCH)),
+                ("sweep_points", Json::int(SWEEP.len())),
+            ]),
+        ),
+        ("forest_sweep", Json::Arr(rows.iter().map(row_json).collect())),
+    ])
+}
+
+/// Human-readable table (the CLI's stdout).
+pub fn summary(rows: &[X10Row]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<8} {:<22} {:>4} {:>5} {:>6} {:>9} {:>9} {:>8} {:>12}\n",
+        "solver", "family", "k", "eps", "tau", "tune_s", "full_s", "speedup", "sse_gap_pct"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<8} {:<22} {:>4} {:>5} {:>6} {:>9.3} {:>9.3} {:>7.1}x {:>12.2}\n",
+            solver_name(r.solver),
+            r.family,
+            r.k,
+            r.eps,
+            r.tau,
+            r.median_s,
+            r.full_median_s,
+            r.speedup_vs_full,
+            r.sse_gap_pct,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_emits_both_families_for_both_solvers() {
+        let config = X10Config::quick().with_scale(0.02).with_seed(5);
+        let rows = run(&config);
+        // 2 solvers × 3 sweep points × 2 families.
+        assert_eq!(rows.len(), 2 * SWEEP.len() * 2);
+        for r in &rows {
+            assert!(r.tau >= 1);
+            assert!(r.median_s >= 0.0 && r.full_median_s >= 0.0);
+            assert!(r.speedup_vs_full.is_finite());
+            assert!(r.test_sse_full.is_finite() && r.test_sse_coreset.is_finite());
+        }
+        // Matched budgets: the paired rows of a sweep point share τ.
+        for pair in rows.chunks(2) {
+            assert_eq!(pair[0].tau, pair[1].tau);
+            assert_eq!(pair[0].family, "caratheodory");
+            assert_eq!(pair[1].family, "sensitivity(unified)");
+        }
+    }
+
+    #[test]
+    fn report_schema_has_the_gate_keys() {
+        let config = X10Config::quick().with_scale(0.02).with_seed(6);
+        let rows = run(&config);
+        let rendered = report_json(&config, &rows).render();
+        for key in [
+            "\"bench\": \"forest\"",
+            "\"provenance\": \"measured\"",
+            "\"quick\"",
+            "\"forest_case\"",
+            "\"forest_sweep\"",
+            "\"speedup_vs_full\"",
+            "\"sse_gap_pct\"",
+        ] {
+            assert!(rendered.contains(key), "missing {key} in\n{rendered}");
+        }
+        assert!(!summary(&rows).is_empty());
+    }
+}

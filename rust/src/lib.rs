@@ -25,6 +25,13 @@
 //!   uniform-sampling baseline, and the persistent merge-and-reduce
 //!   tree ([`coreset::merge_tree::MergeTree`]) behind the sharded
 //!   build, streaming ingestion, and dirty-region incremental updates.
+//! * [`sample`] — the sensitivity-sampling coreset family
+//!   ([`sample::SensitivityCoreset`]): pluggable sensitivity algorithms
+//!   (`unified` block residuals, `lightweight` row/col leverage,
+//!   `uniform`) behind one [`sample::Sensitivity`] trait, deterministic
+//!   seeded draws bit-identical across thread counts, plus the
+//!   classification (0/1 misclassification) variant
+//!   ([`sample::classify::ClassificationCoreset`]).
 //! * [`tree`] — weighted CART regression trees, random forests and
 //!   gradient-boosted trees (the sklearn / LightGBM substitutes that
 //!   consume the coreset).
@@ -75,6 +82,7 @@ pub mod partition;
 pub mod pipeline;
 pub mod rng;
 pub mod runtime;
+pub mod sample;
 pub mod segmentation;
 pub mod serve;
 pub mod signal;
@@ -128,6 +136,7 @@ pub mod prelude {
     pub use crate::coreset::{Coreset, SignalCoreset, WeightedPoint};
     pub use crate::engine::{BackendChoice, EditSession, Engine, EngineConfig, EngineSession};
     pub use crate::rng::Rng;
+    pub use crate::sample::{SampleAlgorithm, SampleParams, SensitivityCoreset};
     pub use crate::segmentation::KSegmentation;
     pub use crate::signal::{PrefixStats, Rect, Signal, SignalSource, SignalView};
     pub use crate::tree::{forest::RandomForest, DecisionTree};

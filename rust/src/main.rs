@@ -15,6 +15,10 @@
 //!   families + optimal-tree-transfer checks, JSON evidence trail.
 //! * `experiment` — the paper's §5 missing-values experiment.
 //! * `tune`       — hyperparameter sweep on full data vs coreset.
+//! * `x10`        — the ×10 reproduction ([`sigtree::experiments::x10`]):
+//!   tuning-on-compression vs tuning-on-full across the (k, ε) sweep for
+//!   both solvers and both coreset families, emitting the
+//!   `BENCH_forest.json` rows of the bench gate.
 //! * `update`     — incremental-rebuild demo: seeded tile edits through an
 //!   [`sigtree::engine::EditSession`], incremental vs from-scratch timings.
 //! * `runtime`    — run kernel-backend parity checks
@@ -32,7 +36,7 @@ use std::process::ExitCode;
 use sigtree::cli::Args;
 use sigtree::coreset::SignalCoreset;
 use sigtree::datasets;
-use sigtree::engine::{Engine, EngineConfig};
+use sigtree::engine::{Compression, Engine, EngineConfig};
 use sigtree::error::{Error, Result};
 use sigtree::experiments::{self, Solver};
 use sigtree::rng::Rng;
@@ -51,6 +55,7 @@ fn main() -> ExitCode {
         "audit" => cmd_audit(&args),
         "experiment" => cmd_experiment(&args),
         "tune" => cmd_tune(&args),
+        "x10" => cmd_x10(&args),
         "update" => cmd_update(&args),
         "runtime" => cmd_runtime(&args),
         "serve" => cmd_serve(&args),
@@ -86,6 +91,7 @@ fn print_help() {
            audit       --k 5 --eps 0.5 --cases 25 --seed 7 [--transfer-instances 4] [--json audit.json]\n\
            experiment  --dataset air|gesture --scale 0.1 --k 200 --eps 0.3 [--solver forest|gbdt]\n\
            tune        --dataset air|gesture --scale 0.1 --grid 8 --eps 0.3\n\
+           x10         [--quick] [--scale 0.25] [--grid 6] [--seed 7] [--json BENCH_forest.json]\n\
            update      --n 512 --m 512 --k 64 --eps 0.2 --edits 8 --tile 64\n\
            runtime     [--backend native|blocked|pjrt] [--block-size B] [--dir artifacts]\n\
            serve       [config.json] [--addr 127.0.0.1:0 | --port P] [--serve-threads 4]\n\
@@ -112,6 +118,9 @@ fn print_help() {
                             fill (>= 1; bit-identical results for every B).\n\
            --dir PATH       artifacts directory for the pjrt backend.\n\
            --seed S         base seed (decimal or 0x-hex).\n\
+           --coreset-family F  compression family: caratheodory (default) or\n\
+                            sensitivity(ALG,TAU) with ALG unified|lightweight|uniform\n\
+                            (importance sampling, TAU draws).\n\
            --config FILE    JSON engine config (sigtree::engine::EngineConfig);\n\
                             explicit flags override file values.\n\
          \n\
@@ -152,6 +161,7 @@ fn cmd_coreset(args: &Args) -> Result<()> {
         "block-size",
         "seed",
         "config",
+        "coreset-family",
         "n",
         "m",
         "signal",
@@ -164,26 +174,39 @@ fn cmd_coreset(args: &Args) -> Result<()> {
     let mut rng = Rng::new(engine.config().seed);
     let signal = make_signal(args, &mut rng)?;
     let t0 = std::time::Instant::now();
-    let cs = engine.coreset(&signal);
+    let compression = engine.compress(&signal);
     let took = t0.elapsed();
     println!(
-        "signal {}x{} ({} cells)  k={} eps={}  engine=pool({} threads)",
+        "signal {}x{} ({} cells)  k={} eps={}  family={}  engine=pool({} threads)",
         signal.rows(),
         signal.cols(),
         signal.len(),
         engine.config().k,
         engine.config().eps,
+        engine.config().coreset_family.render(),
         engine.threads()
     );
-    println!(
-        "coreset: {} blocks, {} stored points ({:.2}% of present cells), sigma={:.4e}, built in {:?} ({:.2e} cells/s)",
-        cs.blocks.len(),
-        cs.stored_points(),
-        100.0 * cs.compression_ratio(),
-        cs.sigma,
-        took,
-        signal.len() as f64 / took.as_secs_f64()
-    );
+    match &compression {
+        Compression::Caratheodory(cs) => println!(
+            "coreset: {} blocks, {} stored points ({:.2}% of present cells), sigma={:.4e}, built in {:?} ({:.2e} cells/s)",
+            cs.blocks.len(),
+            cs.stored_points(),
+            100.0 * cs.compression_ratio(),
+            cs.sigma,
+            took,
+            signal.len() as f64 / took.as_secs_f64()
+        ),
+        Compression::Sensitivity(sc) => println!(
+            "coreset: {} sampling, tau={}, {} stored points ({:.2}% of present cells), weight {:.1}, built in {:?} ({:.2e} cells/s)",
+            sc.algorithm.name(),
+            sc.tau,
+            sc.points.len(),
+            100.0 * sc.points.len() as f64 / signal.present().max(1) as f64,
+            sc.total_weight(),
+            took,
+            signal.len() as f64 / took.as_secs_f64()
+        ),
+    }
     Ok(())
 }
 
@@ -374,6 +397,34 @@ fn cmd_tune(args: &Args) -> Result<()> {
         "speedup (full/coreset tuning time): x{:.1}",
         full.total_time.as_secs_f64() / core.total_time.as_secs_f64().max(1e-9)
     );
+    Ok(())
+}
+
+/// The ×10 reproduction sweep ([`sigtree::experiments::x10`]):
+/// tuning-on-compression vs tuning-on-full for both solvers and both
+/// coreset families at matched sample budgets, optionally writing the
+/// `BENCH_forest.json` document the bench gate consumes.
+fn cmd_x10(args: &Args) -> Result<()> {
+    use sigtree::experiments::x10;
+    args.expect_only(&["seed", "scale", "grid", "quick", "json"])?;
+    let base = if args.get_flag("quick") { x10::X10Config::quick() } else { x10::X10Config::full() };
+    let scale = args.get_f64("scale", base.scale)?;
+    if scale <= 0.0 {
+        return Err(Error::msg("--scale must be positive"));
+    }
+    let config = base
+        .with_seed(args.get_u64("seed", base.seed)?)
+        .with_scale(scale)
+        .with_grid(args.get_usize("grid", base.grid)?);
+    let t0 = std::time::Instant::now();
+    let rows = x10::run(&config);
+    print!("{}", x10::summary(&rows));
+    println!("x10 sweep completed in {:?}", t0.elapsed());
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, x10::report_json(&config, &rows).render() + "\n")
+            .map_err(|e| Error::msg(format!("writing {path}: {e}")))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -588,6 +639,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "block-size",
         "seed",
         "config",
+        "coreset-family",
         "addr",
         "port",
         "serve-threads",

@@ -1,0 +1,201 @@
+//! Classification-flavored sampling coresets: 0/1-label signals and
+//! weighted misclassification estimation.
+//!
+//! The deterministic Caratheodory path compresses *squared* loss and
+//! has no analogue for the 0/1 loss (no closed-form block moments), so
+//! classification is where the sampling family is not just faster but
+//! the only option — the `CoresetDTC` half of the dataheroes exemplar.
+//!
+//! Sensitivity of a labeled cell under 0/1 loss is governed by class
+//! balance: any classifier that errs on class κ can be charged
+//! `1/n_κ` of that class's loss, so
+//!
+//! ```text
+//! s_i = 1 / (2 · n_{class(i)})
+//! ```
+//!
+//! (the ½ splits the budget evenly between the two classes). Sampling τ
+//! cells with these scores spends ≈ τ/2 on each class regardless of
+//! imbalance — and when a class has at most τ/2 members, the sampler's
+//! heavy-hitter pass keeps every one of them deterministically — so
+//! rare-class structure survives compression, exactly what uniform
+//! sampling destroys. Weights are normalized so Σw equals
+//! the present-cell count, making the estimator
+//! `Σ wᵢ · [round(pred(rᵢ,cᵢ)) ≠ yᵢ]` a consistent estimate of the
+//! exact misclassification count.
+
+use crate::coreset::WeightedPoint;
+use crate::error::{Error, Result};
+use crate::signal::SignalSource;
+
+use super::{present_cells, sample_weighted};
+
+/// A weighted importance sample of a 0/1-labeled signal, tuned for
+/// misclassification estimation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassificationCoreset {
+    /// Distinct sampled cells; `y` is the 0/1 label.
+    pub points: Vec<WeightedPoint>,
+    pub n: usize,
+    pub m: usize,
+    pub tau: usize,
+    pub seed: u64,
+}
+
+impl ClassificationCoreset {
+    /// Build a class-balanced sample of a 0/1-label signal. Errors when
+    /// any present label is not exactly 0.0 or 1.0; a fully-masked
+    /// signal yields an empty coreset. Scoring is a sequential O(N)
+    /// class count and sampling consumes one seeded Rng, so the result
+    /// is trivially identical for every thread count.
+    pub fn build<S: SignalSource>(signal: &S, tau: usize, seed: u64) -> Result<Self> {
+        assert!(tau >= 1, "tau must be >= 1");
+        let (n, m) = (signal.rows(), signal.cols());
+        let cells = present_cells(signal);
+        let mut counts = [0usize; 2];
+        for &(r, c) in &cells {
+            let y = signal.get(r, c);
+            if y == 0.0 {
+                counts[0] += 1;
+            } else if y == 1.0 {
+                counts[1] += 1;
+            } else {
+                return Err(Error::msg(format!(
+                    "classification coreset requires 0/1 labels; cell ({r}, {c}) has {y}"
+                )));
+            }
+        }
+        let scores: Vec<f64> = cells
+            .iter()
+            .map(|&(r, c)| {
+                let class = signal.get(r, c) as usize;
+                1.0 / (2.0 * counts[class] as f64)
+            })
+            .collect();
+        let points = sample_weighted(signal, &cells, &scores, tau, seed);
+        Ok(Self { points, n, m, tau, seed })
+    }
+
+    /// Σ wᵢ · [round(pred(rᵢ, cᵢ)) ≠ yᵢ] — the coreset estimate of the
+    /// exact misclassification count of `predict` over the full signal
+    /// (compare [`exact_misclassification`]).
+    pub fn misclassification(&self, predict: impl Fn(usize, usize) -> f64) -> f64 {
+        self.points
+            .iter()
+            .filter(|p| {
+                let label = if predict(p.row, p.col) >= 0.5 { 1.0 } else { 0.0 };
+                (label - p.y).abs() > 0.5
+            })
+            .map(|p| p.w)
+            .sum()
+    }
+
+    /// Σ wᵢ — equals the present-cell count exactly.
+    pub fn total_weight(&self) -> f64 {
+        self.points.iter().map(|p| p.w).sum()
+    }
+
+    pub fn size(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// The exact weighted misclassification count of `predict` over every
+/// present cell — the ground truth the coreset estimator approximates.
+pub fn exact_misclassification<S: SignalSource>(
+    signal: &S,
+    predict: impl Fn(usize, usize) -> f64,
+) -> f64 {
+    let mut wrong = 0.0;
+    for r in 0..signal.rows() {
+        for c in 0..signal.cols() {
+            if !signal.is_present(r, c) {
+                continue;
+            }
+            let label = if predict(r, c) >= 0.5 { 1.0 } else { 0.0 };
+            if (label - signal.get(r, c)).abs() > 0.5 {
+                wrong += 1.0;
+            }
+        }
+    }
+    wrong
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::{Rect, Signal};
+
+    /// 0/1 signal with a rare positive blob in the top-left corner.
+    fn labeled_signal() -> Signal {
+        Signal::from_fn(40, 40, |r, c| if r < 4 && c < 4 { 1.0 } else { 0.0 })
+    }
+
+    #[test]
+    fn rejects_non_binary_labels() {
+        let sig = Signal::from_fn(6, 6, |r, c| (r + c) as f64 * 0.5);
+        let err = ClassificationCoreset::build(&sig, 8, 1).unwrap_err().to_string();
+        assert!(err.contains("0/1 labels"), "{err}");
+    }
+
+    #[test]
+    fn weights_sum_to_present_count() {
+        let sig = labeled_signal();
+        let cs = ClassificationCoreset::build(&sig, 64, 5).unwrap();
+        let cells = sig.present() as f64;
+        assert!((cs.total_weight() - cells).abs() <= 1e-9 * cells);
+        assert!(cs.size() <= 64);
+    }
+
+    #[test]
+    fn rare_class_is_kept_deterministically() {
+        // 16 positives among 1600 cells (1%): each positive's ideal
+        // inclusion count is τ/(2·16) ≥ 1 at τ = 100, so the sampler's
+        // heavy-hitter pass keeps the entire rare class outright —
+        // uniform sampling at the same τ keeps ~1 positive in
+        // expectation.
+        let sig = labeled_signal();
+        let cs = ClassificationCoreset::build(&sig, 100, 9).unwrap();
+        let positives = cs.points.iter().filter(|p| p.y == 1.0).count();
+        assert_eq!(positives, 16, "of {} points", cs.size());
+    }
+
+    #[test]
+    fn misclassification_estimate_tracks_exact() {
+        let sig = labeled_signal();
+        // A predictor wrong on exactly the positive blob.
+        let all_zero = |_r: usize, _c: usize| 0.0;
+        let exact = exact_misclassification(&sig, all_zero);
+        assert_eq!(exact, 16.0);
+        let cs = ClassificationCoreset::build(&sig, 5_000, 13).unwrap();
+        let approx = cs.misclassification(all_zero);
+        let rel = (approx - exact).abs() / exact;
+        assert!(rel < 0.25, "approx {approx} vs exact {exact}");
+        // A perfect predictor estimates zero exactly.
+        let truth = |r: usize, c: usize| if r < 4 && c < 4 { 1.0 } else { 0.0 };
+        assert_eq!(cs.misclassification(truth), 0.0);
+    }
+
+    #[test]
+    fn fully_masked_signal_yields_empty_ok() {
+        let mut sig = Signal::from_fn(5, 5, |_, _| 1.0);
+        sig.mask_rect(Rect::new(0, 4, 0, 4));
+        let cs = ClassificationCoreset::build(&sig, 10, 2).unwrap();
+        assert!(cs.is_empty());
+        assert_eq!(cs.total_weight(), 0.0);
+    }
+
+    #[test]
+    fn build_is_deterministic_for_a_seed() {
+        let sig = labeled_signal();
+        let a = ClassificationCoreset::build(&sig, 80, 21).unwrap();
+        let b = ClassificationCoreset::build(&sig, 80, 21).unwrap();
+        assert_eq!(a, b);
+        let c = ClassificationCoreset::build(&sig, 80, 22).unwrap();
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,143 @@
+//! The `lightweight` sensitivity algorithm: leverage-style per-row and
+//! per-column bounds.
+//!
+//! When the bicriteria partition is too expensive (streaming shards,
+//! serve-time budgets) a cheaper upper bound still concentrates the
+//! sample where it matters. Decision-tree queries are unions of
+//! axis-parallel rectangles, so a cell that is an outlier within its
+//! row *or* its column can dominate some query's loss; the bound charges
+//! both margins plus the uniform floor:
+//!
+//! ```text
+//! s_i = (y_i − μ_row)² / (R_row + δ)
+//!     + (y_i − ν_col)² / (C_col + δ)
+//!     + 1 / N
+//! ```
+//!
+//! where `μ_row`/`R_row` are the mean and 1-mean loss (opt₁) of cell
+//! i's row, `ν_col`/`C_col` the same for its column, and N the present
+//! count. This is the no-dimensional-sampling shape (Alishahi–Phillips):
+//! sensitivities from one-dimensional projections, never from the full
+//! partition. Cost: O(n + m) rectangle queries of precompute, O(1) per
+//! cell.
+//!
+//! Determinism: row/column tables are filled sequentially; per-row
+//! scoring fans out on the executor in row order.
+
+use crate::par::Exec;
+use crate::signal::{PrefixStats, Rect, SignalSource};
+
+use super::{unified::rows_of, Sensitivity, DELTA};
+
+/// Row/column leverage sensitivity. Stateless: everything comes from
+/// the shared [`PrefixStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Lightweight;
+
+impl Sensitivity for Lightweight {
+    fn name(&self) -> &'static str {
+        "lightweight"
+    }
+
+    fn scores<S: SignalSource>(
+        &self,
+        signal: &S,
+        cells: &[(usize, usize)],
+        stats: &PrefixStats,
+        exec: Exec<'_>,
+    ) -> Vec<f64> {
+        let (n, m) = (signal.rows(), signal.cols());
+        // Sequential precompute of the 1-d projections: (mean,
+        // regularized opt₁) per row and per column. Rows/columns with no
+        // present cell never appear in `cells`, so their entries are
+        // inert placeholders.
+        let row_stats: Vec<(f64, f64)> = (0..n)
+            .map(|r| {
+                let rect = Rect::new(r, r, 0, m - 1);
+                if stats.count(&rect) > 0.0 {
+                    (stats.mean(&rect), stats.opt1(&rect) + DELTA)
+                } else {
+                    (0.0, DELTA)
+                }
+            })
+            .collect();
+        let col_stats: Vec<(f64, f64)> = (0..m)
+            .map(|c| {
+                let rect = Rect::new(0, n - 1, c, c);
+                if stats.count(&rect) > 0.0 {
+                    (stats.mean(&rect), stats.opt1(&rect) + DELTA)
+                } else {
+                    (0.0, DELTA)
+                }
+            })
+            .collect();
+        let uniform_floor = 1.0 / cells.len().max(1) as f64;
+
+        let per_row = rows_of(cells);
+        let scored = exec.map(&per_row, |_, row_cells: &&[(usize, usize)]| {
+            row_cells
+                .iter()
+                .map(|&(r, c)| {
+                    let y = signal.get(r, c);
+                    let (mu, rdenom) = row_stats[r];
+                    let (nu, cdenom) = col_stats[c];
+                    let dr = y - mu;
+                    let dc = y - nu;
+                    dr * dr / rdenom + dc * dc / cdenom + uniform_floor
+                })
+                .collect::<Vec<f64>>()
+        });
+        scored.into_iter().flatten().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::signal::{generate, PrefixStats, Signal};
+
+    #[test]
+    fn outliers_score_higher_than_background() {
+        let mut sig = Signal::from_fn(12, 20, |_, _| 2.0);
+        sig.set(3, 11, -180.0);
+        let stats = PrefixStats::new(&sig);
+        let cells = crate::sample::present_cells(&sig);
+        let scores = Lightweight.scores(&sig, &cells, &stats, Exec::Spawn(1));
+        let spike = cells.iter().position(|&(r, c)| (r, c) == (3, 11)).unwrap();
+        let spike_score = scores[spike];
+        let mean_rest: f64 = scores
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != spike)
+            .map(|(_, &s)| s)
+            .sum::<f64>()
+            / (scores.len() - 1) as f64;
+        assert!(spike_score > 10.0 * mean_rest, "{spike_score} vs {mean_rest}");
+    }
+
+    #[test]
+    fn scores_are_executor_invariant() {
+        let mut rng = Rng::new(10);
+        let sig = generate::smooth(36, 28, 5, &mut rng);
+        let stats = PrefixStats::new(&sig);
+        let cells = crate::sample::present_cells(&sig);
+        let reference = Lightweight.scores(&sig, &cells, &stats, Exec::Spawn(1));
+        for threads in [2, 4, 8] {
+            let other = Lightweight.scores(&sig, &cells, &stats, Exec::Spawn(threads));
+            assert_eq!(reference, other, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn masked_rows_and_cols_stay_inert() {
+        let mut sig = Signal::from_fn(10, 10, |r, c| (r * c) as f64);
+        sig.mask_rect(crate::signal::Rect::new(4, 4, 0, 9));
+        sig.mask_rect(crate::signal::Rect::new(0, 9, 7, 7));
+        let stats = PrefixStats::new(&sig);
+        let cells = crate::sample::present_cells(&sig);
+        let scores = Lightweight.scores(&sig, &cells, &stats, Exec::Spawn(2));
+        assert_eq!(scores.len(), cells.len());
+        assert!(scores.iter().all(|s| s.is_finite() && *s > 0.0));
+    }
+}

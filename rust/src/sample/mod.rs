@@ -1,0 +1,563 @@
+//! `sigtree::sample` — the sensitivity-sampling coreset family.
+//!
+//! The deterministic Caratheodory construction ([`crate::coreset`]) is
+//! the paper's headline object, but the sensitivity/importance-sampling
+//! framework (Bachem–Lucic–Krause, *Practical Coreset Constructions for
+//! Machine Learning*; Alishahi–Phillips, *No-Dimensional Sampling
+//! Coresets*) covers regimes the deterministic path cannot: fixed
+//! sample budgets τ chosen independently of (k, ε), and classification
+//! losses ([`classify`]) with no closed-form block compression.
+//!
+//! The family is one sampler ([`SensitivityCoreset`]) behind one trait
+//! ([`Sensitivity`]): an algorithm scores every **present** cell with a
+//! positive sensitivity `s_i` (an upper bound on the cell's worst-case
+//! share of any query's loss), and the sampler splits the budget in
+//! two. Cells whose ideal inclusion count `τ · s_i / Σs` reaches 1 are
+//! **kept deterministically** with unit weight (iterated to a fixed
+//! point, since removing a heavy cell raises the remaining inclusion
+//! counts) — the standard variance-reduction step that makes isolated
+//! high-sensitivity spikes certain picks instead of coin flips. The
+//! remaining budget τ′ draws i.i.d. from the tail with probability
+//! `p_i = s_i / Σs′`, merges duplicates, and weights each distinct cell
+//! `w_i = mult_i · Σs′ / (τ′ · s_i)`; all weights are finally rescaled
+//! so they sum **exactly** to the present-cell count — the same
+//! total-weight invariant every [`crate::coreset::Coreset`] in the repo
+//! carries, which is what keeps merge/reduce accounting and
+//! [`crate::coreset::merge_tree::MergeTree`]-style composition working
+//! (merging two sensitivity samples is plain concatenation, and the
+//! merged weight is the merged present mass).
+//!
+//! Algorithms (see DESIGN.md §Sampling coresets for the formulas and
+//! the determinism argument):
+//!
+//! * [`unified`] — per-cell sensitivity from the bicriteria partition's
+//!   block residuals via the shared [`PrefixStats`]:
+//!   `s_i = (y_i − μ_B)² / (opt₁(B) + δ) + 1/|B|` for the partition
+//!   block B containing cell i.
+//! * [`lightweight`] — leverage-style per-row/column bounds needing
+//!   only O(n + m) statistics queries:
+//!   `s_i = (y_i − μ_row)² / (R_row + δ) + (y_i − ν_col)² / (C_col + δ)
+//!   + 1/N`.
+//! * [`SampleAlgorithm::Uniform`] — `s_i = 1`, the
+//!   [`crate::coreset::uniform`] baseline expressed in this framework
+//!   (same `N/τ`-style weights, same total-weight normalization).
+//!
+//! **Determinism.** Scoring fans out per row on a [`crate::par::Exec`]
+//! and is concatenated in row order (the executor returns results in
+//! input order), and the τ draws consume one seeded [`Rng`]
+//! sequentially — so the sampled coreset is bit-identical for every
+//! thread count and executor, the repo's standing constraint. The
+//! linter's det-* rules gate this module like the deterministic core.
+
+pub mod classify;
+pub mod lightweight;
+pub mod unified;
+
+use std::collections::BTreeMap;
+
+use crate::coreset::{Coreset, WeightedPoint};
+use crate::error::{Error, Result};
+use crate::par::Exec;
+use crate::rng::Rng;
+use crate::segmentation::KSegmentation;
+use crate::signal::{PrefixStats, SignalSource};
+
+/// Additive regularizer in the residual denominators: keeps scores
+/// finite on exactly-constant blocks/rows and bounds any single `p_i`
+/// away from pathological concentration.
+pub const DELTA: f64 = 1e-12;
+
+/// A sensitivity algorithm: scores every present cell of a signal.
+///
+/// The contract (what the sampler and the tests rely on):
+/// * `scores` returns one strictly positive, finite score per entry of
+///   `cells`, in the same order;
+/// * the result depends only on `(signal, cells, stats)` — never on the
+///   executor's thread count (per-row fan-out concatenated in row order
+///   satisfies this by construction).
+pub trait Sensitivity {
+    /// The CLI / JSON spelling of the algorithm.
+    fn name(&self) -> &'static str;
+
+    /// Sensitivity scores for `cells` (row-major present cells of
+    /// `signal`), using the shared statistics `stats`.
+    fn scores<S: SignalSource>(
+        &self,
+        signal: &S,
+        cells: &[(usize, usize)],
+        stats: &PrefixStats,
+        exec: Exec<'_>,
+    ) -> Vec<f64>;
+}
+
+/// The pluggable algorithms, as one enum so configs stay `Copy`,
+/// serializable, and exhaustively validated. Each variant delegates to
+/// its [`Sensitivity`] implementation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SampleAlgorithm {
+    /// [`unified::Unified`] — partition-block residuals.
+    Unified,
+    /// [`lightweight::Lightweight`] — per-row/column leverage bounds.
+    Lightweight,
+    /// `s_i = 1`: the uniform baseline inside this framework.
+    Uniform,
+}
+
+impl SampleAlgorithm {
+    pub const ALL: [SampleAlgorithm; 3] =
+        [SampleAlgorithm::Unified, SampleAlgorithm::Lightweight, SampleAlgorithm::Uniform];
+
+    /// The CLI / JSON spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            SampleAlgorithm::Unified => "unified",
+            SampleAlgorithm::Lightweight => "lightweight",
+            SampleAlgorithm::Uniform => "uniform",
+        }
+    }
+
+    /// Parse the CLI / JSON spelling.
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "unified" => Ok(SampleAlgorithm::Unified),
+            "lightweight" => Ok(SampleAlgorithm::Lightweight),
+            "uniform" => Ok(SampleAlgorithm::Uniform),
+            other => Err(Error::msg(format!(
+                "unknown sensitivity algorithm '{other}' (expected 'unified', 'lightweight', or 'uniform')"
+            ))),
+        }
+    }
+}
+
+impl Sensitivity for SampleAlgorithm {
+    fn name(&self) -> &'static str {
+        SampleAlgorithm::name(*self)
+    }
+
+    fn scores<S: SignalSource>(
+        &self,
+        signal: &S,
+        cells: &[(usize, usize)],
+        stats: &PrefixStats,
+        exec: Exec<'_>,
+    ) -> Vec<f64> {
+        match self {
+            SampleAlgorithm::Unified => {
+                unified::Unified::default().scores(signal, cells, stats, exec)
+            }
+            SampleAlgorithm::Lightweight => {
+                lightweight::Lightweight.scores(signal, cells, stats, exec)
+            }
+            SampleAlgorithm::Uniform => vec![1.0; cells.len()],
+        }
+    }
+}
+
+/// Construction parameters of a sensitivity sample. `k`/`eps` feed the
+/// unified algorithm's bicriteria partition (the other algorithms
+/// ignore them); `tau` is the i.i.d. draw budget; `seed` makes the
+/// sample reproducible.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampleParams {
+    pub k: usize,
+    pub eps: f64,
+    pub tau: usize,
+    pub seed: u64,
+}
+
+impl SampleParams {
+    pub fn new(k: usize, eps: f64, tau: usize, seed: u64) -> Self {
+        assert!(k >= 1, "k must be >= 1");
+        assert!(eps > 0.0 && eps < 1.0, "eps must be in (0,1)");
+        assert!(tau >= 1, "tau must be >= 1");
+        Self { k, eps, tau, seed }
+    }
+}
+
+/// A weighted importance sample of a signal: the sensitivity-sampling
+/// counterpart of [`crate::coreset::SignalCoreset`], usable anywhere a
+/// [`Coreset`] is (forest training, FITTING-LOSS-style estimation,
+/// weighted union).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SensitivityCoreset {
+    /// Distinct sampled cells (row-major order), duplicates merged into
+    /// the weight.
+    pub points: Vec<WeightedPoint>,
+    /// Full signal dimensions (the sample lives in the signal's frame).
+    pub n: usize,
+    pub m: usize,
+    /// The algorithm that scored the cells.
+    pub algorithm: SampleAlgorithm,
+    /// The requested draw budget (`points.len() <= tau` after merging).
+    pub tau: usize,
+    /// The seed the draws consumed.
+    pub seed: u64,
+}
+
+impl SensitivityCoreset {
+    /// Build sequentially; see [`Self::build_exec`].
+    pub fn build<S: SignalSource>(
+        signal: &S,
+        algorithm: SampleAlgorithm,
+        params: &SampleParams,
+    ) -> SensitivityCoreset {
+        Self::build_exec(signal, algorithm, params, Exec::Spawn(1))
+    }
+
+    /// Build the sensitivity sample of `signal`: enumerate present
+    /// cells (row-major), score them with `algorithm` (per-row fan-out
+    /// on `exec`, order-preserving), spend the `params.tau` budget via
+    /// [`sample_weighted`] (deterministic heavy hitters + i.i.d. tail
+    /// draws from one seeded [`Rng`], duplicates merged), and normalize
+    /// the weights to the exact present-cell count. Bit-identical for
+    /// every executor and thread count. A fully-masked signal yields an
+    /// empty sample (zero points, zero weight) instead of panicking.
+    pub fn build_exec<S: SignalSource>(
+        signal: &S,
+        algorithm: SampleAlgorithm,
+        params: &SampleParams,
+        exec: Exec<'_>,
+    ) -> SensitivityCoreset {
+        let (n, m) = (signal.rows(), signal.cols());
+        let cells = present_cells(signal);
+        let empty = SensitivityCoreset {
+            points: Vec::new(),
+            n,
+            m,
+            algorithm,
+            tau: params.tau,
+            seed: params.seed,
+        };
+        if cells.is_empty() {
+            return empty;
+        }
+        let stats = PrefixStats::new_par_exec(signal, exec);
+        let scores = score_cells(signal, algorithm, &cells, &stats, params, exec);
+        let points = sample_weighted(signal, &cells, &scores, params.tau, params.seed);
+        SensitivityCoreset { points, ..empty }
+    }
+
+    /// Merge two samples of **disjoint** signal regions (weighted
+    /// union): plain concatenation — the merged weight is the sum of
+    /// the parts, so the total-weight invariant composes exactly like
+    /// the deterministic family's merge step.
+    pub fn merge(mut self, other: SensitivityCoreset) -> SensitivityCoreset {
+        self.points.extend(other.points);
+        self.n = self.n.max(other.n);
+        self.m = self.m.max(other.m);
+        self.tau += other.tau;
+        self
+    }
+
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    pub fn cols(&self) -> usize {
+        self.m
+    }
+
+    /// Σ wᵢ — equals the present-cell count of the sampled signal
+    /// exactly (the normalization contract).
+    pub fn total_weight(&self) -> f64 {
+        self.points.iter().map(|p| p.w).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+impl Coreset for SensitivityCoreset {
+    /// The importance-sampling estimator of ℓ(D, s):
+    /// Σᵢ wᵢ · (yᵢ − s(rᵢ, cᵢ))², cells outside the query contributing
+    /// zero — unbiased before normalization, consistent after.
+    fn fitting_loss(&self, s: &KSegmentation) -> f64 {
+        self.points
+            .iter()
+            .filter_map(|p| s.value_at(p.row, p.col).map(|v| p.w * (p.y - v) * (p.y - v)))
+            .sum()
+    }
+
+    fn weighted_points(&self) -> Vec<WeightedPoint> {
+        self.points.clone()
+    }
+
+    fn size(&self) -> usize {
+        self.points.len()
+    }
+}
+
+/// Row-major present cells of `signal` — the sampling universe, and the
+/// index space every [`Sensitivity::scores`] result aligns with.
+pub fn present_cells<S: SignalSource>(signal: &S) -> Vec<(usize, usize)> {
+    let mut cells = Vec::new();
+    for r in 0..signal.rows() {
+        match signal.row_mask(r) {
+            None => cells.extend((0..signal.cols()).map(|c| (r, c))),
+            Some(mask) => {
+                cells.extend(mask.iter().enumerate().filter(|(_, &p)| p).map(|(c, _)| (r, c)));
+            }
+        }
+    }
+    cells
+}
+
+/// Score `cells` and sanitize: every score is forced positive and
+/// finite (`max(DELTA)`), so the draw distribution is well-defined even
+/// on degenerate inputs.
+fn score_cells<S: SignalSource>(
+    signal: &S,
+    algorithm: SampleAlgorithm,
+    cells: &[(usize, usize)],
+    stats: &PrefixStats,
+    params: &SampleParams,
+    exec: Exec<'_>,
+) -> Vec<f64> {
+    let mut scores = match algorithm {
+        SampleAlgorithm::Unified => {
+            unified::Unified::new(params.k, params.eps).scores(signal, cells, stats, exec)
+        }
+        _ => algorithm.scores(signal, cells, stats, exec),
+    };
+    for s in &mut scores {
+        if !s.is_finite() || *s < DELTA {
+            *s = DELTA;
+        }
+    }
+    scores
+}
+
+/// Spend a budget of `tau` on the scored cells: heavy hitters (ideal
+/// inclusion count ≥ 1) are kept deterministically at unit weight, the
+/// remaining budget draws i.i.d. cells from the tail with probability
+/// ∝ score, duplicates merge, and each tail cell weighs
+/// `w_i = mult_i · Σs′ / (τ′ · s_i)`; all weights are rescaled so Σw
+/// equals the present-cell count exactly. Sequential by design: the
+/// fixed point scans cells in order and one seeded [`Rng`] drives every
+/// draw, so the output can never depend on a thread count.
+fn sample_weighted<S: SignalSource>(
+    signal: &S,
+    cells: &[(usize, usize)],
+    scores: &[f64],
+    tau: usize,
+    seed: u64,
+) -> Vec<WeightedPoint> {
+    debug_assert_eq!(cells.len(), scores.len());
+    let mut total = 0.0f64;
+    for &s in scores {
+        total += s;
+    }
+    if !(total > 0.0) {
+        return Vec::new();
+    }
+    // Heavy-hitter pass: a cell whose ideal inclusion count
+    // `budget · s_i / Σs` reaches 1 is kept outright with unit weight,
+    // and the i.i.d. draws cover only the tail. This is the standard
+    // variance-reduction step for importance samplers — without it an
+    // isolated spike with the maximal score is still missed with
+    // probability (1 − s_i/Σs)^τ, which is what loses to uniform on
+    // spike-dominated queries. Removing a heavy cell raises the tail's
+    // inclusion counts, so repeat in rounds until a fixed point; each
+    // round admits at most `rem_budget` cells (their scores sum to at
+    // most the remaining mass), so the certain set never exceeds τ.
+    let mut certain = vec![false; cells.len()];
+    let mut certain_count = 0usize;
+    let mut rem_total = total;
+    loop {
+        let rem_budget = tau - certain_count;
+        if rem_budget == 0 {
+            break;
+        }
+        let round_total = rem_total;
+        let round_budget = rem_budget as f64;
+        let mut changed = false;
+        for i in 0..cells.len() {
+            if certain_count == tau {
+                break;
+            }
+            if !certain[i] && round_budget * scores[i] >= round_total {
+                certain[i] = true;
+                certain_count += 1;
+                rem_total -= scores[i];
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let mut weights: BTreeMap<usize, f64> = BTreeMap::new();
+    for i in 0..cells.len() {
+        if certain[i] {
+            weights.insert(i, 1.0);
+        }
+    }
+    // Prefix sums of the tail scores: draw by binary search
+    // (partition_point is the first index whose cumulative mass exceeds
+    // the draw), duplicates folded into multiplicities.
+    let rem_budget = tau - certain_count;
+    if rem_budget > 0 {
+        let rest: Vec<usize> = (0..cells.len()).filter(|&i| !certain[i]).collect();
+        let mut cumulative = Vec::with_capacity(rest.len());
+        let mut rem_sum = 0.0f64;
+        for &i in &rest {
+            rem_sum += scores[i];
+            cumulative.push(rem_sum);
+        }
+        if rem_sum > 0.0 {
+            let mut rng = Rng::new(seed);
+            let mut multiplicity: BTreeMap<usize, usize> = BTreeMap::new();
+            for _ in 0..rem_budget {
+                let u = rng.f64() * rem_sum;
+                let j = cumulative.partition_point(|&c| c <= u).min(rest.len() - 1);
+                *multiplicity.entry(j).or_insert(0) += 1;
+            }
+            for (j, mult) in multiplicity {
+                let i = rest[j];
+                weights.insert(i, mult as f64 * rem_sum / (rem_budget as f64 * scores[i]));
+            }
+        }
+    }
+    let mut points: Vec<WeightedPoint> = weights
+        .into_iter()
+        .map(|(idx, w)| {
+            let (r, c) = cells[idx];
+            WeightedPoint { row: r, col: c, y: signal.get(r, c), w }
+        })
+        .collect();
+    // Exact total-weight normalization: Σw must equal the present-cell
+    // count so merge/reduce accounting and the weight-parity audits see
+    // the same invariant as the deterministic family.
+    let raw: f64 = points.iter().map(|p| p.w).sum();
+    if raw > 0.0 {
+        let scale = cells.len() as f64 / raw;
+        for p in &mut points {
+            p.w *= scale;
+        }
+    }
+    points
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::{generate, Rect, Signal};
+
+    fn sample_signal() -> Signal {
+        let mut rng = Rng::new(21);
+        generate::smooth(48, 36, 3, &mut rng)
+    }
+
+    #[test]
+    fn weights_sum_to_present_count_for_every_algorithm() {
+        let sig = sample_signal();
+        let params = SampleParams::new(4, 0.3, 200, 9);
+        for algorithm in SampleAlgorithm::ALL {
+            let cs = SensitivityCoreset::build(&sig, algorithm, &params);
+            let total = cs.total_weight();
+            let cells = sig.present() as f64;
+            assert!(
+                (total - cells).abs() <= 1e-9 * cells,
+                "{}: {total} vs {cells}",
+                algorithm.name()
+            );
+            assert!(cs.size() <= 200);
+            assert!(!cs.is_empty());
+        }
+    }
+
+    #[test]
+    fn build_is_bit_identical_across_thread_counts() {
+        let sig = sample_signal();
+        let params = SampleParams::new(4, 0.3, 150, 17);
+        for algorithm in SampleAlgorithm::ALL {
+            let reference = SensitivityCoreset::build_exec(
+                &sig,
+                algorithm,
+                &params,
+                Exec::Spawn(1),
+            );
+            for threads in [2, 4, 8] {
+                let other = SensitivityCoreset::build_exec(
+                    &sig,
+                    algorithm,
+                    &params,
+                    Exec::Spawn(threads),
+                );
+                assert_eq!(reference, other, "{} at {threads} threads", algorithm.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fully_masked_signal_yields_empty_sample() {
+        let mut sig = Signal::from_fn(8, 8, |r, c| (r + c) as f64);
+        sig.mask_rect(Rect::new(0, 7, 0, 7));
+        let params = SampleParams::new(2, 0.5, 16, 3);
+        for algorithm in SampleAlgorithm::ALL {
+            let cs = SensitivityCoreset::build(&sig, algorithm, &params);
+            assert!(cs.is_empty(), "{}", algorithm.name());
+            assert_eq!(cs.total_weight(), 0.0);
+        }
+    }
+
+    #[test]
+    fn masked_cells_are_never_sampled() {
+        let mut sig = sample_signal();
+        let dead = Rect::new(4, 20, 6, 18);
+        sig.mask_rect(dead);
+        let params = SampleParams::new(4, 0.3, 400, 5);
+        for algorithm in SampleAlgorithm::ALL {
+            let cs = SensitivityCoreset::build(&sig, algorithm, &params);
+            for p in &cs.points {
+                assert!(!dead.contains(p.row, p.col), "{}: {:?}", algorithm.name(), p);
+            }
+            let cells = sig.present() as f64;
+            assert!((cs.total_weight() - cells).abs() <= 1e-9 * cells);
+        }
+    }
+
+    #[test]
+    fn estimator_is_consistent_at_huge_tau() {
+        // With τ ≫ N the estimator concentrates: the heavy-hitter pass
+        // degenerates to keeping every present cell at unit weight, so
+        // the constant-fit loss estimate lands within a few percent of
+        // the exact loss (here: at float-rounding distance).
+        let mut rng = Rng::new(33);
+        let sig = generate::piecewise_constant(24, 18, 3, 0.1, &mut rng).0;
+        let stats = PrefixStats::new(&sig);
+        let bounds = sig.bounds();
+        let exact = KSegmentation::constant(bounds, stats.mean(&bounds)).loss(&stats);
+        let params = SampleParams::new(3, 0.3, 200_000, 7);
+        for algorithm in SampleAlgorithm::ALL {
+            let cs = SensitivityCoreset::build(&sig, algorithm, &params);
+            let approx = cs.fitting_loss(&KSegmentation::constant(bounds, stats.mean(&bounds)));
+            let rel = (approx - exact).abs() / (1.0 + exact);
+            assert!(rel < 0.05, "{}: {approx} vs {exact}", algorithm.name());
+        }
+    }
+
+    #[test]
+    fn merge_concatenates_and_preserves_weight() {
+        let sig = sample_signal();
+        let top = sig.view(Rect::new(0, 23, 0, 35));
+        let bottom = sig.view(Rect::new(24, 47, 0, 35));
+        let params = SampleParams::new(4, 0.3, 100, 11);
+        let a = SensitivityCoreset::build(&top, SampleAlgorithm::Lightweight, &params);
+        let b = SensitivityCoreset::build(&bottom, SampleAlgorithm::Lightweight, &params);
+        let (wa, wb) = (a.total_weight(), b.total_weight());
+        let merged = a.merge(b);
+        assert!((merged.total_weight() - (wa + wb)).abs() <= 1e-9 * (wa + wb));
+        assert_eq!(merged.tau, 200);
+    }
+
+    #[test]
+    fn algorithm_names_round_trip() {
+        for algorithm in SampleAlgorithm::ALL {
+            assert_eq!(SampleAlgorithm::from_name(algorithm.name()).unwrap(), algorithm);
+        }
+        let err = SampleAlgorithm::from_name("magic").unwrap_err().to_string();
+        assert!(err.contains("lightweight"), "error lists the spellings: {err}");
+    }
+}

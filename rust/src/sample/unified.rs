@@ -1,0 +1,174 @@
+//! The `unified` sensitivity algorithm: per-cell scores from the
+//! bicriteria partition's block residuals.
+//!
+//! This is the paper-aligned bound. The (k, ε) machinery already proves
+//! that inside one balanced-partition block B, every k-segmentation is
+//! near-constant, so a cell's worst-case share of any query's loss is
+//! governed by its residual against its block:
+//!
+//! ```text
+//! s_i = (y_i − μ_B)² / (opt₁(B) + δ)  +  1 / |B|
+//! ```
+//!
+//! The first term is the classical sensitivity of a point for the 1-mean
+//! (constant-fit) problem restricted to B (Bachem–Lucic–Krause §2.2);
+//! the second is the uniform floor that caps the variance of the
+//! estimator for cells sitting exactly on their block mean. Both terms
+//! come from O(1) [`PrefixStats`] rectangle queries, so scoring is
+//! O(N + blocks) after the partition.
+//!
+//! Determinism: the partition is a pure function of `(stats, k, eps)`;
+//! the block-index table is filled sequentially; scoring fans out per
+//! row on the executor and is concatenated in row order.
+
+use crate::bicriteria::bicriteria_in;
+use crate::par::Exec;
+use crate::partition::partition_in;
+use crate::signal::{PrefixStats, SignalSource};
+
+use super::{Sensitivity, DELTA};
+
+/// Block-residual sensitivity over the bicriteria partition for the
+/// given `(k, eps)` target.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Unified {
+    pub k: usize,
+    pub eps: f64,
+}
+
+impl Unified {
+    pub fn new(k: usize, eps: f64) -> Self {
+        Self { k: k.max(1), eps }
+    }
+}
+
+impl Default for Unified {
+    fn default() -> Self {
+        Self::new(8, 0.3)
+    }
+}
+
+/// Per-block scoring inputs: (mean, regularized opt₁, present count).
+type BlockInfo = (f64, f64, f64);
+
+impl Sensitivity for Unified {
+    fn name(&self) -> &'static str {
+        "unified"
+    }
+
+    fn scores<S: SignalSource>(
+        &self,
+        signal: &S,
+        cells: &[(usize, usize)],
+        stats: &PrefixStats,
+        exec: Exec<'_>,
+    ) -> Vec<f64> {
+        let bounds = stats.bounds();
+        let bic = bicriteria_in(stats, bounds, self.k);
+        let gamma = (self.eps / 2.0).clamp(1e-9, 1.0);
+        let blocks = partition_in(stats, bounds, gamma, bic.sigma);
+
+        // Sequential fill of the cell → block table plus per-block
+        // moments; the partition tiles `bounds`, so every present cell
+        // lands in exactly one block.
+        let m = signal.cols();
+        let mut block_of = vec![u32::MAX; signal.rows() * m];
+        let mut info: Vec<BlockInfo> = Vec::with_capacity(blocks.len());
+        for (b, rect) in blocks.iter().enumerate() {
+            for r in rect.r0..=rect.r1 {
+                for c in rect.c0..=rect.c1 {
+                    block_of[r * m + c] = b as u32;
+                }
+            }
+            info.push((stats.mean(rect), stats.opt1(rect) + DELTA, stats.count(rect).max(1.0)));
+        }
+
+        let per_row = rows_of(cells);
+        let scored = exec.map(&per_row, |_, row_cells: &&[(usize, usize)]| {
+            row_cells
+                .iter()
+                .map(|&(r, c)| {
+                    let b = block_of[r * m + c];
+                    if b == u32::MAX {
+                        return DELTA;
+                    }
+                    let (mu, denom, count) = info[b as usize];
+                    let d = signal.get(r, c) - mu;
+                    d * d / denom + 1.0 / count
+                })
+                .collect::<Vec<f64>>()
+        });
+        scored.into_iter().flatten().collect()
+    }
+}
+
+/// Split the row-major `cells` into per-row slices — the fan-out unit
+/// that keeps executor results order-stable regardless of thread count.
+pub(super) fn rows_of(cells: &[(usize, usize)]) -> Vec<&[(usize, usize)]> {
+    let mut rows = Vec::new();
+    let mut start = 0;
+    while start < cells.len() {
+        let row = cells[start].0;
+        let mut end = start + 1;
+        while end < cells.len() && cells[end].0 == row {
+            end += 1;
+        }
+        rows.push(&cells[start..end]);
+        start = end;
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::signal::{generate, Signal};
+
+    #[test]
+    fn outliers_score_higher_than_background() {
+        // A flat signal with one huge spike: the spike's block residual
+        // dominates, so its sensitivity must exceed every flat cell's.
+        let mut sig = Signal::from_fn(16, 16, |_, _| 1.0);
+        sig.set(7, 9, 250.0);
+        let stats = crate::signal::PrefixStats::new(&sig);
+        let cells = crate::sample::present_cells(&sig);
+        let scores = Unified::new(3, 0.4).scores(&sig, &cells, &stats, Exec::Spawn(1));
+        let spike = cells.iter().position(|&(r, c)| (r, c) == (7, 9)).unwrap();
+        let spike_score = scores[spike];
+        let max_flat = scores
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != spike)
+            .map(|(_, &s)| s)
+            .fold(0.0f64, f64::max);
+        assert!(
+            spike_score > 10.0 * max_flat,
+            "spike {spike_score} vs flat max {max_flat}"
+        );
+    }
+
+    #[test]
+    fn scores_are_executor_invariant() {
+        let mut rng = Rng::new(4);
+        let sig = generate::smooth(40, 30, 4, &mut rng);
+        let stats = crate::signal::PrefixStats::new(&sig);
+        let cells = crate::sample::present_cells(&sig);
+        let algo = Unified::new(5, 0.25);
+        let reference = algo.scores(&sig, &cells, &stats, Exec::Spawn(1));
+        for threads in [2, 4, 8] {
+            let other = algo.scores(&sig, &cells, &stats, Exec::Spawn(threads));
+            assert_eq!(reference, other, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn rows_of_partitions_in_order() {
+        let cells = vec![(0, 1), (0, 3), (2, 0), (5, 2), (5, 3), (5, 4)];
+        let rows = rows_of(&cells);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0], &cells[0..2]);
+        assert_eq!(rows[1], &cells[2..3]);
+        assert_eq!(rows[2], &cells[3..6]);
+    }
+}

@@ -26,17 +26,19 @@
 
 use std::sync::Arc;
 
-use crate::coreset::SignalCoreset;
+use crate::engine::Compression;
 
 /// `(signal content digest, engine-config digest)`.
 pub type CacheKey = (u64, u64);
 
-/// A built coreset plus the source-signal dimensions, which requests
-/// that address the entry by digest alone still need for validating
-/// query-segmentation bounds.
+/// A built compression (either coreset family — the config digest keys
+/// the family, since `coreset_family` rides the canonical config JSON)
+/// plus the source-signal dimensions, which requests that address the
+/// entry by digest alone still need for validating query-segmentation
+/// bounds.
 #[derive(Debug)]
 pub struct CachedCoreset {
-    pub coreset: SignalCoreset,
+    pub coreset: Compression,
     pub rows: usize,
     pub cols: usize,
 }
@@ -128,7 +130,7 @@ mod tests {
 
     fn entry() -> Arc<CachedCoreset> {
         let signal = crate::signal::Signal::from_fn(4, 4, |r, c| (r + 2 * c) as f64);
-        let coreset = SignalCoreset::construct(&signal, 1, 0.5);
+        let coreset = Compression::Caratheodory(SignalCoreset::construct(&signal, 1, 0.5));
         Arc::new(CachedCoreset { coreset, rows: 4, cols: 4 })
     }
 

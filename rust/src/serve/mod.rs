@@ -431,8 +431,11 @@ fn resolve_coreset(
     }
     // Build outside the cache lock: a slow build must not stall hits
     // on other keys. A racing duplicate build returns identical bits
-    // (determinism), and `insert` keeps the incumbent.
-    let coreset = ctx.engine.coreset(&signal);
+    // (determinism — both families are seeded and thread-invariant),
+    // and `insert` keeps the incumbent. `compress` builds whichever
+    // family the engine config selects; the family rides the config
+    // digest, so the two families can never share a cache line.
+    let coreset = ctx.engine.compress(&signal);
     bump(&ctx.stats.coreset_builds);
     let entry = Arc::new(CachedCoreset {
         coreset,
@@ -452,19 +455,7 @@ fn post_coreset(ctx: &Ctx, body: &[u8]) -> Routed {
         Ok(r) => r,
         Err((status, msg)) => return fail(status, msg),
     };
-    respond(
-        200,
-        Json::obj(vec![
-            ("digest", wire::digest_to_json(digest)),
-            ("cached", Json::Bool(cached)),
-            ("rows", Json::int(entry.rows)),
-            ("cols", Json::int(entry.cols)),
-            ("blocks", Json::int(entry.coreset.blocks.len())),
-            ("stored_points", Json::int(entry.coreset.stored_points())),
-            ("sigma", Json::num(entry.coreset.sigma)),
-            ("total_weight", Json::num(entry.coreset.total_weight())),
-        ]),
-    )
+    respond(200, wire::coreset_summary_json(&entry, digest, cached))
 }
 
 fn post_fitting_loss(ctx: &Ctx, fit_tx: &SyncSender<FitJob>, body: &[u8]) -> Routed {
@@ -531,7 +522,16 @@ fn post_optimal_tree(ctx: &Ctx, body: &[u8]) -> Routed {
         Some(k) => return fail(400, format!("k = {k} outside 1..={MAX_TREE_K}")),
         None => return fail(400, "body needs an integer \"k\"".to_string()),
     };
-    let (seg, loss) = ctx.engine.optimal_tree_of_coreset(&entry.coreset, k);
+    // The smoothed-density oracle needs the deterministic family's
+    // block structure; a sensitivity-family engine cannot answer this.
+    let Some(coreset) = entry.coreset.as_caratheodory() else {
+        return fail(
+            400,
+            "optimal_tree requires the caratheodory coreset family (engine is configured for sensitivity sampling)"
+                .to_string(),
+        );
+    };
+    let (seg, loss) = ctx.engine.optimal_tree_of_coreset(coreset, k);
     respond(
         200,
         Json::obj(vec![

@@ -150,6 +150,41 @@ pub(crate) fn segmentation_to_json(seg: &KSegmentation) -> Json {
     )
 }
 
+/// The `/coreset` response body, family-aware: the shared fields
+/// (digest, cached, dims, family, size, total weight) plus the
+/// family's own structure — block count and σ for the deterministic
+/// family (the historical response shape, unchanged), the algorithm,
+/// τ budget, and seed for the sensitivity family.
+pub(crate) fn coreset_summary_json(
+    entry: &super::cache::CachedCoreset,
+    digest: u64,
+    cached: bool,
+) -> Json {
+    let mut fields = vec![
+        ("digest", digest_to_json(digest)),
+        ("cached", Json::Bool(cached)),
+        ("rows", Json::int(entry.rows)),
+        ("cols", Json::int(entry.cols)),
+        ("family", Json::str(entry.coreset.family())),
+    ];
+    match &entry.coreset {
+        crate::engine::Compression::Caratheodory(cs) => {
+            fields.push(("blocks", Json::int(cs.blocks.len())));
+            fields.push(("stored_points", Json::int(cs.stored_points())));
+            fields.push(("sigma", Json::num(cs.sigma)));
+            fields.push(("total_weight", Json::num(cs.total_weight())));
+        }
+        crate::engine::Compression::Sensitivity(cs) => {
+            fields.push(("algorithm", Json::str(cs.algorithm.name())));
+            fields.push(("tau", Json::int(cs.tau)));
+            fields.push(("stored_points", Json::int(cs.points.len())));
+            fields.push(("seed", Json::str(format!("{:#x}", cs.seed))));
+            fields.push(("total_weight", Json::num(cs.total_weight())));
+        }
+    }
+    Json::obj(fields)
+}
+
 /// Digests travel as `0x`-prefixed hex strings — JSON numbers are f64
 /// and cannot carry 64 bits exactly.
 pub(crate) fn digest_to_json(digest: u64) -> Json {

@@ -39,11 +39,15 @@ fn fixture_corpus_findings_are_exact() {
         ("det-clock", "coreset/bad_det.rs", 11),
         ("det-thread", "coreset/bad_det.rs", 15),
         ("index-hot", "runtime/bad_index.rs", 4),
+        ("det-order", "sample/bad_det.rs", 3),
+        ("det-order", "sample/bad_det.rs", 6),
+        ("det-clock", "sample/bad_det.rs", 11),
+        ("det-thread", "sample/bad_det.rs", 15),
     ];
     assert_eq!(got, want);
     // Exactly the two well-formed waivers in allowed.rs are honored.
     assert_eq!(report.suppressed, 2);
-    assert_eq!(report.files, 9);
+    assert_eq!(report.files, 10);
 }
 
 #[test]

@@ -1,0 +1,127 @@
+//! Sampling-coreset acceptance suite: quality against the uniform
+//! baseline at equal budget, and the repo's standing thread-count
+//! bit-identity constraint.
+//!
+//! The quality sweep is the sensitivity framework's reason to exist:
+//! on signals whose loss is dominated by a few high-leverage cells,
+//! uniform sampling misses the outliers (or catches them with wild
+//! multiplicity swings) while sensitivity scores upweight them into
+//! nearly every draw. Over a deterministic corpus of seeded cases the
+//! sensitivity sampler's worst-case relative error must beat the
+//! uniform sampler's at the same τ on at least 90 % of cases —
+//! Caratheodory's deterministic error is measured alongside as the
+//! reference point.
+
+use sigtree::coreset::{Coreset, SignalCoreset};
+use sigtree::par::Exec;
+use sigtree::rng::Rng;
+use sigtree::sample::{SampleAlgorithm, SampleParams, SensitivityCoreset};
+use sigtree::segmentation::{random_segmentation, strip_segmentation, KSegmentation};
+use sigtree::signal::{generate, PrefixStats, Signal};
+
+/// A mostly-smooth signal with a few planted high-magnitude outlier
+/// cells — the adversarial regime for uniform sampling.
+fn spiky_signal(seed: u64) -> Signal {
+    let mut rng = Rng::new(seed);
+    let (n, m) = (40, 30);
+    let mut sig = generate::smooth(n, m, 2, &mut rng);
+    for _ in 0..10 {
+        let r = rng.usize(n);
+        let c = rng.usize(m);
+        let spike = 40.0 + 20.0 * rng.f64();
+        let sign = if rng.f64() < 0.5 { -1.0 } else { 1.0 };
+        sig.set(r, c, sign * spike);
+    }
+    sig
+}
+
+/// The audit-style query sweep: constant fit, row/column strips, and
+/// mean-refit random guillotine trees.
+fn query_sweep(sig: &Signal, stats: &PrefixStats, k: usize, rng: &mut Rng) -> Vec<KSegmentation> {
+    let bounds = sig.bounds();
+    let refit = |mut s: KSegmentation| {
+        s.refit_values(stats);
+        s
+    };
+    let mut queries = vec![KSegmentation::constant(bounds, stats.mean(&bounds))];
+    queries.push(refit(strip_segmentation(bounds, k, true)));
+    queries.push(refit(strip_segmentation(bounds, k, false)));
+    for _ in 0..5 {
+        queries.push(refit(random_segmentation(bounds, k, rng)));
+    }
+    queries
+}
+
+fn max_rel_err<C: Coreset>(coreset: &C, queries: &[KSegmentation], stats: &PrefixStats) -> f64 {
+    queries
+        .iter()
+        .map(|q| {
+            let exact = q.loss(stats);
+            let approx = coreset.fitting_loss(q);
+            (approx - exact).abs() / (1.0 + exact)
+        })
+        .fold(0.0f64, f64::max)
+}
+
+#[test]
+fn sensitivity_beats_uniform_at_equal_tau_on_seeded_corpus() {
+    let k = 6;
+    let eps = 0.3;
+    let cases = 20usize;
+    let mut wins = 0usize;
+    for case in 0..cases as u64 {
+        let sig = spiky_signal(1000 + case);
+        let stats = PrefixStats::new(&sig);
+        let mut qrng = Rng::new(2000 + case);
+        let queries = query_sweep(&sig, &stats, k, &mut qrng);
+
+        let tau = (sig.present() / 8).max(64);
+        let params = SampleParams::new(k, eps, tau, 3000 + case);
+        let sens = SensitivityCoreset::build(&sig, SampleAlgorithm::Unified, &params);
+        let unif = SensitivityCoreset::build(&sig, SampleAlgorithm::Uniform, &params);
+
+        // Both samplers carry the exact present mass at equal τ.
+        let cells = sig.present() as f64;
+        assert!((sens.total_weight() - cells).abs() <= 1e-9 * cells);
+        assert!((unif.total_weight() - cells).abs() <= 1e-9 * cells);
+
+        let sens_err = max_rel_err(&sens, &queries, &stats);
+        let unif_err = max_rel_err(&unif, &queries, &stats);
+        assert!(sens_err.is_finite() && unif_err.is_finite());
+        if sens_err <= unif_err * 1.05 + 1e-9 {
+            wins += 1;
+        }
+
+        // Reference point: the deterministic coreset's error on the
+        // same sweep is finite and small (its guarantee is worst-case,
+        // the samplers' merely probabilistic).
+        let cara = SignalCoreset::construct(&sig, k, eps);
+        let cara_err = max_rel_err(&cara, &queries, &stats);
+        assert!(cara_err.is_finite());
+    }
+    let need = cases * 9 / 10;
+    assert!(
+        wins >= need,
+        "sensitivity won {wins}/{cases} seeded cases, need >= {need}"
+    );
+}
+
+#[test]
+fn sampling_is_bit_identical_across_thread_counts() {
+    let sig = spiky_signal(77);
+    let params = SampleParams::new(5, 0.3, 180, 41);
+    for algorithm in SampleAlgorithm::ALL {
+        let reference = SensitivityCoreset::build_exec(&sig, algorithm, &params, Exec::Spawn(1));
+        for threads in [2, 4, 8] {
+            let other =
+                SensitivityCoreset::build_exec(&sig, algorithm, &params, Exec::Spawn(threads));
+            assert_eq!(
+                reference,
+                other,
+                "{} sample changed at {threads} threads",
+                algorithm.name()
+            );
+        }
+        assert!(!reference.is_empty());
+    }
+}

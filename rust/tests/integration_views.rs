@@ -219,6 +219,36 @@ fn masked_audit_case_family_over_views() {
 }
 
 #[test]
+fn samplers_build_bit_identical_over_views_and_crops() {
+    // The sampling family is generic over SignalSource like the
+    // deterministic builders: a seeded sample of a view must equal the
+    // sample of the equivalent crop bit-for-bit, for every algorithm,
+    // and the uniform baseline sampler follows the same contract.
+    use sigtree::coreset::uniform::UniformSample;
+    use sigtree::sample::{SampleAlgorithm, SampleParams, SensitivityCoreset};
+
+    let mut rng = Rng::new(410);
+    let mut sig = generate::smooth(90, 40, 3, &mut rng);
+    sig.mask_rect(Rect::new(20, 33, 5, 17));
+    let window = Rect::new(6, 77, 2, 37);
+    let view = sig.view(window);
+    let crop = sig.crop(window);
+
+    let params = SampleParams::new(4, 0.3, 120, 23);
+    for algorithm in SampleAlgorithm::ALL {
+        let from_view = SensitivityCoreset::build(&view, algorithm, &params);
+        let from_crop = SensitivityCoreset::build(&crop, algorithm, &params);
+        assert_eq!(from_view, from_crop, "{} view vs crop", algorithm.name());
+        assert_eq!(from_view.rows(), window.height());
+        assert_eq!(from_view.cols(), window.width());
+    }
+
+    let from_view = UniformSample::build(&view, 80, &mut Rng::new(24));
+    let from_crop = UniformSample::build(&crop, 80, &mut Rng::new(24));
+    assert_eq!(from_view, from_crop, "uniform sampler view vs crop");
+}
+
+#[test]
 fn nested_views_build_like_their_flat_equivalent() {
     // view(view(rect)) composes offsets against the root signal, so a
     // nested window builds the same coreset as the flat window.

@@ -1,0 +1,16 @@
+//! Fixture: determinism violations inside the sampling module path.
+
+use std::collections::HashMap;
+
+pub fn order() -> usize {
+    let m: HashMap<u32, u32> = HashMap::new();
+    m.len()
+}
+
+pub fn clock() -> bool {
+    std::time::Instant::now().elapsed().as_nanos() % 2 == 0
+}
+
+pub fn threads() {
+    std::thread::spawn(|| {}).join().ok();
+}

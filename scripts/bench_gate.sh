@@ -4,13 +4,15 @@
 #   scripts/bench_gate.sh               compare every current run
 #                                       (rust/BENCH_<name>.json) against its
 #                                       committed baseline (BENCH_<name>.json)
-#   scripts/bench_gate.sh --pair NAME   gate one pair only (runtime | serve)
+#   scripts/bench_gate.sh --pair NAME   gate one pair only
+#                                       (runtime | serve | forest)
 #   scripts/bench_gate.sh --rebaseline  promote every current run present to
 #                                       be the committed baseline
 #
 # Gated pairs:
 #   runtime  BENCH_runtime.json  <- cargo bench --bench bench_runtime
 #   serve    BENCH_serve.json    <- cargo bench --bench bench_serve
+#   forest   BENCH_forest.json   <- cargo bench --bench bench_forest
 #
 # Policy (per pair):
 #   * baseline provenance "bootstrap" (a committed placeholder with null
@@ -37,11 +39,13 @@ cd "$(dirname "$0")/.."
 
 RUNTIME_REQUIRED="bench,provenance,quick,acceptance_case,backends,kernels,blocked_speedup,prefix_build,thread_scaling,engine_reuse,alloc_profile,incremental_update"
 SERVE_REQUIRED="bench,provenance,quick,serve_case,serve_fitting_loss,coreset_cache"
+FOREST_REQUIRED="bench,provenance,quick,forest_case,forest_sweep"
 
 # name|baseline|current|required-keys
 PAIRS=(
     "runtime|BENCH_runtime.json|rust/BENCH_runtime.json|$RUNTIME_REQUIRED"
     "serve|BENCH_serve.json|rust/BENCH_serve.json|$SERVE_REQUIRED"
+    "forest|BENCH_forest.json|rust/BENCH_forest.json|$FOREST_REQUIRED"
 )
 
 ONLY_PAIR=""
@@ -110,6 +114,10 @@ METRICS = {
     "speedup_vs_native", "speedup_vs_miss", "batches_per_s",
     "native_median_s", "blocked_median_s", "allocs_total", "stats_allocs",
     "allocs_per_shard", "kib_per_shard", "blocks",
+    # forest sweep: τ is derived from the measured compression size and
+    # the SSE columns are quality measurements — none of them identity.
+    "full_median_s", "test_sse_full", "test_sse_coreset", "sse_gap_pct",
+    "tau",
 }
 
 def load(path, who):

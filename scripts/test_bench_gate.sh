@@ -126,7 +126,38 @@ json.dump(doc, open(sys.argv[1], "w"))
 PY
 run "missing required key fails" 1 "missing keys"
 
-# 9. --rebaseline promotes the current file over the baseline.
+# 9. Metric-only fields (τ, the forest sweep's SSE columns) are not row
+#    identity: a current row whose measured columns moved still compares
+#    against its baseline row instead of being skipped as absent.
+python3 - "$TMP/base.json" "$TMP/cur.json" <<'PY'
+import json, sys
+base = {"bench": "synthetic", "provenance": "measured",
+        "rows": [{"op": "train", "median_s": 1.0, "tau": 100,
+                  "full_median_s": 2.0, "test_sse_full": 10.0,
+                  "test_sse_coreset": 10.5, "sse_gap_pct": 5.0}]}
+cur = json.loads(json.dumps(base))
+cur["rows"][0].update(median_s=1.05, tau=160, sse_gap_pct=2.5)
+json.dump(base, open(sys.argv[1], "w"))
+json.dump(cur, open(sys.argv[2], "w"))
+PY
+run "metric fields are not row identity" 0 \
+    "compared 1 row(s)" \
+    "absent from the current run"
+
+# 10. The bootstrap-placeholder policy still schema-checks: a bootstrap
+#     baseline missing a required key fails the load step (this is what
+#     keeps a committed placeholder like BENCH_forest.json honest).
+doc "$TMP/base.json" bootstrap "op=build:median=null"
+doc "$TMP/cur.json" measured "op=build:median=1.0"
+python3 - "$TMP/base.json" <<'PY'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+del doc["bench"]
+json.dump(doc, open(sys.argv[1], "w"))
+PY
+run "bootstrap baseline still schema-checked" 1 "missing keys"
+
+# 11. --rebaseline promotes the current file over the baseline.
 doc "$TMP/base.json" measured "op=build:median=1.0"
 doc "$TMP/cur.json" measured "op=build:median=0.9"
 BENCH_GATE_BASELINE="$TMP/base.json" BENCH_GATE_CURRENT="$TMP/cur.json" \

@@ -97,13 +97,15 @@ echo "serve smoke: OK"
 # Perf regression gate: quick bench passes (reduced sizes/iterations,
 # shapes embedded in row identities so quick rows never gate against
 # full-run baseline rows), then hard-gate medians against the committed
-# baselines — BENCH_runtime.json and BENCH_serve.json (>15% median
-# slowdown fails; a bootstrap baseline with null medians is
-# schema-checked only). The gate's own comparator logic is exercised
-# first against synthetic fixtures — pure bash/python3, runs in seconds.
+# baselines — BENCH_runtime.json, BENCH_serve.json and BENCH_forest.json
+# (>15% median slowdown fails; a bootstrap baseline with null medians is
+# schema-checked only — the forest baseline starts life as one). The
+# gate's own comparator logic is exercised first against synthetic
+# fixtures — pure bash/python3, runs in seconds.
 ./scripts/test_bench_gate.sh
 cargo bench --bench bench_runtime -- --quick
 cargo bench --bench bench_serve -- --quick
+cargo bench --bench bench_forest -- --quick
 ./scripts/bench_gate.sh
 
 echo "verify.sh: OK"
